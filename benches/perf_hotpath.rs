@@ -1,0 +1,137 @@
+//! §Perf profiling harness (EXPERIMENTS.md §Perf): per-operation timings
+//! for the L3 hot path and the L2 decode variants.
+//!
+//! Measures, at several generation lengths:
+//!   - `compute_mask`   — full grammar-mask assembly (Algorithm 2);
+//!   - `token_allowed`  — opportunistic single-token probe;
+//!   - `validate_append`— exact commit-time check;
+//! and, when artifacts exist, PJRT decode-step latency for the KV-cache
+//! vs full-recompute executables (the L2 before/after).
+
+use std::sync::Arc;
+use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+use syncode::eval::dataset;
+use syncode::mask::{MaskStore, MaskStoreConfig};
+use syncode::parser::LrMode;
+use syncode::runtime::{LanguageModel, PjrtModel, PjrtVariant};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::bench::{fmt_secs, time_fn, Table};
+
+fn main() {
+    l3_engine_ops();
+    l2_pjrt_variants();
+}
+
+/// Build a long valid JSON prefix of roughly `len` bytes.
+fn json_prefix(len: usize) -> String {
+    let mut s = String::from("{\"items\": [");
+    let mut i = 0;
+    while s.len() < len {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{{\"k{i}\": {i}, \"s\": \"v{i}\"}}"));
+        i += 1;
+    }
+    s
+}
+
+fn l3_engine_ops() {
+    println!("# §Perf — L3 engine hot-path operations (json grammar)\n");
+    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+    let docs = dataset::corpus("json", 150, 7);
+    let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    let tok = Arc::new(Tokenizer::train(&flat, 200));
+    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+    let mut t = Table::new(&[
+        "C_k bytes",
+        "compute_mask",
+        "token_allowed",
+        "validate_append",
+        "append+mask (step)",
+    ]);
+    for len in [50usize, 200, 800, 2000] {
+        let prefix = json_prefix(len);
+        let mut eng = SyncodeEngine::new(cx.clone(), store.clone(), tok.clone());
+        eng.reset(&prefix);
+        let mask_t = time_fn(3, 30, || {
+            eng.append(b""); // invalidate the step cache: full recompute
+            let _ = eng.compute_mask().unwrap();
+        });
+        eng.reset(&prefix);
+        let _ = eng.compute_mask().unwrap();
+        let tid = tok.encode(b",").first().copied().unwrap_or(b',' as u32);
+        let allow_t = time_fn(3, 200, || {
+            let _ = eng.token_allowed(tid).unwrap();
+        });
+        let val_t = time_fn(3, 50, || {
+            let _ = eng.validate_append(b", ");
+        });
+        // One full serving step (append a token + recompute the mask),
+        // excluding the per-iteration warm-up reset from the timing.
+        let step_t = {
+            let mut samples = Vec::new();
+            for _ in 0..20 {
+                eng.reset(&prefix);
+                let _ = eng.compute_mask().unwrap(); // warm caches (untimed)
+                let t0 = std::time::Instant::now();
+                eng.append(b", 42".as_ref());
+                let _ = eng.compute_mask().unwrap();
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            syncode::util::bench::Stats::from_samples(samples)
+        };
+        t.row(&[
+            prefix.len().to_string(),
+            fmt_secs(mask_t.mean),
+            fmt_secs(allow_t.mean),
+            fmt_secs(val_t.mean),
+            fmt_secs(step_t.mean),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+fn l2_pjrt_variants() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("config.json").exists() {
+        println!("# §Perf — L2 PJRT variants: skipped (run `make artifacts`)\n");
+        return;
+    }
+    println!("# §Perf — L2 PJRT decode-step latency (before/after)\n");
+    let tok = Arc::new(Tokenizer::from_file(&dir.join("tokenizer.json")).unwrap());
+    let prompt: Vec<u32> = {
+        let mut v = vec![tok.bos_id];
+        v.extend(tok.encode(b"Please generate a JSON object."));
+        v
+    };
+    let mut t = Table::new(&["variant", "prefill", "decode step", "steps/s"]);
+    for variant in [PjrtVariant::FullRecompute, PjrtVariant::KvCache] {
+        let mut model = PjrtModel::load(dir, variant).unwrap();
+        let pre_t = time_fn(1, 5, || {
+            let _ = model.prefill(0, &prompt).unwrap();
+        });
+        let mut model = PjrtModel::load(dir, variant).unwrap();
+        let _ = model.prefill(0, &prompt).unwrap();
+        let mut last = vec![None; model.lanes()];
+        last[0] = Some(34u32); // '"'
+        let mut steps = 0u32;
+        let dec_t = time_fn(2, 40, || {
+            let _ = model.decode(&last).unwrap();
+            steps += 1;
+            if steps as usize + prompt.len() + 4 >= model.max_seq() {
+                // reset the lane before overflowing
+                let _ = model.prefill(0, &prompt);
+                steps = 0;
+            }
+        });
+        t.row(&[
+            format!("{variant:?}"),
+            fmt_secs(pre_t.mean),
+            fmt_secs(dec_t.mean),
+            format!("{:.1}", 1.0 / dec_t.mean),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,140 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): load the AOT-trained JAX
+//! transformer through PJRT, serve batched JSON-mode requests with
+//! SynCode constraints, and report latency/throughput + validity — the
+//! proof that all three layers compose with Python off the request path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example json_server
+//! ```
+//!
+//! Flags: `--requests N` (default 12), `--mock` (bigram LM instead of
+//! PJRT), `--full-recompute` (the §Perf "before" L2 variant),
+//! `--unconstrained` (Standard engine for comparison).
+
+use std::sync::Arc;
+use syncode::coordinator::{EngineFactory, GenParams, GenRequest, Server, Strategy};
+use syncode::engine::baselines::StandardEngine;
+use syncode::engine::{GrammarContext, SyncodeEngine};
+use syncode::eval::{dataset, schema};
+use syncode::mask::{MaskStore, MaskStoreConfig};
+use syncode::parser::LrMode;
+use syncode::runtime::{MockModel, ModelFactory, PjrtModel, PjrtVariant};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_num("requests", 12usize);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+
+    // --- model + tokenizer --------------------------------------------------
+    let use_mock = args.flag("mock") || !dir.join("config.json").exists();
+    let (model, tok): (ModelFactory, Arc<Tokenizer>) = if use_mock {
+        eprintln!("[mock model — run `make artifacts` for the PJRT path]");
+        let docs = dataset::corpus("json", 120, 7);
+        let tok = Arc::new(Tokenizer::train(
+            &docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect::<Vec<u8>>(),
+            200,
+        ));
+        let tok_m = tok.clone();
+        (
+            Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m, &docs, 2, 384, 3)))),
+            tok,
+        )
+    } else {
+        let tok =
+            Arc::new(Tokenizer::from_file(&dir.join("tokenizer.json")).expect("tokenizer"));
+        let variant = if args.flag("full-recompute") {
+            PjrtVariant::FullRecompute
+        } else {
+            PjrtVariant::KvCache
+        };
+        println!("loading PJRT model from {} ({variant:?})", dir.display());
+        (Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?))), tok)
+    };
+
+    // --- engine -------------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let factory: EngineFactory = if args.flag("unconstrained") {
+        Box::new(|| Box::new(StandardEngine::new()))
+    } else {
+        let store =
+            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        println!(
+            "mask store built in {:.2}s ({} unique masks, {:.2} MB)",
+            store.stats.build_secs,
+            store.stats.unique_masks,
+            store.stats.mem_bytes as f64 / 1e6
+        );
+        let cx2 = cx.clone();
+        let tok2 = tok.clone();
+        Box::new(move || {
+            Box::new(SyncodeEngine::new(cx2.clone(), store.clone(), tok2.clone()))
+        })
+    };
+    println!("setup: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // --- serve a batch of requests -------------------------------------------
+    let srv = Server::start(model, tok, factory);
+    let tasks = dataset::json_mode_tasks(n, 3);
+    let params = GenParams {
+        max_new_tokens: args.get_num("max-tokens", 110),
+        strategy: Strategy::TopP { temp: 0.8, p: 0.95 },
+        seed: 5,
+        opportunistic: true,
+    };
+    let t_subm = std::time::Instant::now();
+    let rxs: Vec<_> = tasks
+        .iter()
+        .map(|t| {
+            srv.submit(GenRequest {
+                id: t.id,
+                prompt: t.prompt.clone(),
+                constraint_prefix: String::new(),
+                params: params.clone(),
+            })
+        })
+        .collect();
+    let mut valid_json = 0;
+    let mut valid_schema = 0;
+    for (t, rx) in tasks.iter().zip(rxs) {
+        let r = rx.recv().unwrap();
+        let parsed = syncode::util::json::parse(r.text.trim());
+        let sv = parsed
+            .as_ref()
+            .map(|v| schema::validate(&t.schema, v).is_empty())
+            .unwrap_or(false);
+        valid_json += parsed.is_ok() as usize;
+        valid_schema += sv as usize;
+        println!(
+            "req {:2}: {:?} {:3} tok {:6.2}s ttft={:5.3}s json={} schema={} | {}",
+            t.id,
+            r.finish,
+            r.tokens,
+            r.latency_secs,
+            r.ttft_secs,
+            parsed.is_ok(),
+            sv,
+            truncate(&r.text, 60)
+        );
+    }
+    let wall = t_subm.elapsed().as_secs_f64();
+    let snap = srv.metrics.lock().unwrap().snapshot();
+    println!("\n=== e2e summary ===");
+    println!("{}", snap.report());
+    println!(
+        "wall={:.2}s  valid JSON {}/{}  schema-valid {}/{}",
+        wall, valid_json, n, valid_schema, n
+    );
+    srv.shutdown();
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    let one_line: String = s.chars().map(|c| if c == '\n' { ' ' } else { c }).collect();
+    if one_line.len() > n {
+        format!("{}…", &one_line[..n])
+    } else {
+        one_line
+    }
+}

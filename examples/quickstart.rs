@@ -1,0 +1,63 @@
+//! Quickstart: the five-line path from a grammar to constrained serving.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the deterministic mock LM so it runs without artifacts; see
+//! `examples/json_server.rs` for the PJRT end-to-end driver.
+
+use std::sync::Arc;
+use syncode::coordinator::{GenParams, GenRequest, Server, Strategy};
+use syncode::engine::{GrammarContext, SyncodeEngine};
+use syncode::eval::dataset;
+use syncode::mask::{MaskStore, MaskStoreConfig};
+use syncode::parser::LrMode;
+use syncode::runtime::MockModel;
+use syncode::tokenizer::Tokenizer;
+
+fn main() {
+    // 1. Grammar → LR tables → post-lex pass.
+    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+
+    // 2. Vocabulary (BPE over a grammar-sampled corpus) + DFA mask store.
+    let docs = dataset::corpus("json", 80, 7);
+    let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    let tok = Arc::new(Tokenizer::train(&flat, 150));
+    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+    println!(
+        "mask store: {} states × {} terminals, {} unique masks, {:.1} MB, built in {:.2}s",
+        store.stats.num_dfa_states,
+        store.stats.num_terminals,
+        store.stats.unique_masks,
+        store.stats.mem_bytes as f64 / 1e6,
+        store.stats.build_secs
+    );
+
+    // 3. Serve: model + per-request SynCode engines.
+    let tok_m = tok.clone();
+    let srv = Server::start(
+        Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m, &docs, 2, 384, 11)))),
+        tok.clone(),
+        Box::new(move || Box::new(SyncodeEngine::new(cx.clone(), store.clone(), tok.clone()))),
+    );
+
+    // 4. Generate.
+    let resp = srv.generate(GenRequest {
+        id: 1,
+        prompt: "Please produce a JSON object describing a person.".into(),
+        constraint_prefix: String::new(),
+        params: GenParams {
+            max_new_tokens: 120,
+            strategy: Strategy::Temperature(0.8),
+            seed: 42,
+            opportunistic: true,
+        },
+    });
+    println!("\ngenerated ({:?}, {} tokens):\n{}", resp.finish, resp.tokens, resp.text);
+
+    // 5. It is valid JSON by construction.
+    let parsed = syncode::util::json::parse(&resp.text);
+    println!("\nvalid JSON: {}", parsed.is_ok());
+    srv.shutdown();
+}

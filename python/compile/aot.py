@@ -1,0 +1,170 @@
+"""AOT export: tokenizer -> corpus -> short training run -> HLO text.
+
+Run once by `make artifacts`; never on the request path. Produces in
+`artifacts/`:
+
+- `tokenizer.json`   — BPE merges (shared vocab with Rust);
+- `config.json`      — model/lane dimensions for the Rust runtime;
+- `forward.hlo.txt`  — stateless full recompute (S Perf baseline);
+- `prefill.hlo.txt`  — per-lane KV-cache fill;
+- `decode.hlo.txt`   — batched incremental decode step;
+- `mask_softmax.hlo.txt` — the L1 fused mask-union+softmax kernel as its
+  own executable (loadable by the Rust sampler);
+- `train_log.json`   — loss curve evidence for EXPERIMENTS.md.
+
+HLO *text* is the interchange format: jax >= 0.5 serialises protos with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus as C
+from . import model as M
+from . import train as T
+from .kernels.mask_softmax import mask_union_softmax
+from .tokenizer import Tokenizer
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer elides big constant
+    # payloads as `constant({...})`, which the Rust-side text parser reads
+    # back as ZEROS — the baked weights must be printed in full.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--docs", type=int, default=500)
+    ap.add_argument("--merges", type=int, default=320)
+    ap.add_argument("--steps", type=int, default=900)
+    ap.add_argument("--seq", type=int, default=128, help="training seq len")
+    ap.add_argument("--max-seq", type=int, default=224)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    # 1. corpus + tokenizer -------------------------------------------------
+    docs = C.build_corpus(args.docs, args.seed, kind="json")
+    flat = "\n".join(p + c for p, c in docs)
+    tok = Tokenizer.train(flat.encode("utf-8"), args.merges)
+    with open(os.path.join(args.out, "tokenizer.json"), "w") as f:
+        f.write(tok.to_json())
+    print(f"tokenizer: |V|={tok.vocab_size} ({time.time()-t0:.1f}s)")
+
+    # 2. train --------------------------------------------------------------
+    cfg = M.make_config(
+        tok.vocab_size, lanes=args.lanes, max_seq=args.max_seq, d_model=96, n_layers=2
+    )
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    batches = T.pack_batches(tok, docs, args.seq, batch=16, seed=args.seed)
+    params, losses = T.train(params, cfg, batches, steps=args.steps)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump({"losses": losses, "steps": args.steps, "docs": args.docs}, f)
+
+    # 3. export -------------------------------------------------------------
+    b, s, v = cfg["lanes"], cfg["max_seq"], cfg["vocab_size"]
+    cshape = M.cache_shape(cfg)
+    i32, f32 = jnp.int32, jnp.float32
+    spec = jax.ShapeDtypeStruct
+
+    export(
+        lambda tokens, lens: (M.forward(params, cfg, tokens, lens),),
+        (spec((b, s), i32), spec((b,), i32)),
+        os.path.join(args.out, "forward.hlo.txt"),
+    )
+    export(
+        lambda tokens, length, lane, k, v_: M.prefill(
+            params, cfg, tokens, length, lane, k, v_
+        ),
+        (
+            spec((s,), i32),
+            spec((), i32),
+            spec((), i32),
+            spec(cshape, f32),
+            spec(cshape, f32),
+        ),
+        os.path.join(args.out, "prefill.hlo.txt"),
+    )
+    export(
+        lambda tokens, pos, k, v_: M.decode_step(params, cfg, tokens, pos, k, v_),
+        (spec((b,), i32), spec((b,), i32), spec(cshape, f32), spec(cshape, f32)),
+        os.path.join(args.out, "decode.hlo.txt"),
+    )
+    export(
+        lambda logits, masks: (mask_union_softmax(logits, masks),),
+        (spec((b, v), f32), spec((b, 8, v), f32)),
+        os.path.join(args.out, "mask_softmax.hlo.txt"),
+    )
+
+    # Greedy sample in pure JAX for Rust-side cross-validation: the Rust
+    # PJRT path must reproduce these exact tokens (tests/integration.rs).
+    sample_prompt, _ = docs[0]
+    ids = [tok.bos_id] + tok.encode(sample_prompt)
+    import numpy as np
+
+    toks = np.zeros((cfg["lanes"], cfg["max_seq"]), np.int32)
+    toks[0, : len(ids)] = ids
+    cur = len(ids)
+    out_ids = []
+    for _ in range(24):
+        logits = M.forward(
+            params, cfg, jnp.array(toks), jnp.array([cur, 1], jnp.int32), use_pallas=False
+        )
+        nxt = int(jnp.argmax(logits[0]))
+        out_ids.append(nxt)
+        if nxt == tok.eos_id or cur >= cfg["max_seq"] - 1:
+            break
+        toks[0, cur] = nxt
+        cur += 1
+    with open(os.path.join(args.out, "sample.json"), "w") as f:
+        json.dump(
+            {
+                "prompt": sample_prompt,
+                "greedy_ids": out_ids,
+                "greedy_text": tok.decode(out_ids).decode("utf-8", "replace"),
+            },
+            f,
+        )
+    print("greedy sample:", tok.decode(out_ids)[:80])
+
+    with open(os.path.join(args.out, "config.json"), "w") as f:
+        json.dump(
+            {
+                "vocab_size": v,
+                "lanes": b,
+                "max_seq": s,
+                "n_layers": cfg["n_layers"],
+                "n_heads": cfg["n_heads"],
+                "d_head": cfg["d_head"],
+                "d_model": cfg["d_model"],
+            },
+            f,
+        )
+    print(f"artifacts complete in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

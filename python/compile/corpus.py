@@ -1,0 +1,89 @@
+"""Synthetic training corpus for the served LM — (prompt, completion)
+documents mirroring `rust/src/eval/dataset.rs` so the model learns to
+answer JSON-mode-style prompts with JSON (and calc prompts with DSL
+expressions). Deterministic from a seed."""
+
+import json
+import random
+
+FIELD_POOL = [
+    ("name", "string"),
+    ("city", "string"),
+    ("role", "string"),
+    ("email", "string"),
+    ("age", "integer"),
+    ("count", "integer"),
+    ("score", "number"),
+    ("active", "boolean"),
+    ("verified", "boolean"),
+    ("tags", "array"),
+]
+
+STRINGS = ["alice", "bob", "red", "blue", "tokyo", "hi", "dev", "ops"]
+
+
+def _value_for(rng, ty):
+    if ty == "string":
+        return rng.choice(STRINGS)
+    if ty == "integer":
+        return rng.randint(0, 200)
+    if ty == "number":
+        return round(rng.uniform(0, 100), 2)
+    if ty == "boolean":
+        return rng.random() < 0.5
+    if ty == "array":
+        return [rng.choice(STRINGS) for _ in range(rng.randint(1, 3))]
+    return None
+
+
+def json_mode_doc(rng):
+    """One JSON-mode (prompt, completion) pair in the Rust prompt format."""
+    nfields = rng.randint(2, 4)
+    fields = rng.sample(FIELD_POOL, nfields)
+    props = {}
+    for name, ty in fields:
+        spec = {"type": ty}
+        if ty == "integer":
+            spec.update(minimum=0, maximum=200)
+        if ty == "array":
+            spec["items"] = {"type": "string"}
+        props[name] = spec
+    schema = {
+        "type": "object",
+        "properties": dict(sorted(props.items())),
+        "required": sorted(n for n, _ in fields),
+    }
+    wants = ", ".join(f"{n} ({t})" for n, t in fields)
+    prompt = (
+        "You are a helpful assistant that answers in JSON. Here's the json "
+        f"schema you must adhere to: {json.dumps(schema, separators=(',', ':'))}\n"
+        f"Please generate a JSON object for a record with fields {wants}."
+    )
+    obj = {n: _value_for(rng, t) for n, t in fields}
+    completion = json.dumps(obj, separators=(", ", ": "))
+    return prompt, completion
+
+
+def calc_doc(rng):
+    a, b = rng.randint(2, 30), rng.randint(2, 30)
+    kind = rng.randrange(4)
+    if kind == 0:
+        return (f"Question: What is {a} plus {b} times 2?\nAnswer: ", f"{a} + {b} * 2")
+    if kind == 1:
+        return (
+            f"Question: What is the square root of {a} plus {b}?\nAnswer: ",
+            f"math_sqrt({a}) + {b}",
+        )
+    if kind == 2:
+        return (
+            f"Question: Add sin of {a} degrees and cos of {b} degrees.\nAnswer: ",
+            f"math_sin({a}) + math_cos({b})",
+        )
+    return (f"Question: Multiply the sum of {a} and {b} by 3.\nAnswer: ", f"({a} + {b}) * 3")
+
+
+def build_corpus(n_docs, seed, kind="json"):
+    """List of (prompt, completion) documents."""
+    rng = random.Random(seed)
+    gen = json_mode_doc if kind == "json" else calc_doc
+    return [gen(rng) for _ in range(n_docs)]

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: tiled causal attention for the L2 transformer.
+
+Hardware adaptation (DESIGN.md): the paper's baseline systems lean on
+CUDA-style threadblocks; on TPU the q.kT product targets the MXU systolic
+array with S x S tiles staged through VMEM, and the softmax runs on the
+VPU. At this model's toy sizes (S <= 256, D <= 32) a single tile per head
+suffices, so the BlockSpec maps one (head) per grid step; the online-
+softmax multi-tile variant is structurally identical and noted in
+DESIGN.md S Perf.
+
+`interpret=True`: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, out_ref):
+    """One head: scores -> masked softmax -> weighted sum."""
+    q = q_ref[...]  # [S, D]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]  # [S, S]
+    d = q.shape[-1]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(d).astype(q.dtype)
+    neg = jnp.finfo(q.dtype).min
+    scores = jnp.where(mask > 0, scores, neg)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w * mask
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    out_ref[...] = jnp.dot(w, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attention(q, k, v, mask):
+    """Masked attention. q,k,v f32[H,S,D], mask f32[S,S] -> f32[H,S,D]."""
+    h, s, d = q.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def mxu_utilisation_estimate(s, d):
+    """Fraction of an MXU 128x128 tile the q.kT matmul fills (DESIGN.md)."""
+    return min(s / 128.0, 1.0) * min(d / 128.0, 1.0)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused mask-union + masked softmax over the vocabulary.
+
+This is the paper's "offload the mask union to the accelerator" insight
+(S3.3 / S4.6) re-thought for TPU (DESIGN.md S Hardware-Adaptation): the K
+per-accept-sequence masks live alongside the logits in VMEM; the union is
+a vectorised elementwise pass on the VPU fused with the softmax so the
+logits tensor is read once (a single HBM->VMEM pass — the same roofline as
+an unmasked softmax, i.e. target overhead ~ 0).
+
+BlockSpec: one (batch row x V-tile) block per grid step; V is tiled in
+TILE_V-wide chunks with a two-pass (max+sum, then normalise) structure
+kept single-pass here because V for this model (~1k) fits one tile.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Vocabulary tile width (lanes are 128-wide on TPU; 512 = 4 registers).
+TILE_V = 512
+
+
+def _kernel(logits_ref, masks_ref, out_ref):
+    """One batch row: union K masks, masked softmax over V."""
+    logits = logits_ref[...]  # [V]
+    masks = masks_ref[...]  # [K, V]
+    union = jnp.clip(jnp.sum(masks, axis=0), 0.0, 1.0)
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(union > 0, logits, neg)
+    m = jnp.max(masked)
+    e = jnp.exp(masked - m) * union
+    denom = jnp.sum(e)
+    out_ref[...] = jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mask_union_softmax(logits, masks):
+    """Fused union+softmax. logits f32[B,V], masks f32[B,K,V] -> f32[B,V]."""
+    b, v = logits.shape
+    k = masks.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, v), lambda i: (i, 0)),
+            pl.BlockSpec((None, k, v), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, v), logits.dtype),
+        interpret=True,
+    )(logits, masks)
+
+
+def vmem_bytes(batch, vocab, k):
+    """Analytic VMEM footprint of one grid step (DESIGN.md roofline)."""
+    del batch
+    return 4 * vocab * (k + 2)  # logits + K masks + out, f32

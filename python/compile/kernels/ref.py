@@ -1,0 +1,38 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness
+anchors — pytest asserts the kernels match these)."""
+
+import jax.numpy as jnp
+
+
+def ref_mask_union_softmax(logits, masks):
+    """Union K boolean masks per batch row, apply to logits, softmax.
+
+    The paper's GPU-offloaded mask union (S3.3): probs of masked-out
+    tokens are exactly zero; rows whose union is empty return all zeros
+    (the coordinator treats that as a dead end).
+
+    logits: f32[B, V]; masks: f32[B, K, V] (0/1).
+    """
+    union = jnp.clip(jnp.sum(masks, axis=1), 0.0, 1.0)  # [B, V]
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(union > 0, logits, neg)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m) * union
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def ref_attention(q, k, v, pos_mask):
+    """Masked scaled-dot-product attention.
+
+    q: f32[H, S, D]; k, v: f32[H, S, D]; pos_mask: f32[S, S]
+    (1 = attend). Returns f32[H, S, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    neg = jnp.finfo(q.dtype).min
+    scores = jnp.where(pos_mask[None, :, :] > 0, scores, neg)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w * pos_mask[None, :, :]
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", w, v)

@@ -1,0 +1,209 @@
+"""L2: the served transformer LM in pure JAX (no flax), calling the L1
+Pallas attention kernel in its full-sequence paths.
+
+Three entry points are AOT-exported by `aot.py` (the Rust runtime contract
+documented in `rust/src/runtime/pjrt.rs`):
+
+- `forward(tokens[B,S], lens[B]) -> logits[B,V]` — stateless full
+  recompute (the S Perf "before" variant);
+- `prefill(tokens[S], length, lane, k, v) -> (logits[V], k', v')` — fill
+  one lane's KV cache from its prompt;
+- `decode_step(tokens[B], pos[B], k, v) -> (logits[B,V], k', v')` — one
+  incremental step for all lanes (the S Perf "after" variant).
+
+Weights are treated as closure constants at lowering time, so the HLO is
+self-contained.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention as pallas_attention
+
+
+def make_config(
+    vocab_size,
+    lanes=2,
+    max_seq=160,
+    d_model=96,
+    n_layers=2,
+    n_heads=4,
+):
+    assert d_model % n_heads == 0
+    return dict(
+        vocab_size=vocab_size,
+        lanes=lanes,
+        max_seq=max_seq,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        d_head=d_model // n_heads,
+    )
+
+
+def init_params(rng, cfg):
+    """Initialise parameters (dict of arrays)."""
+    v, d, s = cfg["vocab_size"], cfg["d_model"], cfg["max_seq"]
+    h, dh, nl = cfg["n_heads"], cfg["d_head"], cfg["n_layers"]
+    keys = jax.random.split(rng, 3 + 6 * nl)
+    scale = 0.02
+    params = {
+        "embed": scale * jax.random.normal(keys[0], (v, d), jnp.float32),
+        "pos": scale * jax.random.normal(keys[1], (s, d), jnp.float32),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    for l in range(nl):
+        k = keys[3 + 6 * l : 3 + 6 * (l + 1)]
+        params[f"l{l}.ln1"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.wqkv"] = scale * jax.random.normal(k[0], (d, 3 * h * dh), jnp.float32)
+        params[f"l{l}.wo"] = scale * jax.random.normal(k[1], (h * dh, d), jnp.float32)
+        params[f"l{l}.ln2"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.w1"] = scale * jax.random.normal(k[2], (d, 3 * d), jnp.float32)
+        params[f"l{l}.w2"] = scale * jax.random.normal(k[3], (3 * d, d), jnp.float32)
+    return params
+
+
+def _rms_norm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _qkv(params, l, x, cfg):
+    """Project to per-head q, k, v. x: [..., D] -> 3 x [..., H, Dh]."""
+    h, dh = cfg["n_heads"], cfg["d_head"]
+    qkv = x @ params[f"l{l}.wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = x.shape[:-1] + (h, dh)
+    return q.reshape(shape), k.reshape(shape), v.reshape(shape)
+
+
+def _block_full(params, l, x, cfg, mask, use_pallas=True):
+    """One transformer block over a full sequence. x: [S, D]."""
+    h = _rms_norm(x, params[f"l{l}.ln1"])
+    q, k, v = _qkv(params, l, h, cfg)  # [S, H, Dh]
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, S, Dh]
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))
+    if use_pallas:
+        oh = pallas_attention(qh, kh, vh, mask)
+    else:
+        from .kernels.ref import ref_attention
+
+        oh = ref_attention(qh, kh, vh, mask)
+    o = jnp.transpose(oh, (1, 0, 2)).reshape(x.shape[0], -1)
+    x = x + o @ params[f"l{l}.wo"]
+    hh = _rms_norm(x, params[f"l{l}.ln2"])
+    x = x + jax.nn.gelu(hh @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    return x, (k, v)
+
+
+def _embed(params, tokens, positions):
+    return params["embed"][tokens] + params["pos"][positions]
+
+
+def forward(params, cfg, tokens, lens, use_pallas=True):
+    """Stateless forward: logits at position lens-1 per lane.
+
+    tokens: i32[B, S]; lens: i32[B] -> f32[B, V].
+    """
+    s = cfg["max_seq"]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+
+    def one(tok, ln):
+        x = _embed(params, tok, jnp.arange(s))
+        for l in range(cfg["n_layers"]):
+            x, _ = _block_full(params, l, x, cfg, causal, use_pallas)
+        x = _rms_norm(x, params["ln_f"])
+        h = x[ln - 1]
+        return h @ params["embed"].T
+
+    # Static per-lane loop (vmap over interpret-mode pallas_call is
+    # avoidable complexity; B is small and fixed).
+    return jnp.stack([one(tokens[i], lens[i]) for i in range(tokens.shape[0])])
+
+
+def prefill(params, cfg, tokens, length, lane, k_cache, v_cache, use_pallas=True):
+    """Fill `lane`'s KV cache from a padded prompt.
+
+    tokens: i32[S]; length, lane: i32 scalars;
+    k_cache, v_cache: f32[L, B, S, H, Dh].
+    Returns (logits f32[V], k', v').
+    """
+    s = cfg["max_seq"]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    x = _embed(params, tokens, jnp.arange(s))
+    for l in range(cfg["n_layers"]):
+        x, (k, v) = _block_full(params, l, x, cfg, causal, use_pallas)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, None], (l, lane, 0, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, None], (l, lane, 0, 0, 0)
+        )
+    x = _rms_norm(x, params["ln_f"])
+    h = x[length - 1]
+    return h @ params["embed"].T, k_cache, v_cache
+
+
+def decode_step(params, cfg, tokens, pos, k_cache, v_cache):
+    """One incremental decode step for all lanes.
+
+    tokens: i32[B]; pos: i32[B] (index where each token lands);
+    caches f32[L, B, S, H, Dh]. Returns (logits f32[B, V], k', v').
+    """
+    b = cfg["lanes"]
+    s = cfg["max_seq"]
+    h_, dh = cfg["n_heads"], cfg["d_head"]
+    x = _embed(params, tokens, pos)  # [B, D]
+    lane_idx = jnp.arange(b)
+    for l in range(cfg["n_layers"]):
+        hN = _rms_norm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(params, l, hN, cfg)  # [B, H, Dh]
+        k_cache = k_cache.at[l, lane_idx, pos].set(k)
+        v_cache = v_cache.at[l, lane_idx, pos].set(v)
+        # attend to positions <= pos per lane
+        keys = k_cache[l]  # [B, S, H, Dh]
+        vals = v_cache[l]
+        scores = jnp.einsum("bhd,bshd->bhs", q, keys) / jnp.sqrt(dh).astype(x.dtype)
+        mask = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, :]  # [B,1,S]
+        neg = jnp.finfo(x.dtype).min
+        scores = jnp.where(mask, scores, neg)
+        w = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhs,bshd->bhd", w, vals).reshape(b, h_ * dh)
+        x = x + o @ params[f"l{l}.wo"]
+        h2 = _rms_norm(x, params[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h2 @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    x = _rms_norm(x, params["ln_f"])
+    return x @ params["embed"].T, k_cache, v_cache
+
+
+def cache_shape(cfg):
+    return (
+        cfg["n_layers"],
+        cfg["lanes"],
+        cfg["max_seq"],
+        cfg["n_heads"],
+        cfg["d_head"],
+    )
+
+
+def loss_fn(params, cfg, tokens, targets, weights):
+    """Next-token cross-entropy over packed batches (training only).
+
+    tokens/targets: i32[N, S]; weights: f32[N, S] (0 on padding).
+    Uses the jnp reference attention (faster to trace than interpret-mode
+    Pallas during the training loop; numerics match — pytest asserts it).
+    """
+    s = tokens.shape[1]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+
+    def one(tok):
+        x = _embed(params, tok, jnp.arange(s))
+        for l in range(cfg["n_layers"]):
+            x, _ = _block_full(params, l, x, cfg, causal, use_pallas=False)
+        x = _rms_norm(x, params["ln_f"])
+        return x @ params["embed"].T
+
+    logits = jax.vmap(one)(tokens)  # [N, S, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * weights) / jnp.maximum(jnp.sum(weights), 1.0)

@@ -1,0 +1,81 @@
+"""Byte-level BPE trainer — the Python twin of `rust/src/tokenizer/`.
+
+The merge rule must match the Rust implementation exactly (max pair count,
+ties broken by smallest pair), because `artifacts/tokenizer.json` only
+records the merge list and both sides re-derive the vocabulary from it.
+"""
+
+import json
+
+
+class Tokenizer:
+    def __init__(self, merges):
+        self.merges = list(merges)
+        self.vocab = [bytes([b]) for b in range(256)]
+        self.merge_map = {}
+        for i, (a, b) in enumerate(self.merges):
+            tid = 256 + i
+            self.vocab.append(self.vocab[a] + self.vocab[b])
+            self.merge_map[(a, b)] = tid
+        self.pad_id = len(self.vocab)
+        self.bos_id = self.pad_id + 1
+        self.eos_id = self.pad_id + 2
+        self.vocab += [b"", b"", b""]
+
+    @property
+    def vocab_size(self):
+        return len(self.vocab)
+
+    def encode(self, data):
+        if isinstance(data, str):
+            data = data.encode("utf-8")
+        ids = list(data)
+        while True:
+            best = None
+            for i in range(len(ids) - 1):
+                m = self.merge_map.get((ids[i], ids[i + 1]))
+                if m is not None and (best is None or m < best[0]):
+                    best = (m, i)
+            if best is None:
+                return ids
+            m, i = best
+            ids[i : i + 2] = [m]
+
+    def decode(self, ids):
+        return b"".join(self.vocab[i] for i in ids)
+
+    def to_json(self):
+        return json.dumps(
+            {"vocab_size": self.vocab_size, "merges": [list(m) for m in self.merges]}
+        )
+
+    @staticmethod
+    def train(corpus, n_merges):
+        """Classic BPE: repeatedly merge the most frequent adjacent pair
+        (ties -> smallest pair), recounting after each merge."""
+        if isinstance(corpus, str):
+            corpus = corpus.encode("utf-8")
+        ids = list(corpus)
+        merges = []
+        for k in range(n_merges):
+            counts = {}
+            for a, b in zip(ids, ids[1:]):
+                counts[(a, b)] = counts.get((a, b), 0) + 1
+            if not counts:
+                break
+            pair, cnt = max(counts.items(), key=lambda kv: (kv[1], (-kv[0][0], -kv[0][1])))
+            if cnt < 2:
+                break
+            new_id = 256 + k
+            merges.append(pair)
+            out = []
+            i = 0
+            while i < len(ids):
+                if i + 1 < len(ids) and (ids[i], ids[i + 1]) == pair:
+                    out.append(new_id)
+                    i += 2
+                else:
+                    out.append(ids[i])
+                    i += 1
+            ids = out
+        return Tokenizer(merges)

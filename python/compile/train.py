@@ -1,0 +1,82 @@
+"""Build-time training loop: Adam on next-token cross-entropy over packed
+(prompt, completion) documents. Runs once inside `make artifacts`; sized
+for a single CPU core (~1-2 minutes)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def pack_batches(tok, docs, seq_len, batch, seed=0):
+    """Encode docs as bos + prompt + completion + eos, pad to seq_len, and
+    weight the loss toward completion tokens (2x) so the model learns the
+    answer format, not just prompt statistics."""
+    rng = np.random.RandomState(seed)
+    rows = []
+    for prompt, completion in docs:
+        p_ids = tok.encode(prompt)
+        c_ids = tok.encode(completion)
+        ids = [tok.bos_id] + p_ids + c_ids + [tok.eos_id]
+        if len(ids) > seq_len + 1:
+            ids = ids[-(seq_len + 1) :]
+        w = [0.5] * min(len(p_ids) + 1, len(ids) - 1)
+        w += [2.0] * (len(ids) - 1 - len(w))
+        pad = seq_len + 1 - len(ids)
+        rows.append((ids + [tok.pad_id] * pad, w + [0.0] * pad))
+    rng.shuffle(rows)
+    xs, ws = zip(*rows)
+    xs = np.array(xs, np.int32)
+    ws = np.array(ws, np.float32)
+    batches = []
+    for i in range(0, len(xs) - batch + 1, batch):
+        chunk = xs[i : i + batch]
+        wchunk = ws[i : i + batch]
+        batches.append(
+            (
+                jnp.array(chunk[:, :-1]),
+                jnp.array(chunk[:, 1:]),
+                jnp.array(wchunk),
+            )
+        )
+    return batches
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def train(params, cfg, batches, steps=300, lr=3e-3, log=print):
+    """Run `steps` Adam updates cycling over `batches`; returns params."""
+    opt = adam_init(params)
+
+    @jax.jit
+    def update(params, opt, tokens, targets, weights):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, tokens, targets, weights)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+        mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+        vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        tokens, targets, weights = batches[step % len(batches)]
+        params, opt, loss = update(params, opt, tokens, targets, weights)
+        losses.append(float(loss))
+        if step % 50 == 0 or step == steps - 1:
+            log(
+                f"step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s elapsed)"
+            )
+    return params, losses

@@ -1,0 +1,44 @@
+"""Tokenizer twin tests: roundtrips, determinism, and the JSON contract
+consumed by the Rust side."""
+
+import json
+
+from hypothesis import given, settings, strategies as st
+
+from compile.tokenizer import Tokenizer
+
+
+def test_byte_level_roundtrip():
+    t = Tokenizer([])
+    assert t.vocab_size == 259
+    assert t.decode(t.encode("hello")) == b"hello"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(max_size=60))
+def test_trained_roundtrip_any_bytes(data):
+    t = Tokenizer.train(b'{"a": 1, "b": [2, 3]}' * 30, 50)
+    assert t.decode(t.encode(data)) == data
+
+
+def test_training_deterministic():
+    corpus = b"the cat sat on the mat " * 20
+    a = Tokenizer.train(corpus, 25)
+    b = Tokenizer.train(corpus, 25)
+    assert a.merges == b.merges
+
+
+def test_json_contract():
+    t = Tokenizer.train(b"abab abab abab", 5)
+    blob = json.loads(t.to_json())
+    assert blob["vocab_size"] == t.vocab_size
+    # merges rebuild the same tokenizer
+    t2 = Tokenizer([tuple(m) for m in blob["merges"]])
+    assert t2.encode("abab") == t.encode("abab")
+
+
+def test_specials_at_end():
+    t = Tokenizer.train(b"xyxyxy", 2)
+    assert t.eos_id == t.vocab_size - 1
+    assert t.vocab[t.eos_id] == b""
+    assert t.pad_id < t.bos_id < t.eos_id

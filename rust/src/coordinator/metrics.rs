@@ -1,0 +1,177 @@
+//! Serving metrics: latency/TTFT histograms, token counters, mask-step
+//! accounting. The `json_server` example prints a snapshot after its run
+//! (the e2e latency/throughput evidence in EXPERIMENTS.md).
+
+use std::time::Instant;
+
+/// Log-bucketed latency histogram (1µs … ~17min).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [2^i µs, 2^(i+1) µs)
+    buckets: Vec<u64>,
+    count: u64,
+    sum_secs: f64,
+    max_secs: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; 30], count: 0, sum_secs: 0.0, max_secs: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(1.0);
+        let idx = (us.log2() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_secs += secs;
+        self.max_secs = self.max_secs.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 * 1e-6; // bucket upper bound
+            }
+        }
+        self.max_secs
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_secs
+    }
+}
+
+/// Aggregated server metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub full_mask_computations: u64,
+    pub opportunistic_hits: u64,
+    pub engine_errors: u64,
+    pub latency: Histogram,
+    pub ttft: Histogram,
+    started: Option<Instant>,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub full_mask_computations: u64,
+    pub opportunistic_hits: u64,
+    pub engine_errors: u64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mean_ttft: f64,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl Metrics {
+    pub fn mark_started(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let wall = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            requests_finished: self.requests_finished,
+            tokens_generated: self.tokens_generated,
+            decode_steps: self.decode_steps,
+            full_mask_computations: self.full_mask_computations,
+            opportunistic_hits: self.opportunistic_hits,
+            engine_errors: self.engine_errors,
+            mean_latency: self.latency.mean(),
+            p50_latency: self.latency.quantile(0.5),
+            p99_latency: self.latency.quantile(0.99),
+            mean_ttft: self.ttft.mean(),
+            wall_secs: wall,
+            tokens_per_sec: if wall > 0.0 { self.tokens_generated as f64 / wall } else { 0.0 },
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} steps={} masks={} opp-hits={} errors={} \
+             latency(mean/p50/p99)={:.3}s/{:.3}s/{:.3}s ttft={:.3}s throughput={:.1} tok/s",
+            self.requests_finished,
+            self.tokens_generated,
+            self.decode_steps,
+            self.full_mask_computations,
+            self.opportunistic_hits,
+            self.engine_errors,
+            self.mean_latency,
+            self.p50_latency,
+            self.p99_latency,
+            self.mean_ttft,
+            self.tokens_per_sec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > 0.0);
+        assert!(h.max() >= h.quantile(0.99) * 0.5);
+    }
+
+    #[test]
+    fn snapshot_throughput() {
+        let mut m = Metrics::default();
+        m.mark_started();
+        m.tokens_generated = 100;
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let s = m.snapshot();
+        assert!(s.tokens_per_sec > 0.0);
+        assert!(s.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator: request queue → continuous batcher → decode
+//! scheduler, with masked sampling (Algorithm 1/3) and per-request
+//! metrics. The layer a vLLM-style router would sit on.
+//!
+//! One scheduler thread owns the model (PJRT executables are not Sync) and
+//! a constraint engine per lane; callers submit requests over a channel
+//! and receive responses over per-request channels. Python is never
+//! involved: the model is an AOT HLO executable (or the mock).
+
+pub mod beam;
+mod metrics;
+mod sampler;
+mod server;
+
+pub use beam::{beam_generate, BeamHypothesis};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use sampler::{sample_token, Strategy};
+pub use server::{
+    EngineFactory, FinishReason, GenParams, GenRequest, GenResponse, Server, ServerHandle,
+};

@@ -1,0 +1,194 @@
+//! Masked sampling (paper Algorithm 1): any decoding strategy D applied to
+//! `m ⊙ softmax(z)`. The mask zeroes invalid tokens; renormalisation is
+//! implicit in each strategy. SynCode's generality claim (§3.2) is exactly
+//! that D is a parameter here.
+
+use crate::util::bitset::BitSet;
+use crate::util::rng::Rng;
+
+/// Decoding strategy D.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    Greedy,
+    /// Temperature sampling.
+    Temperature(f32),
+    /// Nucleus sampling at a temperature.
+    TopP { temp: f32, p: f32 },
+    /// Top-k sampling at a temperature.
+    TopK { temp: f32, k: usize },
+}
+
+/// Sample a token id from `logits` under an optional validity mask.
+/// Returns None when the mask admits no token (dead end — the scheduler
+/// surfaces this as an engine error).
+pub fn sample_token(
+    logits: &[f32],
+    mask: Option<&BitSet>,
+    strategy: Strategy,
+    rng: &mut Rng,
+) -> Option<u32> {
+    let allowed = |i: usize| mask.map(|m| m.get(i)).unwrap_or(true);
+    match strategy {
+        Strategy::Greedy => {
+            let mut best: Option<(usize, f32)> = None;
+            for (i, &l) in logits.iter().enumerate() {
+                if !allowed(i) || !l.is_finite() {
+                    continue;
+                }
+                if best.map(|(_, b)| l > b).unwrap_or(true) {
+                    best = Some((i, l));
+                }
+            }
+            best.map(|(i, _)| i as u32)
+        }
+        Strategy::Temperature(t) => weighted_sample(logits, &allowed, t, 1.0, usize::MAX, rng),
+        Strategy::TopP { temp, p } => weighted_sample(logits, &allowed, temp, p, usize::MAX, rng),
+        Strategy::TopK { temp, k } => weighted_sample(logits, &allowed, temp, 1.0, k, rng),
+    }
+}
+
+/// Shared softmax-and-sample with nucleus/top-k truncation.
+fn weighted_sample(
+    logits: &[f32],
+    allowed: &dyn Fn(usize) -> bool,
+    temp: f32,
+    top_p: f32,
+    top_k: usize,
+    rng: &mut Rng,
+) -> Option<u32> {
+    let temp = temp.max(1e-4);
+    // Collect allowed (id, logit).
+    let mut items: Vec<(usize, f32)> = logits
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| allowed(*i) && l.is_finite())
+        .map(|(i, &l)| (i, l))
+        .collect();
+    if items.is_empty() {
+        return None;
+    }
+    // Stable softmax at temperature.
+    let max = items.iter().map(|&(_, l)| l).fold(f32::NEG_INFINITY, f32::max);
+    let mut total = 0f64;
+    for it in items.iter_mut() {
+        it.1 = ((it.1 - max) / temp).exp();
+        total += it.1 as f64;
+    }
+    // Truncate: sort descending for top-k / nucleus.
+    items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    if top_k < items.len() {
+        items.truncate(top_k.max(1));
+    }
+    if top_p < 1.0 {
+        let mut cum = 0f64;
+        let cut = top_p as f64 * total;
+        let mut keep = 0;
+        for (n, &(_, w)) in items.iter().enumerate() {
+            cum += w as f64;
+            keep = n + 1;
+            if cum >= cut {
+                break;
+            }
+        }
+        items.truncate(keep.max(1));
+    }
+    let weights: Vec<f64> = items.iter().map(|&(_, w)| w as f64).collect();
+    let idx = rng.weighted(&weights);
+    Some(items[idx].0 as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.0, 1.0, 3.0, 2.0, -1.0]
+    }
+
+    #[test]
+    fn greedy_unmasked() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample_token(&logits(), None, Strategy::Greedy, &mut rng), Some(2));
+    }
+
+    #[test]
+    fn greedy_respects_mask() {
+        let mut rng = Rng::new(1);
+        let mut m = BitSet::new(5);
+        m.set(0);
+        m.set(3);
+        assert_eq!(sample_token(&logits(), Some(&m), Strategy::Greedy, &mut rng), Some(3));
+    }
+
+    #[test]
+    fn empty_mask_returns_none() {
+        let mut rng = Rng::new(1);
+        let m = BitSet::new(5);
+        assert_eq!(sample_token(&logits(), Some(&m), Strategy::Greedy, &mut rng), None);
+        assert_eq!(
+            sample_token(&logits(), Some(&m), Strategy::Temperature(1.0), &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn temperature_samples_only_masked() {
+        let mut rng = Rng::new(7);
+        let mut m = BitSet::new(5);
+        m.set(1);
+        m.set(4);
+        for _ in 0..200 {
+            let t = sample_token(&logits(), Some(&m), Strategy::Temperature(1.0), &mut rng)
+                .unwrap();
+            assert!(t == 1 || t == 4);
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let t =
+                sample_token(&logits(), None, Strategy::Temperature(0.01), &mut rng).unwrap();
+            assert_eq!(t, 2);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let t = sample_token(
+                &logits(),
+                None,
+                Strategy::TopK { temp: 1.0, k: 2 },
+                &mut rng,
+            )
+            .unwrap();
+            assert!(t == 2 || t == 3, "{t}");
+        }
+    }
+
+    #[test]
+    fn top_p_tiny_keeps_argmax() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let t = sample_token(
+                &logits(),
+                None,
+                Strategy::TopP { temp: 1.0, p: 0.01 },
+                &mut rng,
+            )
+            .unwrap();
+            assert_eq!(t, 2);
+        }
+    }
+
+    #[test]
+    fn infinite_logits_skipped() {
+        let mut rng = Rng::new(1);
+        let l = vec![f32::NEG_INFINITY, 0.5, f32::NEG_INFINITY];
+        assert_eq!(sample_token(&l, None, Strategy::Greedy, &mut rng), Some(1));
+        assert_eq!(sample_token(&l, None, Strategy::Temperature(1.0), &mut rng), Some(1));
+    }
+}

@@ -1,0 +1,570 @@
+//! The serving loop: continuous batching over fixed model lanes, masked
+//! sampling per lane, per-request response channels.
+//!
+//! A single scheduler thread owns the model and one constraint engine per
+//! lane. Each iteration: (1) admit queued requests into free lanes
+//! (prefill), (2) for every lane holding fresh logits, compute the grammar
+//! mask (or opportunistically validate the unmasked sample) and pick the
+//! next token (Algorithm 3 lines 4–12), (3) run one batched decode step
+//! for all still-active lanes.
+
+use super::metrics::Metrics;
+use super::sampler::{sample_token, Strategy};
+use crate::engine::ConstraintEngine;
+use crate::runtime::{LanguageModel, ModelFactory};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Factory producing a fresh constraint engine per request.
+pub type EngineFactory = Box<dyn Fn() -> Box<dyn ConstraintEngine> + Send>;
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    pub strategy: Strategy,
+    pub seed: u64,
+    /// Opportunistic masking (Beurer-Kellner et al. 2024): sample first,
+    /// validate, and only build the full mask on a miss.
+    pub opportunistic: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 128,
+            strategy: Strategy::Greedy,
+            seed: 0,
+            opportunistic: true,
+        }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Conditioning text fed to the LM (may include few-shot examples).
+    pub prompt: String,
+    /// `C_0` for the constraint engine (code prefix for completion tasks;
+    /// empty for freeform).
+    pub constraint_prefix: String,
+    pub params: GenParams,
+}
+
+/// Why a generation stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// The constraint engine rejected the prefix or the mask went empty.
+    EngineError,
+    /// Prompt + generation hit the model's max sequence length.
+    SeqOverflow,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated completion text (prompt excluded).
+    pub text: String,
+    pub finish: FinishReason,
+    pub tokens: usize,
+    pub ttft_secs: f64,
+    pub latency_secs: f64,
+    pub error: Option<String>,
+}
+
+enum Msg {
+    Req(GenRequest, Sender<GenResponse>),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Req(req, tx)).expect("server alive");
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn generate(&self, req: GenRequest) -> GenResponse {
+        self.submit(req).recv().expect("server alive")
+    }
+
+    /// Stop the scheduler (drains in-flight lanes first).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One lane's in-flight request.
+struct Lane {
+    req: GenRequest,
+    resp_tx: Sender<GenResponse>,
+    engine: Box<dyn ConstraintEngine>,
+    logits: Vec<f32>,
+    generated: Vec<u32>,
+    rng: Rng,
+    t_admit: Instant,
+    ttft: Option<f64>,
+    prompt_len: usize,
+}
+
+/// The server.
+pub struct Server;
+
+impl Server {
+    /// Start the scheduler thread. The model factory runs *inside* the
+    /// thread (PJRT handles are not `Send`); the engine factory makes one
+    /// constraint engine per admitted request (use `StandardEngine` for
+    /// unconstrained serving).
+    pub fn start(
+        model_factory: ModelFactory,
+        tok: Arc<Tokenizer>,
+        engine_factory: EngineFactory,
+    ) -> ServerHandle {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics2 = metrics.clone();
+        let join = std::thread::spawn(move || {
+            let mut model: Box<dyn LanguageModel> =
+                model_factory().expect("model construction failed");
+            let nlanes = model.lanes();
+            let mut lanes: Vec<Option<Lane>> = (0..nlanes).map(|_| None).collect();
+            let mut queue: std::collections::VecDeque<(GenRequest, Sender<GenResponse>)> =
+                Default::default();
+            let mut shutdown = false;
+            loop {
+                // ---- intake --------------------------------------------
+                if lanes.iter().all(|l| l.is_none()) && queue.is_empty() {
+                    if shutdown {
+                        break;
+                    }
+                    match rx.recv() {
+                        Ok(Msg::Req(r, t)) => queue.push_back((r, t)),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(r, t)) => queue.push_back((r, t)),
+                        Ok(Msg::Shutdown) => shutdown = true,
+                        Err(_) => break,
+                    }
+                }
+
+                // ---- admission (continuous batching) -------------------
+                for lane_idx in 0..nlanes {
+                    if lanes[lane_idx].is_some() {
+                        continue;
+                    }
+                    let Some((req, resp_tx)) = queue.pop_front() else { break };
+                    metrics2.lock().unwrap().mark_started();
+                    let mut engine = engine_factory();
+                    engine.reset(&req.constraint_prefix);
+                    let mut ids = vec![tok.bos_id];
+                    ids.extend(tok.encode(req.prompt.as_bytes()));
+                    // Keep the full prompt where possible (tail-clamp only
+                    // when it alone overflows); generation stops at
+                    // SeqOverflow if the budget runs out.
+                    let cap = model.max_seq().saturating_sub(8).max(1);
+                    if ids.len() > cap {
+                        ids = ids[ids.len() - cap..].to_vec();
+                    }
+                    let t_admit = Instant::now();
+                    match model.prefill(lane_idx, &ids) {
+                        Ok(logits) => {
+                            let rng = Rng::new(req.params.seed ^ req.id);
+                            lanes[lane_idx] = Some(Lane {
+                                prompt_len: ids.len(),
+                                req,
+                                resp_tx,
+                                engine,
+                                logits,
+                                generated: Vec::new(),
+                                rng,
+                                t_admit,
+                                ttft: None,
+                            });
+                        }
+                        Err(e) => {
+                            let _ = resp_tx.send(GenResponse {
+                                id: req.id,
+                                text: String::new(),
+                                finish: FinishReason::EngineError,
+                                tokens: 0,
+                                ttft_secs: 0.0,
+                                latency_secs: 0.0,
+                                error: Some(format!("prefill: {e}")),
+                            });
+                        }
+                    }
+                }
+
+                // ---- sampling per lane ----------------------------------
+                let mut last: Vec<Option<u32>> = vec![None; nlanes];
+                let max_seq = model.max_seq();
+                for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                    let Some(lane) = slot.as_mut() else { continue };
+                    let step = step_lane(lane, &tok, &metrics2, max_seq);
+                    match step {
+                        LaneStep::Continue(token) => {
+                            if lane.ttft.is_none() {
+                                lane.ttft = Some(lane.t_admit.elapsed().as_secs_f64());
+                            }
+                            last[lane_idx] = Some(token);
+                        }
+                        LaneStep::Finish(reason, err) => {
+                            finish_lane(slot.take().unwrap(), reason, err, &tok, &metrics2);
+                            model.release(lane_idx);
+                        }
+                    }
+                }
+
+                // ---- batched decode step --------------------------------
+                if last.iter().any(|t| t.is_some()) {
+                    metrics2.lock().unwrap().decode_steps += 1;
+                    match model.decode(&last) {
+                        Ok(all) => {
+                            for (lane_idx, lg) in all.into_iter().enumerate() {
+                                if let (Some(lane), Some(lg)) =
+                                    (lanes[lane_idx].as_mut(), lg)
+                                {
+                                    lane.logits = lg;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Model failure: fail all active lanes.
+                            for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                                if let Some(lane) = slot.take() {
+                                    finish_lane(
+                                        lane,
+                                        FinishReason::EngineError,
+                                        Some(format!("decode: {e}")),
+                                        &tok,
+                                        &metrics2,
+                                    );
+                                    model.release(lane_idx);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        ServerHandle { tx, metrics, join: Some(join) }
+    }
+}
+
+enum LaneStep {
+    Continue(u32),
+    Finish(FinishReason, Option<String>),
+}
+
+/// Sample the next token for one lane (mask + strategy + stop conditions).
+fn step_lane(
+    lane: &mut Lane,
+    tok: &Tokenizer,
+    metrics: &Arc<Mutex<Metrics>>,
+    max_seq: usize,
+) -> LaneStep {
+    if lane.generated.len() >= lane.req.params.max_new_tokens {
+        return LaneStep::Finish(FinishReason::MaxTokens, None);
+    }
+    // Room left in the model's sequence?
+    if lane.prompt_len + lane.generated.len() + 2 >= max_seq {
+        return LaneStep::Finish(FinishReason::SeqOverflow, None);
+    }
+    let strategy = lane.req.params.strategy;
+
+    // Opportunistic path: sample unmasked, validate, fall back to the
+    // full mask only on a miss.
+    let token = if lane.req.params.opportunistic {
+        let cand = sample_token(&lane.logits, None, strategy, &mut lane.rng);
+        match cand {
+            Some(c) => match lane.engine.token_allowed(c) {
+                Ok(true) => {
+                    metrics.lock().unwrap().opportunistic_hits += 1;
+                    Some(c)
+                }
+                Ok(false) => match lane.engine.compute_mask() {
+                    Ok(Some(mask)) => {
+                        metrics.lock().unwrap().full_mask_computations += 1;
+                        sample_token(&lane.logits, Some(mask), strategy, &mut lane.rng)
+                    }
+                    Ok(None) => Some(c),
+                    Err(e) => {
+                        return LaneStep::Finish(
+                            FinishReason::EngineError,
+                            Some(e.to_string()),
+                        )
+                    }
+                },
+                Err(e) => {
+                    return LaneStep::Finish(FinishReason::EngineError, Some(e.to_string()))
+                }
+            },
+            None => None,
+        }
+    } else {
+        match lane.engine.compute_mask() {
+            Ok(Some(mask)) => {
+                metrics.lock().unwrap().full_mask_computations += 1;
+                sample_token(&lane.logits, Some(mask), strategy, &mut lane.rng)
+            }
+            Ok(None) => sample_token(&lane.logits, None, strategy, &mut lane.rng),
+            Err(e) => {
+                return LaneStep::Finish(FinishReason::EngineError, Some(e.to_string()))
+            }
+        }
+    };
+
+    let Some(token) = token else {
+        return LaneStep::Finish(
+            FinishReason::EngineError,
+            Some("empty mask (dead end)".to_string()),
+        );
+    };
+    if token == tok.eos_id {
+        return LaneStep::Finish(FinishReason::Eos, None);
+    }
+
+    // Exact final validation: the α=1 mask over-approximates (Definition 8
+    // prefix acceptance), so a sampled token can rarely dead-end the
+    // generation. Re-validate the committed token exactly; on a miss, walk
+    // the masked candidates in logit order until one survives.
+    let token = if lane.engine.validate_append(tok.token_bytes(token)) {
+        token
+    } else {
+        match lane.engine.compute_mask() {
+            Ok(Some(mask)) => {
+                let mut cands: Vec<(u32, f32)> = mask
+                    .iter_ones()
+                    .map(|i| (i as u32, lane.logits.get(i).copied().unwrap_or(f32::MIN)))
+                    .collect();
+                cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                let mut chosen = None;
+                for (cand, _) in cands.into_iter().take(64) {
+                    if cand == tok.eos_id {
+                        return LaneStep::Finish(FinishReason::Eos, None);
+                    }
+                    if lane.engine.validate_append(tok.token_bytes(cand)) {
+                        chosen = Some(cand);
+                        break;
+                    }
+                }
+                match chosen {
+                    Some(c) => c,
+                    None => {
+                        return LaneStep::Finish(
+                            FinishReason::EngineError,
+                            Some("no valid continuation".to_string()),
+                        )
+                    }
+                }
+            }
+            Ok(None) => token,
+            Err(e) => {
+                return LaneStep::Finish(FinishReason::EngineError, Some(e.to_string()))
+            }
+        }
+    };
+
+    lane.generated.push(token);
+    lane.engine.append(tok.token_bytes(token));
+    LaneStep::Continue(token)
+}
+
+fn finish_lane(
+    lane: Lane,
+    finish: FinishReason,
+    error: Option<String>,
+    tok: &Tokenizer,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let latency = lane.t_admit.elapsed().as_secs_f64();
+    let text = tok.decode_str(&lane.generated);
+    {
+        let mut m = metrics.lock().unwrap();
+        m.requests_finished += 1;
+        m.tokens_generated += lane.generated.len() as u64;
+        m.latency.record(latency);
+        m.ttft.record(lane.ttft.unwrap_or(latency));
+        if error.is_some() {
+            m.engine_errors += 1;
+        }
+    }
+    let _ = lane.resp_tx.send(GenResponse {
+        id: lane.req.id,
+        text,
+        finish,
+        tokens: lane.generated.len(),
+        ttft_secs: lane.ttft.unwrap_or(latency),
+        latency_secs: latency,
+        error,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::baselines::StandardEngine;
+    use crate::engine::{GrammarContext, SyncodeEngine};
+    use crate::mask::{MaskStore, MaskStoreConfig};
+    use crate::parser::LrMode;
+    use crate::runtime::MockModel;
+
+    fn json_docs() -> Vec<Vec<u8>> {
+        vec![
+            br#"{"name": "alice", "age": 30}"#.to_vec(),
+            br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+            br#"{"nested": {"a": null}}"#.to_vec(),
+        ]
+    }
+
+    fn start_server(constrained: bool) -> (ServerHandle, Arc<Tokenizer>) {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let tok_m = tok.clone();
+        let model: ModelFactory = Box::new(move || {
+            Ok(Box::new(MockModel::from_documents(tok_m, &json_docs(), 2, 256, 11)))
+        });
+        let factory: EngineFactory = if constrained {
+            let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+            let store = Arc::new(MaskStore::build(
+                &cx.grammar,
+                &tok,
+                MaskStoreConfig::default(),
+            ));
+            let tok2 = tok.clone();
+            Box::new(move || {
+                Box::new(SyncodeEngine::new(cx.clone(), store.clone(), tok2.clone()))
+            })
+        } else {
+            Box::new(|| Box::new(StandardEngine::new()))
+        };
+        (Server::start(model, tok.clone(), factory), tok)
+    }
+
+    #[test]
+    fn constrained_server_emits_valid_json() {
+        let (srv, _) = start_server(true);
+        let cx = GrammarContext::builtin("json", LrMode::Lalr).unwrap();
+        for i in 0..4 {
+            let resp = srv.generate(GenRequest {
+                id: i,
+                prompt: "Give me a JSON object:".into(),
+                constraint_prefix: String::new(),
+                params: GenParams {
+                    max_new_tokens: 120,
+                    strategy: Strategy::Temperature(0.8),
+                    seed: i * 31 + 5,
+                    opportunistic: true,
+                },
+            });
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            if resp.finish == FinishReason::Eos {
+                assert!(
+                    cx.check_complete(resp.text.as_bytes()).is_ok(),
+                    "invalid JSON from constrained server: {:?}",
+                    resp.text
+                );
+            } else {
+                // max-token truncation: still a valid *prefix*
+                assert!(cx.prefix_valid(resp.text.as_bytes()), "{:?}", resp.text);
+            }
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unconstrained_server_runs() {
+        let (srv, _) = start_server(false);
+        let resp = srv.generate(GenRequest {
+            id: 1,
+            prompt: "hello".into(),
+            constraint_prefix: String::new(),
+            params: GenParams {
+                max_new_tokens: 20,
+                strategy: Strategy::Greedy,
+                seed: 3,
+                opportunistic: true,
+            },
+        });
+        assert!(resp.error.is_none());
+        assert!(resp.tokens <= 20);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batched_requests_all_complete() {
+        let (srv, _) = start_server(true);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                srv.submit(GenRequest {
+                    id: i,
+                    prompt: format!("request {i}"),
+                    constraint_prefix: String::new(),
+                    params: GenParams {
+                        max_new_tokens: 60,
+                        strategy: Strategy::TopP { temp: 0.9, p: 0.95 },
+                        seed: i,
+                        opportunistic: i % 2 == 0,
+                    },
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        let snap = srv.metrics.lock().unwrap().snapshot();
+        assert_eq!(snap.requests_finished, 6);
+        assert!(snap.decode_steps > 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn metrics_track_opportunistic() {
+        let (srv, _) = start_server(true);
+        let _ = srv.generate(GenRequest {
+            id: 9,
+            prompt: "x".into(),
+            constraint_prefix: String::new(),
+            params: GenParams {
+                max_new_tokens: 40,
+                strategy: Strategy::Greedy,
+                seed: 2,
+                opportunistic: true,
+            },
+        });
+        let snap = srv.metrics.lock().unwrap().snapshot();
+        assert!(snap.opportunistic_hits + snap.full_mask_computations > 0);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,311 @@
+//! Baseline engines: the *algorithms* of the systems SynCode is compared
+//! against (Table 1/2 and §7), re-implemented on this repo's substrate so
+//! benchmarks isolate the algorithmic variable — precomputed mask store +
+//! incremental parsing vs. online per-token work.
+//!
+//! - [`StandardEngine`] — unconstrained generation.
+//! - [`OutlinesLike`] — Outlines (Willard & Louf 2023) style: an
+//!   incremental LALR parse provides acceptable terminals, but the token
+//!   mask is built by scanning the **whole vocabulary** each step, walking
+//!   r·t through the terminal DFAs online (no offline mask store).
+//! - [`GbnfLike`] — llama.cpp GBNF style: no precomputation at all and no
+//!   incremental parser; every step re-validates candidate tokens by
+//!   re-running lexing/parsing on `C_k·t` (stack-state update per token).
+
+use super::context::{GrammarContext, PrefixError};
+use super::ConstraintEngine;
+use crate::parser::IncrementalParser;
+use crate::tokenizer::Tokenizer;
+use crate::util::bitset::BitSet;
+use std::sync::Arc;
+
+// -------------------------------------------------------------- standard --
+
+/// Unconstrained generation (the "Standard" rows of Tables 1–3).
+#[derive(Default)]
+pub struct StandardEngine {
+    text: Vec<u8>,
+}
+
+impl StandardEngine {
+    pub fn new() -> StandardEngine {
+        StandardEngine::default()
+    }
+}
+
+impl ConstraintEngine for StandardEngine {
+    fn reset(&mut self, prefix: &str) {
+        self.text.clear();
+        self.text.extend_from_slice(prefix.as_bytes());
+    }
+
+    fn append(&mut self, bytes: &[u8]) {
+        self.text.extend_from_slice(bytes);
+    }
+
+    fn text(&self) -> &[u8] {
+        &self.text
+    }
+
+    fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError> {
+        Ok(None)
+    }
+
+    fn token_allowed(&mut self, _token_id: u32) -> Result<bool, PrefixError> {
+        Ok(true)
+    }
+
+    fn is_complete(&mut self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "standard"
+    }
+}
+
+// -------------------------------------------------------------- outlines --
+
+/// Outlines-style engine: parser-derived accept sequences, but the mask is
+/// assembled by an O(|V|) online scan (DFA walks per token) every step.
+pub struct OutlinesLike {
+    cx: Arc<GrammarContext>,
+    tok: Arc<Tokenizer>,
+    text: Vec<u8>,
+    inc: IncrementalParser,
+    mask: BitSet,
+    step: Option<super::context::Analysis>,
+    /// Instrumentation: tokens scanned online.
+    pub tokens_scanned: u64,
+}
+
+impl OutlinesLike {
+    pub fn new(cx: Arc<GrammarContext>, tok: Arc<Tokenizer>) -> OutlinesLike {
+        let inc = cx.new_parser();
+        let mask = BitSet::new(tok.vocab_size());
+        OutlinesLike { cx, tok, text: Vec::new(), inc, mask, step: None, tokens_scanned: 0 }
+    }
+
+    fn ensure_step(&mut self) -> Result<(), PrefixError> {
+        if self.step.is_none() {
+            self.step = Some(self.cx.analyze(&self.text, &mut self.inc)?);
+        }
+        Ok(())
+    }
+
+    /// Online dmatch: does r·t partially match accept sequence Λ?
+    /// (The same semantics the mask store precomputes, evaluated live.)
+    fn dmatch_online(cx: &GrammarContext, seq: &[u16], r: &[u8], t: &[u8]) -> bool {
+        let g = &cx.grammar;
+        let dfa = &g.terminals[seq[0] as usize].dfa;
+        let q = dfa.walk(dfa.start(), r);
+        if !dfa.is_live(q) {
+            return false;
+        }
+        // Walk t from q; collect F-split positions.
+        let mut cur = q;
+        let mut fpos: Vec<usize> = Vec::new();
+        if dfa.is_accept(cur) {
+            fpos.push(0);
+        }
+        let mut live_all = true;
+        for (j, &b) in t.iter().enumerate() {
+            cur = dfa.step(cur, b);
+            if cur == crate::regex::DEAD {
+                live_all = false;
+                break;
+            }
+            if dfa.is_accept(cur) {
+                fpos.push(j + 1);
+            }
+        }
+        if live_all && dfa.is_live(cur) {
+            return true;
+        }
+        for &i in &fpos {
+            let rest = &t[i..];
+            match seq.len() {
+                1 => {
+                    if !rest.is_empty() {
+                        return true; // spills into unknown next terminal
+                    }
+                }
+                _ => {
+                    let nd = &g.terminals[seq[1] as usize].dfa;
+                    // dmatch(rest, q0_next, {}): live walk or F-split.
+                    let mut c = nd.start();
+                    let mut ok = false;
+                    let mut alive = true;
+                    for (j, &b) in rest.iter().enumerate() {
+                        c = nd.step(c, b);
+                        if c == crate::regex::DEAD {
+                            alive = false;
+                            break;
+                        }
+                        if nd.is_accept(c) && j + 1 < rest.len() {
+                            ok = true;
+                            break;
+                        }
+                    }
+                    if ok || (alive && nd.is_live(c)) || rest.is_empty() {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    fn token_ok(&self, token_id: u32) -> bool {
+        let a = self.step.as_ref().unwrap();
+        if token_id == self.tok.eos_id {
+            return a.acc.eos_ok;
+        }
+        if self.tok.is_special(token_id) {
+            return false;
+        }
+        let bytes = self.tok.token_bytes(token_id);
+        if bytes.is_empty() {
+            return false;
+        }
+        let r = &self.text[a.remainder_start..];
+        a.acc.seqs.iter().any(|s| Self::dmatch_online(&self.cx, s, r, bytes))
+    }
+}
+
+impl ConstraintEngine for OutlinesLike {
+    fn reset(&mut self, prefix: &str) {
+        self.text.clear();
+        self.text.extend_from_slice(prefix.as_bytes());
+        self.inc.reset();
+        self.step = None;
+    }
+
+    fn append(&mut self, bytes: &[u8]) {
+        self.text.extend_from_slice(bytes);
+        self.step = None;
+    }
+
+    fn text(&self) -> &[u8] {
+        &self.text
+    }
+
+    fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError> {
+        self.ensure_step()?;
+        self.mask.clear_all();
+        // The defining cost: iterate the whole vocabulary online.
+        for id in 0..self.tok.vocab_size() as u32 {
+            self.tokens_scanned += 1;
+            if self.token_ok(id) {
+                self.mask.set(id as usize);
+            }
+        }
+        Ok(Some(&self.mask))
+    }
+
+    fn token_allowed(&mut self, token_id: u32) -> Result<bool, PrefixError> {
+        self.ensure_step()?;
+        Ok(self.token_ok(token_id))
+    }
+
+    fn is_complete(&mut self) -> bool {
+        self.ensure_step().map(|_| self.step.as_ref().unwrap().acc.eos_ok).unwrap_or(false)
+    }
+
+    fn validate_append(&mut self, bytes: &[u8]) -> bool {
+        let mut probe = self.text.clone();
+        probe.extend_from_slice(bytes);
+        self.cx.prefix_valid(&probe)
+    }
+
+    fn name(&self) -> &'static str {
+        "outlines-like"
+    }
+}
+
+// ------------------------------------------------------------------ gbnf --
+
+/// llama.cpp-GBNF-style engine: no offline structures *and* no incremental
+/// parsing — every mask bit is decided by re-validating `C_k·t` from
+/// scratch (the per-token stack-state update of §7), so per-step cost grows
+/// with both |V| and |C_k|.
+pub struct GbnfLike {
+    cx: Arc<GrammarContext>,
+    tok: Arc<Tokenizer>,
+    text: Vec<u8>,
+    mask: BitSet,
+    /// Instrumentation: bytes re-processed.
+    pub bytes_reprocessed: u64,
+}
+
+impl GbnfLike {
+    pub fn new(cx: Arc<GrammarContext>, tok: Arc<Tokenizer>) -> GbnfLike {
+        let mask = BitSet::new(tok.vocab_size());
+        GbnfLike { cx, tok, text: Vec::new(), mask, bytes_reprocessed: 0 }
+    }
+
+    fn token_ok(&mut self, token_id: u32) -> Result<bool, PrefixError> {
+        if token_id == self.tok.eos_id {
+            return Ok(self.cx.check_complete(&self.text).is_ok());
+        }
+        if self.tok.is_special(token_id) {
+            return Ok(false);
+        }
+        let bytes = self.tok.token_bytes(token_id);
+        if bytes.is_empty() {
+            return Ok(false);
+        }
+        let mut probe = self.text.clone();
+        probe.extend_from_slice(bytes);
+        self.bytes_reprocessed += probe.len() as u64;
+        Ok(self.cx.prefix_valid(&probe))
+    }
+}
+
+impl ConstraintEngine for GbnfLike {
+    fn reset(&mut self, prefix: &str) {
+        self.text.clear();
+        self.text.extend_from_slice(prefix.as_bytes());
+    }
+
+    fn append(&mut self, bytes: &[u8]) {
+        self.text.extend_from_slice(bytes);
+    }
+
+    fn text(&self) -> &[u8] {
+        &self.text
+    }
+
+    fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError> {
+        // Fail fast if the prefix itself is invalid (mirrors SynCode).
+        if !self.cx.prefix_valid(&self.text) {
+            return Err(PrefixError::DeadRemainder);
+        }
+        let mut mask = BitSet::new(self.tok.vocab_size());
+        for id in 0..self.tok.vocab_size() as u32 {
+            if self.token_ok(id)? {
+                mask.set(id as usize);
+            }
+        }
+        self.mask = mask;
+        Ok(Some(&self.mask))
+    }
+
+    fn token_allowed(&mut self, token_id: u32) -> Result<bool, PrefixError> {
+        self.token_ok(token_id)
+    }
+
+    fn is_complete(&mut self) -> bool {
+        self.cx.check_complete(&self.text).is_ok()
+    }
+
+    fn validate_append(&mut self, bytes: &[u8]) -> bool {
+        let mut probe = self.text.clone();
+        probe.extend_from_slice(bytes);
+        self.cx.prefix_valid(&probe)
+    }
+
+    fn name(&self) -> &'static str {
+        "gbnf-like"
+    }
+}

@@ -1,0 +1,241 @@
+//! Shared grammar bundle: grammar + LR tables + post-lex pass, plus the
+//! prefix-analysis routine every engine (and the syntax-error oracle in
+//! `eval`) is built on.
+
+use crate::grammar::{Grammar, GrammarError, TermId};
+use crate::lexer::{postlex_for, Lexer, PostLex, PostLexResult};
+use crate::parser::{
+    compute_accept_sequences, AcceptContext, AcceptSequences, IncrementalParser, LrMode,
+    LrTable, ParseStatus, ParserState,
+};
+use std::sync::Arc;
+
+/// Why a partial output is not a valid prefix of L(G).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrefixError {
+    /// Byte offset where lexing failed.
+    Lex(usize),
+    /// Index (in the parser token stream) of the rejected terminal.
+    Parse(usize),
+    /// Post-lex constraint violated (bad dedent level, …).
+    PostLex,
+    /// The remainder cannot extend into any acceptable terminal.
+    DeadRemainder,
+}
+
+impl std::fmt::Display for PrefixError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrefixError::Lex(p) => write!(f, "lex error at byte {p}"),
+            PrefixError::Parse(i) => write!(f, "parse error at token {i}"),
+            PrefixError::PostLex => write!(f, "post-lex constraint violated"),
+            PrefixError::DeadRemainder => write!(f, "remainder cannot continue"),
+        }
+    }
+}
+
+impl std::error::Error for PrefixError {}
+
+/// Everything needed to constrain generation for one language.
+pub struct GrammarContext {
+    pub name: String,
+    pub grammar: Arc<Grammar>,
+    pub table: Arc<LrTable>,
+    pub postlex: Box<dyn PostLex>,
+    /// LALR tables need exact (simulation-filtered) follow sets.
+    pub exact_follow: bool,
+}
+
+/// Per-step analysis of a partial output `C_k`.
+pub struct Analysis {
+    pub acc: AcceptSequences,
+    /// Remainder byte range start in the analysed text.
+    pub remainder_start: usize,
+    pub remainder_term: Option<TermId>,
+    pub plr: PostLexResult,
+}
+
+impl GrammarContext {
+    /// Load a built-in grammar with its post-lex pass and LR tables.
+    pub fn builtin(name: &str, mode: LrMode) -> Result<GrammarContext, GrammarError> {
+        let grammar = Arc::new(Grammar::builtin(name)?);
+        let table = Arc::new(LrTable::build(&grammar, mode));
+        let postlex = postlex_for(name, &grammar);
+        Ok(GrammarContext {
+            name: name.to_string(),
+            grammar,
+            table,
+            postlex,
+            exact_follow: mode == LrMode::Lalr,
+        })
+    }
+
+    /// Build from EBNF source (user-supplied grammar, §4.7).
+    pub fn from_ebnf(
+        name: &str,
+        src: &str,
+        mode: LrMode,
+    ) -> Result<GrammarContext, GrammarError> {
+        let grammar = Arc::new(crate::grammar::parse_ebnf(src)?);
+        let table = Arc::new(LrTable::build(&grammar, mode));
+        let postlex = postlex_for(name, &grammar);
+        Ok(GrammarContext {
+            name: name.to_string(),
+            grammar,
+            table,
+            postlex,
+            exact_follow: mode == LrMode::Lalr,
+        })
+    }
+
+    /// Fresh incremental parser over this context's tables.
+    pub fn new_parser(&self) -> IncrementalParser {
+        IncrementalParser::new(ParserState::new(self.table.clone()))
+    }
+
+    /// Analyse a partial output: lex, post-lex, (incrementally) parse, and
+    /// compute accept sequences + EOS admissibility.
+    pub fn analyze(
+        &self,
+        text: &[u8],
+        inc: &mut IncrementalParser,
+    ) -> Result<Analysis, PrefixError> {
+        let lexer = Lexer::new(&self.grammar);
+        let lr = lexer.lex(text);
+        self.analyze_lexed(text, lr, inc)
+    }
+
+    /// [`GrammarContext::analyze`] with lexing already done (the SynCode
+    /// engine lexes incrementally from its per-step cache).
+    pub fn analyze_lexed(
+        &self,
+        text: &[u8],
+        lr: crate::lexer::LexResult,
+        inc: &mut IncrementalParser,
+    ) -> Result<Analysis, PrefixError> {
+        if let Some(p) = lr.error {
+            return Err(PrefixError::Lex(p));
+        }
+        let plr = self.postlex.apply(&self.grammar, text, &lr.tokens);
+        if plr.error {
+            return Err(PrefixError::PostLex);
+        }
+        match inc.parse(&plr.parser_tokens) {
+            ParseStatus::Ok => {}
+            ParseStatus::ErrorAt(i) => return Err(PrefixError::Parse(i)),
+        }
+        let cx = AcceptContext {
+            grammar: &self.grammar,
+            state: inc.state(),
+            postlex: self.postlex.as_ref(),
+            plr: &plr,
+            remainder_term: lr.remainder_term,
+            remainder: lr.remainder(text),
+            exact_follow: self.exact_follow,
+        };
+        let acc = compute_accept_sequences(&cx);
+        Ok(Analysis {
+            acc,
+            remainder_start: lr.remainder_start,
+            remainder_term: lr.remainder_term,
+            plr,
+        })
+    }
+
+    /// Is `text` a valid *prefix* of L(G) (i.e. in L_p(G))? A prefix is
+    /// valid when analysis succeeds and either the remainder is empty, the
+    /// output is complete, or some accept sequence keeps the remainder's
+    /// DFA walk alive.
+    pub fn prefix_valid(&self, text: &[u8]) -> bool {
+        let mut inc = self.new_parser();
+        match self.analyze(text, &mut inc) {
+            Err(_) => false,
+            Ok(a) => {
+                if a.acc.eos_ok || a.remainder_start == text.len() {
+                    return true;
+                }
+                let r = &text[a.remainder_start..];
+                a.acc.seqs.iter().any(|seq| {
+                    let dfa = &self.grammar.terminals[seq[0] as usize].dfa;
+                    dfa.is_live(dfa.walk(dfa.start(), r))
+                })
+            }
+        }
+    }
+
+    /// Is `text` a syntactically valid *complete* program (`∈ L(G)`)?
+    /// This is the syntax-error oracle used by the experiments ("we use
+    /// their respective standard compilers" — ours are these parsers).
+    pub fn check_complete(&self, text: &[u8]) -> Result<(), PrefixError> {
+        let mut inc = self.new_parser();
+        let a = self.analyze(text, &mut inc)?;
+        if a.acc.eos_ok {
+            Ok(())
+        } else {
+            Err(PrefixError::DeadRemainder)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_complete_json() {
+        let cx = GrammarContext::builtin("json", LrMode::Lalr).unwrap();
+        assert!(cx.check_complete(br#"{"a": [1, 2], "b": null}"#).is_ok());
+        assert!(cx.check_complete(br#"{"a": 1"#).is_err());
+        assert!(cx.check_complete(b"hello").is_err());
+        assert!(cx.check_complete(br#"{"a":}"#).is_err());
+    }
+
+    #[test]
+    fn prefix_validity_json() {
+        let cx = GrammarContext::builtin("json", LrMode::Lalr).unwrap();
+        assert!(cx.prefix_valid(br#"{"a": [1,"#));
+        assert!(cx.prefix_valid(br#"{"unterminated strin"#));
+        assert!(!cx.prefix_valid(br#"{"a": 1}}"#));
+        assert!(!cx.prefix_valid(b"]"));
+    }
+
+    #[test]
+    fn check_complete_python() {
+        let cx = GrammarContext::builtin("python", LrMode::Lalr).unwrap();
+        let good = b"def f(x):\n    return x + 1\n";
+        assert!(cx.check_complete(good).is_ok(), "{:?}", cx.check_complete(good));
+        assert!(cx.check_complete(b"def f(x:\n").is_err());
+        // bad indentation
+        assert!(cx.check_complete(b"if a:\n   x = 1\n  y = 2\n").is_err());
+    }
+
+    #[test]
+    fn check_complete_go() {
+        let cx = GrammarContext::builtin("go", LrMode::Lalr).unwrap();
+        let good = b"package main\n\nfunc add(a int, b int) int {\n\treturn a + b\n}\n";
+        assert!(cx.check_complete(good).is_ok(), "{:?}", cx.check_complete(good));
+        assert!(cx.check_complete(b"package main\n\nfunc add( {\n").is_err());
+    }
+
+    #[test]
+    fn check_complete_sql() {
+        let cx = GrammarContext::builtin("sql", LrMode::Lalr).unwrap();
+        assert!(cx
+            .check_complete(b"SELECT a, count(*) FROM t JOIN u ON t.id = u.id WHERE a > 3 GROUP BY a ORDER BY a DESC LIMIT 5")
+            .is_ok());
+        assert!(cx.check_complete(b"SELECT FROM t").is_err());
+    }
+
+    #[test]
+    fn custom_ebnf_context() {
+        let cx = GrammarContext::from_ebnf(
+            "letters",
+            "start: \"a\"+ \"b\"\n",
+            LrMode::Canonical,
+        )
+        .unwrap();
+        assert!(cx.check_complete(b"aab").is_ok());
+        assert!(cx.check_complete(b"b").is_err());
+        assert!(cx.prefix_valid(b"aa"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Constrained-decoding engines.
+//!
+//! [`SyncodeEngine`] is the paper's system (Algorithm 3's mask provider):
+//! incremental parse → accept sequences → DFA-mask-store lookups.
+//! [`baselines`] re-implements the *algorithms* of the compared systems on
+//! the same substrate — [`baselines::StandardEngine`] (no constraints),
+//! [`baselines::OutlinesLike`] (per-step whole-vocabulary DFA scan),
+//! [`baselines::GbnfLike`] (per-token full re-validation, no
+//! precomputation, no incremental parsing) — so benchmarks isolate exactly
+//! the paper's algorithmic claims.
+
+mod context;
+mod syncode;
+pub mod baselines;
+
+pub use context::{Analysis, GrammarContext, PrefixError};
+pub use syncode::SyncodeEngine;
+
+use crate::util::bitset::BitSet;
+
+/// A per-request constrained-decoding engine (one per live sequence).
+pub trait ConstraintEngine: Send {
+    /// Start a new completion whose fixed prefix (prompt-side code) is
+    /// `prefix` — `C_0` in the paper. Empty for freeform generation.
+    fn reset(&mut self, prefix: &str);
+
+    /// Append the detokenised bytes of the sampled token (`C_k → C_{k+1}`).
+    fn append(&mut self, bytes: &[u8]);
+
+    /// Current partial output `C_k` (prefix + generated).
+    fn text(&self) -> &[u8];
+
+    /// Compute the token mask for the next position. `Ok(None)` means
+    /// unconstrained (the Standard baseline). `Err` means `C_k` stopped
+    /// being a valid prefix — only possible when the engine was fed
+    /// unconstrained text.
+    fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError>;
+
+    /// Opportunistic check for a single token (Beurer-Kellner et al. 2024;
+    /// used by llama.cpp/Guidance and adopted by SynCode's evaluation):
+    /// cheaper than a full mask when the proposed token is already valid.
+    fn token_allowed(&mut self, token_id: u32) -> Result<bool, PrefixError>;
+
+    /// Is `C_k ∈ L(G)` — i.e. may the model emit EOS now?
+    fn is_complete(&mut self) -> bool;
+
+    /// Exact final check before committing a sampled token: is `C_k·t`
+    /// still in L_p(G)? The α=1 mask store is deliberately
+    /// over-approximate (Definition 8 prefix acceptance; completeness
+    /// needs d > len(t), Theorem 2), so a rare sampled token can pass the
+    /// mask yet dead-end the generation. This exact check runs on the few
+    /// *committed* tokens (not the whole vocabulary), restoring the
+    /// L_p(G) invariant at O(parse) per step. Unconstrained engines
+    /// return true.
+    fn validate_append(&mut self, _bytes: &[u8]) -> bool {
+        true
+    }
+
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::baselines::{GbnfLike, OutlinesLike, StandardEngine};
+    use super::*;
+    use crate::mask::{MaskStore, MaskStoreConfig};
+    use crate::parser::LrMode;
+    use crate::tokenizer::Tokenizer;
+    use std::sync::Arc;
+
+    fn engines() -> (Arc<GrammarContext>, Arc<Tokenizer>, Vec<Box<dyn ConstraintEngine>>) {
+        let cx = Arc::new(GrammarContext::builtin("calc", LrMode::Lalr).unwrap());
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let store =
+            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        let v: Vec<Box<dyn ConstraintEngine>> = vec![
+            Box::new(SyncodeEngine::new(cx.clone(), store, tok.clone())),
+            Box::new(OutlinesLike::new(cx.clone(), tok.clone())),
+            Box::new(GbnfLike::new(cx.clone(), tok.clone())),
+        ];
+        (cx, tok, v)
+    }
+
+    #[test]
+    fn all_constrained_engines_agree_on_validity() {
+        // SynCode's mask must allow every token the exact per-token
+        // validators (Outlines/GBNF-style) allow — soundness in practice.
+        let (_, tok, mut engs) = engines();
+        let prefixes = ["", "math_sqrt(3", "1 + ", "math_sin(30) ", "2.", "(1"];
+        for p in prefixes {
+            let mut masks: Vec<BitSet> = Vec::new();
+            for e in engs.iter_mut() {
+                e.reset(p);
+                let m = e.compute_mask().unwrap().unwrap().clone();
+                masks.push(m);
+            }
+            let (sync, outl, gbnf) = (&masks[0], &masks[1], &masks[2]);
+            // exact validators agree with each other
+            assert_eq!(outl, gbnf, "exact engines disagree at {p:?}");
+            // SynCode over-approximates but must contain the exact set
+            assert!(
+                outl.is_subset(sync),
+                "SynCode unsound at {p:?}: missing {:?}",
+                outl.iter_ones()
+                    .filter(|&i| !sync.get(i))
+                    .map(|i| tok.token_bytes(i as u32).to_vec())
+                    .take(5)
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn standard_engine_unconstrained() {
+        let cx = Arc::new(GrammarContext::builtin("calc", LrMode::Lalr).unwrap());
+        let mut e = StandardEngine::new();
+        let _ = cx;
+        e.reset("anything at all");
+        assert!(e.compute_mask().unwrap().is_none());
+        assert!(e.token_allowed(5).unwrap());
+        assert!(e.is_complete());
+    }
+
+    #[test]
+    fn token_allowed_consistent_with_mask() {
+        let (_, tok, mut engs) = engines();
+        for e in engs.iter_mut() {
+            e.reset("math_exp(2 + ");
+            let mask = e.compute_mask().unwrap().unwrap().clone();
+            for id in 0..tok.vocab_size() as u32 {
+                assert_eq!(
+                    e.token_allowed(id).unwrap(),
+                    mask.get(id as usize),
+                    "{}: token {id} ({:?})",
+                    e.name(),
+                    String::from_utf8_lossy(tok.token_bytes(id))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generation_invariant_prefix_stays_valid() {
+        // Greedy-walk each engine: any token from the mask keeps the
+        // prefix valid (the L_p(G) invariant of §3.1).
+        let (_, tok, mut engs) = engines();
+        for e in engs.iter_mut() {
+            e.reset("");
+            for _ in 0..30 {
+                let m = e.compute_mask().unwrap().unwrap().clone();
+                // take the smallest allowed non-EOS token
+                let Some(t) =
+                    m.iter_ones().map(|i| i as u32).find(|&i| !tok.is_special(i))
+                else {
+                    break;
+                };
+                e.append(&tok.token_bytes(t).to_vec());
+            }
+            // must still be a valid prefix
+            assert!(e.compute_mask().is_ok(), "{} broke the invariant", e.name());
+        }
+    }
+
+    #[test]
+    fn eos_only_when_complete() {
+        let (_, tok, mut engs) = engines();
+        for e in engs.iter_mut() {
+            e.reset("math_sqrt(3)");
+            assert!(e.is_complete(), "{}", e.name());
+            let m = e.compute_mask().unwrap().unwrap().clone();
+            assert!(m.get(tok.eos_id as usize));
+            e.reset("math_sqrt(3");
+            assert!(!e.is_complete(), "{}", e.name());
+            let m = e.compute_mask().unwrap().unwrap().clone();
+            assert!(!m.get(tok.eos_id as usize));
+        }
+    }
+}

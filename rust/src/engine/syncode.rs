@@ -1,0 +1,331 @@
+//! The SynCode engine: the mask provider of Algorithm 3.
+//!
+//! Per decode step: re-lex `C_k` (cheap), incrementally parse the fixed
+//! tokens (Algorithm 4 cache), derive accept sequences A and remainder r
+//! (§4.5), then assemble the grammar mask via DFA-mask-store lookups
+//! (Algorithm 2). `token_allowed` implements opportunistic masking: a
+//! single token is validated with O(|A|) store membership probes instead
+//! of building the full mask.
+
+use super::context::{Analysis, GrammarContext, PrefixError};
+use super::ConstraintEngine;
+use crate::lexer::{LexResult, LexToken, Lexer};
+use crate::mask::{grammar_mask, MaskStore};
+use crate::parser::{IncrementalParser, ParseStatus};
+use crate::tokenizer::Tokenizer;
+use crate::util::bitset::BitSet;
+use std::sync::Arc;
+
+/// Per-engine incremental-lexing cache: the stable tokens and remainder
+/// offset for `text[..upto]` (valid because the engine is append-only
+/// between resets and emitted tokens are stable under extension).
+#[derive(Default, Clone)]
+struct LexCache {
+    upto: usize,
+    tokens: Vec<LexToken>,
+    rem_start: usize,
+}
+
+/// Grammar-augmented decoding engine (the paper's system).
+pub struct SyncodeEngine {
+    cx: Arc<GrammarContext>,
+    store: Arc<MaskStore>,
+    tok: Arc<Tokenizer>,
+    text: Vec<u8>,
+    inc: IncrementalParser,
+    mask: BitSet,
+    /// Cached per-step analysis (invalidated by `append`/`reset`).
+    step: Option<Analysis>,
+    lex_cache: LexCache,
+    use_lex_cache: bool,
+    /// Instrumentation: total mask-store lookups (≈ |A| per step).
+    pub lookups: u64,
+}
+
+impl SyncodeEngine {
+    pub fn new(
+        cx: Arc<GrammarContext>,
+        store: Arc<MaskStore>,
+        tok: Arc<Tokenizer>,
+    ) -> SyncodeEngine {
+        let inc = cx.new_parser();
+        let mask = BitSet::new(tok.vocab_size());
+        SyncodeEngine {
+            cx,
+            store,
+            tok,
+            text: Vec::new(),
+            inc,
+            mask,
+            step: None,
+            lex_cache: LexCache::default(),
+            use_lex_cache: true,
+            lookups: 0,
+        }
+    }
+
+    /// Lex `input` resuming from the cache when it is a valid prefix
+    /// state; `commit` updates the cache (real appends do, probes don't).
+    fn lex_cached(&mut self, input: &[u8], commit: bool) -> LexResult {
+        let lexer = Lexer::new(&self.cx.grammar);
+        let lr = if self.use_lex_cache
+            && self.lex_cache.upto > 0
+            && self.lex_cache.upto <= input.len()
+        {
+            lexer.lex_from(input, self.lex_cache.rem_start, self.lex_cache.tokens.clone())
+        } else {
+            lexer.lex(input)
+        };
+        if commit && lr.error.is_none() {
+            self.lex_cache = LexCache {
+                upto: input.len(),
+                tokens: lr.tokens.clone(),
+                rem_start: lr.remainder_start,
+            };
+        }
+        lr
+    }
+
+    /// Toggle Algorithm-4 incrementality (Figure 10b ablation): both the
+    /// parser-state cache and the lexer resume-cache ("from scratch"
+    /// really re-does all per-step work, as the pre-optimisation system
+    /// did).
+    pub fn set_incremental(&mut self, on: bool) {
+        self.inc.incremental = on;
+        self.use_lex_cache = on;
+    }
+
+    fn ensure_step(&mut self) -> Result<&Analysis, PrefixError> {
+        if self.step.is_none() {
+            let text = std::mem::take(&mut self.text);
+            let lr = self.lex_cached(&text, true);
+            let a = self.cx.analyze_lexed(&text, lr, &mut self.inc);
+            self.text = text;
+            self.step = Some(a?);
+        }
+        Ok(self.step.as_ref().unwrap())
+    }
+
+    /// The current accept sequences (for inspection/diagnostics).
+    pub fn accept_sequences(&mut self) -> Result<Vec<Vec<u16>>, PrefixError> {
+        Ok(self.ensure_step()?.acc.seqs.clone())
+    }
+}
+
+impl ConstraintEngine for SyncodeEngine {
+    fn reset(&mut self, prefix: &str) {
+        self.text.clear();
+        self.text.extend_from_slice(prefix.as_bytes());
+        self.inc.reset();
+        self.step = None;
+        self.lex_cache = LexCache::default();
+    }
+
+    fn append(&mut self, bytes: &[u8]) {
+        self.text.extend_from_slice(bytes);
+        self.step = None;
+    }
+
+    fn text(&self) -> &[u8] {
+        &self.text
+    }
+
+    fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError> {
+        self.ensure_step()?;
+        let a = self.step.as_ref().unwrap();
+        let r = &self.text[a.remainder_start..];
+        grammar_mask(&self.store, &self.cx.grammar, &a.acc, r, &mut self.mask);
+        self.lookups += a.acc.seqs.len() as u64;
+        Ok(Some(&self.mask))
+    }
+
+    fn token_allowed(&mut self, token_id: u32) -> Result<bool, PrefixError> {
+        self.ensure_step()?;
+        let a = self.step.as_ref().unwrap();
+        if token_id == self.tok.eos_id {
+            return Ok(a.acc.eos_ok);
+        }
+        if self.tok.is_special(token_id) {
+            return Ok(false);
+        }
+        let bytes = self.tok.token_bytes(token_id);
+        if bytes.is_empty() {
+            return Ok(false);
+        }
+        let g = &self.cx.grammar;
+        let r_start = a.remainder_start;
+        let r = &self.text[r_start..];
+        for seq in &a.acc.seqs {
+            let dfa = &g.terminals[seq[0] as usize].dfa;
+            let q = dfa.walk(dfa.start(), r);
+            if !dfa.is_live(q) {
+                continue;
+            }
+            let hit = match seq.len() {
+                1 => self.store.m0_contains(seq[0], q, token_id as usize),
+                _ => self.store.m1_contains(seq[0], q, seq[1], token_id as usize),
+            };
+            if hit {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn is_complete(&mut self) -> bool {
+        self.ensure_step().map(|a| a.acc.eos_ok).unwrap_or(false)
+    }
+
+    fn validate_append(&mut self, bytes: &[u8]) -> bool {
+        // Incremental exact check (§Perf L3): lex resumes from the cached
+        // remainder and the shared incremental parser re-feeds only the
+        // few new terminals; the probe does not commit the lex cache.
+        let mut probe = std::mem::take(&mut self.text);
+        let plen = probe.len();
+        probe.extend_from_slice(bytes);
+        let lr = self.lex_cached(&probe, false);
+        let ok = (|| {
+            if lr.error.is_some() {
+                return false;
+            }
+            let plr = self.cx.postlex.apply(&self.cx.grammar, &probe, &lr.tokens);
+            if plr.error {
+                return false;
+            }
+            if self.inc.parse(&plr.parser_tokens) != ParseStatus::Ok {
+                return false;
+            }
+            // extendable or complete?
+            if lr.remainder_start == probe.len() {
+                return true;
+            }
+            let cx = crate::parser::AcceptContext {
+                grammar: &self.cx.grammar,
+                state: self.inc.state(),
+                postlex: self.cx.postlex.as_ref(),
+                plr: &plr,
+                remainder_term: lr.remainder_term,
+                remainder: lr.remainder(&probe),
+                exact_follow: self.cx.exact_follow,
+            };
+            let acc = crate::parser::compute_accept_sequences(&cx);
+            if acc.eos_ok {
+                return true;
+            }
+            let r = lr.remainder(&probe);
+            acc.seqs.iter().any(|seq| {
+                let dfa = &self.cx.grammar.terminals[seq[0] as usize].dfa;
+                dfa.is_live(dfa.walk(dfa.start(), r))
+            })
+        })();
+        probe.truncate(plen);
+        self.text = probe;
+        ok
+    }
+
+    fn name(&self) -> &'static str {
+        "syncode"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::MaskStoreConfig;
+    use crate::parser::LrMode;
+
+    fn engine(gname: &str) -> SyncodeEngine {
+        let cx = Arc::new(GrammarContext::builtin(gname, LrMode::Lalr).unwrap());
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let store =
+            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        SyncodeEngine::new(cx, store, tok)
+    }
+
+    #[test]
+    fn json_full_generation_byte_by_byte() {
+        // Drive a full JSON object one byte at a time, always choosing a
+        // masked-in byte; the result must be complete & valid.
+        let mut e = engine("json");
+        e.reset("");
+        let target = br#"{"k": [1, true, "s"]}"#;
+        for &b in target.iter() {
+            let m = e.compute_mask().unwrap().unwrap();
+            assert!(m.get(b as usize), "byte {:?} masked out", b as char);
+            e.append(&[b]);
+        }
+        assert!(e.is_complete());
+    }
+
+    #[test]
+    fn python_block_generation() {
+        let mut e = engine("python");
+        e.reset("");
+        let target = b"def f(x):\n    return x + 1\n";
+        for &b in target.iter() {
+            let m = e.compute_mask().unwrap().unwrap();
+            assert!(
+                m.get(b as usize),
+                "byte {:?} masked out after {:?}",
+                b as char,
+                String::from_utf8_lossy(e.text())
+            );
+            e.append(&[b]);
+        }
+        assert!(e.is_complete());
+    }
+
+    #[test]
+    fn go_function_generation() {
+        let mut e = engine("go");
+        e.reset("");
+        let target = b"package main\n\nfunc f(a int) int {\n\treturn a * 2\n}\n";
+        for &b in target.iter() {
+            let m = e.compute_mask().unwrap().unwrap();
+            assert!(
+                m.get(b as usize),
+                "byte {:?} masked out after {:?}",
+                b as char,
+                String::from_utf8_lossy(e.text())
+            );
+            e.append(&[b]);
+        }
+        assert!(e.is_complete());
+    }
+
+    #[test]
+    fn invalid_bytes_masked() {
+        let mut e = engine("json");
+        e.reset("{");
+        let m = e.compute_mask().unwrap().unwrap();
+        assert!(!m.get(b']' as usize));
+        assert!(!m.get(b':' as usize));
+        assert!(m.get(b'"' as usize));
+        assert!(m.get(b'}' as usize));
+    }
+
+    #[test]
+    fn completion_prefix_mode() {
+        // C_0 can be a code prefix (HumanEval-style completion).
+        let mut e = engine("python");
+        e.reset("def add(a, b):\n");
+        let m = e.compute_mask().unwrap().unwrap();
+        // indentation (space) must be allowed to open the body
+        assert!(m.get(b' ' as usize));
+    }
+
+    #[test]
+    fn error_on_garbage_prefix() {
+        let mut e = engine("json");
+        e.reset("}{");
+        assert!(e.compute_mask().is_err());
+    }
+
+    #[test]
+    fn lookups_counted() {
+        let mut e = engine("json");
+        e.reset("{");
+        e.compute_mask().unwrap();
+        assert!(e.lookups > 0);
+    }
+}

@@ -1,0 +1,747 @@
+//! Execution oracles built on the parse trees:
+//!
+//! - [`eval_calc`] — evaluates the §3 calculator DSL (semantic oracle for
+//!   the Table 4 pass@k experiment);
+//! - [`SqlDb`] — an in-memory mini-SQL engine for the Table 2 "Execute %"
+//!   and "execution accuracy" metrics (the SQLite stand-in; see DESIGN.md
+//!   substitutions). Supports the grammar subset the synthetic Spider-like
+//!   gold queries use: SELECT with aggregates, WHERE, single inner JOIN,
+//!   GROUP BY, ORDER BY, LIMIT.
+
+use crate::grammar::Grammar;
+use crate::parser::{parse_to_tree, LrTable, Tree};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+// ------------------------------------------------------------------ calc --
+
+/// Evaluate a complete calc-DSL program. Errors on division by zero or
+/// out-of-domain sqrt.
+pub fn eval_calc(g: &Grammar, table: &Arc<LrTable>, text: &[u8]) -> Result<f64, String> {
+    let tree = parse_to_tree(g, table, text).map_err(|e| e.to_string())?;
+    calc_node(g, &tree)
+}
+
+fn calc_node(g: &Grammar, t: &Tree) -> Result<f64, String> {
+    match t {
+        Tree::Leaf { term, text } => {
+            let name = &g.terminals[*term as usize].name;
+            match name.as_str() {
+                "INT" | "FLOAT" => String::from_utf8_lossy(text)
+                    .parse::<f64>()
+                    .map_err(|e| e.to_string()),
+                other => Err(format!("unexpected leaf {other}")),
+            }
+        }
+        Tree::Node { children, .. } => match children.len() {
+            1 => calc_node(g, &children[0]),
+            3 => {
+                // expr OP term | ( expr )
+                if let Tree::Leaf { text, .. } = &children[0] {
+                    if text == b"(" {
+                        return calc_node(g, &children[1]);
+                    }
+                }
+                let a = calc_node(g, &children[0])?;
+                let b = calc_node(g, &children[2])?;
+                match children[1].text().as_str() {
+                    "+" => Ok(a + b),
+                    "-" => Ok(a - b),
+                    "*" => Ok(a * b),
+                    "/" => {
+                        if b == 0.0 {
+                            Err("division by zero".into())
+                        } else {
+                            Ok(a / b)
+                        }
+                    }
+                    op => Err(format!("unknown op {op}")),
+                }
+            }
+            4 => {
+                // function ( expr )
+                let f = children[0].flatten();
+                let x = calc_node(g, &children[2])?;
+                match f.as_str() {
+                    "math_exp" => Ok(x.exp()),
+                    "math_sqrt" => {
+                        if x < 0.0 {
+                            Err("sqrt of negative".into())
+                        } else {
+                            Ok(x.sqrt())
+                        }
+                    }
+                    "math_sin" => Ok(x.to_radians().sin()),
+                    "math_cos" => Ok(x.to_radians().cos()),
+                    other => Err(format!("unknown function {other}")),
+                }
+            }
+            n => Err(format!("unexpected arity {n}")),
+        },
+    }
+}
+
+// ------------------------------------------------------------------- sql --
+
+/// A cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    Num(f64),
+    Str(String),
+    Null,
+}
+
+impl Val {
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Val::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// An in-memory table.
+#[derive(Debug, Clone)]
+pub struct SqlTable {
+    pub cols: Vec<String>,
+    pub rows: Vec<Vec<Val>>,
+}
+
+/// An in-memory database executing the SQL-subset grammar.
+#[derive(Debug, Clone, Default)]
+pub struct SqlDb {
+    pub tables: HashMap<String, SqlTable>,
+}
+
+/// Query result: rows of values.
+pub type SqlResult = Vec<Vec<Val>>;
+
+impl SqlDb {
+    /// Parse + execute a query string.
+    pub fn execute(
+        &self,
+        g: &Grammar,
+        table: &Arc<LrTable>,
+        sql: &[u8],
+    ) -> Result<SqlResult, String> {
+        let tree = parse_to_tree(g, table, sql).map_err(|e| e.to_string())?;
+        let q = extract_query(g, &tree).ok_or("unsupported query form")?;
+        self.run_select(g, q)
+    }
+
+    fn run_select(&self, g: &Grammar, q: &Tree) -> Result<SqlResult, String> {
+        // select_stmt children:
+        // 0 SELECT, 1 distinct_opt, 2 select_list, 3 from_clause,
+        // 4 where_opt, 5 group_opt, 6 having_opt, 7 order_opt, 8 limit_opt
+        let ch = q.children();
+        if ch.len() != 9 {
+            return Err("malformed select".into());
+        }
+        let distinct = !ch[1].children().is_empty();
+        let items = collect_list(g, &ch[2], "select_item");
+        let (mut cols, mut rows) = self.eval_from(g, &ch[3])?;
+
+        // WHERE
+        if let Some(w) = opt_child(&ch[4], 1) {
+            rows.retain(|r| {
+                truthy(eval_expr(g, w, &cols, r).unwrap_or(Val::Null))
+            });
+        }
+
+        // GROUP BY (single-level) or plain projection.
+        let group_exprs: Vec<&Tree> = match opt_last(&ch[5]) {
+            Some(gl) => collect_list(g, gl, "expr"),
+            None => Vec::new(),
+        };
+
+        let mut out: SqlResult;
+        if !group_exprs.is_empty() || items.iter().any(|i| contains_aggregate(g, i)) {
+            // group rows
+            let mut groups: Vec<(Vec<String>, Vec<usize>)> = Vec::new();
+            for (ri, r) in rows.iter().enumerate() {
+                let key: Vec<String> = group_exprs
+                    .iter()
+                    .map(|e| format!("{:?}", eval_expr(g, e, &cols, r).unwrap_or(Val::Null)))
+                    .collect();
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, idxs)) => idxs.push(ri),
+                    None => groups.push((key, vec![ri])),
+                }
+            }
+            if groups.is_empty() && group_exprs.is_empty() {
+                groups.push((vec![], (0..rows.len()).collect()));
+            }
+            out = Vec::new();
+            for (_, idxs) in &groups {
+                let grp: Vec<&Vec<Val>> = idxs.iter().map(|&i| &rows[i]).collect();
+                let mut row = Vec::new();
+                for it in &items {
+                    row.push(eval_select_item(g, it, &cols, &grp)?);
+                }
+                out.push(row);
+            }
+            // HAVING (evaluated on aggregates over each group)
+            if let Some(h) = opt_child(&ch[6], 1) {
+                let mut kept = Vec::new();
+                for (gi, (_, idxs)) in groups.iter().enumerate() {
+                    let grp: Vec<&Vec<Val>> = idxs.iter().map(|&i| &rows[i]).collect();
+                    if truthy(eval_agg_expr(g, h, &cols, &grp)?) {
+                        kept.push(out[gi].clone());
+                    }
+                }
+                out = kept;
+            }
+        } else {
+            out = Vec::new();
+            for r in &rows {
+                let mut row = Vec::new();
+                for it in &items {
+                    row.push(eval_select_item_row(g, it, &cols, r)?);
+                }
+                out.push(row);
+            }
+        }
+
+        if distinct {
+            let mut seen: Vec<Vec<Val>> = Vec::new();
+            out.retain(|r| {
+                if seen.contains(r) {
+                    false
+                } else {
+                    seen.push(r.clone());
+                    true
+                }
+            });
+        }
+
+        // ORDER BY: evaluate order keys against the *source* rows when no
+        // grouping, else against output columns by position of matching
+        // select item; keep it simple: order by first output column when
+        // present, honoring asc/desc of the first order item.
+        if let Some(ol) = opt_last(&ch[7]) {
+            let first = collect_list(g, ol, "order_item");
+            if let Some(oi) = first.first() {
+                let desc = oi
+                    .children()
+                    .last()
+                    .map(|c| c.text().eq_ignore_ascii_case("desc"))
+                    .unwrap_or(false);
+                // Find matching select item by flattened text; default col 0.
+                let key_txt = oi.children()[0].flatten();
+                let key_idx = items
+                    .iter()
+                    .position(|it| it.flatten() == key_txt)
+                    .unwrap_or(0);
+                out.sort_by(|a, b| cmp_vals(&a[key_idx], &b[key_idx]));
+                if desc {
+                    out.reverse();
+                }
+            }
+        }
+
+        // LIMIT
+        if let Some(l) = opt_child(&ch[8], 1) {
+            if let Ok(n) = l.flatten().parse::<usize>() {
+                out.truncate(n);
+            }
+        }
+        let _ = &mut cols;
+        Ok(out)
+    }
+
+    /// FROM clause → (column names, joined rows).
+    fn eval_from(
+        &self,
+        g: &Grammar,
+        from: &Tree,
+    ) -> Result<(Vec<String>, Vec<Vec<Val>>), String> {
+        // from_clause: "from" table_ref join_list
+        let ch = from.children();
+        let (mut cols, mut rows) = self.table_ref(g, &ch[1])?;
+        // joins
+        let joins = collect_list(g, &ch[2], "join");
+        for j in joins {
+            let jc = j.children();
+            // forms: JOIN t ON e | LEFT JOIN ... | , t
+            if jc.len() == 2 && jc[0].text() == "," {
+                let (c2, r2) = self.table_ref(g, &jc[1])?;
+                let mut newrows = Vec::new();
+                for a in &rows {
+                    for b in &r2 {
+                        let mut r = a.clone();
+                        r.extend(b.clone());
+                        newrows.push(r);
+                    }
+                }
+                cols.extend(c2);
+                rows = newrows;
+            } else {
+                // find table_ref and on-expr among children
+                let tref = jc
+                    .iter()
+                    .find(|c| c.nt().map(|n| g.nonterminals[n as usize] == "table_ref").unwrap_or(false))
+                    .ok_or("join without table")?;
+                let cond = jc.last().ok_or("join without condition")?;
+                let (c2, r2) = self.table_ref(g, tref)?;
+                let mut allcols = cols.clone();
+                allcols.extend(c2.clone());
+                let mut newrows = Vec::new();
+                for a in &rows {
+                    for b in &r2 {
+                        let mut r = a.clone();
+                        r.extend(b.clone());
+                        if truthy(eval_expr(g, cond, &allcols, &r).unwrap_or(Val::Null)) {
+                            newrows.push(r);
+                        }
+                    }
+                }
+                cols = allcols;
+                rows = newrows;
+            }
+        }
+        Ok((cols, rows))
+    }
+
+    fn table_ref(&self, g: &Grammar, t: &Tree) -> Result<(Vec<String>, Vec<Vec<Val>>), String> {
+        let ch = t.children();
+        // NAME | NAME as NAME | NAME NAME | ( query ) as NAME
+        if ch.is_empty() {
+            return Err("empty table ref".into());
+        }
+        if ch[0].text() == "(" {
+            return Err("subquery FROM unsupported by the mini engine".into());
+        }
+        let name = ch[0].text();
+        let tbl = self
+            .tables
+            .get(&name)
+            .ok_or_else(|| format!("no such table {name}"))?;
+        let _ = g;
+        Ok((tbl.cols.clone(), tbl.rows.clone()))
+    }
+}
+
+// ----------------------------------------------------------- tree helpers --
+
+fn nt_is(g: &Grammar, t: &Tree, name: &str) -> bool {
+    t.nt().map(|n| g.nonterminals[n as usize] == name).unwrap_or(false)
+}
+
+/// Flatten a left-recursive list NT into item nodes named `item`.
+fn collect_list<'a>(g: &'a Grammar, t: &'a Tree, item: &str) -> Vec<&'a Tree> {
+    let mut out = Vec::new();
+    collect_list_into(g, t, item, &mut out);
+    out
+}
+
+fn collect_list_into<'a>(g: &Grammar, t: &'a Tree, item: &str, out: &mut Vec<&'a Tree>) {
+    if nt_is(g, t, item) {
+        out.push(t);
+        return;
+    }
+    for c in t.children() {
+        collect_list_into(g, c, item, out);
+    }
+}
+
+/// `opt` NTs like where_opt: ε | KW expr → child at index.
+fn opt_child(t: &Tree, idx: usize) -> Option<&Tree> {
+    t.children().get(idx)
+}
+
+fn opt_last(t: &Tree) -> Option<&Tree> {
+    t.children().last()
+}
+
+fn contains_aggregate(g: &Grammar, t: &Tree) -> bool {
+    if nt_is(g, t, "agg_func") {
+        return true;
+    }
+    t.children().iter().any(|c| contains_aggregate(g, c))
+}
+
+fn truthy(v: Val) -> bool {
+    match v {
+        Val::Num(n) => n != 0.0,
+        Val::Str(s) => !s.is_empty(),
+        Val::Null => false,
+    }
+}
+
+fn cmp_vals(a: &Val, b: &Val) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a, b) {
+        (Val::Num(x), Val::Num(y)) => x.partial_cmp(y).unwrap_or(Ordering::Equal),
+        (Val::Str(x), Val::Str(y)) => x.cmp(y),
+        (Val::Null, Val::Null) => Ordering::Equal,
+        (Val::Null, _) => Ordering::Less,
+        (_, Val::Null) => Ordering::Greater,
+        (Val::Num(_), _) => Ordering::Less,
+        (_, Val::Num(_)) => Ordering::Greater,
+    }
+}
+
+fn resolve_col(cols: &[String], name: &str) -> Result<usize, String> {
+    // qualified names resolve by suffix
+    let suffix = name.rsplit('.').next().unwrap_or(name);
+    cols.iter()
+        .position(|c| c == suffix || c == name)
+        .ok_or_else(|| format!("no such column {name}"))
+}
+
+/// Evaluate a scalar expression against one row.
+fn eval_expr(g: &Grammar, t: &Tree, cols: &[String], row: &[Val]) -> Result<Val, String> {
+    match t {
+        Tree::Leaf { term, text } => {
+            let name = &g.terminals[*term as usize].name;
+            let s = String::from_utf8_lossy(text).to_string();
+            match name.as_str() {
+                "INT" | "FLOAT" => Ok(Val::Num(s.parse().map_err(|e| format!("{e}"))?)),
+                "STRING" => Ok(Val::Str(s.trim_matches('\'').to_string())),
+                "NAME" => row
+                    .get(resolve_col(cols, &s)?)
+                    .cloned()
+                    .ok_or_else(|| "row width".into()),
+                "KWI_NULL" => Ok(Val::Null),
+                other => Err(format!("unexpected leaf {other} in expr")),
+            }
+        }
+        Tree::Node { children, .. } => {
+            if nt_is(g, t, "column") {
+                let name = t.flatten();
+                return row
+                    .get(resolve_col(cols, &name)?)
+                    .cloned()
+                    .ok_or_else(|| "row width".into());
+            }
+            match children.len() {
+                0 => Err("empty node in expr".into()),
+                1 => eval_expr(g, &children[0], cols, row),
+                2 => {
+                    // "-" unary | "not" expr
+                    let op = children[0].text().to_lowercase();
+                    let v = eval_expr(g, &children[1], cols, row)?;
+                    match op.as_str() {
+                        "-" => Ok(Val::Num(-v.as_num().ok_or("not a number")?)),
+                        "not" => Ok(Val::Num(if truthy(v) { 0.0 } else { 1.0 })),
+                        _ => Err(format!("unary {op}?")),
+                    }
+                }
+                3 => {
+                    if children[0].text() == "(" {
+                        return eval_expr(g, &children[1], cols, row);
+                    }
+                    let a = eval_expr(g, &children[0], cols, row)?;
+                    let op = children[1].text().to_lowercase();
+                    let b = eval_expr(g, &children[2], cols, row)?;
+                    binop(&a, &op, &b)
+                }
+                _ => {
+                    // IS NULL / IS NOT NULL / BETWEEN etc.
+                    let txts: Vec<String> =
+                        children.iter().map(|c| c.text().to_lowercase()).collect();
+                    if txts.iter().any(|x| x == "is") {
+                        let v = eval_expr(g, &children[0], cols, row)?;
+                        let isnull = matches!(v, Val::Null);
+                        let negated = txts.iter().any(|x| x == "not");
+                        return Ok(Val::Num(if isnull != negated { 1.0 } else { 0.0 }));
+                    }
+                    if txts.iter().any(|x| x == "between") {
+                        let v = eval_expr(g, &children[0], cols, row)?
+                            .as_num()
+                            .ok_or("between: not a number")?;
+                        let lo = eval_expr(g, &children[2], cols, row)?
+                            .as_num()
+                            .ok_or("between lo")?;
+                        let hi = eval_expr(g, &children[4], cols, row)?
+                            .as_num()
+                            .ok_or("between hi")?;
+                        return Ok(Val::Num(if v >= lo && v <= hi { 1.0 } else { 0.0 }));
+                    }
+                    Err("unsupported expression form".into())
+                }
+            }
+        }
+    }
+}
+
+fn binop(a: &Val, op: &str, b: &Val) -> Result<Val, String> {
+    let num = |v: &Val| v.as_num().ok_or_else(|| format!("{v:?} not numeric for {op}"));
+    Ok(match op {
+        "+" => Val::Num(num(a)? + num(b)?),
+        "-" => Val::Num(num(a)? - num(b)?),
+        "*" => Val::Num(num(a)? * num(b)?),
+        "/" => {
+            let d = num(b)?;
+            if d == 0.0 {
+                return Err("division by zero".into());
+            }
+            Val::Num(num(a)? / d)
+        }
+        "%" => Val::Num(num(a)? % num(b)?),
+        "=" => Val::Num((a == b) as i32 as f64),
+        "!=" | "<>" => Val::Num((a != b) as i32 as f64),
+        "<" => Val::Num((cmp_vals(a, b) == std::cmp::Ordering::Less) as i32 as f64),
+        ">" => Val::Num((cmp_vals(a, b) == std::cmp::Ordering::Greater) as i32 as f64),
+        "<=" => Val::Num((cmp_vals(a, b) != std::cmp::Ordering::Greater) as i32 as f64),
+        ">=" => Val::Num((cmp_vals(a, b) != std::cmp::Ordering::Less) as i32 as f64),
+        "and" => Val::Num((truthy(a.clone()) && truthy(b.clone())) as i32 as f64),
+        "or" => Val::Num((truthy(a.clone()) || truthy(b.clone())) as i32 as f64),
+        "like" => {
+            let (Val::Str(s), Val::Str(p)) = (a, b) else {
+                return Err("like needs strings".into());
+            };
+            Val::Num(like_match(s, p) as i32 as f64)
+        }
+        other => return Err(format!("unsupported operator {other}")),
+    })
+}
+
+fn like_match(s: &str, pat: &str) -> bool {
+    // '%' wildcard only (enough for the synthetic workloads).
+    let parts: Vec<&str> = pat.split('%').collect();
+    let mut pos = 0;
+    for (i, p) in parts.iter().enumerate() {
+        if p.is_empty() {
+            continue;
+        }
+        match s[pos..].find(p) {
+            Some(at) => {
+                if i == 0 && at != 0 {
+                    return false;
+                }
+                pos += at + p.len();
+            }
+            None => return false,
+        }
+    }
+    if !pat.ends_with('%') && !parts.last().unwrap_or(&"").is_empty() {
+        return s.ends_with(parts.last().unwrap());
+    }
+    true
+}
+
+/// Select item over a whole group (aggregates allowed).
+fn eval_select_item(
+    g: &Grammar,
+    item: &Tree,
+    cols: &[String],
+    grp: &[&Vec<Val>],
+) -> Result<Val, String> {
+    eval_agg_expr(g, &item.children()[0], cols, grp)
+}
+
+/// Select item over one row.
+fn eval_select_item_row(
+    g: &Grammar,
+    item: &Tree,
+    cols: &[String],
+    row: &[Val],
+) -> Result<Val, String> {
+    let e = &item.children()[0];
+    if e.text() == "*" {
+        // represented as the full row joined — return first col for shape
+        return row.first().cloned().ok_or_else(|| "empty row".into());
+    }
+    eval_expr(g, e, cols, row)
+}
+
+/// Expression that may contain aggregates, evaluated over a group.
+fn eval_agg_expr(
+    g: &Grammar,
+    t: &Tree,
+    cols: &[String],
+    grp: &[&Vec<Val>],
+) -> Result<Val, String> {
+    // aggregate node? primary: agg_func "(" agg_arg ")"
+    if let Tree::Node { children, .. } = t {
+        if children.len() == 4 && nt_is(g, &children[0], "agg_func") {
+            let f = children[0].flatten().to_lowercase();
+            let arg = &children[2];
+            let values: Result<Vec<Option<f64>>, String> = grp
+                .iter()
+                .map(|row| {
+                    if arg.flatten() == "*" {
+                        Ok(Some(1.0))
+                    } else {
+                        Ok(eval_expr(g, arg, cols, row)?.as_num())
+                    }
+                })
+                .collect();
+            let values = values?;
+            let nums: Vec<f64> = values.iter().flatten().copied().collect();
+            return Ok(match f.as_str() {
+                "count" => Val::Num(values.len() as f64),
+                "sum" => Val::Num(nums.iter().sum()),
+                "avg" => {
+                    if nums.is_empty() {
+                        Val::Null
+                    } else {
+                        Val::Num(nums.iter().sum::<f64>() / nums.len() as f64)
+                    }
+                }
+                "min" => nums
+                    .iter()
+                    .cloned()
+                    .fold(None, |m: Option<f64>, x| Some(m.map_or(x, |m| m.min(x))))
+                    .map(Val::Num)
+                    .unwrap_or(Val::Null),
+                "max" => nums
+                    .iter()
+                    .cloned()
+                    .fold(None, |m: Option<f64>, x| Some(m.map_or(x, |m| m.max(x))))
+                    .map(Val::Num)
+                    .unwrap_or(Val::Null),
+                other => return Err(format!("unknown aggregate {other}")),
+            });
+        }
+        // binary over aggregates (HAVING count(*) > 2)
+        if children.len() == 3 && children[0].text() != "(" {
+            let a = eval_agg_expr(g, &children[0], cols, grp)?;
+            let op = children[1].text().to_lowercase();
+            let b = eval_agg_expr(g, &children[2], cols, grp)?;
+            return binop(&a, &op, &b);
+        }
+        if children.len() == 1 {
+            return eval_agg_expr(g, &children[0], cols, grp);
+        }
+        if children.len() == 3 && children[0].text() == "(" {
+            return eval_agg_expr(g, &children[1], cols, grp);
+        }
+    }
+    // scalar: evaluate on the first row of the group
+    match grp.first() {
+        Some(row) => eval_expr(g, t, cols, row),
+        None => Ok(Val::Null),
+    }
+}
+
+/// Dig the select_stmt out of start/query wrappers (UNION etc. take the
+/// first branch — enough for the synthetic workloads).
+fn extract_query<'a>(g: &'a Grammar, t: &'a Tree) -> Option<&'a Tree> {
+    if nt_is(g, t, "select_stmt") {
+        return Some(t);
+    }
+    for c in t.children() {
+        if let Some(q) = extract_query(g, c) {
+            return Some(q);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+    use crate::parser::{LrMode, LrTable};
+
+    fn calc_ctx() -> (Grammar, Arc<LrTable>) {
+        let g = Grammar::builtin("calc").unwrap();
+        let t = Arc::new(LrTable::build(&g, LrMode::Lalr));
+        (g, t)
+    }
+
+    #[test]
+    fn calc_arithmetic() {
+        let (g, t) = calc_ctx();
+        assert_eq!(eval_calc(&g, &t, b"1 + 2 * 3").unwrap(), 7.0);
+        assert_eq!(eval_calc(&g, &t, b"(1 + 2) * 3").unwrap(), 9.0);
+        assert!((eval_calc(&g, &t, b"math_sqrt(16)").unwrap() - 4.0).abs() < 1e-9);
+        assert!((eval_calc(&g, &t, b"math_sin(30)").unwrap() - 0.5).abs() < 1e-9);
+        assert!(eval_calc(&g, &t, b"1 / 0").is_err());
+        assert!(eval_calc(&g, &t, b"1 +").is_err());
+    }
+
+    #[test]
+    fn paper_running_example() {
+        let (g, t) = calc_ctx();
+        // area of equilateral triangle with side 2.27
+        let v = eval_calc(&g, &t, b"math_sqrt(3) / 4 * (2.27) * (2.27)").unwrap();
+        assert!((v - 2.2312).abs() < 1e-3, "{v}");
+    }
+
+    fn demo_db() -> (Grammar, Arc<LrTable>, SqlDb) {
+        let g = Grammar::builtin("sql").unwrap();
+        let t = Arc::new(LrTable::build(&g, LrMode::Lalr));
+        let mut db = SqlDb::default();
+        db.tables.insert(
+            "singer".into(),
+            SqlTable {
+                cols: vec!["singer_id".into(), "name".into(), "age".into(), "country".into()],
+                rows: vec![
+                    vec![Val::Num(1.0), Val::Str("ann".into()), Val::Num(30.0), Val::Str("US".into())],
+                    vec![Val::Num(2.0), Val::Str("bob".into()), Val::Num(45.0), Val::Str("UK".into())],
+                    vec![Val::Num(3.0), Val::Str("cyd".into()), Val::Num(30.0), Val::Str("US".into())],
+                ],
+            },
+        );
+        db.tables.insert(
+            "concert".into(),
+            SqlTable {
+                cols: vec!["concert_id".into(), "sid".into(), "year".into()],
+                rows: vec![
+                    vec![Val::Num(10.0), Val::Num(1.0), Val::Num(2020.0)],
+                    vec![Val::Num(11.0), Val::Num(1.0), Val::Num(2021.0)],
+                    vec![Val::Num(12.0), Val::Num(3.0), Val::Num(2021.0)],
+                ],
+            },
+        );
+        (g, t, db)
+    }
+
+    #[test]
+    fn sql_count() {
+        let (g, t, db) = demo_db();
+        let r = db.execute(&g, &t, b"SELECT count(*) FROM singer").unwrap();
+        assert_eq!(r, vec![vec![Val::Num(3.0)]]);
+    }
+
+    #[test]
+    fn sql_where_and_order() {
+        let (g, t, db) = demo_db();
+        let r = db
+            .execute(&g, &t, b"SELECT name FROM singer WHERE age = 30 ORDER BY name DESC")
+            .unwrap();
+        assert_eq!(r, vec![vec![Val::Str("cyd".into())], vec![Val::Str("ann".into())]]);
+    }
+
+    #[test]
+    fn sql_group_by() {
+        let (g, t, db) = demo_db();
+        let r = db
+            .execute(&g, &t, b"SELECT country, count(*) FROM singer GROUP BY country ORDER BY country")
+            .unwrap();
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn sql_join() {
+        let (g, t, db) = demo_db();
+        let r = db
+            .execute(
+                &g,
+                &t,
+                b"SELECT name FROM singer JOIN concert ON singer_id = sid WHERE year = 2021 ORDER BY name",
+            )
+            .unwrap();
+        assert_eq!(r, vec![vec![Val::Str("ann".into())], vec![Val::Str("cyd".into())]]);
+    }
+
+    #[test]
+    fn sql_limit_and_distinct() {
+        let (g, t, db) = demo_db();
+        let r = db
+            .execute(&g, &t, b"SELECT DISTINCT age FROM singer ORDER BY age LIMIT 1")
+            .unwrap();
+        assert_eq!(r, vec![vec![Val::Num(30.0)]]);
+    }
+
+    #[test]
+    fn sql_runtime_errors() {
+        let (g, t, db) = demo_db();
+        assert!(db.execute(&g, &t, b"SELECT nope FROM singer").is_err());
+        assert!(db.execute(&g, &t, b"SELECT a FROM missing").is_err());
+        assert!(db.execute(&g, &t, b"SELECT FROM").is_err());
+    }
+}

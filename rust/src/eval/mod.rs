@@ -1,0 +1,17 @@
+//! Experiment substrate: everything the paper's evaluation section needs.
+//!
+//! - [`schema`] — JSON-Schema-subset validator (Table 1 "validation
+//!   accuracy" oracle);
+//! - [`dataset`] — synthetic workload generators standing in for
+//!   JSON-Mode-Eval, Spider, HumanEval/MBXP (see DESIGN.md substitutions);
+//! - [`exec`] — the calc-DSL evaluator and the in-memory mini-SQL engine
+//!   (the "standard compiler"/SQLite stand-ins for execution metrics);
+//! - [`passk`] — the unbiased pass@k estimator (Chen et al. 2021);
+//! - [`harness`] — the end-to-end runner that drives the server over a
+//!   task set with a given engine and tallies the paper's table columns.
+
+pub mod dataset;
+pub mod exec;
+pub mod harness;
+pub mod passk;
+pub mod schema;

@@ -1,0 +1,63 @@
+//! pass@k functional-correctness estimator (Chen et al. 2021, used by the
+//! paper's Table 4): the unbiased estimator
+//! `pass@k = 1 - C(n-c, k) / C(n, k)` averaged over problems.
+
+/// Unbiased single-problem pass@k given `n` samples with `c` correct.
+pub fn pass_at_k(n: usize, c: usize, k: usize) -> f64 {
+    if n == 0 || k == 0 {
+        return 0.0;
+    }
+    if c == 0 {
+        return 0.0;
+    }
+    if n < k || c >= n {
+        return 1.0;
+    }
+    // 1 - prod_{i=n-c+1..=n} (1 - k/i)
+    let mut prod = 1.0f64;
+    for i in (n - c + 1)..=n {
+        prod *= 1.0 - k as f64 / i as f64;
+    }
+    1.0 - prod
+}
+
+/// Average pass@k over problems (`results[p]` = (n, c)).
+pub fn mean_pass_at_k(results: &[(usize, usize)], k: usize) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|&(n, c)| pass_at_k(n, c, k)).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(pass_at_k(10, 0, 1), 0.0);
+        assert_eq!(pass_at_k(10, 10, 1), 1.0);
+        assert_eq!(pass_at_k(5, 3, 5), 1.0); // k = n, any correct ⇒ pass
+        assert_eq!(pass_at_k(0, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn matches_closed_form_k1() {
+        // pass@1 = c/n
+        for (n, c) in [(10, 3), (20, 5), (7, 7)] {
+            assert!((pass_at_k(n, c, 1) - c as f64 / n as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monotone_in_k_and_c() {
+        assert!(pass_at_k(20, 4, 10) > pass_at_k(20, 4, 1));
+        assert!(pass_at_k(20, 8, 5) > pass_at_k(20, 4, 5));
+    }
+
+    #[test]
+    fn mean_over_problems() {
+        let r = vec![(10, 10), (10, 0)];
+        assert!((mean_pass_at_k(&r, 1) - 0.5).abs() < 1e-12);
+    }
+}

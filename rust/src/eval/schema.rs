@@ -1,0 +1,166 @@
+//! JSON-Schema subset validator — the Table 1 "validation accuracy" oracle.
+//!
+//! Supports the keywords the synthetic JSON-mode tasks emit: `type`,
+//! `properties`, `required`, `items`, `enum`, `minimum`, `maximum`,
+//! `additionalProperties` (boolean), `minItems`, `maxItems`.
+
+use crate::util::json::Json;
+
+/// Validate `value` against `schema`; returns human-readable violations
+/// (empty = valid).
+pub fn validate(schema: &Json, value: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    walk(schema, value, "$", &mut errs);
+    errs
+}
+
+fn type_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "boolean",
+        Json::Num(n) => {
+            if n.fract() == 0.0 {
+                "integer"
+            } else {
+                "number"
+            }
+        }
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+fn type_matches(want: &str, v: &Json) -> bool {
+    match want {
+        "number" => matches!(v, Json::Num(_)),
+        "integer" => matches!(v, Json::Num(n) if n.fract() == 0.0),
+        other => type_name(v) == other,
+    }
+}
+
+fn walk(schema: &Json, value: &Json, path: &str, errs: &mut Vec<String>) {
+    if let Some(t) = schema.get("type").and_then(Json::as_str) {
+        if !type_matches(t, value) {
+            errs.push(format!("{path}: expected {t}, got {}", type_name(value)));
+            return;
+        }
+    }
+    if let Some(allowed) = schema.get("enum").and_then(Json::as_arr) {
+        if !allowed.contains(value) {
+            errs.push(format!("{path}: not in enum"));
+        }
+    }
+    if let Some(n) = value.as_f64() {
+        if let Some(min) = schema.get("minimum").and_then(Json::as_f64) {
+            if n < min {
+                errs.push(format!("{path}: {n} < minimum {min}"));
+            }
+        }
+        if let Some(max) = schema.get("maximum").and_then(Json::as_f64) {
+            if n > max {
+                errs.push(format!("{path}: {n} > maximum {max}"));
+            }
+        }
+    }
+    if let Json::Obj(map) = value {
+        if let Some(req) = schema.get("required").and_then(Json::as_arr) {
+            for r in req {
+                if let Some(k) = r.as_str() {
+                    if !map.contains_key(k) {
+                        errs.push(format!("{path}: missing required '{k}'"));
+                    }
+                }
+            }
+        }
+        let props = schema.get("properties").and_then(Json::as_obj);
+        if let Some(props) = props {
+            for (k, v) in map {
+                match props.get(k) {
+                    Some(sub) => walk(sub, v, &format!("{path}.{k}"), errs),
+                    None => {
+                        if schema.get("additionalProperties").and_then(Json::as_bool)
+                            == Some(false)
+                        {
+                            errs.push(format!("{path}: unexpected property '{k}'"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Json::Arr(items) = value {
+        if let Some(min) = schema.get("minItems").and_then(Json::as_usize) {
+            if items.len() < min {
+                errs.push(format!("{path}: fewer than {min} items"));
+            }
+        }
+        if let Some(max) = schema.get("maxItems").and_then(Json::as_usize) {
+            if items.len() > max {
+                errs.push(format!("{path}: more than {max} items"));
+            }
+        }
+        if let Some(sub) = schema.get("items") {
+            for (i, it) in items.iter().enumerate() {
+                walk(sub, it, &format!("{path}[{i}]"), errs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sch(s: &str) -> Json {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn type_checks() {
+        let s = sch(r#"{"type": "object", "properties": {"a": {"type": "integer"}}, "required": ["a"]}"#);
+        assert!(validate(&s, &parse(r#"{"a": 3}"#).unwrap()).is_empty());
+        assert!(!validate(&s, &parse(r#"{"a": 3.5}"#).unwrap()).is_empty());
+        assert!(!validate(&s, &parse(r#"{}"#).unwrap()).is_empty());
+        assert!(!validate(&s, &parse(r#"[1]"#).unwrap()).is_empty());
+    }
+
+    #[test]
+    fn number_is_integer_superset() {
+        let s = sch(r#"{"type": "number"}"#);
+        assert!(validate(&s, &parse("3").unwrap()).is_empty());
+        assert!(validate(&s, &parse("3.5").unwrap()).is_empty());
+    }
+
+    #[test]
+    fn nested_and_items() {
+        let s = sch(
+            r#"{"type": "object", "properties":
+                {"xs": {"type": "array", "items": {"type": "string"}, "minItems": 1}}}"#,
+        );
+        assert!(validate(&s, &parse(r#"{"xs": ["a", "b"]}"#).unwrap()).is_empty());
+        assert!(!validate(&s, &parse(r#"{"xs": []}"#).unwrap()).is_empty());
+        assert!(!validate(&s, &parse(r#"{"xs": [1]}"#).unwrap()).is_empty());
+    }
+
+    #[test]
+    fn bounds_and_enum() {
+        let s = sch(r#"{"type": "integer", "minimum": 0, "maximum": 10}"#);
+        assert!(validate(&s, &parse("5").unwrap()).is_empty());
+        assert!(!validate(&s, &parse("-1").unwrap()).is_empty());
+        assert!(!validate(&s, &parse("11").unwrap()).is_empty());
+        let e = sch(r#"{"enum": ["red", "green"]}"#);
+        assert!(validate(&e, &parse(r#""red""#).unwrap()).is_empty());
+        assert!(!validate(&e, &parse(r#""blue""#).unwrap()).is_empty());
+    }
+
+    #[test]
+    fn additional_properties() {
+        let s = sch(
+            r#"{"type": "object", "properties": {"a": {"type": "string"}},
+                "additionalProperties": false}"#,
+        );
+        assert!(!validate(&s, &parse(r#"{"a": "x", "b": 1}"#).unwrap()).is_empty());
+    }
+}

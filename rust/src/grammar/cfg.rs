@@ -1,0 +1,422 @@
+//! CFG core types: terminals (with compiled DFAs), nonterminals, BNF rules,
+//! and the builder used by the EBNF reader to desugar `* + ? [] ()` into
+//! fresh nonterminals.
+
+use crate::regex::{compile, compile_literal, Dfa};
+use std::collections::HashMap;
+
+/// Terminal id (index into [`Grammar::terminals`]).
+pub type TermId = u16;
+/// Nonterminal id (index into [`Grammar::nonterminals`]).
+pub type NtId = u16;
+
+/// A grammar symbol: terminal or nonterminal.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Symbol {
+    T(TermId),
+    N(NtId),
+}
+
+impl std::fmt::Debug for Symbol {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Symbol::T(t) => write!(f, "T{}", t),
+            Symbol::N(n) => write!(f, "N{}", n),
+        }
+    }
+}
+
+/// How a terminal was defined — needed for lexing decisions, sampling and
+/// debugging.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TermPattern {
+    /// A literal string (keywords, punctuation).
+    Literal(Vec<u8>),
+    /// A regular expression body (flags already folded in).
+    Regex(String),
+    /// `%declare`d: produced by a lexer post-pass (e.g. `_INDENT`), no DFA.
+    Declared,
+}
+
+/// A grammar terminal: name, pattern, compiled DFA, lexing attributes.
+#[derive(Clone, Debug)]
+pub struct Terminal {
+    pub name: String,
+    pub pattern: TermPattern,
+    /// Minimised DFA recognising L(ρ_τ). For `Declared` terminals this is a
+    /// never-matching DFA.
+    pub dfa: Dfa,
+    /// Lexer tie-break priority (higher wins on equal match length).
+    pub priority: i32,
+    /// `%ignore`d terminals are lexed but not fed to the parser.
+    pub ignore: bool,
+}
+
+/// A BNF production `lhs → rhs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rule {
+    pub lhs: NtId,
+    pub rhs: Vec<Symbol>,
+}
+
+/// Error raised by grammar construction.
+#[derive(Debug, Clone)]
+pub struct GrammarError {
+    pub msg: String,
+}
+
+impl GrammarError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        GrammarError { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for GrammarError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "grammar error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for GrammarError {}
+
+/// A fully-built grammar: Γ (terminals), nonterminals, BNF rules.
+#[derive(Debug)]
+pub struct Grammar {
+    pub terminals: Vec<Terminal>,
+    pub nonterminals: Vec<String>,
+    pub rules: Vec<Rule>,
+    /// Rule ids grouped by LHS (same order as `rules`).
+    pub rules_by_lhs: Vec<Vec<u32>>,
+    pub start: NtId,
+}
+
+impl Grammar {
+    /// Terminal id by name.
+    pub fn term_id(&self, name: &str) -> Option<TermId> {
+        self.terminals.iter().position(|t| t.name == name).map(|i| i as TermId)
+    }
+
+    /// Nonterminal id by name.
+    pub fn nt_id(&self, name: &str) -> Option<NtId> {
+        self.nonterminals.iter().position(|n| n == name).map(|i| i as NtId)
+    }
+
+    /// Name of a symbol (for diagnostics).
+    pub fn sym_name(&self, s: Symbol) -> &str {
+        match s {
+            Symbol::T(t) => &self.terminals[t as usize].name,
+            Symbol::N(n) => &self.nonterminals[n as usize],
+        }
+    }
+
+    /// All ignored terminal ids.
+    pub fn ignored_terms(&self) -> Vec<TermId> {
+        (0..self.terminals.len() as TermId)
+            .filter(|&t| self.terminals[t as usize].ignore)
+            .collect()
+    }
+
+    /// Sum over all terminal DFAs of their state counts: |Q_Ω| (§4.6).
+    pub fn total_dfa_states(&self) -> usize {
+        self.terminals.iter().map(|t| t.dfa.num_states()).sum()
+    }
+
+    /// Pretty production for diagnostics: `expr -> term PLUS expr`.
+    pub fn rule_to_string(&self, rule: &Rule) -> String {
+        let rhs: Vec<&str> = rule.rhs.iter().map(|&s| self.sym_name(s)).collect();
+        format!("{} -> {}", self.nonterminals[rule.lhs as usize], rhs.join(" "))
+    }
+}
+
+/// Incremental builder used by the EBNF reader.
+pub struct GrammarBuilder {
+    pub terminals: Vec<Terminal>,
+    pub nonterminals: Vec<String>,
+    pub rules: Vec<Rule>,
+    term_by_name: HashMap<String, TermId>,
+    nt_by_name: HashMap<String, NtId>,
+    /// Anonymous terminal dedup: literal text → id.
+    anon_by_literal: HashMap<Vec<u8>, TermId>,
+    gensym: usize,
+}
+
+impl GrammarBuilder {
+    pub fn new() -> Self {
+        GrammarBuilder {
+            terminals: Vec::new(),
+            nonterminals: Vec::new(),
+            rules: Vec::new(),
+            term_by_name: HashMap::new(),
+            nt_by_name: HashMap::new(),
+            anon_by_literal: HashMap::new(),
+            gensym: 0,
+        }
+    }
+
+    pub fn term_id(&self, name: &str) -> Option<TermId> {
+        self.term_by_name.get(name).copied()
+    }
+
+    /// Intern a nonterminal by name.
+    pub fn nt(&mut self, name: &str) -> NtId {
+        if let Some(&id) = self.nt_by_name.get(name) {
+            return id;
+        }
+        let id = self.nonterminals.len() as NtId;
+        self.nonterminals.push(name.to_string());
+        self.nt_by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Fresh synthetic nonterminal (for EBNF desugaring).
+    pub fn fresh_nt(&mut self, hint: &str) -> NtId {
+        self.gensym += 1;
+        let name = format!("__{}_{}", hint, self.gensym);
+        self.nt(&name)
+    }
+
+    /// Add a named terminal from a regex body (+ case-insensitive flag).
+    pub fn add_regex_terminal(
+        &mut self,
+        name: &str,
+        pattern: &str,
+        ignore_case: bool,
+        priority: i32,
+    ) -> Result<TermId, GrammarError> {
+        if self.term_by_name.contains_key(name) {
+            return Err(GrammarError::new(format!("duplicate terminal {name}")));
+        }
+        let dfa = compile(pattern, ignore_case)
+            .map_err(|e| GrammarError::new(format!("terminal {name}: {e}")))?;
+        if !dfa.language_nonempty() {
+            return Err(GrammarError::new(format!("terminal {name} matches nothing")));
+        }
+        if dfa.accepts_empty() {
+            return Err(GrammarError::new(format!(
+                "terminal {name} matches the empty string (not allowed; see §A.2)"
+            )));
+        }
+        let id = self.push_terminal(Terminal {
+            name: name.to_string(),
+            pattern: TermPattern::Regex(pattern.to_string()),
+            dfa,
+            priority,
+            ignore: false,
+        });
+        Ok(id)
+    }
+
+    /// Add (or reuse) a literal-string terminal. Named keywords and
+    /// anonymous in-rule strings share this path; anonymous ones are
+    /// deduped by content and given a derived name like `LPAR` or `ANON_3`.
+    pub fn literal_terminal(&mut self, text: &[u8], name: Option<&str>) -> TermId {
+        if name.is_none() {
+            if let Some(&id) = self.anon_by_literal.get(text) {
+                return id;
+            }
+        }
+        let name = match name {
+            Some(n) => n.to_string(),
+            None => derive_literal_name(text, self.terminals.len()),
+        };
+        if let Some(&id) = self.term_by_name.get(&name) {
+            return id;
+        }
+        let dfa = compile_literal(text);
+        let id = self.push_terminal(Terminal {
+            name,
+            pattern: TermPattern::Literal(text.to_vec()),
+            dfa,
+            // Literal strings outrank regex terminals on ties (keywords
+            // beat NAME) — Lark's convention.
+            priority: 1,
+            ignore: false,
+        });
+        self.anon_by_literal.insert(text.to_vec(), id);
+        id
+    }
+
+    /// Add a `%declare`d terminal (no pattern; synthesised by lexer
+    /// post-passes such as the Python indentation tracker).
+    pub fn declare_terminal(&mut self, name: &str) -> TermId {
+        if let Some(&id) = self.term_by_name.get(name) {
+            return id;
+        }
+        // A DFA that matches nothing: compile a class that can never
+        // complete (single transition then no accept is impossible to
+        // express via regex syntax, so build `a` and strip acceptance is
+        // overkill — instead use a one-byte DFA on 0x00 and mark…).
+        // Simplest honest encoding: DFA for "\u{0}" — declared terminals
+        // never appear in raw text in our grammars.
+        let dfa = compile_literal(&[0u8]);
+        self.push_terminal(Terminal {
+            name: name.to_string(),
+            pattern: TermPattern::Declared,
+            dfa,
+            priority: -100,
+            ignore: false,
+        })
+    }
+
+    pub(crate) fn push_terminal(&mut self, t: Terminal) -> TermId {
+        let id = self.terminals.len() as TermId;
+        self.term_by_name.insert(t.name.clone(), id);
+        self.terminals.push(t);
+        id
+    }
+
+    pub fn set_ignore(&mut self, id: TermId) {
+        self.terminals[id as usize].ignore = true;
+    }
+
+    pub fn set_priority(&mut self, id: TermId, priority: i32) {
+        self.terminals[id as usize].priority = priority;
+    }
+
+    pub fn add_rule(&mut self, lhs: NtId, rhs: Vec<Symbol>) {
+        let rule = Rule { lhs, rhs };
+        // Dedup identical rules (EBNF desugaring can emit duplicates).
+        if !self.rules.contains(&rule) {
+            self.rules.push(rule);
+        }
+    }
+
+    /// Finalise into a validated [`Grammar`].
+    pub fn build(self, start_name: &str) -> Result<Grammar, GrammarError> {
+        let start = *self
+            .nt_by_name
+            .get(start_name)
+            .ok_or_else(|| GrammarError::new(format!("no start rule '{start_name}'")))?;
+        let mut rules_by_lhs: Vec<Vec<u32>> = vec![Vec::new(); self.nonterminals.len()];
+        for (i, r) in self.rules.iter().enumerate() {
+            rules_by_lhs[r.lhs as usize].push(i as u32);
+        }
+        // Every nonterminal must have at least one production.
+        for (nt, ids) in rules_by_lhs.iter().enumerate() {
+            if ids.is_empty() {
+                return Err(GrammarError::new(format!(
+                    "nonterminal '{}' has no productions",
+                    self.nonterminals[nt]
+                )));
+            }
+        }
+        Ok(Grammar {
+            terminals: self.terminals,
+            nonterminals: self.nonterminals,
+            rules: self.rules,
+            rules_by_lhs,
+            start,
+        })
+    }
+}
+
+impl Default for GrammarBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Human-readable names for common punctuation literals.
+fn derive_literal_name(text: &[u8], salt: usize) -> String {
+    let table: &[(&[u8], &str)] = &[
+        (b"(", "LPAR"),
+        (b")", "RPAR"),
+        (b"[", "LSQB"),
+        (b"]", "RSQB"),
+        (b"{", "LBRACE"),
+        (b"}", "RBRACE"),
+        (b",", "COMMA"),
+        (b":", "COLON"),
+        (b";", "SEMICOLON"),
+        (b"+", "PLUS"),
+        (b"-", "MINUS"),
+        (b"*", "STAR"),
+        (b"/", "SLASH"),
+        (b"%", "PERCENT"),
+        (b"=", "EQUAL"),
+        (b"==", "EQEQ"),
+        (b"!=", "NOTEQ"),
+        (b"<", "LESS"),
+        (b">", "GREATER"),
+        (b"<=", "LESSEQ"),
+        (b">=", "GREATEREQ"),
+        (b".", "DOT"),
+        (b"->", "ARROW"),
+        (b"\"", "DQUOTE"),
+    ];
+    for (lit, name) in table {
+        if *lit == text {
+            return name.to_string();
+        }
+    }
+    if text.iter().all(|b| b.is_ascii_alphanumeric() || *b == b'_') {
+        // Keyword: uppercase it.
+        let s: String = text.iter().map(|&b| (b as char).to_ascii_uppercase()).collect();
+        format!("KW_{s}")
+    } else {
+        format!("ANON_{salt}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_basics() {
+        let mut b = GrammarBuilder::new();
+        let expr = b.nt("expr");
+        let int = b.add_regex_terminal("INT", "[0-9]+", false, 0).unwrap();
+        let plus = b.literal_terminal(b"+", None);
+        b.add_rule(expr, vec![Symbol::T(int)]);
+        b.add_rule(expr, vec![Symbol::N(expr), Symbol::T(plus), Symbol::T(int)]);
+        let g = b.build("expr").unwrap();
+        assert_eq!(g.rules.len(), 2);
+        assert_eq!(g.term_id("INT"), Some(0));
+        assert_eq!(g.term_id("PLUS"), Some(1));
+        assert_eq!(g.sym_name(Symbol::N(g.start)), "expr");
+    }
+
+    #[test]
+    fn anon_literals_dedup() {
+        let mut b = GrammarBuilder::new();
+        let a = b.literal_terminal(b"(", None);
+        let c = b.literal_terminal(b"(", None);
+        assert_eq!(a, c);
+        assert_eq!(b.terminals.len(), 1);
+    }
+
+    #[test]
+    fn keyword_naming() {
+        let mut b = GrammarBuilder::new();
+        let id = b.literal_terminal(b"select", None);
+        assert_eq!(b.terminals[id as usize].name, "KW_SELECT");
+        assert_eq!(b.terminals[id as usize].priority, 1);
+    }
+
+    #[test]
+    fn empty_terminal_rejected() {
+        let mut b = GrammarBuilder::new();
+        assert!(b.add_regex_terminal("BAD", "a*", false, 0).is_err());
+    }
+
+    #[test]
+    fn missing_production_detected() {
+        let mut b = GrammarBuilder::new();
+        let s = b.nt("s");
+        let orphan = b.nt("orphan");
+        let t = b.literal_terminal(b"x", None);
+        b.add_rule(s, vec![Symbol::N(orphan), Symbol::T(t)]);
+        assert!(b.build("s").is_err());
+    }
+
+    #[test]
+    fn duplicate_rules_dedup() {
+        let mut b = GrammarBuilder::new();
+        let s = b.nt("s");
+        let t = b.literal_terminal(b"x", None);
+        b.add_rule(s, vec![Symbol::T(t)]);
+        b.add_rule(s, vec![Symbol::T(t)]);
+        assert_eq!(b.rules.len(), 1);
+    }
+}

@@ -1,0 +1,982 @@
+//! Lark-dialect EBNF reader (the paper's grammar input format, §4.7).
+//!
+//! Supported subset (everything the `grammars/*.lark` files use):
+//!
+//! - rule definitions `name: expansion | expansion ...` with continuation
+//!   lines starting with `|`;
+//! - terminal definitions `NAME: ...` and `NAME.prio: ...`;
+//! - items: rule refs, terminal refs, `"literal"` (optional `i` suffix),
+//!   `/regex/` with `i`/`s` flags, groups `(...)`, optionals `[...]`,
+//!   postfix `* + ?`;
+//! - tree-shaping markers that do not affect the language and are ignored:
+//!   leading `? !` on rule names, `-> alias`, inline `_` conventions;
+//! - directives: `%ignore <terminal-or-literal-or-regex>`,
+//!   `%declare NAME...`, `%import common.NAME`.
+//!
+//! Terminal definitions compose other terminals (e.g. `INT: DIGIT+`); these
+//! references are inlined recursively (cycles are an error).
+
+use super::cfg::{GrammarBuilder, GrammarError, NtId, Symbol};
+use crate::grammar::Grammar;
+use crate::regex::{parse_regex, RegexAst};
+use std::collections::HashMap;
+
+/// Parse Lark-EBNF source into a [`Grammar`]. The start symbol is `start`.
+pub fn parse_ebnf(src: &str) -> Result<Grammar, GrammarError> {
+    let toks = tokenize(src)?;
+    let defs = split_definitions(&toks)?;
+    Reader::new().read(defs)
+}
+
+// ---------------------------------------------------------------- tokens --
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    RuleName(String),       // lowercase / _leading
+    TermName(String),       // UPPERCASE
+    Str(Vec<u8>, bool),     // text, case-insensitive
+    Regex(String, bool, bool), // body, i flag, s flag
+    Colon,
+    Pipe,
+    LPar,
+    RPar,
+    LSqb,
+    RSqb,
+    Star,
+    Plus,
+    QMark,
+    Bang,
+    Arrow(String), // -> alias
+    Prio(i32),     // .N attached to a definition name
+    Directive(String),
+    Newline,
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>, GrammarError> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    let err = |i: usize, msg: &str| GrammarError::new(format!("ebnf byte {i}: {msg}"));
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                out.push(Tok::Newline);
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' => {
+                // regex literal
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() {
+                    if b[j] == b'\\' {
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == b'/' {
+                        break;
+                    }
+                    if b[j] == b'\n' {
+                        return Err(err(j, "newline inside regex"));
+                    }
+                    j += 1;
+                }
+                if j >= b.len() {
+                    return Err(err(i, "unterminated regex"));
+                }
+                let body = std::str::from_utf8(&b[start..j])
+                    .map_err(|_| err(start, "non-utf8 regex"))?
+                    .to_string();
+                i = j + 1;
+                let mut iflag = false;
+                let mut sflag = false;
+                while i < b.len() && matches!(b[i], b'i' | b's' | b'm' | b'x') {
+                    if b[i] == b'i' {
+                        iflag = true;
+                    }
+                    if b[i] == b's' {
+                        sflag = true;
+                    }
+                    i += 1;
+                }
+                out.push(Tok::Regex(body, iflag, sflag));
+            }
+            b'"' => {
+                let mut j = i + 1;
+                let mut text = Vec::new();
+                while j < b.len() && b[j] != b'"' {
+                    if b[j] == b'\\' && j + 1 < b.len() {
+                        text.push(match b[j + 1] {
+                            b'n' => b'\n',
+                            b't' => b'\t',
+                            b'r' => b'\r',
+                            b'\\' => b'\\',
+                            b'"' => b'"',
+                            other => other,
+                        });
+                        j += 2;
+                    } else {
+                        text.push(b[j]);
+                        j += 1;
+                    }
+                }
+                if j >= b.len() {
+                    return Err(err(i, "unterminated string"));
+                }
+                i = j + 1;
+                let ci = i < b.len() && b[i] == b'i';
+                if ci {
+                    i += 1;
+                }
+                if text.is_empty() {
+                    return Err(err(i, "empty string literal"));
+                }
+                out.push(Tok::Str(text, ci));
+            }
+            b':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            b'|' => {
+                out.push(Tok::Pipe);
+                i += 1;
+            }
+            b'(' => {
+                out.push(Tok::LPar);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RPar);
+                i += 1;
+            }
+            b'[' => {
+                out.push(Tok::LSqb);
+                i += 1;
+            }
+            b']' => {
+                out.push(Tok::RSqb);
+                i += 1;
+            }
+            b'*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            b'+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            b'?' => {
+                out.push(Tok::QMark);
+                i += 1;
+            }
+            b'!' => {
+                out.push(Tok::Bang);
+                i += 1;
+            }
+            b'-' if i + 1 < b.len() && b[i + 1] == b'>' => {
+                i += 2;
+                while i < b.len() && (b[i] == b' ' || b[i] == b'\t') {
+                    i += 1;
+                }
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.push(Tok::Arrow(String::from_utf8_lossy(&b[start..i]).to_string()));
+            }
+            b'.' => {
+                // .N priority suffix
+                let mut j = i + 1;
+                let mut neg = false;
+                if j < b.len() && b[j] == b'-' {
+                    neg = true;
+                    j += 1;
+                }
+                let start = j;
+                while j < b.len() && b[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if start == j {
+                    return Err(err(i, "expected priority digits after '.'"));
+                }
+                let n: i32 = std::str::from_utf8(&b[start..j]).unwrap().parse().unwrap();
+                out.push(Tok::Prio(if neg { -n } else { n }));
+                i = j;
+            }
+            b'%' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                out.push(Tok::Directive(String::from_utf8_lossy(&b[start..j]).to_string()));
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                let mut j = i;
+                while j < b.len()
+                    && (b[j].is_ascii_alphanumeric() || b[j] == b'_' || b[j] == b'.')
+                {
+                    // Allow dotted names only for `common.X` imports.
+                    if b[j] == b'.' && !(j + 1 < b.len() && b[j + 1].is_ascii_alphabetic()) {
+                        break;
+                    }
+                    j += 1;
+                }
+                let name = String::from_utf8_lossy(&b[start..j]).to_string();
+                // Dotted priority like NAME.2 must not swallow ".2": only
+                // treat dots followed by letters as part of the name.
+                i = j;
+                let is_term = name
+                    .trim_start_matches('_')
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_uppercase())
+                    .unwrap_or(false);
+                if is_term {
+                    out.push(Tok::TermName(name));
+                } else {
+                    out.push(Tok::RuleName(name));
+                }
+            }
+            other => {
+                return Err(err(i, &format!("unexpected character {:?}", other as char)));
+            }
+        }
+    }
+    out.push(Tok::Newline);
+    Ok(out)
+}
+
+// ----------------------------------------------------------- definitions --
+
+#[derive(Debug)]
+enum Def<'a> {
+    Rule { name: String, body: &'a [Tok] },
+    Term { name: String, prio: i32, body: &'a [Tok] },
+    Ignore(&'a [Tok]),
+    Declare(Vec<String>),
+    Import(String),
+}
+
+/// Group the token stream into logical definitions. A definition continues
+/// across newlines while the next non-empty line starts with `|`.
+fn split_definitions(toks: &[Tok]) -> Result<Vec<Def<'_>>, GrammarError> {
+    // First split into lines, then join continuations.
+    let mut lines: Vec<&[Tok]> = Vec::new();
+    let mut start = 0;
+    for (i, t) in toks.iter().enumerate() {
+        if *t == Tok::Newline {
+            if i > start {
+                lines.push(&toks[start..i]);
+            }
+            start = i + 1;
+        }
+    }
+    // Merge continuation lines (starting with Pipe) into logical defs.
+    let mut logical: Vec<Vec<&[Tok]>> = Vec::new();
+    for line in lines {
+        if line.first() == Some(&Tok::Pipe) && !logical.is_empty() {
+            logical.last_mut().unwrap().push(line);
+        } else {
+            logical.push(vec![line]);
+        }
+    }
+
+    let mut defs = Vec::new();
+    for group in &logical {
+        // Flatten the group back into one token slice is impossible without
+        // allocation; instead handle head + continuations via an owned Vec
+        // indexed into the original: we simply concatenate references.
+        // For simplicity, definitions are parsed from an owned Vec<Tok>
+        // built here — but we need references; use leaked boxes? Instead:
+        // store Vec<Tok> in a side arena.
+        let head = group[0];
+        match head.first() {
+            Some(Tok::Directive(d)) if d == "ignore" => {
+                defs.push(Def::Ignore(&head[1..]));
+            }
+            Some(Tok::Directive(d)) if d == "declare" => {
+                let names = head[1..]
+                    .iter()
+                    .filter_map(|t| match t {
+                        Tok::TermName(n) | Tok::RuleName(n) => Some(n.clone()),
+                        _ => None,
+                    })
+                    .collect();
+                defs.push(Def::Declare(names));
+            }
+            Some(Tok::Directive(d)) if d == "import" => {
+                if let Some(Tok::RuleName(n)) | Some(Tok::TermName(n)) = head.get(1) {
+                    defs.push(Def::Import(n.clone()));
+                } else {
+                    return Err(GrammarError::new("malformed %import"));
+                }
+            }
+            Some(Tok::Directive(d)) => {
+                return Err(GrammarError::new(format!("unknown directive %{d}")));
+            }
+            _ => {
+                // rule or terminal definition; strip leading ? / !
+                let mut idx = 0;
+                while matches!(head.get(idx), Some(Tok::QMark) | Some(Tok::Bang)) {
+                    idx += 1;
+                }
+                let (name, is_term) = match head.get(idx) {
+                    Some(Tok::RuleName(n)) => (n.clone(), false),
+                    Some(Tok::TermName(n)) => (n.clone(), true),
+                    other => {
+                        return Err(GrammarError::new(format!(
+                            "expected definition name, got {other:?}"
+                        )))
+                    }
+                };
+                idx += 1;
+                let prio = if let Some(Tok::Prio(p)) = head.get(idx) {
+                    idx += 1;
+                    *p
+                } else {
+                    0
+                };
+                if head.get(idx) != Some(&Tok::Colon) {
+                    return Err(GrammarError::new(format!("expected ':' after '{name}'")));
+                }
+                idx += 1;
+                // Record the body as the remainder of the head line; the
+                // continuation lines are appended when reading (they start
+                // with Pipe so concatenation preserves alternation).
+                // We cheat slightly: continuations are contiguous in the
+                // original token stream (only Newline tokens separate them),
+                // so the body is the slice from head[idx] to the end of the
+                // last continuation line.
+                let body_start = &head[idx..];
+                let body: &[Tok] = if group.len() == 1 {
+                    body_start
+                } else {
+                    let last = group.last().unwrap();
+                    // SAFETY-free pointer arithmetic on the original slice:
+                    let whole = unsafe {
+                        let start_ptr = body_start.as_ptr();
+                        let end_ptr = last.as_ptr().add(last.len());
+                        std::slice::from_raw_parts(
+                            start_ptr,
+                            end_ptr.offset_from(start_ptr) as usize,
+                        )
+                    };
+                    whole
+                };
+                if is_term {
+                    defs.push(Def::Term { name, prio, body });
+                } else {
+                    defs.push(Def::Rule { name, body });
+                }
+            }
+        }
+    }
+    Ok(defs)
+}
+
+// ---------------------------------------------------------------- reader --
+
+/// Expression tree shared by rule bodies and terminal bodies.
+#[derive(Debug, Clone)]
+enum Expr {
+    RuleRef(String),
+    TermRef(String),
+    Str(Vec<u8>, bool),
+    Regex(String, bool),
+    Seq(Vec<Expr>),
+    Alt(Vec<Expr>),
+    Star(Box<Expr>),
+    Plus(Box<Expr>),
+    Opt(Box<Expr>),
+}
+
+struct Reader {
+    builder: GrammarBuilder,
+    /// Terminal name → its body expression (for inlining references).
+    term_bodies: HashMap<String, Expr>,
+    term_prios: HashMap<String, i32>,
+}
+
+impl Reader {
+    fn new() -> Self {
+        Reader {
+            builder: GrammarBuilder::new(),
+            term_bodies: HashMap::new(),
+            term_prios: HashMap::new(),
+        }
+    }
+
+    fn read(mut self, defs: Vec<Def<'_>>) -> Result<Grammar, GrammarError> {
+        // Phase 0: imports and %declare.
+        let mut rule_defs: Vec<(String, Expr)> = Vec::new();
+        let mut ignores: Vec<Expr> = Vec::new();
+        for def in &defs {
+            match def {
+                Def::Import(path) => {
+                    let name = path.rsplit('.').next().unwrap().to_string();
+                    let body = common_terminal(&name).ok_or_else(|| {
+                        GrammarError::new(format!("unknown import '{path}'"))
+                    })?;
+                    self.term_bodies.insert(name.clone(), Expr::Regex(body.to_string(), false));
+                    self.term_prios.entry(name).or_insert(0);
+                }
+                Def::Declare(names) => {
+                    for n in names {
+                        self.builder.declare_terminal(n);
+                    }
+                }
+                Def::Term { name, prio, body } => {
+                    let expr = parse_expr(body)?;
+                    self.term_bodies.insert(name.clone(), expr);
+                    self.term_prios.insert(name.clone(), *prio);
+                }
+                Def::Rule { name, body } => {
+                    rule_defs.push((name.clone(), parse_expr(body)?));
+                }
+                Def::Ignore(body) => ignores.push(parse_expr(body)?),
+            }
+        }
+
+        // Phase 1 (lazy): terminals are compiled on first *use* — a terminal
+        // referenced only inside another terminal's definition (e.g. DIGIT in
+        // `INT: DIGIT+`) is inlined, never lexed on its own, matching Lark.
+
+        // Phase 2: rules.
+        for (name, expr) in &rule_defs {
+            let lhs = self.builder.nt(name);
+            self.emit_rule(lhs, expr)?;
+        }
+
+        // Phase 3: ignores.
+        for ig in &ignores {
+            match ig {
+                Expr::TermRef(n) => {
+                    self.ensure_terminal(n, &mut Vec::new())?;
+                    let id = self
+                        .builder
+                        .term_id(n)
+                        .ok_or_else(|| GrammarError::new(format!("%ignore unknown {n}")))?;
+                    self.builder.set_ignore(id);
+                }
+                Expr::Str(text, _) => {
+                    let id = self.builder.literal_terminal(text, None);
+                    self.builder.set_ignore(id);
+                }
+                Expr::Regex(body, iflag) => {
+                    let name = format!("__IGNORE_{}", self.builder.terminals.len());
+                    let id = self.builder.add_regex_terminal(&name, body, *iflag, 0)?;
+                    self.builder.set_ignore(id);
+                }
+                other => {
+                    return Err(GrammarError::new(format!("%ignore unsupported: {other:?}")))
+                }
+            }
+        }
+
+        self.builder.build("start")
+    }
+
+    /// Compile a named terminal (inlining references), if not yet present.
+    fn ensure_terminal(
+        &mut self,
+        name: &str,
+        stack: &mut Vec<String>,
+    ) -> Result<(), GrammarError> {
+        if self.builder.term_id(name).is_some() {
+            return Ok(());
+        }
+        if stack.iter().any(|s| s == name) {
+            return Err(GrammarError::new(format!(
+                "terminal reference cycle: {} -> {name}",
+                stack.join(" -> ")
+            )));
+        }
+        stack.push(name.to_string());
+        let body = self
+            .term_bodies
+            .get(name)
+            .cloned()
+            .ok_or_else(|| GrammarError::new(format!("undefined terminal {name}")))?;
+        let ast = self.expr_to_regex(&body, stack)?;
+        stack.pop();
+        let prio = *self.term_prios.get(name).unwrap_or(&0);
+        // Pure literal terminal? Keep the Literal pattern for tooling.
+        if let RegexAst::Literal(text) = &ast {
+            let id = self.builder.literal_terminal(text, Some(name));
+            if prio != 0 {
+                self.builder.set_priority(id, prio);
+            }
+            return Ok(());
+        }
+        let pattern = regex_to_pattern_string(&ast);
+        self.builder.add_regex_terminal_from_ast(name, ast, pattern, prio)?;
+        Ok(())
+    }
+
+    /// Convert a terminal-body expression into a regex AST, inlining
+    /// referenced terminals.
+    fn expr_to_regex(
+        &mut self,
+        e: &Expr,
+        stack: &mut Vec<String>,
+    ) -> Result<RegexAst, GrammarError> {
+        Ok(match e {
+            Expr::Str(text, ci) => {
+                let lit = RegexAst::Literal(text.clone());
+                if *ci {
+                    lit.case_insensitive()
+                } else {
+                    lit
+                }
+            }
+            Expr::Regex(body, ci) => {
+                let ast = parse_regex(body)
+                    .map_err(|err| GrammarError::new(format!("regex /{body}/: {err}")))?;
+                if *ci {
+                    ast.case_insensitive()
+                } else {
+                    ast
+                }
+            }
+            Expr::TermRef(n) => {
+                let body = self
+                    .term_bodies
+                    .get(n)
+                    .cloned()
+                    .ok_or_else(|| GrammarError::new(format!("undefined terminal {n}")))?;
+                if stack.iter().any(|s| s == n) {
+                    return Err(GrammarError::new(format!("terminal cycle via {n}")));
+                }
+                stack.push(n.clone());
+                let ast = self.expr_to_regex(&body, stack)?;
+                stack.pop();
+                ast
+            }
+            Expr::RuleRef(n) => {
+                return Err(GrammarError::new(format!(
+                    "rule reference '{n}' inside terminal definition"
+                )))
+            }
+            Expr::Seq(xs) => RegexAst::Concat(
+                xs.iter().map(|x| self.expr_to_regex(x, stack)).collect::<Result<_, _>>()?,
+            ),
+            Expr::Alt(xs) => RegexAst::Alt(
+                xs.iter().map(|x| self.expr_to_regex(x, stack)).collect::<Result<_, _>>()?,
+            ),
+            Expr::Star(x) => RegexAst::Star(Box::new(self.expr_to_regex(x, stack)?)),
+            Expr::Plus(x) => RegexAst::Plus(Box::new(self.expr_to_regex(x, stack)?)),
+            Expr::Opt(x) => RegexAst::Opt(Box::new(self.expr_to_regex(x, stack)?)),
+        })
+    }
+
+    /// Emit BNF rules for `lhs → expr`, desugaring EBNF constructs.
+    fn emit_rule(&mut self, lhs: NtId, expr: &Expr) -> Result<(), GrammarError> {
+        match expr {
+            Expr::Alt(branches) => {
+                for b in branches {
+                    self.emit_rule(lhs, b)?;
+                }
+                Ok(())
+            }
+            other => {
+                let rhs = self.expr_to_symbols(other)?;
+                self.builder.add_rule(lhs, rhs);
+                Ok(())
+            }
+        }
+    }
+
+    /// Flatten a (non-Alt at top level) expression into a symbol string,
+    /// creating helper nonterminals for nested constructs.
+    fn expr_to_symbols(&mut self, e: &Expr) -> Result<Vec<Symbol>, GrammarError> {
+        Ok(match e {
+            Expr::Seq(xs) => {
+                let mut out = Vec::new();
+                for x in xs {
+                    out.extend(self.expr_to_symbols(x)?);
+                }
+                out
+            }
+            other => match self.expr_to_symbol(other)? {
+                Some(s) => vec![s],
+                None => vec![],
+            },
+        })
+    }
+
+    /// One expression → one symbol (creating helper NTs as needed).
+    /// Returns None for ε-only constructs.
+    fn expr_to_symbol(&mut self, e: &Expr) -> Result<Option<Symbol>, GrammarError> {
+        Ok(Some(match e {
+            Expr::RuleRef(n) => Symbol::N(self.builder.nt(n)),
+            Expr::TermRef(n) => {
+                self.ensure_terminal(n, &mut Vec::new())?;
+                Symbol::T(self.builder.term_id(n).unwrap())
+            }
+            Expr::Str(text, ci) => {
+                if *ci {
+                    // Case-insensitive keyword: named regex terminal.
+                    let name = format!(
+                        "KWI_{}",
+                        String::from_utf8_lossy(text).to_ascii_uppercase()
+                    );
+                    if self.builder.term_id(&name).is_none() {
+                        let ast = RegexAst::Literal(text.clone()).case_insensitive();
+                        let pat = regex_to_pattern_string(&ast);
+                        self.builder.add_regex_terminal_from_ast(&name, ast, pat, 1)?;
+                    }
+                    Symbol::T(self.builder.term_id(&name).unwrap())
+                } else {
+                    Symbol::T(self.builder.literal_terminal(text, None))
+                }
+            }
+            Expr::Regex(body, ci) => {
+                let name = format!("ANONRE_{}", self.builder.terminals.len());
+                let id = self.builder.add_regex_terminal(&name, body, *ci, 0)?;
+                Symbol::T(id)
+            }
+            Expr::Seq(_) => {
+                let nt = self.builder.fresh_nt("seq");
+                let rhs = self.expr_to_symbols(e)?;
+                self.builder.add_rule(nt, rhs);
+                Symbol::N(nt)
+            }
+            Expr::Alt(branches) => {
+                let nt = self.builder.fresh_nt("alt");
+                for b in branches {
+                    self.emit_rule(nt, b)?;
+                }
+                Symbol::N(nt)
+            }
+            Expr::Star(inner) => {
+                let nt = self.builder.fresh_nt("star");
+                let item = self.expr_to_symbols(inner)?;
+                self.builder.add_rule(nt, vec![]);
+                let mut rec = vec![Symbol::N(nt)];
+                rec.extend(item);
+                self.builder.add_rule(nt, rec);
+                Symbol::N(nt)
+            }
+            Expr::Plus(inner) => {
+                let nt = self.builder.fresh_nt("plus");
+                let item = self.expr_to_symbols(inner)?;
+                self.builder.add_rule(nt, item.clone());
+                let mut rec = vec![Symbol::N(nt)];
+                rec.extend(item);
+                self.builder.add_rule(nt, rec);
+                Symbol::N(nt)
+            }
+            Expr::Opt(inner) => {
+                let nt = self.builder.fresh_nt("opt");
+                let item = self.expr_to_symbols(inner)?;
+                self.builder.add_rule(nt, vec![]);
+                self.builder.add_rule(nt, item);
+                Symbol::N(nt)
+            }
+        }))
+    }
+}
+
+/// Parse a definition body (token slice possibly containing Newline tokens
+/// from continuation lines) into an [`Expr`].
+fn parse_expr(toks: &[Tok]) -> Result<Expr, GrammarError> {
+    // Filter newlines (continuations keep their leading Pipe).
+    let toks: Vec<&Tok> = toks.iter().filter(|t| **t != Tok::Newline).collect();
+    let mut p = EParser { toks: &toks, pos: 0 };
+    let e = p.alts()?;
+    if p.pos != p.toks.len() {
+        return Err(GrammarError::new(format!(
+            "trailing tokens in definition body: {:?}",
+            &p.toks[p.pos..]
+        )));
+    }
+    Ok(e)
+}
+
+struct EParser<'a> {
+    toks: &'a [&'a Tok],
+    pos: usize,
+}
+
+impl<'a> EParser<'a> {
+    fn peek(&self) -> Option<&'a Tok> {
+        self.toks.get(self.pos).copied()
+    }
+
+    fn alts(&mut self) -> Result<Expr, GrammarError> {
+        let mut branches = vec![self.seq()?];
+        while self.peek() == Some(&Tok::Pipe) {
+            self.pos += 1;
+            branches.push(self.seq()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { Expr::Alt(branches) })
+    }
+
+    fn seq(&mut self) -> Result<Expr, GrammarError> {
+        let mut items = Vec::new();
+        loop {
+            match self.peek() {
+                None | Some(Tok::Pipe) | Some(Tok::RPar) | Some(Tok::RSqb) => break,
+                Some(Tok::Arrow(_)) => {
+                    self.pos += 1; // alias — tree shaping only
+                }
+                Some(Tok::Bang) => {
+                    self.pos += 1; // keep-all marker — tree shaping only
+                }
+                _ => items.push(self.postfix()?),
+            }
+        }
+        Ok(match items.len() {
+            0 => Expr::Seq(vec![]),
+            1 => items.pop().unwrap(),
+            _ => Expr::Seq(items),
+        })
+    }
+
+    fn postfix(&mut self) -> Result<Expr, GrammarError> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.pos += 1;
+                    e = Expr::Star(Box::new(e));
+                }
+                Some(Tok::Plus) => {
+                    self.pos += 1;
+                    e = Expr::Plus(Box::new(e));
+                }
+                Some(Tok::QMark) => {
+                    self.pos += 1;
+                    e = Expr::Opt(Box::new(e));
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn atom(&mut self) -> Result<Expr, GrammarError> {
+        let t = self
+            .peek()
+            .ok_or_else(|| GrammarError::new("unexpected end of definition"))?;
+        self.pos += 1;
+        Ok(match t {
+            Tok::RuleName(n) => Expr::RuleRef(n.clone()),
+            Tok::TermName(n) => Expr::TermRef(n.clone()),
+            Tok::Str(s, ci) => Expr::Str(s.clone(), *ci),
+            Tok::Regex(body, iflag, _sflag) => Expr::Regex(body.clone(), *iflag),
+            Tok::LPar => {
+                let inner = self.alts()?;
+                if self.peek() != Some(&Tok::RPar) {
+                    return Err(GrammarError::new("expected ')'"));
+                }
+                self.pos += 1;
+                inner
+            }
+            Tok::LSqb => {
+                let inner = self.alts()?;
+                if self.peek() != Some(&Tok::RSqb) {
+                    return Err(GrammarError::new("expected ']'"));
+                }
+                self.pos += 1;
+                Expr::Opt(Box::new(inner))
+            }
+            other => return Err(GrammarError::new(format!("unexpected token {other:?}"))),
+        })
+    }
+}
+
+/// `%import common.X` definitions (regex bodies).
+fn common_terminal(name: &str) -> Option<&'static str> {
+    Some(match name {
+        "WS" => r"[ \t\f\r\n]+",
+        "WS_INLINE" => r"[ \t]+",
+        "NEWLINE" => r"(\r?\n)+",
+        "DIGIT" => r"[0-9]",
+        "HEXDIGIT" => r"[0-9a-fA-F]",
+        "LETTER" => r"[a-zA-Z]",
+        "UCASE_LETTER" => r"[A-Z]",
+        "LCASE_LETTER" => r"[a-z]",
+        "WORD" => r"[a-zA-Z]+",
+        "CNAME" => r"[_a-zA-Z][_a-zA-Z0-9]*",
+        "INT" => r"[0-9]+",
+        "SIGNED_INT" => r"[+\-]?[0-9]+",
+        "DECIMAL" => r"[0-9]+\.[0-9]*|\.[0-9]+",
+        "FLOAT" => r"[0-9]+(\.[0-9]*)?([eE][+\-]?[0-9]+)|[0-9]+\.[0-9]*|\.[0-9]+",
+        "NUMBER" => r"([0-9]+(\.[0-9]*)?([eE][+\-]?[0-9]+)?)|(\.[0-9]+([eE][+\-]?[0-9]+)?)",
+        "SIGNED_NUMBER" => {
+            r"[+\-]?(([0-9]+(\.[0-9]*)?([eE][+\-]?[0-9]+)?)|(\.[0-9]+([eE][+\-]?[0-9]+)?))"
+        }
+        "ESCAPED_STRING" => r#""([^"\\\n]|\\.)*""#,
+        "SQL_COMMENT" => r"--[^\n]*",
+        "CPP_COMMENT" => r"//[^\n]*",
+        "SH_COMMENT" => r"#[^\n]*",
+        _ => return None,
+    })
+}
+
+/// Best-effort pattern string for diagnostics (the AST is authoritative).
+fn regex_to_pattern_string(ast: &RegexAst) -> String {
+    format!("{ast:?}")
+}
+
+// Extension trait hook: GrammarBuilder gains an AST-direct terminal ctor so
+// inlined terminal bodies skip re-parsing.
+impl GrammarBuilder {
+    pub(crate) fn add_regex_terminal_from_ast(
+        &mut self,
+        name: &str,
+        ast: RegexAst,
+        pattern: String,
+        priority: i32,
+    ) -> Result<super::cfg::TermId, GrammarError> {
+        use super::cfg::TermPattern;
+        use crate::regex::{Dfa, Nfa};
+        if self.term_id(name).is_some() {
+            return Err(GrammarError::new(format!("duplicate terminal {name}")));
+        }
+        let dfa = Dfa::from_nfa(&Nfa::from_ast(&ast)).minimise();
+        if !dfa.language_nonempty() {
+            return Err(GrammarError::new(format!("terminal {name} matches nothing")));
+        }
+        if dfa.accepts_empty() {
+            return Err(GrammarError::new(format!(
+                "terminal {name} matches the empty string"
+            )));
+        }
+        Ok(self.push_terminal(super::cfg::Terminal {
+            name: name.to_string(),
+            pattern: TermPattern::Regex(pattern),
+            dfa,
+            priority,
+            ignore: false,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CALC: &str = r#"
+start: expr
+
+expr: term
+    | expr "+" term
+    | expr "-" term
+
+term: factor
+    | term "*" factor
+    | term "/" factor
+
+factor: INT | FLOAT | "(" expr ")" | function "(" expr ")"
+
+function: "math_exp" | "math_sqrt" | "math_sin" | "math_cos"
+
+INT: /[0-9]+/
+FLOAT: /[0-9]+\.[0-9]+/
+%ignore " "
+"#;
+
+    #[test]
+    fn calc_grammar_parses() {
+        let g = parse_ebnf(CALC).unwrap();
+        assert!(g.term_id("INT").is_some());
+        assert!(g.term_id("FLOAT").is_some());
+        assert!(g.term_id("PLUS").is_some());
+        assert!(g.term_id("KW_MATH_SQRT").is_some());
+        assert_eq!(g.nonterminals[g.start as usize], "start");
+        // " " is ignored
+        assert_eq!(g.ignored_terms().len(), 1);
+    }
+
+    #[test]
+    fn terminal_inlining() {
+        let src = r#"
+start: NUM
+NUM: DIGIT+
+DIGIT: /[0-9]/
+"#;
+        let g = parse_ebnf(src).unwrap();
+        let num = g.term_id("NUM").unwrap();
+        assert!(g.terminals[num as usize].dfa.accepts(b"123"));
+        assert!(!g.terminals[num as usize].dfa.accepts(b""));
+    }
+
+    #[test]
+    fn ebnf_postfix_desugars() {
+        let src = r#"
+start: "a" ("b" | "c")* "d"?
+"#;
+        let g = parse_ebnf(src).unwrap();
+        // star and opt helper nonterminals exist
+        assert!(g.nonterminals.iter().any(|n| n.starts_with("__star")));
+        assert!(g.nonterminals.iter().any(|n| n.starts_with("__opt")));
+    }
+
+    #[test]
+    fn continuation_lines() {
+        let src = "start: \"a\"\n    | \"b\"\n    | \"c\"\n";
+        let g = parse_ebnf(src).unwrap();
+        assert_eq!(g.rules_by_lhs[g.start as usize].len(), 3);
+    }
+
+    #[test]
+    fn case_insensitive_keywords() {
+        let src = "start: \"select\"i \"x\"\n";
+        let g = parse_ebnf(src).unwrap();
+        let kw = g.term_id("KWI_SELECT").unwrap();
+        assert!(g.terminals[kw as usize].dfa.accepts(b"SeLeCt"));
+    }
+
+    #[test]
+    fn import_common() {
+        let src = "%import common.CNAME\nstart: CNAME\n";
+        let g = parse_ebnf(src).unwrap();
+        let t = g.term_id("CNAME").unwrap();
+        assert!(g.terminals[t as usize].dfa.accepts(b"hello_1"));
+    }
+
+    #[test]
+    fn declare_terminals() {
+        let src = "%declare _INDENT _DEDENT\nstart: _INDENT \"x\" _DEDENT\n";
+        let g = parse_ebnf(src).unwrap();
+        assert!(g.term_id("_INDENT").is_some());
+    }
+
+    #[test]
+    fn priority_suffix() {
+        let src = "start: HEX | NUM\nHEX.2: /0x[0-9a-f]+/\nNUM: /[0-9a-fx]+/\n";
+        let g = parse_ebnf(src).unwrap();
+        let hex = g.term_id("HEX").unwrap();
+        assert_eq!(g.terminals[hex as usize].priority, 2);
+    }
+
+    #[test]
+    fn aliases_ignored() {
+        let src = "start: \"a\" -> letter_a\n    | \"b\" -> letter_b\n";
+        let g = parse_ebnf(src).unwrap();
+        assert_eq!(g.rules_by_lhs[g.start as usize].len(), 2);
+    }
+
+    #[test]
+    fn rule_ref_in_terminal_is_error() {
+        let src = "start: X\nX: start \"a\"\n";
+        assert!(parse_ebnf(src).is_err());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let src = "start: A\nA: B\nB: A\n";
+        assert!(parse_ebnf(src).is_err());
+    }
+}

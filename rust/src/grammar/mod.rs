@@ -1,0 +1,64 @@
+//! Context-free grammars: symbol/rule representation and the Lark-dialect
+//! EBNF reader (§4.7 "Adding a New Grammar").
+//!
+//! A [`Grammar`] owns the terminal set Γ (each terminal compiled to a
+//! minimised byte DFA — Definition 1) and the BNF production rules after
+//! EBNF desugaring. Built-in grammars for JSON, SQL, Python, Go and the
+//! illustrative calculator DSL of the paper's §3 live in `grammars/*.lark`
+//! and are embedded in the binary.
+
+mod cfg;
+mod ebnf;
+
+pub use cfg::{Grammar, GrammarBuilder, GrammarError, NtId, Rule, Symbol, TermId, TermPattern, Terminal};
+pub use ebnf::parse_ebnf;
+
+/// Embedded built-in grammars (name → source).
+pub const BUILTIN_GRAMMARS: &[(&str, &str)] = &[
+    ("json", include_str!("../../../grammars/json.lark")),
+    ("calc", include_str!("../../../grammars/calc.lark")),
+    ("sql", include_str!("../../../grammars/sql.lark")),
+    ("python", include_str!("../../../grammars/python.lark")),
+    ("go", include_str!("../../../grammars/go.lark")),
+];
+
+impl Grammar {
+    /// Load one of the built-in grammars by name.
+    pub fn builtin(name: &str) -> Result<Grammar, GrammarError> {
+        let src = BUILTIN_GRAMMARS
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, s)| *s)
+            .ok_or_else(|| {
+                GrammarError::new(format!(
+                    "unknown builtin grammar '{name}' (have: {})",
+                    BUILTIN_GRAMMARS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                ))
+            })?;
+        parse_ebnf(src)
+    }
+
+    /// Names of all built-in grammars.
+    pub fn builtin_names() -> Vec<&'static str> {
+        BUILTIN_GRAMMARS.iter().map(|(n, _)| *n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtins_load() {
+        for name in Grammar::builtin_names() {
+            let g = Grammar::builtin(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.rules.len() > 1, "{name} has rules");
+            assert!(g.terminals.len() > 1, "{name} has terminals");
+        }
+    }
+
+    #[test]
+    fn unknown_builtin_errors() {
+        assert!(Grammar::builtin("nope").is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Incremental lexer with the paper's 1-character-lookahead, no-backtrack
+//! discipline (§2.2 Definition 2, §4.2), plus the remainder computation
+//! that splits the partial output `C_k` into a lexically-fixed prefix and
+//! the remainder `r`.
+//!
+//! Lexing algorithm: all terminal DFAs advance in parallel over the input.
+//! While at least one automaton is live the walk continues; when every
+//! automaton dies at a byte, the longest accepting prefix is emitted
+//! (ties: higher priority, then lower terminal id) and the walk restarts
+//! after the emitted token. At end of input the in-progress text — which
+//! future generations may extend or re-type — becomes the remainder:
+//!
+//! - **complete remainder** (paper's "C_k ends with a complete lexical
+//!   token"): the in-progress text is exactly accepted by some terminal
+//!   (`r = l_f`, which may still change type, e.g. `ret` → `return`);
+//! - **incomplete remainder** (paper's "unlexed suffix u"): the text is a
+//!   live prefix only (e.g. `"2."` of a float, or an unterminated string).
+//!
+//! Because emission only happens when a byte kills every automaton, every
+//! *emitted* token is stable under extension of the input — the invariant
+//! the paper's incremental parsing relies on.
+
+pub mod postlex;
+
+pub use postlex::{postlex_for, GoPostLex, NoopPostLex, PostLex, PostLexResult, PythonPostLex};
+
+use crate::grammar::{Grammar, TermId};
+use crate::regex::DEAD;
+
+/// One lexed token (byte range into the input).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LexToken {
+    pub term: TermId,
+    pub start: usize,
+    pub end: usize,
+    pub ignored: bool,
+}
+
+/// Result of lexing a partial output.
+#[derive(Debug, Clone)]
+pub struct LexResult {
+    /// Stable tokens (never change as `C_k` grows).
+    pub tokens: Vec<LexToken>,
+    /// Byte offset where the remainder begins (`remainder = &input[start..]`).
+    pub remainder_start: usize,
+    /// When the remainder is exactly accepted by a terminal: that terminal
+    /// (highest-priority accepter) — the paper's complete-token case.
+    pub remainder_term: Option<TermId>,
+    /// Byte position of a lexing error (text not a prefix of any token
+    /// sequence), if any. Generation under SynCode never produces this.
+    pub error: Option<usize>,
+}
+
+impl LexResult {
+    /// The remainder r as a slice of the original input.
+    pub fn remainder<'a>(&self, input: &'a [u8]) -> &'a [u8] {
+        &input[self.remainder_start..]
+    }
+}
+
+/// Parallel-DFA lexer for a grammar's terminal set.
+pub struct Lexer<'g> {
+    g: &'g Grammar,
+    /// Terminals that participate in lexing (skips `%declare`d ones).
+    lexable: Vec<TermId>,
+}
+
+impl<'g> Lexer<'g> {
+    pub fn new(g: &'g Grammar) -> Lexer<'g> {
+        let lexable = (0..g.terminals.len() as TermId)
+            .filter(|&t| {
+                !matches!(
+                    g.terminals[t as usize].pattern,
+                    crate::grammar::TermPattern::Declared
+                )
+            })
+            .collect();
+        Lexer { g, lexable }
+    }
+
+    /// Lex a partial output into stable tokens + remainder.
+    pub fn lex(&self, input: &[u8]) -> LexResult {
+        self.lex_from(input, 0, Vec::new())
+    }
+
+    /// Incremental form: resume lexing at byte offset `start` with the
+    /// stable tokens already known for `input[..start]`. Sound because
+    /// emitted tokens are stable under extension (module docs) — the
+    /// engine caches `(tokens, remainder_start)` per step and re-lexes
+    /// only from the previous remainder (§Perf L3 optimisation).
+    pub fn lex_from(
+        &self,
+        input: &[u8],
+        start: usize,
+        prefix_tokens: Vec<LexToken>,
+    ) -> LexResult {
+        let mut tokens = prefix_tokens;
+        let mut i = start;
+        let n = input.len();
+        // Per-lexable-terminal DFA state; DEAD when that automaton died.
+        let mut states: Vec<u32> = Vec::with_capacity(self.lexable.len());
+
+        'outer: while i < n {
+            states.clear();
+            for &t in &self.lexable {
+                states.push(self.g.terminals[t as usize].dfa.start());
+            }
+            let mut best: Option<(usize, TermId)> = None; // (end, term)
+            let mut j = i;
+            while j < n {
+                let b = input[j];
+                let mut any_live = false;
+                for (k, &t) in self.lexable.iter().enumerate() {
+                    let st = states[k];
+                    if st == DEAD {
+                        continue;
+                    }
+                    let dfa = &self.g.terminals[t as usize].dfa;
+                    let nxt = dfa.step(st, b);
+                    states[k] = nxt;
+                    if nxt != DEAD {
+                        any_live = true;
+                    }
+                }
+                if !any_live {
+                    // The byte at j killed everything: emit the longest
+                    // accepting prefix seen in [i, j).
+                    match best {
+                        Some((end, term)) => {
+                            tokens.push(self.mk_token(term, i, end));
+                            i = end;
+                            continue 'outer;
+                        }
+                        None => {
+                            return LexResult {
+                                tokens,
+                                remainder_start: i,
+                                remainder_term: None,
+                                error: Some(j),
+                            };
+                        }
+                    }
+                }
+                j += 1;
+                // Record acceptance at length j - i.
+                if let Some(term) = self.best_accepting(&states) {
+                    best = Some((j, term));
+                }
+            }
+            // Reached end of input with a live walk: [i, n) is the
+            // remainder. It is "complete" if accepted exactly at n.
+            let remainder_term = match best {
+                Some((end, term)) if end == n => Some(term),
+                _ => None,
+            };
+            return LexResult { tokens, remainder_start: i, remainder_term, error: None };
+        }
+        LexResult { tokens, remainder_start: n, remainder_term: None, error: None }
+    }
+
+    /// Among current DFA states, the best terminal in an accepting state
+    /// (priority desc, then id asc). None if nothing accepts.
+    fn best_accepting(&self, states: &[u32]) -> Option<TermId> {
+        let mut best: Option<(i32, TermId)> = None;
+        for (k, &t) in self.lexable.iter().enumerate() {
+            let st = states[k];
+            if st == DEAD {
+                continue;
+            }
+            let term = &self.g.terminals[t as usize];
+            if term.dfa.is_accept(st) {
+                let cand = (term.priority, t);
+                best = match best {
+                    None => Some(cand),
+                    Some((bp, bt)) => {
+                        if cand.0 > bp || (cand.0 == bp && t < bt) {
+                            Some(cand)
+                        } else {
+                            Some((bp, bt))
+                        }
+                    }
+                };
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    fn mk_token(&self, term: TermId, start: usize, end: usize) -> LexToken {
+        LexToken { term, start, end, ignored: self.g.terminals[term as usize].ignore }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+
+    fn lex_names(g: &Grammar, input: &str) -> (Vec<String>, String, bool) {
+        let lx = Lexer::new(g);
+        let r = lx.lex(input.as_bytes());
+        assert!(r.error.is_none(), "lex error at {:?}", r.error);
+        let names = r
+            .tokens
+            .iter()
+            .map(|t| g.terminals[t.term as usize].name.clone())
+            .collect();
+        let rem = String::from_utf8(r.remainder(input.as_bytes()).to_vec()).unwrap();
+        (names, rem, r.remainder_term.is_some())
+    }
+
+    #[test]
+    fn calc_example_from_paper() {
+        // §3.2: "math_sqrt(3) * (2" → remainder "2" (complete, INT).
+        let g = Grammar::builtin("calc").unwrap();
+        let (names, rem, complete) = lex_names(&g, "math_sqrt(3) * (2");
+        assert_eq!(rem, "2");
+        assert!(complete);
+        assert!(names.contains(&"KW_MATH_SQRT".to_string()));
+    }
+
+    #[test]
+    fn calc_incomplete_float_remainder() {
+        // "...(2." → remainder "2." (incomplete: live FLOAT prefix). The
+        // fixed tokens must NOT include an INT(2) — no-backtrack property.
+        let g = Grammar::builtin("calc").unwrap();
+        let (names, rem, complete) = lex_names(&g, "math_sqrt(3) * (2.");
+        assert_eq!(rem, "2.");
+        assert!(!complete);
+        // The "2" must NOT have been emitted as a fixed INT: the last fixed
+        // token is the open paren.
+        assert_eq!(names.last().map(|s| s.as_str()), Some("LPAR"));
+    }
+
+    #[test]
+    fn keyword_vs_name_priority() {
+        let g = Grammar::builtin("python").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(b"return ");
+        // "return" is fixed (the space killed its walk); the trailing
+        // space itself is the remainder (a complete WS_INLINE token).
+        assert_eq!(r.tokens.len(), 1);
+        assert_eq!(g.terminals[r.tokens[0].term as usize].name, "KW_RETURN");
+        assert_eq!(r.remainder(b"return "), b" ");
+        assert!(r.remainder_term.is_some());
+    }
+
+    #[test]
+    fn keyword_prefix_stays_remainder() {
+        // "ret" could become "return" — stays in the remainder.
+        let g = Grammar::builtin("python").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(b"ret");
+        assert_eq!(r.tokens.len(), 0);
+        assert_eq!(r.remainder(b"ret"), b"ret");
+        // complete as NAME
+        let name = g.term_id("NAME").unwrap();
+        assert_eq!(r.remainder_term, Some(name));
+    }
+
+    #[test]
+    fn json_lexing() {
+        let g = Grammar::builtin("json").unwrap();
+        let (names, rem, complete) = lex_names(&g, r#"{"a": [1, true"#);
+        assert!(names.iter().any(|n| n == "STRING"));
+        assert_eq!(rem, "true");
+        assert!(complete);
+    }
+
+    #[test]
+    fn json_unterminated_string_is_incomplete_remainder() {
+        let g = Grammar::builtin("json").unwrap();
+        let (_, rem, complete) = lex_names(&g, r#"{"key": "val"#);
+        assert_eq!(rem, "\"val");
+        assert!(!complete);
+    }
+
+    #[test]
+    fn lex_error_reported() {
+        let g = Grammar::builtin("calc").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(b"1 @ 2");
+        assert!(r.error.is_some());
+    }
+
+    #[test]
+    fn empty_input() {
+        let g = Grammar::builtin("json").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(b"");
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.remainder_start, 0);
+        assert_eq!(r.remainder_term, None);
+    }
+
+    #[test]
+    fn emitted_tokens_stable_under_extension() {
+        // Property: lexing a prefix then extending never changes the
+        // already-emitted tokens (the paper's incremental invariant).
+        let g = Grammar::builtin("json").unwrap();
+        let lx = Lexer::new(&g);
+        let full = br#"{"k": [1.5e3, "s", null], "m": {"x": true}}"#;
+        let full_res = lx.lex(full);
+        assert!(full_res.error.is_none());
+        for cut in 0..full.len() {
+            let pre = &full[..cut];
+            let r = lx.lex(pre);
+            assert!(r.error.is_none(), "cut {cut}");
+            for (a, b) in r.tokens.iter().zip(full_res.tokens.iter()) {
+                assert_eq!(a, b, "token changed at cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn python_newline_token_gobbles_indent() {
+        let g = Grammar::builtin("python").unwrap();
+        let lx = Lexer::new(&g);
+        let src = b"x = 1\n  y";
+        let r = lx.lex(src);
+        let nl = g.term_id("_NL").unwrap();
+        let nl_tok = r.tokens.iter().find(|t| t.term == nl).unwrap();
+        assert_eq!(&src[nl_tok.start..nl_tok.end], b"\n  ");
+    }
+
+    #[test]
+    fn go_newline_separate_token() {
+        let g = Grammar::builtin("go").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(b"x := 1\ny");
+        let nlid = g.term_id("NEWLINE").unwrap();
+        assert!(r.tokens.iter().any(|t| t.term == nlid));
+    }
+}

@@ -1,0 +1,508 @@
+//! Post-lex passes for the non-context-free fragments of the supported
+//! languages (paper §4.7 "Non-CFG Fragments of PLs"):
+//!
+//! - [`PythonPostLex`] synthesises `_INDENT`/`_DEDENT` terminals from the
+//!   indentation carried by `_NL` tokens (indentation tracking);
+//! - [`GoPostLex`] performs Go's automatic semicolon insertion, turning
+//!   `NEWLINE` tokens into `SEMI` after statement-ending tokens;
+//! - [`NoopPostLex`] is the identity for ordinary CFG languages.
+//!
+//! A post-lex pass transforms the *stable* token stream into the
+//! parser-facing terminal sequence and — because the final token of a
+//! partial output may still grow — reports the possible ways the remainder
+//! can map into parser terminals ([`PostLex::remainder_variants`]), plus
+//! synthetic closers needed to complete the program at EOF
+//! ([`PostLex::closers`]) and accept-sequence expansion for masks
+//! ([`PostLex::expand_accept`]).
+
+use super::LexToken;
+use crate::grammar::{Grammar, TermId};
+
+/// Output of a post-lex pass over the stable tokens.
+#[derive(Debug, Clone)]
+pub struct PostLexResult {
+    /// Parser-facing terminal sequence (ignored tokens removed, synthetic
+    /// terminals inserted).
+    pub parser_tokens: Vec<TermId>,
+    /// Python indentation stack (always ≥ 1 entry; [0] for others).
+    pub indent_stack: Vec<usize>,
+    /// Last parser-facing token (for Go ASI trigger decisions).
+    pub last_token: Option<TermId>,
+    /// Set when the token stream violates a non-CFG constraint (e.g. a
+    /// dedent to a level never pushed).
+    pub error: bool,
+}
+
+/// Language-specific lexer post-pass.
+pub trait PostLex: Send + Sync {
+    /// Transform the stable tokens.
+    fn apply(&self, g: &Grammar, text: &[u8], tokens: &[LexToken]) -> PostLexResult;
+
+    /// The parser-terminal sequences the remainder may contribute once it
+    /// is consumed, given its (current) terminal type. Used for the
+    /// Case-"complete remainder" accept-sequence computation. An empty
+    /// inner sequence means "contributes nothing" (ignored token).
+    fn remainder_variants(
+        &self,
+        g: &Grammar,
+        st: &PostLexResult,
+        rem_term: Option<TermId>,
+        rem_text: &[u8],
+    ) -> Vec<Vec<TermId>>;
+
+    /// Synthetic terminals that close the program at end of input (Python:
+    /// pending `_DEDENT`s; Go: a final ASI `SEMI`), given the terminals
+    /// `consumed` after the fixed stream (the remainder variant).
+    fn closers(&self, g: &Grammar, st: &PostLexResult, consumed: &[TermId]) -> Vec<TermId>;
+
+    /// Expand accept sequences with language-specific alternates (Go: a
+    /// `SEMI`-initial sequence is also reachable via `NEWLINE` when ASI
+    /// applies).
+    fn expand_accept(
+        &self,
+        g: &Grammar,
+        st: &PostLexResult,
+        seqs: &mut Vec<Vec<TermId>>,
+    );
+}
+
+fn default_variants(
+    g: &Grammar,
+    rem_term: Option<TermId>,
+) -> Vec<Vec<TermId>> {
+    match rem_term {
+        Some(t) if g.terminals[t as usize].ignore => vec![vec![]],
+        Some(t) => vec![vec![t]],
+        None => vec![],
+    }
+}
+
+// ------------------------------------------------------------------ noop --
+
+/// Identity post-pass for plain CFG languages (JSON, SQL, calc).
+#[derive(Debug, Default)]
+pub struct NoopPostLex;
+
+impl PostLex for NoopPostLex {
+    fn apply(&self, _g: &Grammar, _text: &[u8], tokens: &[LexToken]) -> PostLexResult {
+        let parser_tokens: Vec<TermId> =
+            tokens.iter().filter(|t| !t.ignored).map(|t| t.term).collect();
+        let last_token = parser_tokens.last().copied();
+        PostLexResult { parser_tokens, indent_stack: vec![0], last_token, error: false }
+    }
+
+    fn remainder_variants(
+        &self,
+        g: &Grammar,
+        _st: &PostLexResult,
+        rem_term: Option<TermId>,
+        _rem_text: &[u8],
+    ) -> Vec<Vec<TermId>> {
+        default_variants(g, rem_term)
+    }
+
+    fn closers(&self, _g: &Grammar, _st: &PostLexResult, _consumed: &[TermId]) -> Vec<TermId> {
+        vec![]
+    }
+
+    fn expand_accept(&self, _g: &Grammar, _st: &PostLexResult, _seqs: &mut Vec<Vec<TermId>>) {}
+}
+
+// ---------------------------------------------------------------- python --
+
+/// Python indentation tracker: synthesises `_INDENT`/`_DEDENT` around the
+/// `_NL` terminal (whose regex swallows the following line's leading
+/// whitespace, so each `_NL` token carries the next line's indentation).
+pub struct PythonPostLex {
+    nl: TermId,
+    indent: TermId,
+    dedent: TermId,
+}
+
+impl PythonPostLex {
+    pub fn new(g: &Grammar) -> PythonPostLex {
+        PythonPostLex {
+            nl: g.term_id("_NL").expect("grammar lacks _NL"),
+            indent: g.term_id("_INDENT").expect("grammar lacks _INDENT"),
+            dedent: g.term_id("_DEDENT").expect("grammar lacks _DEDENT"),
+        }
+    }
+
+    /// Indentation carried by an `_NL` token: width after the last newline.
+    fn nl_indent(text: &[u8], tok: &LexToken) -> usize {
+        let s = &text[tok.start..tok.end];
+        let last_nl = s.iter().rposition(|&b| b == b'\n').unwrap_or(0);
+        s.len() - last_nl - 1
+    }
+
+    /// Emit `_NL` plus the synthetic indents/dedents to reach `indent`.
+    fn emit_nl(
+        &self,
+        out: &mut Vec<TermId>,
+        stack: &mut Vec<usize>,
+        indent: usize,
+        error: &mut bool,
+    ) {
+        out.push(self.nl);
+        let top = *stack.last().unwrap();
+        if indent > top {
+            stack.push(indent);
+            out.push(self.indent);
+        } else if indent < top {
+            while *stack.last().unwrap() > indent {
+                stack.pop();
+                out.push(self.dedent);
+            }
+            if *stack.last().unwrap() != indent {
+                *error = true; // dedent to a level never pushed
+            }
+        }
+    }
+}
+
+impl PostLex for PythonPostLex {
+    fn apply(&self, _g: &Grammar, text: &[u8], tokens: &[LexToken]) -> PostLexResult {
+        let mut out: Vec<TermId> = Vec::new();
+        let mut stack = vec![0usize];
+        let mut error = false;
+        // Walk non-ignored tokens; merge consecutive _NL runs, and only
+        // commit a run's indentation when a real token follows it (the last
+        // _NL before the remainder is committed using the remainder as the
+        // following token — the caller guarantees a remainder exists
+        // whenever the final stable token is an _NL).
+        let significant: Vec<&LexToken> = tokens.iter().filter(|t| !t.ignored).collect();
+        let mut i = 0;
+        while i < significant.len() {
+            let tok = significant[i];
+            if tok.term == self.nl {
+                // Merge run of _NLs (comments between them are ignored and
+                // already filtered); indentation comes from the last one.
+                let mut j = i;
+                while j + 1 < significant.len() && significant[j + 1].term == self.nl {
+                    j += 1;
+                }
+                let indent = Self::nl_indent(text, significant[j]);
+                if out.is_empty() {
+                    // Leading blank/comment lines: drop entirely; an
+                    // indented first statement is an error.
+                    if indent != 0 {
+                        error = true;
+                    }
+                } else {
+                    self.emit_nl(&mut out, &mut stack, indent, &mut error);
+                }
+                i = j + 1;
+            } else {
+                out.push(tok.term);
+                i += 1;
+            }
+        }
+        let last_token = out.last().copied();
+        PostLexResult { parser_tokens: out, indent_stack: stack, last_token, error }
+    }
+
+    fn remainder_variants(
+        &self,
+        g: &Grammar,
+        st: &PostLexResult,
+        rem_term: Option<TermId>,
+        rem_text: &[u8],
+    ) -> Vec<Vec<TermId>> {
+        if rem_term != Some(self.nl) {
+            return default_variants(g, rem_term);
+        }
+        // The remainder is an _NL still in progress: its final indentation
+        // can only *grow* (by appending spaces). Enumerate every indentation
+        // outcome still reachable (paper §4.7's indentation constraint):
+        //   - strictly deeper than the stack top   → _NL _INDENT
+        //   - equal to stack level L (if cur ≤ L)  → _NL _DEDENT{k}
+        let cur = {
+            let last_nl = rem_text.iter().rposition(|&b| b == b'\n').unwrap_or(0);
+            rem_text.len() - last_nl - 1
+        };
+        let mut variants = vec![vec![self.nl, self.indent]];
+        let stack = &st.indent_stack;
+        for (depth, &level) in stack.iter().enumerate().rev() {
+            if cur <= level {
+                let dedents = stack.len() - 1 - depth;
+                let mut v = vec![self.nl];
+                v.extend(std::iter::repeat(self.dedent).take(dedents));
+                variants.push(v);
+            }
+        }
+        variants
+    }
+
+    fn closers(&self, _g: &Grammar, st: &PostLexResult, consumed: &[TermId]) -> Vec<TermId> {
+        // Pending dedents after the variant's own indents/dedents. A final
+        // _NL is NOT synthesised — the grammar requires real newlines.
+        let depth = st.indent_stack.len() as isize - 1
+            + consumed.iter().filter(|&&t| t == self.indent).count() as isize
+            - consumed.iter().filter(|&&t| t == self.dedent).count() as isize;
+        std::iter::repeat(self.dedent).take(depth.max(0) as usize).collect()
+    }
+
+    fn expand_accept(&self, _g: &Grammar, _st: &PostLexResult, _seqs: &mut Vec<Vec<TermId>>) {}
+}
+
+// -------------------------------------------------------------------- go --
+
+/// Go automatic semicolon insertion: a `NEWLINE` token becomes a `SEMI`
+/// when the previous parser token can end a statement; otherwise it is
+/// dropped.
+pub struct GoPostLex {
+    newline: TermId,
+    semi: TermId,
+    triggers: Vec<TermId>,
+}
+
+impl GoPostLex {
+    pub fn new(g: &Grammar) -> GoPostLex {
+        let mut triggers = Vec::new();
+        for name in [
+            "NAME", "INT", "FLOAT", "STRING", "CHAR", "KW_TRUE", "KW_FALSE", "KW_NIL",
+            "KW_RETURN", "KW_BREAK", "KW_CONTINUE", "RPAR", "RSQB", "RBRACE", "ANON_INC",
+        ] {
+            if let Some(id) = g.term_id(name) {
+                triggers.push(id);
+            }
+        }
+        // ++ / -- are anonymous terminals; find them by literal pattern.
+        for (i, t) in g.terminals.iter().enumerate() {
+            if let crate::grammar::TermPattern::Literal(lit) = &t.pattern {
+                if lit == b"++" || lit == b"--" {
+                    triggers.push(i as TermId);
+                }
+            }
+        }
+        GoPostLex {
+            newline: g.term_id("NEWLINE").expect("grammar lacks NEWLINE"),
+            semi: g.term_id("SEMI").expect("grammar lacks SEMI"),
+            triggers,
+        }
+    }
+
+    fn is_trigger(&self, t: Option<TermId>) -> bool {
+        t.map(|t| self.triggers.contains(&t)).unwrap_or(false)
+    }
+}
+
+impl PostLex for GoPostLex {
+    fn apply(&self, _g: &Grammar, _text: &[u8], tokens: &[LexToken]) -> PostLexResult {
+        let mut out: Vec<TermId> = Vec::new();
+        for tok in tokens {
+            if tok.term == self.newline {
+                // NEWLINE is nominally ignored but drives ASI.
+                if self.is_trigger(out.last().copied()) {
+                    out.push(self.semi);
+                }
+            } else if !tok.ignored {
+                out.push(tok.term);
+            }
+        }
+        let last_token = out.last().copied();
+        PostLexResult { parser_tokens: out, indent_stack: vec![0], last_token, error: false }
+    }
+
+    fn remainder_variants(
+        &self,
+        g: &Grammar,
+        st: &PostLexResult,
+        rem_term: Option<TermId>,
+        _rem_text: &[u8],
+    ) -> Vec<Vec<TermId>> {
+        if rem_term == Some(self.newline) {
+            if self.is_trigger(st.last_token) {
+                vec![vec![self.semi]]
+            } else {
+                vec![vec![]]
+            }
+        } else {
+            default_variants(g, rem_term)
+        }
+    }
+
+    fn closers(&self, _g: &Grammar, st: &PostLexResult, consumed: &[TermId]) -> Vec<TermId> {
+        // A file ending without a newline still gets an ASI semicolon.
+        let last = consumed.last().copied().or(st.last_token);
+        if last == Some(self.semi) {
+            vec![]
+        } else if self.is_trigger(last) {
+            vec![self.semi]
+        } else {
+            vec![]
+        }
+    }
+
+    fn expand_accept(&self, _g: &Grammar, st: &PostLexResult, seqs: &mut Vec<Vec<TermId>>) {
+        // Wherever SEMI is acceptable and ASI applies, a NEWLINE is an
+        // equally valid *textual* continuation (it post-lexes to SEMI).
+        if !self.is_trigger(st.last_token) {
+            return;
+        }
+        let mut extra = Vec::new();
+        for s in seqs.iter() {
+            if s.first() == Some(&self.semi) {
+                let mut v = s.clone();
+                v[0] = self.newline;
+                extra.push(v);
+            }
+        }
+        seqs.extend(extra);
+    }
+}
+
+/// Pick the post-lex pass for a built-in grammar name.
+pub fn postlex_for(name: &str, g: &Grammar) -> Box<dyn PostLex> {
+    match name {
+        "python" => Box::new(PythonPostLex::new(g)),
+        "go" => Box::new(GoPostLex::new(g)),
+        _ => Box::new(NoopPostLex),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+    use crate::lexer::Lexer;
+
+    fn py_tokens(src: &str) -> (Vec<String>, PostLexResult, Grammar) {
+        let g = Grammar::builtin("python").unwrap();
+        let lx = Lexer::new(&g);
+        let r = lx.lex(src.as_bytes());
+        assert!(r.error.is_none());
+        let pl = PythonPostLex::new(&g);
+        let res = pl.apply(&g, src.as_bytes(), &r.tokens);
+        let names =
+            res.parser_tokens.iter().map(|&t| g.terminals[t as usize].name.clone()).collect();
+        (names, res, g)
+    }
+
+    #[test]
+    fn python_indent_dedent_synthesis() {
+        // note trailing "z" so the last _NL's indentation is committed
+        let (names, res, _) = py_tokens("if x:\n    y = 1\nz");
+        assert!(names.contains(&"_INDENT".to_string()));
+        assert!(names.contains(&"_DEDENT".to_string()));
+        assert!(!res.error);
+        assert_eq!(res.indent_stack, vec![0]);
+    }
+
+    #[test]
+    fn python_nested_dedents() {
+        let src = "if a:\n  if b:\n    x = 1\ny";
+        let (names, res, _) = py_tokens(src);
+        let dedents = names.iter().filter(|n| *n == "_DEDENT").count();
+        assert_eq!(dedents, 2);
+        assert!(!res.error);
+    }
+
+    #[test]
+    fn python_bad_dedent_flagged() {
+        let src = "if a:\n    x = 1\n  y";
+        let (_, res, _) = py_tokens(src);
+        assert!(res.error);
+    }
+
+    #[test]
+    fn python_blank_lines_merge() {
+        let src = "x = 1\n\n\ny = 2\nq";
+        let (names, res, _) = py_tokens(src);
+        assert!(!res.error);
+        // No INDENT from blank lines.
+        assert!(!names.contains(&"_INDENT".to_string()));
+        // exactly two _NL emitted (one per statement separator)
+        assert_eq!(names.iter().filter(|n| *n == "_NL").count(), 2);
+        assert_eq!(res.indent_stack, vec![0]);
+    }
+
+    #[test]
+    fn python_comment_lines_do_not_indent() {
+        let src = "x = 1\n  # comment\ny";
+        let (names, res, _) = py_tokens(src);
+        assert!(!res.error, "indented comment line must not indent");
+        assert!(!names.contains(&"_INDENT".to_string()));
+    }
+
+    #[test]
+    fn python_remainder_variants_for_nl() {
+        let g = Grammar::builtin("python").unwrap();
+        let pl = PythonPostLex::new(&g);
+        let st = PostLexResult {
+            parser_tokens: vec![],
+            indent_stack: vec![0, 4],
+            last_token: None,
+            error: false,
+        };
+        let nl = g.term_id("_NL").unwrap();
+        // remainder "\n  " (cur=2): can extend to INDENT(>4 no wait: >top
+        // always possible), pad to 4 (same level), but NOT dedent to 0
+        // — wait, cur=2 > 0 means dedent to 0 is impossible.
+        let vars = pl.remainder_variants(&g, &st, Some(nl), b"\n  ");
+        let indent = g.term_id("_INDENT").unwrap();
+        let dedent = g.term_id("_DEDENT").unwrap();
+        assert!(vars.contains(&vec![nl, indent]));
+        assert!(vars.contains(&vec![nl])); // pad to level 4
+        assert!(!vars.contains(&vec![nl, dedent])); // can't shrink to 0
+    }
+
+    #[test]
+    fn python_closers_are_pending_dedents() {
+        let g = Grammar::builtin("python").unwrap();
+        let pl = PythonPostLex::new(&g);
+        let st = PostLexResult {
+            parser_tokens: vec![],
+            indent_stack: vec![0, 2, 4],
+            last_token: None,
+            error: false,
+        };
+        assert_eq!(pl.closers(&g, &st, &[]).len(), 2);
+    }
+
+    #[test]
+    fn go_asi_inserts_semi() {
+        let g = Grammar::builtin("go").unwrap();
+        let lx = Lexer::new(&g);
+        let src = b"x := 1\ny := 2\nz";
+        let r = lx.lex(src);
+        let pl = GoPostLex::new(&g);
+        let res = pl.apply(&g, src, &r.tokens);
+        let semi = g.term_id("SEMI").unwrap();
+        // Both newlines are fixed tokens (a `z` follows the second) and
+        // both follow ASI triggers.
+        assert_eq!(res.parser_tokens.iter().filter(|&&t| t == semi).count(), 2);
+    }
+
+    #[test]
+    fn go_no_asi_after_operator() {
+        let g = Grammar::builtin("go").unwrap();
+        let lx = Lexer::new(&g);
+        let src = b"x := 1 +\n2\nz";
+        let r = lx.lex(src);
+        let pl = GoPostLex::new(&g);
+        let res = pl.apply(&g, src, &r.tokens);
+        let semi = g.term_id("SEMI").unwrap();
+        // The newline after `+` is dropped; only the one after `2` (an ASI
+        // trigger) inserts a SEMI.
+        assert_eq!(res.parser_tokens.iter().filter(|&&t| t == semi).count(), 1);
+    }
+
+    #[test]
+    fn go_expand_accept_adds_newline_alternative() {
+        let g = Grammar::builtin("go").unwrap();
+        let pl = GoPostLex::new(&g);
+        let semi = g.term_id("SEMI").unwrap();
+        let newline = g.term_id("NEWLINE").unwrap();
+        let name = g.term_id("NAME").unwrap();
+        let st = PostLexResult {
+            parser_tokens: vec![name],
+            indent_stack: vec![0],
+            last_token: Some(name),
+            error: false,
+        };
+        let mut seqs = vec![vec![semi, name]];
+        pl.expand_accept(&g, &st, &mut seqs);
+        assert!(seqs.contains(&vec![newline, name]));
+    }
+}

@@ -1,0 +1,44 @@
+//! # SynCode — grammar-augmented LLM generation
+//!
+//! A from-scratch reproduction of *SynCode: LLM Generation with Grammar
+//! Augmentation* (Ugare et al., 2024) as a three-layer Rust + JAX + Pallas
+//! serving stack:
+//!
+//! - **L3** (this crate): the constrained-decoding engine — incremental
+//!   LR(1)/LALR(1) parsing of the partial output, DFA mask store, grammar
+//!   mask (Algorithm 2) — plus a continuous-batching serving coordinator.
+//! - **L2** (`python/compile/model.py`): a small JAX transformer LM, AOT
+//!   lowered to HLO text and executed from Rust over PJRT.
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for the fused
+//!   mask-union + masked-softmax and causal attention.
+//!
+//! The public API surface a downstream user touches (`no_run`: doctest
+//! binaries lack the rpath to libxla_extension's bundled libstdc++):
+//!
+//! ```no_run
+//! use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+//! use syncode::mask::{MaskStore, MaskStoreConfig};
+//! use syncode::parser::LrMode;
+//! use syncode::tokenizer::Tokenizer;
+//! use std::sync::Arc;
+//!
+//! let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+//! let tok = Arc::new(Tokenizer::ascii_byte_level());
+//! let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+//! let mut eng = SyncodeEngine::new(cx, store, tok);
+//! eng.reset("");
+//! let mask = eng.compute_mask().unwrap().unwrap(); // bitset over the vocabulary
+//! assert!(mask.count_ones() > 0);
+//! ```
+
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod grammar;
+pub mod lexer;
+pub mod mask;
+pub mod parser;
+pub mod regex;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,293 @@
+//! `syncode` CLI — leader entrypoint for the serving stack.
+//!
+//! Subcommands:
+//!
+//! - `generate`   one-shot constrained generation (mock or PJRT model);
+//! - `serve`      run the batch server over a synthetic request stream;
+//! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
+//! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
+//! - `experiment` run a paper experiment (table1|table2|table3|table4);
+//! - `check`      syntax-check a file against a grammar (the oracle).
+
+use std::sync::Arc;
+use syncode::coordinator::{GenParams, GenRequest, Server, Strategy};
+use syncode::engine::GrammarContext;
+use syncode::eval::dataset;
+use syncode::eval::harness::{self, EngineKind, EvalEnv};
+use syncode::mask::{MaskStore, MaskStoreConfig};
+use syncode::parser::{LrMode, LrTable};
+use syncode::runtime::{ModelFactory, PjrtModel, PjrtVariant};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::bench::Table;
+use syncode::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("grammar") => cmd_grammar(&args),
+        Some("maskstore") => cmd_maskstore(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("check") => cmd_check(&args),
+        _ => {
+            eprintln!(
+                "usage: syncode <generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
+                 common: --grammar <json|calc|sql|python|go> --artifacts <dir> --mock"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn params_from(args: &Args) -> GenParams {
+    let temp = args.get_num("temperature", 0.7f32);
+    let strategy = match args.get_or("strategy", "topp").as_str() {
+        "greedy" => Strategy::Greedy,
+        "temp" => Strategy::Temperature(temp),
+        _ => Strategy::TopP { temp, p: args.get_num("top-p", 0.95f32) },
+    };
+    GenParams {
+        max_new_tokens: args.get_num("max-tokens", 120),
+        strategy,
+        seed: args.get_num("seed", 7u64),
+        opportunistic: !args.flag("no-opportunistic"),
+    }
+}
+
+/// Model + tokenizer from artifacts (PJRT) or the mock fallback.
+fn model_and_tok(args: &Args, env: &EvalEnv) -> (ModelFactory, Arc<Tokenizer>) {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let use_mock = args.flag("mock") || !dir.join("config.json").exists();
+    if use_mock {
+        eprintln!("[model: mock-bigram — pass --artifacts or run `make artifacts` for PJRT]");
+        (env.model_factory(), env.tok.clone())
+    } else {
+        let tok = Arc::new(
+            Tokenizer::from_file(&dir.join("tokenizer.json")).expect("tokenizer.json"),
+        );
+        let variant = if args.flag("full-recompute") {
+            PjrtVariant::FullRecompute
+        } else {
+            PjrtVariant::KvCache
+        };
+        let f: ModelFactory = Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?)));
+        (f, tok)
+    }
+}
+
+fn syncode_factory(
+    env: &EvalEnv,
+    tok: &Arc<Tokenizer>,
+) -> syncode::coordinator::EngineFactory {
+    // The store must match the *serving* tokenizer (which differs from the
+    // env's mock tokenizer when artifacts are loaded).
+    let store = Arc::new(MaskStore::build(&env.cx.grammar, tok, MaskStoreConfig::default()));
+    let cx = env.cx.clone();
+    let tok = tok.clone();
+    Box::new(move || {
+        Box::new(syncode::engine::SyncodeEngine::new(cx.clone(), store.clone(), tok.clone()))
+    })
+}
+
+fn cmd_generate(args: &Args) {
+    let gname = args.get_or("grammar", "json");
+    let env = EvalEnv::new(&gname, 80, 120, args.get_num("seed", 7));
+    let (model, tok) = model_and_tok(args, &env);
+    let srv = Server::start(model, tok.clone(), syncode_factory(&env, &tok));
+    let prompt = args.get_or("prompt", "Please generate a JSON object.");
+    let resp = srv.generate(GenRequest {
+        id: 1,
+        prompt,
+        constraint_prefix: args.get_or("prefix", ""),
+        params: params_from(args),
+    });
+    println!(
+        "--- generation ({:?}, {} tokens, {:.2}s) ---",
+        resp.finish, resp.tokens, resp.latency_secs
+    );
+    println!("{}", resp.text);
+    if let Some(e) = resp.error {
+        eprintln!("error: {e}");
+    }
+    srv.shutdown();
+}
+
+fn cmd_serve(args: &Args) {
+    let gname = args.get_or("grammar", "json");
+    let n = args.get_num("requests", 8usize);
+    let env = EvalEnv::new(&gname, 80, 120, args.get_num("seed", 7));
+    let (model, tok) = model_and_tok(args, &env);
+    let srv = Server::start(model, tok.clone(), syncode_factory(&env, &tok));
+    let tasks = dataset::json_mode_tasks(n, 3);
+    let params = params_from(args);
+    let rxs: Vec<_> = tasks
+        .iter()
+        .map(|t| {
+            srv.submit(GenRequest {
+                id: t.id,
+                prompt: t.prompt.clone(),
+                constraint_prefix: String::new(),
+                params: params.clone(),
+            })
+        })
+        .collect();
+    for (t, rx) in tasks.iter().zip(rxs) {
+        let r = rx.recv().unwrap();
+        println!("req {}: {:?} {} tokens | {}", t.id, r.finish, r.tokens, r.text);
+    }
+    println!("\n{}", srv.metrics.lock().unwrap().snapshot().report());
+    srv.shutdown();
+}
+
+fn cmd_grammar(args: &Args) {
+    let gname = args.get_or("grammar", "json");
+    let cx = GrammarContext::builtin(&gname, LrMode::Lalr).expect("grammar");
+    let g = &cx.grammar;
+    println!(
+        "grammar {gname}: {} rules, {} terminals, {} nonterminals",
+        g.rules.len(),
+        g.terminals.len(),
+        g.nonterminals.len()
+    );
+    println!("|Q_Ω| = {} DFA states", g.total_dfa_states());
+    for mode in [LrMode::Lalr, LrMode::Canonical] {
+        if gname == "python" && mode == LrMode::Canonical && !args.flag("canonical") {
+            println!("(skipping canonical LR(1) for python; pass --canonical)");
+            continue;
+        }
+        let t = LrTable::build(g, mode);
+        println!(
+            "{mode:?}: {} states, {} KB tables, {} conflicts",
+            t.num_states,
+            t.size_bytes() / 1024,
+            t.conflicts.len()
+        );
+        if args.flag("report") {
+            for c in t.conflicts.iter().take(20) {
+                println!("  {c}");
+            }
+        }
+    }
+}
+
+fn cmd_maskstore(args: &Args) {
+    let gname = args.get_or("grammar", "json");
+    let merges = args.get_num("merges", 300usize);
+    let env = EvalEnv::new(&gname, 120, merges, 7);
+    let s = &env.store.stats;
+    let mut t =
+        Table::new(&["grammar", "|V|", "|Q|", "|Γ|", "build(s)", "masks", "mem", "raw"]);
+    t.row(&[
+        gname.clone(),
+        s.vocab_size.to_string(),
+        s.num_dfa_states.to_string(),
+        s.num_terminals.to_string(),
+        format!("{:.2}", s.build_secs),
+        s.unique_masks.to_string(),
+        format!("{:.1}MB", s.mem_bytes as f64 / 1e6),
+        format!("{:.1}MB", s.raw_bytes as f64 / 1e6),
+    ]);
+    t.print();
+}
+
+fn cmd_experiment(args: &Args) {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
+    let params = params_from(args);
+    match which {
+        "table1" => {
+            let env = EvalEnv::new("json", 120, 160, 11);
+            let tasks = dataset::json_mode_tasks(args.get_num("tasks", 10), 3);
+            let mut t =
+                Table::new(&["engine", "syntax errs", "schema valid", "time(s)", "tokens"]);
+            for kind in EngineKind::ALL {
+                let r = harness::run_json(&env, &tasks, kind, false, &params);
+                t.row(&[
+                    r.engine.to_string(),
+                    r.syntax_errors.to_string(),
+                    format!("{}/{}", r.schema_valid, r.total),
+                    format!("{:.3}", r.avg_time_s),
+                    format!("{:.1}", r.avg_tokens),
+                ]);
+            }
+            t.print();
+        }
+        "table2" => {
+            let env = EvalEnv::new("sql", 120, 160, 13);
+            let tasks = dataset::spider_tasks(args.get_num("tasks", 3), 5);
+            let mut t = Table::new(&[
+                "engine", "easy", "med", "hard", "extra", "overall", "exec%", "tokens",
+                "time(s)",
+            ]);
+            for kind in [EngineKind::Standard, EngineKind::Syncode] {
+                let r = harness::run_sql(&env, &tasks, kind, &params);
+                let pct =
+                    |d| format!("{:.0}%", r.accuracy.get(&d).copied().unwrap_or(0.0) * 100.0);
+                t.row(&[
+                    r.engine.to_string(),
+                    pct(dataset::Difficulty::Easy),
+                    pct(dataset::Difficulty::Medium),
+                    pct(dataset::Difficulty::Hard),
+                    pct(dataset::Difficulty::Extra),
+                    format!("{:.0}%", r.overall_accuracy * 100.0),
+                    format!("{:.0}%", r.execute_pct * 100.0),
+                    format!("{:.1}", r.avg_tokens),
+                    format!("{:.3}", r.avg_time_s),
+                ]);
+            }
+            t.print();
+        }
+        "table3" => {
+            let mut t = Table::new(&["lang", "engine", "errors/total", "time(s)"]);
+            for lang in ["python", "go"] {
+                let env = EvalEnv::new(lang, 80, 120, 17);
+                let tasks = match lang {
+                    "python" => dataset::python_tasks(args.get_num("tasks", 5), 3),
+                    _ => dataset::go_tasks(args.get_num("tasks", 5), 3),
+                };
+                for kind in [EngineKind::Standard, EngineKind::Syncode] {
+                    let r = harness::run_gpl(&env, &tasks, kind, 2, &params);
+                    t.row(&[
+                        lang.to_string(),
+                        r.engine.to_string(),
+                        format!("{}/{}", r.syntax_errors, r.total),
+                        format!("{:.3}", r.avg_time_s),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        "table4" => {
+            let env = EvalEnv::new("calc", 120, 80, 19);
+            let tasks = dataset::calc_tasks(args.get_num("tasks", 6), 7);
+            let mut t = Table::new(&["engine", "pass@1", "pass@10"]);
+            for kind in [EngineKind::Standard, EngineKind::Syncode] {
+                let r = harness::run_calc_passk(&env, &tasks, kind, 10, &params);
+                t.row(&[
+                    r.engine.to_string(),
+                    format!("{:.3}", r.pass_at_1),
+                    format!("{:.3}", r.pass_at_10),
+                ]);
+            }
+            t.print();
+        }
+        other => {
+            eprintln!("unknown experiment {other} (table1|table2|table3|table4)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_check(args: &Args) {
+    let gname = args.get_or("grammar", "json");
+    let path = args.positional.first().expect("usage: syncode check <file> --grammar g");
+    let cx = GrammarContext::builtin(&gname, LrMode::Lalr).expect("grammar");
+    let text = std::fs::read(path).expect("read file");
+    match cx.check_complete(&text) {
+        Ok(()) => println!("OK: valid {gname}"),
+        Err(e) => {
+            println!("SYNTAX ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! The DFA mask store (paper §4.3, Definitions 10–12) and the grammar-mask
+//! computation (Algorithm 2).
+//!
+//! Offline, for every DFA state `q ∈ Q_Ω` (the union of all terminal DFAs)
+//! the store records which vocabulary tokens `t` satisfy
+//! `dmatch(t, q, Λ_α)`:
+//!
+//! - `M₀(q)` — α = 0: `t` keeps `q`'s automaton live, or a strict prefix of
+//!   `t` completes it (the conservative prefix-acceptance of Definition 8);
+//! - `M₁(q, τ)` — α = 1: as above, or a prefix completes `q`'s automaton
+//!   and the rest of `t` `dmatch`es τ's automaton from its start state.
+//!
+//! Masks are interned: identical bitsets share storage, which keeps the
+//! store MB-sized (Table 5 reproduces the creation-time/memory scaling).
+//!
+//! Online (Algorithm 2), for each accept sequence Λ the remainder `r` is
+//! walked through `D_{Λ[0]}`; if the walk stays live, `M_{|Λ|-1}` is looked
+//! up at the landing state and unioned into the grammar mask — O(|A|)
+//! lookups + unions per decode step instead of the O(|V|) per-token scans
+//! of the online baselines.
+
+mod store;
+
+pub use store::{MaskStore, MaskStoreConfig, MaskStoreStats};
+
+use crate::grammar::{Grammar, TermId};
+use crate::parser::AcceptSequences;
+use crate::util::bitset::BitSet;
+
+/// Compute the grammar mask (Algorithm 2): union of per-sequence masks.
+///
+/// `scratch` is the output mask (cleared first); reusing it avoids
+/// per-step allocation on the serving hot path.
+pub fn grammar_mask(
+    store: &MaskStore,
+    g: &Grammar,
+    acc: &AcceptSequences,
+    remainder: &[u8],
+    scratch: &mut BitSet,
+) {
+    scratch.clear_all();
+    for seq in &acc.seqs {
+        union_sequence_mask(store, g, seq, remainder, scratch);
+    }
+    if acc.eos_ok {
+        scratch.set(store.eos_id() as usize);
+    }
+}
+
+/// Union the mask for one accept sequence Λ into `out`.
+fn union_sequence_mask(
+    store: &MaskStore,
+    g: &Grammar,
+    seq: &[TermId],
+    remainder: &[u8],
+    out: &mut BitSet,
+) {
+    let tau1 = seq[0];
+    let dfa = &g.terminals[tau1 as usize].dfa;
+    let q = dfa.walk(dfa.start(), remainder);
+    if !dfa.is_live(q) {
+        return;
+    }
+    match seq.len() {
+        1 => store.union_m0(tau1, q, out),
+        2 => store.union_m1(tau1, q, seq[1], out),
+        _ => {
+            // Longer sequences: fall back to the α=1 prefix (sound
+            // over-approximation, Lemma 3 — A ≼ A_d keeps Theorem 1).
+            store.union_m1(tau1, q, seq[1], out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+    use crate::tokenizer::Tokenizer;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<Grammar>, Arc<Tokenizer>, MaskStore) {
+        let g = Arc::new(Grammar::builtin("calc").unwrap());
+        let t = Arc::new(Tokenizer::ascii_byte_level());
+        let store = MaskStore::build(&g, &t, MaskStoreConfig::default());
+        (g, t, store)
+    }
+
+    #[test]
+    fn mask_for_paper_example() {
+        // r = "2", Λ = {float, rpar}: tokens like ".5", "." must be in the
+        // mask; "x" must not.
+        let (g, tok, store) = setup();
+        let float = g.term_id("FLOAT").unwrap();
+        let rpar = g.term_id("RPAR").unwrap();
+        let mut m = BitSet::new(tok.vocab_size());
+        union_sequence_mask(&store, &g, &[float, rpar], b"2", &mut m);
+        assert!(m.get(b'.' as usize), "'.' extends 2 toward a float");
+        assert!(m.get(b'5' as usize), "'5' extends 2 (still float prefix)");
+        assert!(!m.get(b'x' as usize));
+        assert!(!m.get(b'+' as usize), "'+' can't continue float-then-rpar");
+    }
+
+    #[test]
+    fn mask_int_then_plus() {
+        let (g, tok, store) = setup();
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        let mut m = BitSet::new(tok.vocab_size());
+        union_sequence_mask(&store, &g, &[int, plus], b"2", &mut m);
+        assert!(m.get(b'3' as usize), "digit extends INT");
+        assert!(m.get(b'+' as usize), "'+' completes INT and starts PLUS");
+        assert!(!m.get(b'x' as usize));
+    }
+
+    #[test]
+    fn dead_walk_contributes_nothing() {
+        let (g, tok, store) = setup();
+        let int = g.term_id("INT").unwrap();
+        let mut m = BitSet::new(tok.vocab_size());
+        union_sequence_mask(&store, &g, &[int], b"abc", &mut m);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn grammar_mask_unions_and_eos() {
+        let (g, tok, store) = setup();
+        let int = g.term_id("INT").unwrap();
+        let float = g.term_id("FLOAT").unwrap();
+        let acc = AcceptSequences {
+            seqs: vec![vec![int], vec![float]],
+            eos_ok: true,
+        };
+        let mut m = BitSet::new(tok.vocab_size());
+        grammar_mask(&store, &g, &acc, b"", &mut m);
+        assert!(m.get(b'7' as usize));
+        assert!(m.get(store.eos_id() as usize));
+        assert!(!m.get(b'a' as usize));
+    }
+
+    #[test]
+    fn specials_never_in_dfa_masks() {
+        let (g, tok, store) = setup();
+        let int = g.term_id("INT").unwrap();
+        let acc = AcceptSequences { seqs: vec![vec![int]], eos_ok: false };
+        let mut m = BitSet::new(tok.vocab_size());
+        grammar_mask(&store, &g, &acc, b"", &mut m);
+        assert!(!m.get(tok.eos_id as usize));
+        assert!(!m.get(tok.pad_id as usize));
+        assert!(!m.get(tok.bos_id as usize));
+    }
+}

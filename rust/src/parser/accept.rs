@@ -1,0 +1,301 @@
+//! Accept-sequence computation (paper §4.2 Definition 7, §4.5).
+//!
+//! Given the parser state after the lexically-fixed prefix of `C_k` and the
+//! remainder `r`, produce the set A of accept sequences used by the grammar
+//! mask (Algorithm 2). Following §4.5 the sequences have length 1 or 2:
+//!
+//! - **complete remainder** (`r = l_f`, terminal type `τ_f`): 2-sequences
+//!   `{τ_f, τ¹}` for every `τ¹ ∈ A₁` (the follow set after consuming
+//!   `l_f`), covering extension of the final token; plus 1-sequences
+//!   `{τ⁰}` for `τ⁰ ∈ A₀ \ {τ_f}`, covering re-typing of the final token
+//!   (`ret` → `return`).
+//! - **incomplete remainder** (unlexed `u`): 1-sequences `{τ}` for
+//!   `τ ∈ A₀`.
+//!
+//! `%ignore` terminals get the paper's trivial 1-length treatment: they are
+//! always acceptable as the *next* lexical token, so they join every A₁/A₀
+//! set used above.
+//!
+//! Non-CFG fragments enter via the post-lex hooks: the remainder may map
+//! into several parser-terminal *variants* (Python `_NL` →
+//! `_NL/_NL _INDENT/_NL _DEDENTⁿ`; Go `NEWLINE` → `SEMI` under ASI), each
+//! contributing its own A₁; and `expand_accept` rewrites sequences for
+//! textual alternates (Go newline-as-semicolon).
+
+use super::runtime::ParserState;
+use crate::grammar::{Grammar, TermId};
+use crate::lexer::postlex::{PostLex, PostLexResult};
+
+/// The accept sequences A plus EOS admissibility for the current `C_k`.
+#[derive(Debug, Clone)]
+pub struct AcceptSequences {
+    /// Each sequence: first element is the *textual* terminal the DFA walk
+    /// of Algorithm 2 starts in; subsequent elements are lookahead
+    /// terminals for the mask-store lookup.
+    pub seqs: Vec<Vec<TermId>>,
+    /// Whether `C_k ∈ L(G)` — i.e. the EOS token is syntactically valid.
+    pub eos_ok: bool,
+}
+
+/// Inputs for the accept computation.
+pub struct AcceptContext<'a> {
+    pub grammar: &'a Grammar,
+    /// Parser state after the post-lexed fixed tokens.
+    pub state: &'a ParserState,
+    pub postlex: &'a dyn PostLex,
+    pub plr: &'a PostLexResult,
+    /// Terminal type of the remainder when it is a complete token.
+    pub remainder_term: Option<TermId>,
+    /// The remainder bytes r.
+    pub remainder: &'a [u8],
+    /// Use the exact (simulation-filtered) follow sets — needed for LALR
+    /// tables, optional for canonical LR(1).
+    pub exact_follow: bool,
+}
+
+/// Compute A and EOS admissibility (§4.5 Case 1/Case 2 + variants).
+pub fn compute_accept_sequences(cx: &AcceptContext<'_>) -> AcceptSequences {
+    let g = cx.grammar;
+    let ignored = g.ignored_terms();
+    let follow = |st: &ParserState| -> Vec<TermId> {
+        if cx.exact_follow {
+            st.follow_exact()
+        } else {
+            st.follow()
+        }
+    };
+
+    let a0 = follow(cx.state);
+    let mut seqs: Vec<Vec<TermId>> = Vec::new();
+    let mut eos_ok = false;
+
+    match cx.remainder_term {
+        Some(tau_f) => {
+            // Complete final token: consume it (in each post-lex variant)
+            // and collect 2-sequences {τ_f, τ¹}.
+            let variants =
+                cx.postlex.remainder_variants(g, cx.plr, Some(tau_f), cx.remainder);
+            for v in &variants {
+                let Some(sv) = cx.state.simulate(v) else { continue };
+                let a1 = follow(&sv);
+                for &t1 in &a1 {
+                    seqs.push(vec![tau_f, t1]);
+                }
+                for &ig in &ignored {
+                    seqs.push(vec![tau_f, ig]);
+                }
+                // EOS: valid if this variant + closers reaches acceptance.
+                if !eos_ok {
+                    let closers = cx.postlex.closers(g, cx.plr, v);
+                    if let Some(sc) = sv.simulate(&closers) {
+                        if sc.accepts_eof() {
+                            eos_ok = true;
+                        }
+                    }
+                }
+            }
+            // Re-typing of the final token: 1-sequences from A₀ \ {τ_f}.
+            for &t0 in &a0 {
+                if t0 != tau_f {
+                    seqs.push(vec![t0]);
+                }
+            }
+            for &ig in &ignored {
+                if ig != tau_f {
+                    seqs.push(vec![ig]);
+                }
+            }
+        }
+        None => {
+            // Incomplete (or empty) remainder: 1-sequences from A₀.
+            for &t0 in &a0 {
+                seqs.push(vec![t0]);
+            }
+            for &ig in &ignored {
+                seqs.push(vec![ig]);
+            }
+            if cx.remainder.is_empty() {
+                let closers = cx.postlex.closers(g, cx.plr, &[]);
+                if let Some(sc) = cx.state.simulate(&closers) {
+                    eos_ok = sc.accepts_eof();
+                }
+            }
+        }
+    }
+
+    // Language-specific textual alternates (Go ASI).
+    cx.postlex.expand_accept(g, cx.plr, &mut seqs);
+
+    seqs.sort();
+    seqs.dedup();
+    AcceptSequences { seqs, eos_ok }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+    use crate::lexer::postlex::{postlex_for, NoopPostLex};
+    use crate::lexer::Lexer;
+    use crate::parser::incremental::IncrementalParser;
+    use crate::parser::lr::{LrMode, LrTable};
+    use crate::parser::runtime::ParserState;
+    use std::sync::Arc;
+
+    /// Helper: full pipeline from text to accept sequences.
+    fn accept_for(gname: &str, text: &str) -> (Grammar, AcceptSequences) {
+        let g = Grammar::builtin(gname).unwrap();
+        let table = Arc::new(LrTable::build(&g, LrMode::Lalr));
+        let lx = Lexer::new(&g);
+        let lr = lx.lex(text.as_bytes());
+        assert!(lr.error.is_none(), "lex error");
+        let plex = postlex_for(gname, &g);
+        let plr = plex.apply(&g, text.as_bytes(), &lr.tokens);
+        assert!(!plr.error, "postlex error");
+        let mut inc = IncrementalParser::new(ParserState::new(table));
+        let st = inc.parse(&plr.parser_tokens);
+        assert_eq!(st, crate::parser::incremental::ParseStatus::Ok, "parse error");
+        let cx = AcceptContext {
+            grammar: &g,
+            state: inc.state(),
+            postlex: plex.as_ref(),
+            plr: &plr,
+            remainder_term: lr.remainder_term,
+            remainder: lr.remainder(text.as_bytes()),
+            exact_follow: true,
+        };
+        let acc = compute_accept_sequences(&cx);
+        (g, acc)
+    }
+
+    fn has_seq(g: &Grammar, acc: &AcceptSequences, names: &[&str]) -> bool {
+        let ids: Vec<TermId> = names.iter().map(|n| g.term_id(n).unwrap()).collect();
+        acc.seqs.contains(&ids)
+    }
+
+    #[test]
+    fn calc_paper_example() {
+        // §3.2: C_k = "math_sqrt(3) * (2", r = "2" (INT, complete).
+        // {int, add}, {int, rpar}, {float} are some accept sequences.
+        let (g, acc) = accept_for("calc", "math_sqrt(3) * (2");
+        assert!(has_seq(&g, &acc, &["INT", "PLUS"]));
+        assert!(has_seq(&g, &acc, &["INT", "RPAR"]));
+        assert!(has_seq(&g, &acc, &["FLOAT"]));
+        assert!(!acc.eos_ok); // unbalanced paren
+    }
+
+    #[test]
+    fn calc_eos_when_balanced() {
+        let (_, acc) = accept_for("calc", "math_sqrt(3)");
+        assert!(acc.eos_ok);
+    }
+
+    #[test]
+    fn calc_empty_prefix() {
+        let (g, acc) = accept_for("calc", "");
+        // all starts are 1-sequences
+        assert!(has_seq(&g, &acc, &["INT"]));
+        assert!(has_seq(&g, &acc, &["LPAR"]));
+        assert!(has_seq(&g, &acc, &["KW_MATH_SIN"]));
+        assert!(!has_seq(&g, &acc, &["RPAR"]));
+        assert!(!acc.eos_ok);
+    }
+
+    #[test]
+    fn json_incomplete_string_remainder() {
+        // Unterminated string: only 1-sequences from A₀ (STRING among them).
+        let (g, acc) = accept_for("json", r#"{"na"#);
+        // remainder "\"na" is an incomplete STRING; A₀ at { is STRING/RBRACE
+        assert!(has_seq(&g, &acc, &["STRING"]));
+        assert!(!acc.eos_ok);
+    }
+
+    #[test]
+    fn json_complete_number_allows_ws_continuation() {
+        let (g, acc) = accept_for("json", "12");
+        // {NUMBER, WS}: whitespace can follow the (extended) number.
+        assert!(has_seq(&g, &acc, &["NUMBER", "WS"]));
+        assert!(acc.eos_ok, "12 is a complete JSON document");
+    }
+
+    #[test]
+    fn python_keyword_retype() {
+        // "def is" example (§4.2): after `def`, r = "is"… our subset: use
+        // r = "ret" at statement start: A₀ re-type sequences include
+        // KW_RETURN, and {NAME, τ¹} extension sequences exist.
+        let (g, acc) = accept_for("python", "ret");
+        assert!(acc.seqs.iter().any(|s| s[0] == g.term_id("KW_RETURN").unwrap()));
+        assert!(acc.seqs.iter().any(|s| s[0] == g.term_id("NAME").unwrap() && s.len() == 2));
+    }
+
+    #[test]
+    fn python_indent_variants_after_colon_newline() {
+        // "if x:\n" — remainder is the _NL; INDENT variant must make
+        // statement-start terminals reachable as {_NL, τ¹} sequences.
+        let (g, acc) = accept_for("python", "if x:\n");
+        let nl = g.term_id("_NL").unwrap();
+        let name = g.term_id("NAME").unwrap();
+        assert!(acc.seqs.contains(&vec![nl, name]), "NAME reachable after indent");
+        assert!(!acc.eos_ok);
+    }
+
+    #[test]
+    fn python_eos_after_complete_stmt() {
+        let (_, acc) = accept_for("python", "x = 1\n");
+        assert!(acc.eos_ok);
+    }
+
+    #[test]
+    fn python_eos_inside_block_requires_dedent_capability() {
+        // Block is closable via synthetic dedents at EOF.
+        let (_, acc) = accept_for("python", "if x:\n    y = 1\n");
+        assert!(acc.eos_ok);
+    }
+
+    #[test]
+    fn go_newline_semi_expansion() {
+        let src = "package main\nfunc f() int {\nreturn 1";
+        let (g, acc) = accept_for("go", src);
+        // after `return 1`, a newline (ASI semicolon) must be acceptable.
+        let newline = g.term_id("NEWLINE").unwrap();
+        assert!(
+            acc.seqs.iter().any(|s| s[0] == newline),
+            "newline continuation missing: {:?}",
+            acc.seqs
+                .iter()
+                .map(|s| s.iter().map(|&t| g.terminals[t as usize].name.clone()).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        );
+        assert!(!acc.eos_ok);
+    }
+
+    #[test]
+    fn sql_select_flow() {
+        let (g, acc) = accept_for("sql", "SELECT name FROM t WHERE");
+        // after WHERE an expression must start; NAME is in some sequence.
+        assert!(acc.seqs.iter().any(|s| s[0] == g.term_id("KWI_WHERE").unwrap())
+            || acc.seqs.iter().any(|s| s[0] == g.term_id("NAME").unwrap()));
+        assert!(!acc.eos_ok);
+    }
+
+    #[test]
+    fn sql_complete_query_eos() {
+        let (_, acc) = accept_for("sql", "SELECT a FROM t");
+        assert!(acc.eos_ok);
+    }
+
+    #[test]
+    fn noop_postlex_default_variants() {
+        let g = Grammar::builtin("json").unwrap();
+        let plex = NoopPostLex;
+        let plr = PostLexResult {
+            parser_tokens: vec![],
+            indent_stack: vec![0],
+            last_token: None,
+            error: false,
+        };
+        let ws = g.ignored_terms()[0];
+        let v = plex.remainder_variants(&g, &plr, Some(ws), b" ");
+        assert_eq!(v, vec![Vec::<TermId>::new()]);
+    }
+}

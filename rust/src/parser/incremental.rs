@@ -1,0 +1,173 @@
+//! Incremental parsing (paper Algorithm 4, Appendix A.3).
+//!
+//! Each LLM decode step re-lexes `C_k` and re-derives the parser-facing
+//! terminal sequence; this module avoids re-*parsing* it from scratch by
+//! caching the parser stack after every consumed terminal. On the next
+//! step the longest common prefix with the cached sequence is restored in
+//! O(1) and only the (typically 0–2) new terminals are fed through the LR
+//! automaton. The ablation in `benches/fig10_ablations.rs` reproduces the
+//! paper's Figure 10b from exactly this switch.
+
+use super::runtime::ParserState;
+use crate::grammar::TermId;
+
+/// Incremental wrapper over [`ParserState`] with a prefix cache.
+pub struct IncrementalParser {
+    base: ParserState,
+    /// Cached terminal sequence from the previous step.
+    cached_terms: Vec<TermId>,
+    /// `checkpoints[i]` = parser stack after consuming `cached_terms[..i]`.
+    /// `checkpoints[0]` is the initial stack.
+    checkpoints: Vec<Vec<u32>>,
+    /// Disable caching (for the Figure 10b ablation).
+    pub incremental: bool,
+    /// Terminals re-fed since construction (for instrumentation).
+    pub terms_fed: u64,
+}
+
+/// Result of a parse pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParseStatus {
+    /// All terminals consumed; parser ready at the resulting state.
+    Ok,
+    /// Terminal at this index was rejected.
+    ErrorAt(usize),
+}
+
+impl IncrementalParser {
+    pub fn new(base: ParserState) -> IncrementalParser {
+        let init = base.stack().to_vec();
+        IncrementalParser {
+            base,
+            cached_terms: Vec::new(),
+            checkpoints: vec![init],
+            incremental: true,
+            terms_fed: 0,
+        }
+    }
+
+    /// Parse the full (post-lex) terminal sequence of `C_k`, reusing the
+    /// cached prefix. Returns the status and leaves the parser at the
+    /// state after the last successfully consumed terminal.
+    pub fn parse(&mut self, terms: &[TermId]) -> ParseStatus {
+        let common = if self.incremental {
+            self.cached_terms
+                .iter()
+                .zip(terms.iter())
+                .take_while(|(a, b)| a == b)
+                .count()
+        } else {
+            0
+        };
+        // Restore at the common prefix.
+        self.base.restore(&self.checkpoints[common].clone());
+        self.cached_terms.truncate(common);
+        self.checkpoints.truncate(common + 1);
+
+        for (i, &t) in terms.iter().enumerate().skip(common) {
+            self.terms_fed += 1;
+            if !self.base.next(t) {
+                return ParseStatus::ErrorAt(i);
+            }
+            self.cached_terms.push(t);
+            self.checkpoints.push(self.base.stack().to_vec());
+        }
+        ParseStatus::Ok
+    }
+
+    /// Parser state after the last `parse` call.
+    pub fn state(&self) -> &ParserState {
+        &self.base
+    }
+
+    /// Clear the cache (new request).
+    pub fn reset(&mut self) {
+        self.base.restore(&self.checkpoints[0].clone());
+        self.cached_terms.clear();
+        self.checkpoints.truncate(1);
+        self.terms_fed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::{parse_ebnf, Grammar};
+    use crate::parser::lr::{LrMode, LrTable};
+    use std::sync::Arc;
+
+    fn inc(src: &str) -> (Grammar, IncrementalParser) {
+        let g = parse_ebnf(src).unwrap();
+        let t = Arc::new(LrTable::build(&g, LrMode::Canonical));
+        let p = IncrementalParser::new(ParserState::new(t));
+        (g, p)
+    }
+
+    const EXPR: &str = "
+start: e
+e: e \"+\" t | t
+t: INT
+INT: /[0-9]+/
+";
+
+    #[test]
+    fn incremental_reuses_prefix() {
+        let (g, mut p) = inc(EXPR);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert_eq!(p.parse(&[int]), ParseStatus::Ok);
+        let fed_after_first = p.terms_fed;
+        assert_eq!(p.parse(&[int, plus]), ParseStatus::Ok);
+        // only the new `plus` was fed
+        assert_eq!(p.terms_fed, fed_after_first + 1);
+        assert_eq!(p.parse(&[int, plus, int]), ParseStatus::Ok);
+        assert!(p.state().accepts_eof());
+    }
+
+    #[test]
+    fn divergent_prefix_reparses() {
+        let (g, mut p) = inc(EXPR);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert_eq!(p.parse(&[int, plus, int]), ParseStatus::Ok);
+        // Change the middle: cache must roll back to common prefix [int].
+        assert_eq!(p.parse(&[int, plus, int, plus, int]), ParseStatus::Ok);
+        assert!(p.state().accepts_eof());
+    }
+
+    #[test]
+    fn shrinking_sequence_rolls_back() {
+        // The paper notes lexical-token counts can *decrease* (e.g. "" then
+        // """ becoming a docstring prefix). The cache must roll back.
+        let (g, mut p) = inc(EXPR);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert_eq!(p.parse(&[int, plus, int]), ParseStatus::Ok);
+        assert_eq!(p.parse(&[int]), ParseStatus::Ok);
+        assert!(p.state().accepts_eof());
+        assert_eq!(p.parse(&[int, plus]), ParseStatus::Ok);
+        assert!(!p.state().accepts_eof());
+    }
+
+    #[test]
+    fn error_position_reported() {
+        let (g, mut p) = inc(EXPR);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert_eq!(p.parse(&[int, int]), ParseStatus::ErrorAt(1));
+        // Recoverable: a correct sequence still parses.
+        assert_eq!(p.parse(&[int, plus, int]), ParseStatus::Ok);
+    }
+
+    #[test]
+    fn non_incremental_mode_feeds_everything() {
+        let (g, mut p) = inc(EXPR);
+        p.incremental = false;
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        p.parse(&[int]);
+        p.parse(&[int, plus]);
+        p.parse(&[int, plus, int]);
+        assert_eq!(p.terms_fed, 1 + 2 + 3);
+    }
+}

@@ -1,0 +1,610 @@
+//! LR table generation.
+//!
+//! Two modes (paper §4.5 "Base LR parser"):
+//!
+//! - [`LrMode::Canonical`] — canonical LR(1): states are kernels *with*
+//!   lookahead sets. Immediate-error-detection is exact, so the `Follow`
+//!   row scan yields precisely the acceptable terminals A₀.
+//! - [`LrMode::Lalr`] — LALR(1) by merging canonical states with equal
+//!   cores during construction (lookaheads unioned, states reprocessed on
+//!   growth). Smaller tables, slightly over-approximate accept sets —
+//!   still *sound* for masking (Theorem 1 needs A to over-approximate).
+//!
+//! Conflicts are resolved shift-over-reduce and lower-rule-id-first, and
+//! recorded on the table for inspection (`cargo run -- grammar --report`).
+
+use crate::grammar::{Grammar, NtId, Symbol, TermId};
+use std::collections::HashMap;
+
+/// Maximum number of grammar terminals supported (lookahead sets are fixed
+/// 256-bit masks; index `nterms` is the EOF pseudo-terminal).
+pub const MAX_TERMS: usize = 255;
+
+/// Lookahead set: bitmask over terminal ids plus EOF.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+struct LaSet([u64; 4]);
+
+impl LaSet {
+    const EMPTY: LaSet = LaSet([0; 4]);
+
+    #[inline]
+    fn insert(&mut self, t: usize) {
+        self.0[t >> 6] |= 1 << (t & 63);
+    }
+
+    #[inline]
+    fn contains(&self, t: usize) -> bool {
+        (self.0[t >> 6] >> (t & 63)) & 1 == 1
+    }
+
+    /// Union; returns true if self changed.
+    #[inline]
+    fn union(&mut self, other: &LaSet) -> bool {
+        let mut changed = false;
+        for i in 0..4 {
+            let before = self.0[i];
+            self.0[i] |= other.0[i];
+            changed |= before != self.0[i];
+        }
+        changed
+    }
+
+    fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..256usize).filter(move |&i| self.contains(i))
+    }
+}
+
+/// Parser action (decoded form of the packed table entry).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    Shift(u32),
+    Reduce(u32),
+    Accept,
+    Err,
+}
+
+const A_ERR: u32 = 0;
+const A_SHIFT: u32 = 1;
+const A_REDUCE: u32 = 2;
+const A_ACCEPT: u32 = 3;
+
+fn pack(a: Action) -> u32 {
+    match a {
+        Action::Err => A_ERR,
+        Action::Shift(s) => A_SHIFT | (s << 2),
+        Action::Reduce(r) => A_REDUCE | (r << 2),
+        Action::Accept => A_ACCEPT,
+    }
+}
+
+fn unpack(v: u32) -> Action {
+    match v & 3 {
+        A_SHIFT => Action::Shift(v >> 2),
+        A_REDUCE => Action::Reduce(v >> 2),
+        A_ACCEPT => Action::Accept,
+        _ => Action::Err,
+    }
+}
+
+/// Table-construction mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrMode {
+    Canonical,
+    Lalr,
+}
+
+/// Generated LR parse tables.
+pub struct LrTable {
+    /// Number of real terminals; column `nterms` is EOF.
+    pub nterms: usize,
+    pub nnts: usize,
+    pub num_states: usize,
+    /// Packed `action[state * (nterms+1) + term]`.
+    action: Vec<u32>,
+    /// `goto_[state * nnts + nt]`, `u32::MAX` = none.
+    goto_: Vec<u32>,
+    /// `(lhs, rhs_len)` per rule (for reduces).
+    pub rule_info: Vec<(NtId, u16)>,
+    /// Human-readable conflict reports (resolved shift-over-reduce etc.).
+    pub conflicts: Vec<String>,
+    pub mode: LrMode,
+}
+
+impl LrTable {
+    /// EOF column index.
+    #[inline]
+    pub fn eof(&self) -> usize {
+        self.nterms
+    }
+
+    /// Decoded action for `(state, term)`; `term == eof()` for EOF.
+    #[inline]
+    pub fn action(&self, state: u32, term: usize) -> Action {
+        unpack(self.action[state as usize * (self.nterms + 1) + term])
+    }
+
+    #[inline]
+    pub fn goto(&self, state: u32, nt: NtId) -> Option<u32> {
+        let v = self.goto_[state as usize * self.nnts + nt as usize];
+        if v == u32::MAX {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Terminals (excluding EOF) with a non-error action in this state —
+    /// the LR `Follow` primitive (exact for canonical LR(1), §4.5).
+    pub fn row_terminals(&self, state: u32) -> Vec<TermId> {
+        let base = state as usize * (self.nterms + 1);
+        (0..self.nterms)
+            .filter(|&t| self.action[base + t] != A_ERR)
+            .map(|t| t as TermId)
+            .collect()
+    }
+
+    /// True when EOF has a non-error action in this state.
+    pub fn eof_possible(&self, state: u32) -> bool {
+        self.action[state as usize * (self.nterms + 1) + self.nterms] != A_ERR
+    }
+
+    /// Approximate table memory footprint in bytes.
+    pub fn size_bytes(&self) -> usize {
+        (self.action.len() + self.goto_.len()) * 4
+    }
+
+    /// Generate tables for a grammar.
+    pub fn build(g: &Grammar, mode: LrMode) -> LrTable {
+        Builder::new(g, mode).run()
+    }
+}
+
+// ----------------------------------------------------------- constructor --
+
+/// Item core: rule index (high bits) and dot position (low byte).
+type Core = u32;
+
+fn core(rule: u32, dot: u32) -> Core {
+    (rule << 8) | dot
+}
+
+fn core_rule(c: Core) -> u32 {
+    c >> 8
+}
+
+fn core_dot(c: Core) -> u32 {
+    c & 0xFF
+}
+
+struct Builder<'g> {
+    g: &'g Grammar,
+    mode: LrMode,
+    eof: usize,
+    /// FIRST sets per nonterminal + nullability.
+    first: Vec<LaSet>,
+    nullable: Vec<bool>,
+    /// Per item core: FIRST(β) and nullable(β) where β = rhs[dot+1..].
+    beta_first: HashMap<Core, (LaSet, bool)>,
+    /// Kernel of each state: sorted cores + lookahead per core.
+    kernels: Vec<Vec<(Core, LaSet)>>,
+    /// State lookup. Canonical: keyed by (cores, las); LALR: cores only.
+    by_key: HashMap<Vec<u64>, u32>,
+    /// Augmented rule: index = g.rules.len(), lhs = synthetic.
+    aug_rule: u32,
+}
+
+impl<'g> Builder<'g> {
+    fn new(g: &'g Grammar, mode: LrMode) -> Builder<'g> {
+        assert!(g.terminals.len() <= MAX_TERMS, "too many terminals");
+        let eof = g.terminals.len();
+        Builder {
+            g,
+            mode,
+            eof,
+            first: Vec::new(),
+            nullable: Vec::new(),
+            beta_first: HashMap::new(),
+            kernels: Vec::new(),
+            by_key: HashMap::new(),
+            aug_rule: g.rules.len() as u32,
+        }
+    }
+
+    fn compute_first(&mut self) {
+        let nnts = self.g.nonterminals.len();
+        self.first = vec![LaSet::EMPTY; nnts];
+        self.nullable = vec![false; nnts];
+        loop {
+            let mut changed = false;
+            for rule in &self.g.rules {
+                let lhs = rule.lhs as usize;
+                let mut all_nullable = true;
+                let mut acc = LaSet::EMPTY;
+                for &sym in &rule.rhs {
+                    match sym {
+                        Symbol::T(t) => {
+                            acc.insert(t as usize);
+                            all_nullable = false;
+                        }
+                        Symbol::N(n) => {
+                            let f = self.first[n as usize];
+                            acc.union(&f);
+                            if !self.nullable[n as usize] {
+                                all_nullable = false;
+                            }
+                        }
+                    }
+                    if !all_nullable {
+                        break;
+                    }
+                }
+                changed |= self.first[lhs].union(&acc);
+                if all_nullable && !self.nullable[lhs] {
+                    self.nullable[lhs] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// FIRST(rhs[dot+1..]) and its nullability, memoised per core.
+    fn beta(&mut self, c: Core) -> (LaSet, bool) {
+        if let Some(v) = self.beta_first.get(&c) {
+            return *v;
+        }
+        let rule = core_rule(c);
+        let dot = core_dot(c) as usize;
+        let mut acc = LaSet::EMPTY;
+        let mut nullable = true;
+        if rule != self.aug_rule {
+            let rhs = &self.g.rules[rule as usize].rhs;
+            for &sym in rhs.iter().skip(dot + 1) {
+                match sym {
+                    Symbol::T(t) => {
+                        acc.insert(t as usize);
+                        nullable = false;
+                    }
+                    Symbol::N(n) => {
+                        acc.union(&self.first[n as usize].clone());
+                        if !self.nullable[n as usize] {
+                            nullable = false;
+                        }
+                    }
+                }
+                if !nullable {
+                    break;
+                }
+            }
+        } else {
+            nullable = dot + 1 >= 1; // S' → start . : β empty
+        }
+        self.beta_first.insert(c, (acc, nullable));
+        (acc, nullable)
+    }
+
+    /// Closure of a kernel: map core → lookahead set.
+    fn closure(&mut self, kernel: &[(Core, LaSet)]) -> Vec<(Core, LaSet)> {
+        let mut items: HashMap<Core, LaSet> = HashMap::new();
+        let mut work: Vec<Core> = Vec::new();
+        for &(c, la) in kernel {
+            items.insert(c, la);
+            work.push(c);
+        }
+        while let Some(c) = work.pop() {
+            let la = items[&c];
+            let rule = core_rule(c);
+            let dot = core_dot(c) as usize;
+            let next_sym = if rule == self.aug_rule {
+                if dot == 0 {
+                    Some(Symbol::N(self.g.start))
+                } else {
+                    None
+                }
+            } else {
+                self.g.rules[rule as usize].rhs.get(dot).copied()
+            };
+            let Some(Symbol::N(b)) = next_sym else { continue };
+            // lookaheads for B's items: FIRST(β) ∪ (β nullable ? la : ∅)
+            let (mut new_la, beta_nullable) = self.beta(c);
+            if beta_nullable {
+                new_la.union(&la);
+            }
+            for &prod in &self.g.rules_by_lhs[b as usize] {
+                let pc = core(prod, 0);
+                let entry = items.entry(pc).or_insert(LaSet::EMPTY);
+                if entry.union(&new_la) {
+                    work.push(pc);
+                }
+            }
+        }
+        let mut out: Vec<(Core, LaSet)> = items.into_iter().collect();
+        out.sort_by_key(|&(c, _)| c);
+        out
+    }
+
+    fn state_key(&self, kernel: &[(Core, LaSet)]) -> Vec<u64> {
+        let mut key = Vec::with_capacity(kernel.len() * 5);
+        for &(c, la) in kernel {
+            key.push(c as u64);
+            if self.mode == LrMode::Canonical {
+                key.extend_from_slice(&la.0);
+            }
+        }
+        key
+    }
+
+    fn run(mut self) -> LrTable {
+        self.compute_first();
+        let g = self.g;
+        let ncols = self.eof + 1;
+        let nnts = g.nonterminals.len();
+
+        // Initial state: S' → . start, {EOF}
+        let mut la0 = LaSet::EMPTY;
+        la0.insert(self.eof);
+        let kernel0 = vec![(core(self.aug_rule, 0), la0)];
+        let key0 = self.state_key(&kernel0);
+        self.kernels.push(kernel0);
+        self.by_key.insert(key0, 0);
+
+        let mut action: Vec<u32> = Vec::new();
+        let mut goto_: Vec<u32> = Vec::new();
+        let mut conflicts = Vec::new();
+        let mut dirty: Vec<u32> = vec![0];
+        let mut processed: Vec<bool> = vec![false];
+
+        while let Some(sid) = dirty.pop() {
+            processed[sid as usize] = true;
+            let kernel = self.kernels[sid as usize].clone();
+            let items = self.closure(&kernel);
+
+            // Group by next symbol.
+            let mut by_sym: HashMap<Symbol, Vec<(Core, LaSet)>> = HashMap::new();
+            let mut reduces: Vec<(u32, LaSet)> = Vec::new();
+            for &(c, la) in &items {
+                let rule = core_rule(c);
+                let dot = core_dot(c) as usize;
+                let next_sym = if rule == self.aug_rule {
+                    if dot == 0 {
+                        Some(Symbol::N(g.start))
+                    } else {
+                        None
+                    }
+                } else {
+                    g.rules[rule as usize].rhs.get(dot).copied()
+                };
+                match next_sym {
+                    Some(sym) => {
+                        by_sym.entry(sym).or_default().push((core(rule, dot as u32 + 1), la));
+                    }
+                    None => reduces.push((rule, la)),
+                }
+            }
+
+            // Ensure action/goto rows exist for this state.
+            let need = (sid as usize + 1) * ncols;
+            if action.len() < need {
+                action.resize(need, A_ERR);
+            }
+            let needg = (sid as usize + 1) * nnts;
+            if goto_.len() < needg {
+                goto_.resize(needg, u32::MAX);
+            }
+            let abase = sid as usize * ncols;
+            let gbase = sid as usize * nnts;
+            // Clear rows (state may be reprocessed under LALR merging).
+            for v in action[abase..abase + ncols].iter_mut() {
+                *v = A_ERR;
+            }
+            for v in goto_[gbase..gbase + nnts].iter_mut() {
+                *v = u32::MAX;
+            }
+
+            // Transitions.
+            let mut syms: Vec<Symbol> = by_sym.keys().copied().collect();
+            syms.sort();
+            for sym in syms {
+                let mut next_kernel = by_sym.remove(&sym).unwrap();
+                next_kernel.sort_by_key(|&(c, _)| c);
+                // Merge duplicate cores (same core reached with different
+                // lookaheads from distinct closure items).
+                let mut merged: Vec<(Core, LaSet)> = Vec::with_capacity(next_kernel.len());
+                for (c, la) in next_kernel {
+                    match merged.last_mut() {
+                        Some((lc, lla)) if *lc == c => {
+                            lla.union(&la);
+                        }
+                        _ => merged.push((c, la)),
+                    }
+                }
+                let key = self.state_key(&merged);
+                let tid = match self.by_key.get(&key) {
+                    Some(&t) => {
+                        if self.mode == LrMode::Lalr {
+                            // Union lookaheads; reprocess if they grew.
+                            let mut grew = false;
+                            {
+                                let existing = &mut self.kernels[t as usize];
+                                debug_assert_eq!(existing.len(), merged.len());
+                                for (e, m) in existing.iter_mut().zip(merged.iter()) {
+                                    grew |= e.1.union(&m.1);
+                                }
+                            }
+                            if grew && processed[t as usize] {
+                                processed[t as usize] = false;
+                                dirty.push(t);
+                            }
+                        }
+                        t
+                    }
+                    None => {
+                        let t = self.kernels.len() as u32;
+                        self.kernels.push(merged);
+                        self.by_key.insert(key, t);
+                        processed.push(false);
+                        dirty.push(t);
+                        t
+                    }
+                };
+                match sym {
+                    Symbol::T(term) => action[abase + term as usize] = pack(Action::Shift(tid)),
+                    Symbol::N(nt) => goto_[gbase + nt as usize] = tid,
+                }
+            }
+
+            // Reduces / accept.
+            for (rule, la) in reduces {
+                for t in la.iter() {
+                    let cell = &mut action[abase + t];
+                    let new = if rule == self.aug_rule {
+                        Action::Accept
+                    } else {
+                        Action::Reduce(rule)
+                    };
+                    match unpack(*cell) {
+                        Action::Err => *cell = pack(new),
+                        Action::Shift(_) => {
+                            // shift-reduce: prefer shift
+                            conflicts.push(format!(
+                                "state {sid}: shift-reduce on {} (kept shift over {})",
+                                term_name(g, t, self.eof),
+                                rule_str(g, rule, self.aug_rule),
+                            ));
+                        }
+                        Action::Reduce(prev) if new != Action::Reduce(prev) => {
+                            let keep_prev = match new {
+                                Action::Reduce(r) => prev <= r,
+                                _ => false,
+                            };
+                            conflicts.push(format!(
+                                "state {sid}: reduce-reduce on {} ({} vs {})",
+                                term_name(g, t, self.eof),
+                                rule_str(g, prev, self.aug_rule),
+                                rule_str(g, rule, self.aug_rule),
+                            ));
+                            if !keep_prev {
+                                *cell = pack(new);
+                            }
+                        }
+                        Action::Accept | Action::Reduce(_) => {}
+                    }
+                }
+            }
+        }
+
+        let num_states = self.kernels.len();
+        action.resize(num_states * ncols, A_ERR);
+        goto_.resize(num_states * nnts, u32::MAX);
+        let rule_info =
+            g.rules.iter().map(|r| (r.lhs, r.rhs.len() as u16)).collect();
+        LrTable {
+            nterms: self.eof,
+            nnts,
+            num_states,
+            action,
+            goto_,
+            rule_info,
+            conflicts,
+            mode: self.mode,
+        }
+    }
+}
+
+fn term_name(g: &Grammar, t: usize, eof: usize) -> String {
+    if t == eof {
+        "$EOF".to_string()
+    } else {
+        g.terminals[t].name.clone()
+    }
+}
+
+fn rule_str(g: &Grammar, rule: u32, aug: u32) -> String {
+    if rule == aug {
+        "S' -> start".to_string()
+    } else {
+        g.rule_to_string(&g.rules[rule as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::parse_ebnf;
+
+    fn table(src: &str, mode: LrMode) -> (crate::grammar::Grammar, LrTable) {
+        let g = parse_ebnf(src).unwrap();
+        let t = LrTable::build(&g, mode);
+        (g, t)
+    }
+
+    const EXPR: &str = "
+start: e
+e: e \"+\" t | t
+t: t \"*\" f | f
+f: \"(\" e \")\" | INT
+INT: /[0-9]+/
+";
+
+    #[test]
+    fn expr_grammar_no_conflicts() {
+        for mode in [LrMode::Canonical, LrMode::Lalr] {
+            let (_, t) = table(EXPR, mode);
+            assert!(t.conflicts.is_empty(), "{mode:?}: {:?}", t.conflicts);
+            assert!(t.num_states > 5);
+        }
+    }
+
+    #[test]
+    fn lalr_not_larger_than_canonical() {
+        let (_, c) = table(EXPR, LrMode::Canonical);
+        let (_, l) = table(EXPR, LrMode::Lalr);
+        assert!(l.num_states <= c.num_states);
+    }
+
+    #[test]
+    fn row_terminals_initial_state() {
+        let (g, t) = table(EXPR, LrMode::Canonical);
+        let row = t.row_terminals(0);
+        let names: Vec<&str> =
+            row.iter().map(|&x| g.terminals[x as usize].name.as_str()).collect();
+        assert!(names.contains(&"INT"));
+        assert!(names.contains(&"LPAR"));
+        assert!(!names.contains(&"PLUS"));
+        assert!(!t.eof_possible(0));
+    }
+
+    #[test]
+    fn builtin_grammars_build_lalr() {
+        for name in ["json", "calc", "sql", "python", "go"] {
+            let g = crate::grammar::Grammar::builtin(name).unwrap();
+            let t = LrTable::build(&g, LrMode::Lalr);
+            assert!(
+                t.conflicts.is_empty(),
+                "{name}: {} conflicts, first: {:?}",
+                t.conflicts.len(),
+                t.conflicts.first()
+            );
+        }
+    }
+
+    #[test]
+    fn json_canonical_builds() {
+        let g = crate::grammar::Grammar::builtin("json").unwrap();
+        let t = LrTable::build(&g, LrMode::Canonical);
+        assert!(t.conflicts.is_empty(), "{:?}", t.conflicts.first());
+    }
+
+    #[test]
+    fn ambiguous_grammar_reports_conflict() {
+        // Dangling-else style ambiguity.
+        let src = "
+start: s
+s: \"if\" s | \"if\" s \"else\" s | \"x\"
+";
+        let (_, t) = table(src, LrMode::Canonical);
+        assert!(!t.conflicts.is_empty());
+    }
+}

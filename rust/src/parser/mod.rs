@@ -1,0 +1,16 @@
+//! LR parsing: table generation (canonical LR(1) and LALR(1), §4.5),
+//! the runtime stack machine with `Next`/`Follow` (Appendix A.3), the
+//! incremental parser with state caching (Algorithm 4), and the accept-
+//! sequence computation A₀/A₁ (§4.5).
+
+mod accept;
+mod incremental;
+mod lr;
+mod runtime;
+mod tree;
+
+pub use accept::{compute_accept_sequences, AcceptContext, AcceptSequences};
+pub use incremental::{IncrementalParser, ParseStatus};
+pub use lr::{Action, LrMode, LrTable};
+pub use runtime::ParserState;
+pub use tree::{parse_to_tree, Tree, TreeError};

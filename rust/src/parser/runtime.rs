@@ -1,0 +1,241 @@
+//! LR runtime: the stack machine providing the base-parser primitives the
+//! paper's incremental algorithm needs (Appendix A.3): `Next` (consume one
+//! terminal) and `Follow` (acceptable terminals at the current state), plus
+//! cheap cloning for speculative simulation of accept-sequence suffixes.
+
+use super::lr::{Action, LrTable};
+use crate::grammar::TermId;
+use std::sync::Arc;
+
+/// A live parser configuration (state stack).
+#[derive(Clone)]
+pub struct ParserState {
+    table: Arc<LrTable>,
+    stack: Vec<u32>,
+}
+
+impl std::fmt::Debug for ParserState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ParserState(depth={})", self.stack.len())
+    }
+}
+
+impl ParserState {
+    pub fn new(table: Arc<LrTable>) -> ParserState {
+        ParserState { table, stack: vec![0] }
+    }
+
+    /// Current (top) LR state.
+    pub fn top(&self) -> u32 {
+        *self.stack.last().unwrap()
+    }
+
+    /// Stack snapshot (for the incremental cache).
+    pub fn stack(&self) -> &[u32] {
+        &self.stack
+    }
+
+    /// Restore from a snapshot.
+    pub fn restore(&mut self, stack: &[u32]) {
+        self.stack.clear();
+        self.stack.extend_from_slice(stack);
+    }
+
+    /// Consume one terminal: perform pending reduces, then shift.
+    /// Returns false (leaving the stack unchanged on the failed lookahead)
+    /// if the terminal is not acceptable — LR immediate error detection.
+    pub fn next(&mut self, term: TermId) -> bool {
+        self.feed(term as usize)
+    }
+
+    /// Can the parser accept end-of-input from here? (non-destructive)
+    pub fn accepts_eof(&self) -> bool {
+        let mut probe = self.clone();
+        probe.feed_eof()
+    }
+
+    fn feed(&mut self, col: usize) -> bool {
+        let saved = self.stack.len();
+        loop {
+            match self.table.action(self.top(), col) {
+                Action::Shift(s) => {
+                    self.stack.push(s);
+                    return true;
+                }
+                Action::Reduce(r) => {
+                    if !self.reduce(r) {
+                        self.stack.truncate(saved.min(self.stack.len()));
+                        return false;
+                    }
+                }
+                Action::Accept => return false, // only valid on EOF column
+                Action::Err => return false,
+            }
+        }
+    }
+
+    fn feed_eof(&mut self) -> bool {
+        loop {
+            match self.table.action(self.top(), self.table.eof()) {
+                Action::Accept => return true,
+                Action::Reduce(r) => {
+                    if !self.reduce(r) {
+                        return false;
+                    }
+                }
+                _ => return false,
+            }
+        }
+    }
+
+    fn reduce(&mut self, rule: u32) -> bool {
+        let (lhs, len) = self.table.rule_info[rule as usize];
+        let depth = self.stack.len();
+        if depth <= len as usize {
+            return false;
+        }
+        self.stack.truncate(depth - len as usize);
+        match self.table.goto(self.top(), lhs) {
+            Some(s) => {
+                self.stack.push(s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The `Follow` primitive: terminals with a non-error action here.
+    ///
+    /// For canonical LR(1) tables this is exactly the acceptable set
+    /// (immediate error detection, §4.5); for LALR it may over-approximate
+    /// (reduce chains can still fail), which keeps masking sound.
+    pub fn follow(&self) -> Vec<TermId> {
+        self.table.row_terminals(self.top())
+    }
+
+    /// Precise `Follow`: filters the row scan by actually simulating each
+    /// candidate (needed under LALR where a reduce entry may dead-end).
+    pub fn follow_exact(&self) -> Vec<TermId> {
+        self.table
+            .row_terminals(self.top())
+            .into_iter()
+            .filter(|&t| {
+                let mut probe = self.clone();
+                probe.next(t)
+            })
+            .collect()
+    }
+
+    /// Simulate consuming a terminal sequence; Some(state) on success.
+    pub fn simulate(&self, terms: &[TermId]) -> Option<ParserState> {
+        let mut probe = self.clone();
+        for &t in terms {
+            if !probe.next(t) {
+                return None;
+            }
+        }
+        Some(probe)
+    }
+
+    /// Shared table handle.
+    pub fn table(&self) -> &Arc<LrTable> {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::{parse_ebnf, Grammar};
+    use crate::parser::lr::LrMode;
+
+    fn setup(src: &str, mode: LrMode) -> (Grammar, ParserState) {
+        let g = parse_ebnf(src).unwrap();
+        let t = Arc::new(LrTable::build(&g, mode));
+        (g, ParserState::new(t))
+    }
+
+    const EXPR: &str = "
+start: e
+e: e \"+\" t | t
+t: INT | \"(\" e \")\"
+INT: /[0-9]+/
+";
+
+    #[test]
+    fn parse_and_accept() {
+        let (g, mut p) = setup(EXPR, LrMode::Canonical);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert!(p.next(int));
+        assert!(p.accepts_eof());
+        assert!(p.next(plus));
+        assert!(!p.accepts_eof());
+        assert!(p.next(int));
+        assert!(p.accepts_eof());
+    }
+
+    #[test]
+    fn reject_bad_token_keeps_state() {
+        let (g, mut p) = setup(EXPR, LrMode::Canonical);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        assert!(!p.next(plus)); // '+' can't start
+        assert!(p.next(int)); // state undamaged
+    }
+
+    #[test]
+    fn follow_updates_with_state() {
+        let (g, mut p) = setup(EXPR, LrMode::Canonical);
+        let int = g.term_id("INT").unwrap();
+        let name = |t: TermId| g.terminals[t as usize].name.clone();
+        let f0: Vec<String> = p.follow().into_iter().map(name).collect();
+        assert!(f0.contains(&"INT".to_string()) && f0.contains(&"LPAR".to_string()));
+        p.next(int);
+        let f1: Vec<String> =
+            p.follow().into_iter().map(|t| g.terminals[t as usize].name.clone()).collect();
+        assert!(f1.contains(&"PLUS".to_string()));
+        assert!(!f1.contains(&"INT".to_string()));
+    }
+
+    #[test]
+    fn simulate_does_not_mutate() {
+        let (g, p) = setup(EXPR, LrMode::Canonical);
+        let int = g.term_id("INT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        let sim = p.simulate(&[int, plus, int]).unwrap();
+        assert!(sim.accepts_eof());
+        assert_eq!(p.stack(), &[0]);
+        assert!(p.simulate(&[plus]).is_none());
+    }
+
+    #[test]
+    fn nested_parens() {
+        let (g, mut p) = setup(EXPR, LrMode::Lalr);
+        let seq: Vec<TermId> = ["LPAR", "LPAR", "INT", "RPAR", "PLUS", "INT", "RPAR"]
+            .iter()
+            .map(|n| g.term_id(n).unwrap())
+            .collect();
+        for t in &seq {
+            assert!(p.next(*t), "failed at {t}");
+        }
+        assert!(p.accepts_eof());
+    }
+
+    #[test]
+    fn json_roundtrip_parse() {
+        let g = Grammar::builtin("json").unwrap();
+        let t = Arc::new(LrTable::build(&g, LrMode::Lalr));
+        let mut p = ParserState::new(t);
+        // { "a" : [ 1 , true ] }
+        let toks = [
+            "LBRACE", "STRING", "COLON", "LSQB", "NUMBER", "COMMA", "KW_TRUE", "RSQB",
+            "RBRACE",
+        ];
+        for n in toks {
+            let id = g.term_id(n).unwrap_or_else(|| panic!("{n}"));
+            assert!(p.next(id), "at {n}");
+        }
+        assert!(p.accepts_eof());
+    }
+}

@@ -1,0 +1,172 @@
+//! Parse-tree construction for *complete* programs of plain-CFG languages
+//! (no post-lex pass). Used by the evaluation substrates: the calc-DSL
+//! evaluator (Table 4 functional correctness) and the mini SQL executor
+//! (Table 2 execution accuracy).
+
+use super::lr::{Action, LrTable};
+use crate::grammar::{Grammar, NtId, TermId};
+use crate::lexer::Lexer;
+use std::sync::Arc;
+
+/// A concrete syntax tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tree {
+    Leaf { term: TermId, text: Vec<u8> },
+    Node { nt: NtId, children: Vec<Tree> },
+}
+
+impl Tree {
+    /// Leaf text as UTF-8 (lossy).
+    pub fn text(&self) -> String {
+        match self {
+            Tree::Leaf { text, .. } => String::from_utf8_lossy(text).to_string(),
+            Tree::Node { .. } => String::new(),
+        }
+    }
+
+    /// Children (empty for leaves).
+    pub fn children(&self) -> &[Tree] {
+        match self {
+            Tree::Leaf { .. } => &[],
+            Tree::Node { children, .. } => children,
+        }
+    }
+
+    /// Nonterminal id (None for leaves).
+    pub fn nt(&self) -> Option<NtId> {
+        match self {
+            Tree::Node { nt, .. } => Some(*nt),
+            _ => None,
+        }
+    }
+
+    /// Depth-first concatenation of all leaf texts.
+    pub fn flatten(&self) -> String {
+        match self {
+            Tree::Leaf { text, .. } => String::from_utf8_lossy(text).to_string(),
+            Tree::Node { children, .. } => children.iter().map(|c| c.flatten()).collect(),
+        }
+    }
+}
+
+/// Parse error for tree construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeError(pub String);
+
+impl std::fmt::Display for TreeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tree parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TreeError {}
+
+/// Parse a complete program to a tree. Only valid for languages without a
+/// post-lex pass (JSON, SQL, calc).
+pub fn parse_to_tree(
+    g: &Grammar,
+    table: &Arc<LrTable>,
+    text: &[u8],
+) -> Result<Tree, TreeError> {
+    // Lex fully; the remainder must itself be a complete (or ignored) token.
+    let lexer = Lexer::new(g);
+    let lr = lexer.lex(text);
+    if let Some(p) = lr.error {
+        return Err(TreeError(format!("lex error at byte {p}")));
+    }
+    let mut toks: Vec<(TermId, Vec<u8>)> = lr
+        .tokens
+        .iter()
+        .filter(|t| !t.ignored)
+        .map(|t| (t.term, text[t.start..t.end].to_vec()))
+        .collect();
+    if lr.remainder_start < text.len() {
+        match lr.remainder_term {
+            Some(t) if !g.terminals[t as usize].ignore => {
+                toks.push((t, text[lr.remainder_start..].to_vec()));
+            }
+            Some(_) => {}
+            None => return Err(TreeError("trailing unlexed text".into())),
+        }
+    }
+
+    // LR parse with a value stack.
+    let mut states: Vec<u32> = vec![0];
+    let mut values: Vec<Tree> = Vec::new();
+    let eof = table.eof();
+    let mut idx = 0;
+    loop {
+        let col = if idx < toks.len() { toks[idx].0 as usize } else { eof };
+        match table.action(*states.last().unwrap(), col) {
+            Action::Shift(s) => {
+                states.push(s);
+                let (term, text) = toks[idx].clone();
+                values.push(Tree::Leaf { term, text });
+                idx += 1;
+            }
+            Action::Reduce(r) => {
+                let (lhs, len) = table.rule_info[r as usize];
+                let mut children = Vec::with_capacity(len as usize);
+                for _ in 0..len {
+                    states.pop();
+                    children.push(values.pop().ok_or_else(|| TreeError("stack".into()))?);
+                }
+                children.reverse();
+                values.push(Tree::Node { nt: lhs, children });
+                let top = *states.last().unwrap();
+                match table.goto(top, lhs) {
+                    Some(s) => states.push(s),
+                    None => return Err(TreeError("goto missing".into())),
+                }
+            }
+            Action::Accept => {
+                return values.pop().ok_or_else(|| TreeError("empty".into()));
+            }
+            Action::Err => {
+                return Err(TreeError(format!(
+                    "unexpected {} at token {idx}",
+                    if col == eof { "$EOF".into() } else { g.terminals[col].name.clone() }
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::Grammar;
+    use crate::parser::lr::{LrMode, LrTable};
+
+    fn tree(gname: &str, text: &str) -> Result<Tree, TreeError> {
+        let g = Grammar::builtin(gname).unwrap();
+        let t = Arc::new(LrTable::build(&g, LrMode::Lalr));
+        parse_to_tree(&g, &t, text.as_bytes())
+    }
+
+    #[test]
+    fn calc_tree_flattens_back() {
+        let t = tree("calc", "math_sqrt(3) * (2.27 + 1)").unwrap();
+        assert_eq!(t.flatten(), "math_sqrt(3)*(2.27+1)"); // ignored WS dropped
+    }
+
+    #[test]
+    fn json_tree() {
+        let t = tree("json", r#"{"a": [1, 2]}"#).unwrap();
+        assert!(t.nt().is_some());
+        assert!(t.flatten().contains("\"a\""));
+    }
+
+    #[test]
+    fn sql_tree() {
+        let t = tree("sql", "SELECT a FROM t WHERE b > 3").unwrap();
+        assert!(t.flatten().to_lowercase().contains("select"));
+    }
+
+    #[test]
+    fn incomplete_rejected() {
+        assert!(tree("calc", "1 +").is_err());
+        assert!(tree("json", "{").is_err());
+        assert!(tree("calc", "1 $ 2").is_err());
+    }
+}

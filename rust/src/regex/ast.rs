@@ -1,0 +1,512 @@
+//! Regex syntax tree and parser (Lark/PCRE-ish subset).
+//!
+//! Supported: literals, `.`, escapes (`\d \w \s \n \t \r \f \. \\ …`),
+//! character classes `[...]` with ranges and negation, grouping `(...)`,
+//! alternation `|`, repetition `* + ? {m} {m,} {m,n}` and their non-greedy
+//! variants (`*?` etc. — same *language*, so treated identically; see
+//! module docs), and inline `(?i:...)`-free case folding via the terminal's
+//! `/…/i` flag which is applied to the whole AST.
+//!
+//! Not supported (rejected with an error): anchors `^ $`, backreferences,
+//! lookaround. The grammars in `grammars/` avoid them.
+
+/// 256-bit set of bytes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ByteSet(pub [u64; 4]);
+
+impl ByteSet {
+    pub const EMPTY: ByteSet = ByteSet([0; 4]);
+
+    pub fn single(b: u8) -> ByteSet {
+        let mut s = ByteSet::EMPTY;
+        s.insert(b);
+        s
+    }
+
+    pub fn range(lo: u8, hi: u8) -> ByteSet {
+        let mut s = ByteSet::EMPTY;
+        for b in lo..=hi {
+            s.insert(b);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, b: u8) {
+        self.0[(b >> 6) as usize] |= 1u64 << (b & 63);
+    }
+
+    pub fn contains(&self, b: u8) -> bool {
+        (self.0[(b >> 6) as usize] >> (b & 63)) & 1 == 1
+    }
+
+    pub fn union(mut self, other: ByteSet) -> ByteSet {
+        for i in 0..4 {
+            self.0[i] |= other.0[i];
+        }
+        self
+    }
+
+    pub fn negate(mut self) -> ByteSet {
+        for i in 0..4 {
+            self.0[i] = !self.0[i];
+        }
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.iter().all(|&w| w == 0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        (0u16..=255).map(|b| b as u8).filter(move |&b| self.contains(b))
+    }
+}
+
+impl std::fmt::Debug for ByteSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ByteSet{{{} bytes}}", self.iter().count())
+    }
+}
+
+/// Regex abstract syntax tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RegexAst {
+    /// The empty string ε.
+    Empty,
+    /// A byte class (single chars are 1-element classes).
+    Class(ByteSet),
+    /// A byte-literal sequence (fast path for keywords).
+    Literal(Vec<u8>),
+    Concat(Vec<RegexAst>),
+    Alt(Vec<RegexAst>),
+    Star(Box<RegexAst>),
+    Plus(Box<RegexAst>),
+    Opt(Box<RegexAst>),
+    /// `{min, max}`; `max == usize::MAX` means unbounded.
+    Repeat(Box<RegexAst>, usize, usize),
+}
+
+impl RegexAst {
+    /// Fold ASCII case: every letter class/literal accepts both cases.
+    pub fn case_insensitive(self) -> RegexAst {
+        match self {
+            RegexAst::Class(mut s) => {
+                let orig = s;
+                for b in orig.iter() {
+                    if b.is_ascii_lowercase() {
+                        s.insert(b.to_ascii_uppercase());
+                    } else if b.is_ascii_uppercase() {
+                        s.insert(b.to_ascii_lowercase());
+                    }
+                }
+                RegexAst::Class(s)
+            }
+            RegexAst::Literal(bytes) => RegexAst::Concat(
+                bytes
+                    .into_iter()
+                    .map(|b| {
+                        if b.is_ascii_alphabetic() {
+                            let mut s = ByteSet::single(b.to_ascii_lowercase());
+                            s.insert(b.to_ascii_uppercase());
+                            RegexAst::Class(s)
+                        } else {
+                            RegexAst::Class(ByteSet::single(b))
+                        }
+                    })
+                    .collect(),
+            ),
+            RegexAst::Concat(xs) => {
+                RegexAst::Concat(xs.into_iter().map(|x| x.case_insensitive()).collect())
+            }
+            RegexAst::Alt(xs) => {
+                RegexAst::Alt(xs.into_iter().map(|x| x.case_insensitive()).collect())
+            }
+            RegexAst::Star(x) => RegexAst::Star(Box::new(x.case_insensitive())),
+            RegexAst::Plus(x) => RegexAst::Plus(Box::new(x.case_insensitive())),
+            RegexAst::Opt(x) => RegexAst::Opt(Box::new(x.case_insensitive())),
+            RegexAst::Repeat(x, lo, hi) => {
+                RegexAst::Repeat(Box::new(x.case_insensitive()), lo, hi)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Regex parse error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegexError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for RegexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "regex error at {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for RegexError {}
+
+/// Parse a regex pattern into an AST.
+pub fn parse_regex(pattern: &str) -> Result<RegexAst, RegexError> {
+    let mut p = P { b: pattern.as_bytes(), pos: 0 };
+    let ast = p.alt()?;
+    if p.pos != p.b.len() {
+        return Err(p.err("unexpected trailing content"));
+    }
+    Ok(ast)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> RegexError {
+        RegexError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn alt(&mut self) -> Result<RegexAst, RegexError> {
+        let mut branches = vec![self.concat()?];
+        while self.peek() == Some(b'|') {
+            self.pos += 1;
+            branches.push(self.concat()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { RegexAst::Alt(branches) })
+    }
+
+    fn concat(&mut self) -> Result<RegexAst, RegexError> {
+        let mut parts = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == b'|' || c == b')' {
+                break;
+            }
+            parts.push(self.repeat()?);
+        }
+        Ok(match parts.len() {
+            0 => RegexAst::Empty,
+            1 => parts.pop().unwrap(),
+            _ => RegexAst::Concat(parts),
+        })
+    }
+
+    fn repeat(&mut self) -> Result<RegexAst, RegexError> {
+        let atom = self.atom()?;
+        let mut node = atom;
+        loop {
+            match self.peek() {
+                Some(b'*') => {
+                    self.pos += 1;
+                    self.skip_nongreedy();
+                    node = RegexAst::Star(Box::new(node));
+                }
+                Some(b'+') => {
+                    self.pos += 1;
+                    self.skip_nongreedy();
+                    node = RegexAst::Plus(Box::new(node));
+                }
+                Some(b'?') => {
+                    self.pos += 1;
+                    self.skip_nongreedy();
+                    node = RegexAst::Opt(Box::new(node));
+                }
+                Some(b'{') => {
+                    // Could be a counted repetition or a literal '{'.
+                    if let Some((lo, hi, consumed)) = self.try_counted() {
+                        self.pos += consumed;
+                        self.skip_nongreedy();
+                        node = RegexAst::Repeat(Box::new(node), lo, hi);
+                    } else {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        Ok(node)
+    }
+
+    /// `{m}`, `{m,}`, `{m,n}` starting at self.pos (which points at '{').
+    /// Returns (lo, hi, bytes_consumed) or None if not a counted form.
+    fn try_counted(&self) -> Option<(usize, usize, usize)> {
+        let rest = &self.b[self.pos..];
+        let close = rest.iter().position(|&c| c == b'}')?;
+        let inner = std::str::from_utf8(&rest[1..close]).ok()?;
+        if inner.is_empty() {
+            return None;
+        }
+        let (lo_s, hi_s) = match inner.split_once(',') {
+            Some((a, b)) => (a, Some(b)),
+            None => (inner, None),
+        };
+        let lo: usize = lo_s.parse().ok()?;
+        let hi = match hi_s {
+            None => lo,
+            Some("") => usize::MAX,
+            Some(h) => h.parse().ok()?,
+        };
+        Some((lo, hi, close + 1))
+    }
+
+    fn skip_nongreedy(&mut self) {
+        if self.peek() == Some(b'?') {
+            self.pos += 1; // same language; greediness is a matcher concern
+        }
+    }
+
+    fn atom(&mut self) -> Result<RegexAst, RegexError> {
+        match self.peek() {
+            Some(b'(') => {
+                self.pos += 1;
+                // (?: ...) non-capturing and (?s:...)/(?i...) inline flags:
+                // strip the prefix; `s` only affects '.', handled globally.
+                if self.peek() == Some(b'?') {
+                    self.pos += 1;
+                    while matches!(self.peek(), Some(b's' | b'i' | b'm' | b'x')) {
+                        self.pos += 1;
+                    }
+                    if self.peek() == Some(b':') {
+                        self.pos += 1;
+                    }
+                }
+                let inner = self.alt()?;
+                if self.bump() != Some(b')') {
+                    return Err(self.err("unclosed group"));
+                }
+                Ok(inner)
+            }
+            Some(b'[') => self.class(),
+            Some(b'.') => {
+                self.pos += 1;
+                // '.' matches any byte except \n (multiline grammars rely
+                // on this to keep comments/strings on one line).
+                let mut s = ByteSet::EMPTY.negate();
+                s.0[0] &= !(1u64 << b'\n');
+                Ok(RegexAst::Class(s))
+            }
+            Some(b'\\') => {
+                self.pos += 1;
+                let c = self.bump().ok_or_else(|| self.err("dangling escape"))?;
+                Ok(RegexAst::Class(escape_class(c).ok_or_else(|| {
+                    self.err(&format!("unsupported escape \\{}", c as char))
+                })?))
+            }
+            Some(b'^') | Some(b'$') => Err(self.err("anchors are not supported")),
+            Some(b'*') | Some(b'+') | Some(b'?') => Err(self.err("dangling quantifier")),
+            Some(c) => {
+                self.pos += 1;
+                Ok(RegexAst::Class(ByteSet::single(c)))
+            }
+            None => Err(self.err("unexpected end of pattern")),
+        }
+    }
+
+    fn class(&mut self) -> Result<RegexAst, RegexError> {
+        assert_eq!(self.bump(), Some(b'['));
+        let negated = if self.peek() == Some(b'^') {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        let mut set = ByteSet::EMPTY;
+        let mut first = true;
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unclosed class"))?;
+            if c == b']' && !first {
+                self.pos += 1;
+                break;
+            }
+            first = false;
+            let lo = self.class_char()?;
+            // Range?
+            if self.peek() == Some(b'-')
+                && self.b.get(self.pos + 1).map(|&c| c != b']').unwrap_or(false)
+            {
+                self.pos += 1;
+                let hi_set = self.class_char()?;
+                // Ranges only make sense between single chars.
+                let (lo_b, hi_b) = match (single_byte(&lo), single_byte(&hi_set)) {
+                    (Some(a), Some(b)) if a <= b => (a, b),
+                    _ => return Err(self.err("bad range in class")),
+                };
+                set = set.union(ByteSet::range(lo_b, hi_b));
+            } else {
+                set = set.union(lo);
+            }
+        }
+        let set = if negated {
+            set.negate()
+        } else {
+            set
+        };
+        if set.is_empty() {
+            return Err(self.err("empty character class"));
+        }
+        Ok(RegexAst::Class(set))
+    }
+
+    /// One class member: either a literal byte or an escape class.
+    fn class_char(&mut self) -> Result<ByteSet, RegexError> {
+        let c = self.bump().ok_or_else(|| self.err("unclosed class"))?;
+        if c == b'\\' {
+            let e = self.bump().ok_or_else(|| self.err("dangling escape in class"))?;
+            escape_class(e).ok_or_else(|| self.err(&format!("unsupported escape \\{}", e as char)))
+        } else {
+            Ok(ByteSet::single(c))
+        }
+    }
+}
+
+fn single_byte(s: &ByteSet) -> Option<u8> {
+    let mut it = s.iter();
+    let b = it.next()?;
+    if it.next().is_none() {
+        Some(b)
+    } else {
+        None
+    }
+}
+
+fn escape_class(c: u8) -> Option<ByteSet> {
+    Some(match c {
+        b'n' => ByteSet::single(b'\n'),
+        b'r' => ByteSet::single(b'\r'),
+        b't' => ByteSet::single(b'\t'),
+        b'f' => ByteSet::single(0x0C),
+        b'v' => ByteSet::single(0x0B),
+        b'0' => ByteSet::single(0),
+        b'd' => ByteSet::range(b'0', b'9'),
+        b'D' => ByteSet::range(b'0', b'9').negate(),
+        b'w' => ByteSet::range(b'a', b'z')
+            .union(ByteSet::range(b'A', b'Z'))
+            .union(ByteSet::range(b'0', b'9'))
+            .union(ByteSet::single(b'_')),
+        b'W' => ByteSet::range(b'a', b'z')
+            .union(ByteSet::range(b'A', b'Z'))
+            .union(ByteSet::range(b'0', b'9'))
+            .union(ByteSet::single(b'_'))
+            .negate(),
+        b's' => {
+            let mut s = ByteSet::single(b' ');
+            for b in [b'\t', b'\n', b'\r', 0x0B, 0x0C] {
+                s.insert(b);
+            }
+            s
+        }
+        b'S' => {
+            let mut s = ByteSet::single(b' ');
+            for b in [b'\t', b'\n', b'\r', 0x0B, 0x0C] {
+                s.insert(b);
+            }
+            s.negate()
+        }
+        // Punctuation escapes: identity.
+        c if !c.is_ascii_alphanumeric() => ByteSet::single(c),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byteset_ops() {
+        let s = ByteSet::range(b'a', b'c');
+        assert!(s.contains(b'a') && s.contains(b'c') && !s.contains(b'd'));
+        let n = s.negate();
+        assert!(!n.contains(b'b') && n.contains(b'z'));
+        assert_eq!(ByteSet::single(b'x').iter().collect::<Vec<_>>(), vec![b'x']);
+    }
+
+    #[test]
+    fn parse_simple() {
+        assert!(matches!(parse_regex("a").unwrap(), RegexAst::Class(_)));
+        assert!(matches!(parse_regex("ab|c").unwrap(), RegexAst::Alt(_)));
+        assert!(matches!(parse_regex("a*").unwrap(), RegexAst::Star(_)));
+    }
+
+    #[test]
+    fn parse_counted() {
+        match parse_regex("a{2,5}").unwrap() {
+            RegexAst::Repeat(_, 2, 5) => {}
+            other => panic!("{other:?}"),
+        }
+        match parse_regex("a{3}").unwrap() {
+            RegexAst::Repeat(_, 3, 3) => {}
+            other => panic!("{other:?}"),
+        }
+        match parse_regex("a{3,}").unwrap() {
+            RegexAst::Repeat(_, 3, usize::MAX) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_brace_not_counted() {
+        // "{" not followed by a valid count is a literal.
+        let ast = parse_regex("a{b").unwrap();
+        assert!(matches!(ast, RegexAst::Concat(_)));
+    }
+
+    #[test]
+    fn class_with_escapes() {
+        let ast = parse_regex(r"[\d\-x]").unwrap();
+        match ast {
+            RegexAst::Class(s) => {
+                assert!(s.contains(b'5') && s.contains(b'-') && s.contains(b'x'));
+                assert!(!s.contains(b'a'));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn class_leading_bracket() {
+        // []] — ']' first in class is literal.
+        let ast = parse_regex(r"[]a]").unwrap();
+        match ast {
+            RegexAst::Class(s) => assert!(s.contains(b']') && s.contains(b'a')),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(parse_regex("(a").is_err());
+        assert!(parse_regex("[a").is_err());
+        assert!(parse_regex("*a").is_err());
+        assert!(parse_regex("a\\").is_err());
+    }
+
+    #[test]
+    fn case_fold() {
+        let ast = parse_regex("aB").unwrap().case_insensitive();
+        // Both chars become 2-byte classes.
+        match ast {
+            RegexAst::Concat(xs) => {
+                for x in xs {
+                    match x {
+                        RegexAst::Class(s) => assert_eq!(s.iter().count(), 2),
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,406 @@
+//! DFA: subset construction over byte equivalence classes, Hopcroft
+//! minimisation, and live-state analysis (Definition 9 of the paper).
+//!
+//! Transitions are a dense `num_states × num_classes` table where the 256
+//! input bytes are first mapped to equivalence classes (bytes that behave
+//! identically in every transition of the NFA), keeping tables small.
+//! A missing transition is the sentinel [`DEAD`] — walking into `DEAD`
+//! corresponds to leaving `live(Q)` permanently.
+
+use super::nfa::Nfa;
+use std::collections::HashMap;
+
+/// Sentinel "dead sink" state id.
+pub const DEAD: u32 = u32::MAX;
+
+/// Deterministic finite automaton over bytes.
+#[derive(Debug, Clone)]
+pub struct Dfa {
+    /// Byte → equivalence class.
+    byte_class: [u16; 256],
+    num_classes: u16,
+    /// `trans[state * num_classes + class]`, `DEAD` when absent.
+    trans: Vec<u32>,
+    accept: Vec<bool>,
+    live: Vec<bool>,
+    start: u32,
+}
+
+impl Dfa {
+    /// Subset construction from an ε-NFA.
+    pub fn from_nfa(nfa: &Nfa) -> Dfa {
+        // --- byte equivalence classes ------------------------------------
+        // Two bytes are equivalent if every NFA transition set treats them
+        // identically. Build a signature per byte from the set memberships.
+        let mut sigs: Vec<Vec<bool>> = vec![Vec::new(); 256];
+        for st in &nfa.states {
+            for (set, _) in &st.trans {
+                for (b, sig) in sigs.iter_mut().enumerate() {
+                    sig.push(set.contains(b as u8));
+                }
+            }
+        }
+        let mut byte_class = [0u16; 256];
+        let mut class_of_sig: HashMap<&[bool], u16> = HashMap::new();
+        let mut class_repr: Vec<u8> = Vec::new();
+        for b in 0..256usize {
+            let sig = sigs[b].as_slice();
+            let next_id = class_of_sig.len() as u16;
+            let id = *class_of_sig.entry(sig).or_insert_with(|| {
+                class_repr.push(b as u8);
+                next_id
+            });
+            byte_class[b] = id;
+        }
+        let num_classes = class_repr.len() as u16;
+
+        // --- subset construction -----------------------------------------
+        let mut start_set = vec![nfa.start];
+        nfa.eps_closure(&mut start_set);
+        let mut state_ids: HashMap<Vec<u32>, u32> = HashMap::new();
+        state_ids.insert(start_set.clone(), 0);
+        let mut worklist = vec![start_set.clone()];
+        let mut sets: Vec<Vec<u32>> = vec![start_set];
+        let mut trans: Vec<u32> = Vec::new();
+
+        while let Some(cur) = worklist.pop() {
+            let cur_id = state_ids[&cur];
+            let need = (cur_id as usize + 1) * num_classes as usize;
+            if trans.len() < need {
+                trans.resize(need, DEAD);
+            }
+            for class in 0..num_classes {
+                let repr = class_repr[class as usize];
+                let mut nxt: Vec<u32> = Vec::new();
+                for &s in &cur {
+                    for (set, t) in &nfa.states[s as usize].trans {
+                        if set.contains(repr) {
+                            nxt.push(*t);
+                        }
+                    }
+                }
+                if nxt.is_empty() {
+                    continue;
+                }
+                nfa.eps_closure(&mut nxt);
+                let nid = match state_ids.get(&nxt) {
+                    Some(&id) => id,
+                    None => {
+                        let id = sets.len() as u32;
+                        state_ids.insert(nxt.clone(), id);
+                        sets.push(nxt.clone());
+                        worklist.push(nxt);
+                        id
+                    }
+                };
+                trans[cur_id as usize * num_classes as usize + class as usize] = nid;
+            }
+        }
+        trans.resize(sets.len() * num_classes as usize, DEAD);
+        let accept: Vec<bool> =
+            sets.iter().map(|s| s.contains(&nfa.accept)).collect();
+
+        let mut dfa = Dfa {
+            byte_class,
+            num_classes,
+            trans,
+            accept,
+            live: Vec::new(),
+            start: 0,
+        };
+        dfa.compute_live();
+        dfa
+    }
+
+    /// Live states (Definition 9): states from which some accept state is
+    /// reachable. Computed by reverse BFS from accepting states.
+    fn compute_live(&mut self) {
+        let n = self.accept.len();
+        let mut rev: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for s in 0..n {
+            for c in 0..self.num_classes as usize {
+                let t = self.trans[s * self.num_classes as usize + c];
+                if t != DEAD {
+                    rev[t as usize].push(s as u32);
+                }
+            }
+        }
+        let mut live = vec![false; n];
+        let mut stack: Vec<u32> = (0..n as u32).filter(|&s| self.accept[s as usize]).collect();
+        for &s in &stack {
+            live[s as usize] = true;
+        }
+        while let Some(s) = stack.pop() {
+            for &p in &rev[s as usize] {
+                if !live[p as usize] {
+                    live[p as usize] = true;
+                    stack.push(p);
+                }
+            }
+        }
+        self.live = live;
+    }
+
+    /// Hopcroft minimisation (plus unreachable-state removal).
+    pub fn minimise(&self) -> Dfa {
+        let n = self.accept.len();
+        let nc = self.num_classes as usize;
+        // Partition refinement. Initial blocks: accept / non-accept.
+        let mut block_of: Vec<u32> = (0..n).map(|s| self.accept[s] as u32).collect();
+        let mut num_blocks: u32 = if self.accept.iter().any(|&a| a) && self.accept.iter().any(|&a| !a) {
+            2
+        } else {
+            1
+        };
+        if num_blocks == 1 {
+            // normalise block ids
+            for b in block_of.iter_mut() {
+                *b = 0;
+            }
+        }
+        loop {
+            // Signature of each state: (block, [block of successor per class])
+            let mut sig_map: HashMap<(u32, Vec<u32>), u32> = HashMap::new();
+            let mut new_block = vec![0u32; n];
+            for s in 0..n {
+                let succ: Vec<u32> = (0..nc)
+                    .map(|c| {
+                        let t = self.trans[s * nc + c];
+                        if t == DEAD {
+                            u32::MAX
+                        } else {
+                            block_of[t as usize]
+                        }
+                    })
+                    .collect();
+                let key = (block_of[s], succ);
+                let next_id = sig_map.len() as u32;
+                let id = *sig_map.entry(key).or_insert(next_id);
+                new_block[s] = id;
+            }
+            let nb = sig_map.len() as u32;
+            if nb == num_blocks {
+                break;
+            }
+            num_blocks = nb;
+            block_of = new_block;
+        }
+
+        // Build the quotient automaton, keeping only states reachable from
+        // the start block.
+        let start_block = block_of[self.start as usize];
+        let mut remap: Vec<u32> = vec![DEAD; num_blocks as usize];
+        let mut order: Vec<u32> = Vec::new();
+        remap[start_block as usize] = 0;
+        order.push(start_block);
+        let mut qi = 0;
+        let mut new_trans: Vec<u32> = Vec::new();
+        // representative state per block
+        let mut repr: Vec<u32> = vec![DEAD; num_blocks as usize];
+        for s in 0..n {
+            let b = block_of[s] as usize;
+            if repr[b] == DEAD {
+                repr[b] = s as u32;
+            }
+        }
+        while qi < order.len() {
+            let blk = order[qi];
+            qi += 1;
+            let s = repr[blk as usize] as usize;
+            for c in 0..nc {
+                let t = self.trans[s * nc + c];
+                let nt = if t == DEAD {
+                    DEAD
+                } else {
+                    let tb = block_of[t as usize];
+                    if remap[tb as usize] == DEAD {
+                        remap[tb as usize] = order.len() as u32;
+                        order.push(tb);
+                    }
+                    remap[tb as usize]
+                };
+                new_trans.push(nt);
+            }
+        }
+        let accept: Vec<bool> =
+            order.iter().map(|&b| self.accept[repr[b as usize] as usize]).collect();
+        let mut out = Dfa {
+            byte_class: self.byte_class,
+            num_classes: self.num_classes,
+            trans: new_trans,
+            accept,
+            live: Vec::new(),
+            start: 0,
+        };
+        out.compute_live();
+        out
+    }
+
+    /// Start state.
+    #[inline]
+    pub fn start(&self) -> u32 {
+        self.start
+    }
+
+    /// Number of states (excluding the implicit dead sink).
+    pub fn num_states(&self) -> usize {
+        self.accept.len()
+    }
+
+    /// One transition. `DEAD` in/out represents the dead sink.
+    #[inline]
+    pub fn step(&self, state: u32, byte: u8) -> u32 {
+        if state == DEAD {
+            return DEAD;
+        }
+        self.trans[state as usize * self.num_classes as usize
+            + self.byte_class[byte as usize] as usize]
+    }
+
+    /// Walk a byte string from `state`.
+    #[inline]
+    pub fn walk(&self, mut state: u32, input: &[u8]) -> u32 {
+        for &b in input {
+            state = self.step(state, b);
+            if state == DEAD {
+                return DEAD;
+            }
+        }
+        state
+    }
+
+    /// Is `state` accepting? (`DEAD` is not.)
+    #[inline]
+    pub fn is_accept(&self, state: u32) -> bool {
+        state != DEAD && self.accept[state as usize]
+    }
+
+    /// Is `state` live (Definition 9)? (`DEAD` is not.)
+    #[inline]
+    pub fn is_live(&self, state: u32) -> bool {
+        state != DEAD && self.live[state as usize]
+    }
+
+    /// Does the DFA accept exactly this string?
+    pub fn accepts(&self, input: &[u8]) -> bool {
+        self.is_accept(self.walk(self.start, input))
+    }
+
+    /// True when some string is accepted (start state is live).
+    pub fn language_nonempty(&self) -> bool {
+        self.is_live(self.start)
+    }
+
+    /// True when the empty string is accepted.
+    pub fn accepts_empty(&self) -> bool {
+        self.is_accept(self.start)
+    }
+
+    /// Shortest accepted string, if any (BFS) — used by dataset generators
+    /// and for grammar sanity checks.
+    pub fn shortest_accepted(&self) -> Option<Vec<u8>> {
+        if !self.language_nonempty() {
+            return None;
+        }
+        let mut prev: Vec<Option<(u32, u8)>> = vec![None; self.num_states()];
+        let mut visited = vec![false; self.num_states()];
+        let mut queue = std::collections::VecDeque::new();
+        visited[self.start as usize] = true;
+        queue.push_back(self.start);
+        while let Some(s) = queue.pop_front() {
+            if self.is_accept(s) {
+                // Reconstruct.
+                let mut bytes = Vec::new();
+                let mut cur = s;
+                while let Some((p, b)) = prev[cur as usize] {
+                    bytes.push(b);
+                    cur = p;
+                }
+                bytes.reverse();
+                return Some(bytes);
+            }
+            for byte in 0..=255u8 {
+                let t = self.step(s, byte);
+                if t != DEAD && !visited[t as usize] {
+                    visited[t as usize] = true;
+                    prev[t as usize] = Some((s, byte));
+                    queue.push_back(t);
+                }
+            }
+        }
+        None
+    }
+
+    /// All bytes with a non-dead transition out of `state`.
+    pub fn out_bytes(&self, state: u32) -> Vec<u8> {
+        (0..=255u8).filter(|&b| self.step(state, b) != DEAD).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::parse_regex;
+    use crate::regex::nfa::Nfa;
+
+    fn dfa(pat: &str) -> Dfa {
+        Dfa::from_nfa(&Nfa::from_ast(&parse_regex(pat).unwrap())).minimise()
+    }
+
+    #[test]
+    fn classic_minimisation() {
+        // (a|b)*abb — minimal DFA has 4 states.
+        let d = dfa("(a|b)*abb");
+        assert_eq!(d.num_states(), 4);
+        assert!(d.accepts(b"abb"));
+        assert!(d.accepts(b"aababb"));
+        assert!(!d.accepts(b"ab"));
+    }
+
+    #[test]
+    fn dead_transitions() {
+        let d = dfa("ab");
+        let q = d.walk(d.start(), b"a");
+        assert!(d.is_live(q));
+        assert_eq!(d.step(q, b'x'), DEAD);
+        assert_eq!(d.walk(DEAD, b"anything"), DEAD);
+    }
+
+    #[test]
+    fn live_analysis() {
+        let d = dfa("[0-9]+");
+        assert!(d.is_live(d.start()));
+        assert!(!d.accepts_empty());
+        let q = d.walk(d.start(), b"12");
+        assert!(d.is_accept(q) && d.is_live(q));
+    }
+
+    #[test]
+    fn shortest_accepted() {
+        assert_eq!(dfa("abc").shortest_accepted().unwrap(), b"abc");
+        assert_eq!(dfa("x+").shortest_accepted().unwrap(), b"x");
+        let s = dfa("[0-9]{3}").shortest_accepted().unwrap();
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn empty_string_language() {
+        let d = dfa("a*");
+        assert!(d.accepts_empty());
+        assert!(d.accepts(b""));
+    }
+
+    #[test]
+    fn out_bytes() {
+        let d = dfa("[ab]c");
+        let outs = d.out_bytes(d.start());
+        assert_eq!(outs, vec![b'a', b'b']);
+    }
+
+    #[test]
+    fn equivalence_classes_compress() {
+        let d = dfa("[a-z]+");
+        // 26 letters behave identically → far fewer classes than 256.
+        assert!(d.num_classes as usize <= 4);
+    }
+}

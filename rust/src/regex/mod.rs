@@ -1,0 +1,195 @@
+//! Regex engine: parser → Thompson NFA → subset-construction DFA →
+//! Hopcroft minimisation, with live-state analysis (Definition 9).
+//!
+//! Grammar terminals (Definition 1 in the paper) are described by regular
+//! expressions in Lark's `/.../` syntax; the DFA mask store (§4.3) needs
+//! direct access to DFA states, transitions, final states, and *live*
+//! states, so a from-scratch engine is required — crates.io regex engines do
+//! not expose their automata in a usable way and are unavailable offline
+//! anyway.
+//!
+//! The alphabet is **bytes** (Σ = 0..=255). Unicode inputs work because
+//! UTF-8 byte sequences flow through byte-level automata; character classes
+//! beyond ASCII match individual bytes (sufficient for the grammars used
+//! here, whose terminals are ASCII-structured).
+
+mod ast;
+mod dfa;
+mod nfa;
+
+pub use ast::{parse_regex, RegexAst, RegexError};
+pub use dfa::{Dfa, DEAD};
+pub use nfa::Nfa;
+
+/// Compile a regex (Lark `/.../` body, flags already stripped) to a
+/// minimised DFA with live-state analysis.
+pub fn compile(pattern: &str, ignore_case: bool) -> Result<Dfa, RegexError> {
+    let ast = parse_regex(pattern)?;
+    let ast = if ignore_case { ast.case_insensitive() } else { ast };
+    let nfa = Nfa::from_ast(&ast);
+    let dfa = Dfa::from_nfa(&nfa);
+    Ok(dfa.minimise())
+}
+
+/// Compile a *literal string* terminal (e.g. the anonymous `"("` terminal)
+/// to a DFA without regex interpretation.
+pub fn compile_literal(lit: &[u8]) -> Dfa {
+    let ast = RegexAst::Literal(lit.to_vec());
+    let nfa = Nfa::from_ast(&ast);
+    Dfa::from_nfa(&nfa).minimise()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accepts(dfa: &Dfa, s: &str) -> bool {
+        dfa.accepts(s.as_bytes())
+    }
+
+    #[test]
+    fn literal_dfa() {
+        let d = compile_literal(b"def");
+        assert!(accepts(&d, "def"));
+        assert!(!accepts(&d, "de"));
+        assert!(!accepts(&d, "defx"));
+        assert!(!accepts(&d, ""));
+    }
+
+    #[test]
+    fn int_regex() {
+        let d = compile("[0-9]+", false).unwrap();
+        assert!(accepts(&d, "0"));
+        assert!(accepts(&d, "123456"));
+        assert!(!accepts(&d, ""));
+        assert!(!accepts(&d, "12a"));
+    }
+
+    #[test]
+    fn float_regex() {
+        let d = compile(r"[0-9]+\.[0-9]+", false).unwrap();
+        assert!(accepts(&d, "3.14"));
+        assert!(!accepts(&d, "3."));
+        assert!(!accepts(&d, ".5"));
+    }
+
+    #[test]
+    fn alternation_and_groups() {
+        let d = compile("(ab|cd)*e?", false).unwrap();
+        assert!(accepts(&d, ""));
+        assert!(accepts(&d, "abcdab"));
+        assert!(accepts(&d, "abe"));
+        assert!(!accepts(&d, "a"));
+    }
+
+    #[test]
+    fn char_classes() {
+        let d = compile(r"[a-zA-Z_]\w*", false).unwrap();
+        assert!(accepts(&d, "_name1"));
+        assert!(accepts(&d, "Xy_9"));
+        assert!(!accepts(&d, "9x"));
+    }
+
+    #[test]
+    fn negated_class() {
+        let d = compile(r#""[^"]*""#, false).unwrap();
+        assert!(accepts(&d, "\"hello\""));
+        assert!(accepts(&d, "\"\""));
+        assert!(!accepts(&d, "\"a\"b\""));
+    }
+
+    #[test]
+    fn counted_repetition() {
+        let d = compile(r"[0-9]{2}", false).unwrap();
+        assert!(accepts(&d, "42"));
+        assert!(!accepts(&d, "4"));
+        assert!(!accepts(&d, "423"));
+        let d = compile(r"a{1,3}", false).unwrap();
+        assert!(accepts(&d, "a"));
+        assert!(accepts(&d, "aaa"));
+        assert!(!accepts(&d, "aaaa"));
+        let d = compile(r"a{2,}", false).unwrap();
+        assert!(!accepts(&d, "a"));
+        assert!(accepts(&d, "aaaaa"));
+    }
+
+    #[test]
+    fn dot_excludes_newline() {
+        let d = compile("a.b", false).unwrap();
+        assert!(accepts(&d, "axb"));
+        assert!(!accepts(&d, "a\nb"));
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let d = compile("select", true).unwrap();
+        assert!(accepts(&d, "SELECT"));
+        assert!(accepts(&d, "SeLeCt"));
+        assert!(!accepts(&d, "selec"));
+    }
+
+    #[test]
+    fn escapes() {
+        let d = compile(r"\d+\.\d+", false).unwrap();
+        assert!(accepts(&d, "1.25"));
+        let d = compile(r"\(\)", false).unwrap();
+        assert!(accepts(&d, "()"));
+        let d = compile(r"a\|b", false).unwrap();
+        assert!(accepts(&d, "a|b"));
+        assert!(!accepts(&d, "a"));
+    }
+
+    #[test]
+    fn live_states_definition9() {
+        // int DFA of Fig. 6: start live, accept live; dead sink not live.
+        let d = compile("[0-9]+", false).unwrap();
+        let q0 = d.start();
+        assert!(d.is_live(q0));
+        let q1 = d.step(q0, b'5');
+        assert!(d.is_live(q1) && d.is_accept(q1));
+        let dead = d.step(q1, b'x');
+        assert_eq!(dead, DEAD);
+    }
+
+    #[test]
+    fn walk_partial_stays_live() {
+        let d = compile(r"[0-9]+\.[0-9]+", false).unwrap();
+        // "2." is a prefix of a float: walking it must stay live, not accept.
+        let q = d.walk(d.start(), b"2.");
+        assert_ne!(q, DEAD);
+        assert!(d.is_live(q));
+        assert!(!d.is_accept(q));
+    }
+
+    #[test]
+    fn minimisation_preserves_language() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        let ast = parse_regex("(a|b)*abb").unwrap();
+        let nfa = Nfa::from_ast(&ast);
+        let big = Dfa::from_nfa(&nfa);
+        let small = big.minimise();
+        assert!(small.num_states() <= big.num_states());
+        let mut rng = Rng::new(17);
+        for _ in 0..500 {
+            let s = prop::ascii_string(&mut rng, b"ab", 12);
+            assert_eq!(
+                big.accepts(s.as_bytes()),
+                small.accepts(s.as_bytes()),
+                "disagree on {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn nongreedy_treated_as_greedy_language() {
+        // .*? has the same *language* as .* — documented behaviour.
+        let d = compile(r#"".*?""#, false).unwrap();
+        assert!(accepts(&d, "\"abc\""));
+    }
+
+    #[test]
+    fn anchors_rejected() {
+        assert!(parse_regex("^abc$").is_err());
+    }
+}

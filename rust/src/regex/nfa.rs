@@ -1,0 +1,220 @@
+//! Thompson construction: regex AST → ε-NFA.
+
+use super::ast::{ByteSet, RegexAst};
+
+/// One NFA state: ε-successors plus byte-class transitions.
+#[derive(Debug, Default, Clone)]
+pub struct NfaState {
+    pub eps: Vec<u32>,
+    pub trans: Vec<(ByteSet, u32)>,
+}
+
+/// ε-NFA with a single start and single accept state.
+#[derive(Debug)]
+pub struct Nfa {
+    pub states: Vec<NfaState>,
+    pub start: u32,
+    pub accept: u32,
+}
+
+impl Nfa {
+    /// Thompson construction.
+    pub fn from_ast(ast: &RegexAst) -> Nfa {
+        let mut b = Builder { states: Vec::new() };
+        let (s, a) = b.build(ast);
+        Nfa { states: b.states, start: s, accept: a }
+    }
+
+    /// ε-closure of a set of states (sorted, deduped).
+    pub fn eps_closure(&self, set: &mut Vec<u32>) {
+        let mut stack: Vec<u32> = set.clone();
+        let mut seen: Vec<bool> = vec![false; self.states.len()];
+        for &s in set.iter() {
+            seen[s as usize] = true;
+        }
+        while let Some(s) = stack.pop() {
+            for &t in &self.states[s as usize].eps {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    set.push(t);
+                    stack.push(t);
+                }
+            }
+        }
+        set.sort_unstable();
+        set.dedup();
+    }
+}
+
+struct Builder {
+    states: Vec<NfaState>,
+}
+
+impl Builder {
+    fn fresh(&mut self) -> u32 {
+        self.states.push(NfaState::default());
+        (self.states.len() - 1) as u32
+    }
+
+    fn eps(&mut self, from: u32, to: u32) {
+        self.states[from as usize].eps.push(to);
+    }
+
+    fn edge(&mut self, from: u32, set: ByteSet, to: u32) {
+        self.states[from as usize].trans.push((set, to));
+    }
+
+    /// Build a fragment; returns (start, accept).
+    fn build(&mut self, ast: &RegexAst) -> (u32, u32) {
+        match ast {
+            RegexAst::Empty => {
+                let s = self.fresh();
+                let a = self.fresh();
+                self.eps(s, a);
+                (s, a)
+            }
+            RegexAst::Class(set) => {
+                let s = self.fresh();
+                let a = self.fresh();
+                self.edge(s, *set, a);
+                (s, a)
+            }
+            RegexAst::Literal(bytes) => {
+                let s = self.fresh();
+                let mut cur = s;
+                for &b in bytes {
+                    let nxt = self.fresh();
+                    self.edge(cur, ByteSet::single(b), nxt);
+                    cur = nxt;
+                }
+                (s, cur)
+            }
+            RegexAst::Concat(parts) => {
+                let mut frags = parts.iter().map(|p| self.build(p)).collect::<Vec<_>>();
+                if frags.is_empty() {
+                    return self.build(&RegexAst::Empty);
+                }
+                let (s, mut a) = frags.remove(0);
+                for (ns, na) in frags {
+                    self.eps(a, ns);
+                    a = na;
+                }
+                (s, a)
+            }
+            RegexAst::Alt(branches) => {
+                let s = self.fresh();
+                let a = self.fresh();
+                for br in branches {
+                    let (bs, ba) = self.build(br);
+                    self.eps(s, bs);
+                    self.eps(ba, a);
+                }
+                (s, a)
+            }
+            RegexAst::Star(inner) => {
+                let s = self.fresh();
+                let a = self.fresh();
+                let (is, ia) = self.build(inner);
+                self.eps(s, is);
+                self.eps(s, a);
+                self.eps(ia, is);
+                self.eps(ia, a);
+                (s, a)
+            }
+            RegexAst::Plus(inner) => {
+                let (is, ia) = self.build(inner);
+                let a = self.fresh();
+                self.eps(ia, a);
+                self.eps(ia, is);
+                (is, a)
+            }
+            RegexAst::Opt(inner) => {
+                let s = self.fresh();
+                let a = self.fresh();
+                let (is, ia) = self.build(inner);
+                self.eps(s, is);
+                self.eps(s, a);
+                self.eps(ia, a);
+                (s, a)
+            }
+            RegexAst::Repeat(inner, lo, hi) => {
+                // Expand bounded repetition; cap expansion to keep automata
+                // small (grammar terminals use small counts like {2} {4}).
+                const CAP: usize = 64;
+                let lo = *lo;
+                let hi = *hi;
+                let mut parts: Vec<RegexAst> = Vec::new();
+                for _ in 0..lo.min(CAP) {
+                    parts.push((**inner).clone());
+                }
+                if hi == usize::MAX {
+                    parts.push(RegexAst::Star(inner.clone()));
+                } else {
+                    for _ in lo..hi.min(CAP) {
+                        parts.push(RegexAst::Opt(inner.clone()));
+                    }
+                }
+                self.build(&RegexAst::Concat(parts))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::parse_regex;
+
+    fn nfa_accepts(nfa: &Nfa, input: &[u8]) -> bool {
+        let mut cur = vec![nfa.start];
+        nfa.eps_closure(&mut cur);
+        for &b in input {
+            let mut nxt = Vec::new();
+            for &s in &cur {
+                for (set, t) in &nfa.states[s as usize].trans {
+                    if set.contains(b) {
+                        nxt.push(*t);
+                    }
+                }
+            }
+            nfa.eps_closure(&mut nxt);
+            cur = nxt;
+            if cur.is_empty() {
+                return false;
+            }
+        }
+        cur.contains(&nfa.accept)
+    }
+
+    #[test]
+    fn thompson_basic() {
+        let nfa = Nfa::from_ast(&parse_regex("(a|b)*c").unwrap());
+        assert!(nfa_accepts(&nfa, b"c"));
+        assert!(nfa_accepts(&nfa, b"ababc"));
+        assert!(!nfa_accepts(&nfa, b"ab"));
+    }
+
+    #[test]
+    fn plus_requires_one() {
+        let nfa = Nfa::from_ast(&parse_regex("a+").unwrap());
+        assert!(!nfa_accepts(&nfa, b""));
+        assert!(nfa_accepts(&nfa, b"aaa"));
+    }
+
+    #[test]
+    fn literal_fragment() {
+        let nfa = Nfa::from_ast(&RegexAst::Literal(b"if".to_vec()));
+        assert!(nfa_accepts(&nfa, b"if"));
+        assert!(!nfa_accepts(&nfa, b"i"));
+    }
+
+    #[test]
+    fn eps_closure_dedup() {
+        let nfa = Nfa::from_ast(&parse_regex("(a?)*").unwrap());
+        let mut set = vec![nfa.start];
+        nfa.eps_closure(&mut set);
+        let mut sorted = set.clone();
+        sorted.dedup();
+        assert_eq!(set.len(), sorted.len());
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic mock LM: an interpolated bigram model over the shared
+//! tokenizer, with seeded hash noise. Exists so every test, example and
+//! bench exercises the full serving stack without the Python artifacts —
+//! and so experiment *shapes* (syntax-error counts etc.) are reproducible
+//! from a seed.
+
+use super::LanguageModel;
+use crate::tokenizer::Tokenizer;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Bigram mock LM with per-lane histories.
+pub struct MockModel {
+    tok: Arc<Tokenizer>,
+    lanes: Vec<Option<Vec<u32>>>,
+    max_seq: usize,
+    seed: u64,
+    /// log-smoothed unigram scores.
+    unigram: Vec<f32>,
+    /// bigram counts (prev → next → count).
+    bigram: HashMap<u32, HashMap<u32, u32>>,
+}
+
+impl MockModel {
+    /// Build from documents: each is encoded and terminated with EOS so
+    /// the model learns to emit EOS at plausible points.
+    pub fn from_documents(
+        tok: Arc<Tokenizer>,
+        docs: &[Vec<u8>],
+        lanes: usize,
+        max_seq: usize,
+        seed: u64,
+    ) -> MockModel {
+        let v = tok.vocab_size();
+        let mut uni = vec![1.0f32; v];
+        let mut bigram: HashMap<u32, HashMap<u32, u32>> = HashMap::new();
+        for doc in docs {
+            let mut ids = tok.encode(doc);
+            ids.push(tok.eos_id);
+            let mut prev = tok.bos_id;
+            for &id in &ids {
+                uni[id as usize] += 1.0;
+                *bigram.entry(prev).or_default().entry(id).or_insert(0) += 1;
+                prev = id;
+            }
+        }
+        let total: f32 = uni.iter().sum();
+        let unigram = uni.iter().map(|c| (c / total).ln()).collect();
+        MockModel { tok, lanes: vec![None; lanes], max_seq, seed, unigram, bigram }
+    }
+
+    fn logits_for(&self, history: &[u32]) -> Vec<f32> {
+        let v = self.tok.vocab_size();
+        let prev = history.last().copied().unwrap_or(self.tok.bos_id);
+        let mut logits = vec![0f32; v];
+        let big = self.bigram.get(&prev);
+        // Context hash for the noise term: last 4 tokens.
+        let mut h = self.seed;
+        for &t in history.iter().rev().take(4) {
+            h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64 + 1);
+        }
+        for (id, l) in logits.iter_mut().enumerate() {
+            let b = big.and_then(|m| m.get(&(id as u32))).copied().unwrap_or(0) as f32;
+            let noise = {
+                let mut x = h ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                x ^= x >> 33;
+                x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+                x ^= x >> 33;
+                (x & 0xFFFF) as f32 / 65536.0
+            };
+            // bigram dominates; unigram smooths; noise breaks ties and
+            // makes the model "hallucinate" off-corpus plausibly.
+            *l = 2.0 * (b + 0.5).ln() + 0.5 * self.unigram[id] + 1.5 * noise;
+        }
+        // PAD/BOS never sampled.
+        logits[self.tok.pad_id as usize] = f32::NEG_INFINITY;
+        logits[self.tok.bos_id as usize] = f32::NEG_INFINITY;
+        logits
+    }
+}
+
+impl LanguageModel for MockModel {
+    fn vocab_size(&self) -> usize {
+        self.tok.vocab_size()
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, lane: usize, tokens: &[u32]) -> Result<Vec<f32>> {
+        if lane >= self.lanes.len() {
+            bail!("lane {lane} out of range");
+        }
+        if tokens.len() >= self.max_seq {
+            bail!("prompt longer than max_seq");
+        }
+        self.lanes[lane] = Some(tokens.to_vec());
+        Ok(self.logits_for(tokens))
+    }
+
+    fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(self.lanes.len());
+        for (lane, l) in last.iter().enumerate() {
+            match (l, self.lanes.get_mut(lane).and_then(|x| x.as_mut())) {
+                (Some(t), Some(hist)) => {
+                    hist.push(*t);
+                    if hist.len() >= self.max_seq {
+                        bail!("lane {lane} exceeded max_seq");
+                    }
+                    let hist = hist.clone();
+                    out.push(Some(self.logits_for(&hist)));
+                }
+                (None, _) => out.push(None),
+                (Some(_), None) => bail!("decode on inactive lane {lane}"),
+            }
+        }
+        Ok(out)
+    }
+
+    fn release(&mut self, lane: usize) {
+        self.lanes[lane] = None;
+    }
+
+    fn name(&self) -> &'static str {
+        "mock-bigram"
+    }
+}

@@ -1,0 +1,102 @@
+//! Model runtime: the L2/L1 compute path behind the coordinator.
+//!
+//! [`LanguageModel`] abstracts a fixed-lane, fixed-sequence-length decoder
+//! LM. Two implementations:
+//!
+//! - [`PjrtModel`] — loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (JAX transformer + Pallas kernels, AOT) and
+//!   executes them over the PJRT CPU client with a device-resident KV
+//!   cache (`execute_b`). Python is never on this path.
+//! - [`MockModel`] — a deterministic bigram LM over the same tokenizer,
+//!   used by tests and benches so the whole stack runs without artifacts.
+
+mod mock;
+mod pjrt;
+
+pub use mock::MockModel;
+pub use pjrt::{PjrtModel, PjrtVariant};
+
+use anyhow::Result;
+
+/// Constructs the model inside the scheduler thread (see
+/// [`LanguageModel`]'s `Send` note).
+pub type ModelFactory = Box<dyn FnOnce() -> Result<Box<dyn LanguageModel>> + Send>;
+
+/// A batched, stateful decoder language model with `lanes()` independent
+/// sequence slots (continuous batching admits into free lanes).
+///
+/// Deliberately NOT `Send`: PJRT wrappers hold `Rc` internals, so the
+/// coordinator constructs the model *inside* its scheduler thread via a
+/// [`ModelFactory`].
+pub trait LanguageModel {
+    /// Vocabulary size |V| (logit width).
+    fn vocab_size(&self) -> usize;
+
+    /// Number of batch lanes B.
+    fn lanes(&self) -> usize;
+
+    /// Maximum sequence length per lane (prompt + generation).
+    fn max_seq(&self) -> usize;
+
+    /// Initialise `lane` with prompt tokens; returns next-token logits.
+    fn prefill(&mut self, lane: usize, tokens: &[u32]) -> Result<Vec<f32>>;
+
+    /// One decode step. `last[lane]` is the token sampled for that lane at
+    /// the previous position (None = lane inactive). Returns logits per
+    /// active lane.
+    fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>>;
+
+    /// Free a lane (sequence finished/evicted).
+    fn release(&mut self, lane: usize);
+
+    /// Implementation name for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::Tokenizer;
+    use std::sync::Arc;
+
+    #[test]
+    fn mock_model_smoke() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let docs: Vec<Vec<u8>> = vec![b"{\"a\": 1}".to_vec(), b"{\"b\": [2, 3]}".to_vec()];
+        let mut m = MockModel::from_documents(tok.clone(), &docs, 4, 128, 7);
+        assert_eq!(m.vocab_size(), tok.vocab_size());
+        let logits = m.prefill(0, &[tok.bos_id]).unwrap();
+        assert_eq!(logits.len(), tok.vocab_size());
+        let out = m.decode(&[Some(b'{' as u32), None, None, None]).unwrap();
+        assert!(out[0].is_some());
+        assert!(out[1].is_none());
+        m.release(0);
+    }
+
+    #[test]
+    fn mock_model_deterministic() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let docs = vec![b"abc abc abc".to_vec()];
+        let mut a = MockModel::from_documents(tok.clone(), &docs, 1, 64, 9);
+        let mut b = MockModel::from_documents(tok.clone(), &docs, 1, 64, 9);
+        let la = a.prefill(0, &[97, 98]).unwrap();
+        let lb = b.prefill(0, &[97, 98]).unwrap();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn mock_model_prefers_corpus_bigrams() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        // corpus: 'a' always followed by 'b'
+        let docs = vec![b"ababababababababab".to_vec()];
+        let mut m = MockModel::from_documents(tok.clone(), &docs, 1, 64, 1);
+        let logits = m.prefill(0, &[b'a' as u32]).unwrap();
+        let best = logits
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, b'b' as usize);
+    }
+}

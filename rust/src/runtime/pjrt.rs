@@ -1,0 +1,287 @@
+//! PJRT-backed model: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and serves them from Rust.
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//!
+//! - `config.json` — `{vocab_size, lanes, max_seq, n_layers, n_heads,
+//!   d_head, d_model}`;
+//! - `prefill.hlo.txt` — `(tokens i32[S], length i32[], lane i32[],
+//!   k f32[L,B,S,H,Dh], v f32[L,B,S,H,Dh]) -> (logits f32[V], k', v')`:
+//!   recompute one lane's KV cache from its prompt;
+//! - `decode.hlo.txt` — `(tokens i32[B], pos i32[B], k, v) ->
+//!   (logits f32[B,V], k', v')`: one step for all lanes;
+//! - `forward.hlo.txt` — `(tokens i32[B,S], lens i32[B]) ->
+//!   (logits f32[B,V],)`: stateless full recompute (the §Perf "before"
+//!   variant — [`PjrtVariant::FullRecompute`]).
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits protos whose
+//! 64-bit instruction ids the crate's xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids). Weights are baked into the HLO as
+//! constants, so the Rust side feeds only tokens/positions/caches.
+
+use super::LanguageModel;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which executable drives `decode`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PjrtVariant {
+    /// KV-cache decode step (optimised path).
+    KvCache,
+    /// Stateless full-sequence recompute each step (perf baseline).
+    FullRecompute,
+}
+
+/// Model configuration mirrored from `config.json`.
+#[derive(Debug, Clone)]
+pub struct PjrtConfig {
+    pub vocab_size: usize,
+    pub lanes: usize,
+    pub max_seq: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
+pub struct PjrtModel {
+    cfg: PjrtConfig,
+    variant: PjrtVariant,
+    _client: xla::PjRtClient,
+    prefill_exe: Option<xla::PjRtLoadedExecutable>,
+    decode_exe: Option<xla::PjRtLoadedExecutable>,
+    forward_exe: Option<xla::PjRtLoadedExecutable>,
+    /// KV caches as host literals (fed each step; see DESIGN.md §Perf for
+    /// the buffer-resident follow-up).
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    /// Host-side token history per lane (needed by FullRecompute and for
+    /// positions).
+    hist: Vec<Option<Vec<u32>>>,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path: PathBuf = dir.join(name);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+    )
+    .with_context(|| format!("loading {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {name}"))
+}
+
+impl PjrtModel {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path, variant: PjrtVariant) -> Result<PjrtModel> {
+        let cfg_text = std::fs::read_to_string(dir.join("config.json"))
+            .with_context(|| format!("{}/config.json", dir.display()))?;
+        let cj = parse(&cfg_text).map_err(|e| anyhow!("config.json: {e}"))?;
+        let field = |k: &str| -> Result<usize> {
+            cj.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config.json: missing {k}"))
+        };
+        let cfg = PjrtConfig {
+            vocab_size: field("vocab_size")?,
+            lanes: field("lanes")?,
+            max_seq: field("max_seq")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            d_head: field("d_head")?,
+        };
+        let client = xla::PjRtClient::cpu()?;
+        let (prefill_exe, decode_exe, forward_exe) = match variant {
+            PjrtVariant::KvCache => (
+                Some(load_exe(&client, dir, "prefill.hlo.txt")?),
+                Some(load_exe(&client, dir, "decode.hlo.txt")?),
+                None,
+            ),
+            PjrtVariant::FullRecompute => {
+                (None, None, Some(load_exe(&client, dir, "forward.hlo.txt")?))
+            }
+        };
+        let cache_len = cfg.n_layers * cfg.lanes * cfg.max_seq * cfg.n_heads * cfg.d_head;
+        let dims: Vec<i64> = vec![
+            cfg.n_layers as i64,
+            cfg.lanes as i64,
+            cfg.max_seq as i64,
+            cfg.n_heads as i64,
+            cfg.d_head as i64,
+        ];
+        let zeros = vec![0f32; cache_len];
+        let k_cache = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        let v_cache = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        Ok(PjrtModel {
+            hist: vec![None; cfg.lanes],
+            cfg,
+            variant,
+            _client: client,
+            prefill_exe,
+            decode_exe,
+            forward_exe,
+            k_cache,
+            v_cache,
+        })
+    }
+
+    /// Run the stateless full forward for all active lanes.
+    fn forward_logits(&mut self) -> Result<Vec<Option<Vec<f32>>>> {
+        let (b, s, v) = (self.cfg.lanes, self.cfg.max_seq, self.cfg.vocab_size);
+        let mut tokens = vec![0i32; b * s];
+        let mut lens = vec![1i32; b]; // len 0 would index -1; inactive lanes read pos 0
+        for (lane, h) in self.hist.iter().enumerate() {
+            if let Some(h) = h {
+                for (i, &t) in h.iter().enumerate() {
+                    tokens[lane * s + i] = t as i32;
+                }
+                lens[lane] = h.len() as i32;
+            }
+        }
+        let t_lit = xla::Literal::vec1(&tokens).reshape(&[b as i64, s as i64])?;
+        let l_lit = xla::Literal::vec1(&lens);
+        let exe = self.forward_exe.as_ref().expect("forward exe");
+        let out = exe.execute::<&xla::Literal>(&[&t_lit, &l_lit])?[0][0].to_literal_sync()?;
+        let logits_lit = out.to_tuple1()?;
+        let flat = logits_lit.to_vec::<f32>()?;
+        let mut res = Vec::with_capacity(b);
+        for (lane, h) in self.hist.iter().enumerate() {
+            if h.is_some() {
+                res.push(Some(flat[lane * v..(lane + 1) * v].to_vec()));
+            } else {
+                res.push(None);
+            }
+        }
+        Ok(res)
+    }
+}
+
+impl LanguageModel for PjrtModel {
+    fn vocab_size(&self) -> usize {
+        self.cfg.vocab_size
+    }
+
+    fn lanes(&self) -> usize {
+        self.cfg.lanes
+    }
+
+    fn max_seq(&self) -> usize {
+        self.cfg.max_seq
+    }
+
+    fn prefill(&mut self, lane: usize, tokens: &[u32]) -> Result<Vec<f32>> {
+        if lane >= self.cfg.lanes {
+            bail!("lane {lane} out of range");
+        }
+        if tokens.is_empty() || tokens.len() >= self.cfg.max_seq {
+            bail!("prompt length {} outside (0, {})", tokens.len(), self.cfg.max_seq);
+        }
+        self.hist[lane] = Some(tokens.to_vec());
+        match self.variant {
+            PjrtVariant::FullRecompute => {
+                let all = self.forward_logits()?;
+                Ok(all[lane].clone().expect("lane just activated"))
+            }
+            PjrtVariant::KvCache => {
+                let s = self.cfg.max_seq;
+                let mut padded = vec![0i32; s];
+                for (i, &t) in tokens.iter().enumerate() {
+                    padded[i] = t as i32;
+                }
+                let t_lit = xla::Literal::vec1(&padded);
+                let len_lit = xla::Literal::scalar(tokens.len() as i32);
+                let lane_lit = xla::Literal::scalar(lane as i32);
+                let exe = self.prefill_exe.as_ref().expect("prefill exe");
+                let out = exe.execute::<&xla::Literal>(&[
+                    &t_lit,
+                    &len_lit,
+                    &lane_lit,
+                    &self.k_cache,
+                    &self.v_cache,
+                ])?[0][0]
+                    .to_literal_sync()?;
+                let parts = out.to_tuple()?;
+                let mut it = parts.into_iter();
+                let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
+                self.k_cache = it.next().ok_or_else(|| anyhow!("missing k'"))?;
+                self.v_cache = it.next().ok_or_else(|| anyhow!("missing v'"))?;
+                Ok(logits.to_vec::<f32>()?)
+            }
+        }
+    }
+
+    fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>> {
+        let b = self.cfg.lanes;
+        if last.len() != b {
+            bail!("decode expects {b} lanes");
+        }
+        // Append sampled tokens to histories; positions are the indices
+        // where these tokens land.
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for lane in 0..b {
+            if let Some(t) = last[lane] {
+                let h = self.hist[lane]
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("decode on inactive lane {lane}"))?;
+                pos[lane] = h.len() as i32;
+                h.push(t);
+                toks[lane] = t as i32;
+                if h.len() >= self.cfg.max_seq {
+                    bail!("lane {lane} exceeded max_seq");
+                }
+            }
+        }
+        match self.variant {
+            PjrtVariant::FullRecompute => {
+                let mut all = self.forward_logits()?;
+                for lane in 0..b {
+                    if last[lane].is_none() {
+                        all[lane] = None;
+                    }
+                }
+                Ok(all)
+            }
+            PjrtVariant::KvCache => {
+                let t_lit = xla::Literal::vec1(&toks);
+                let p_lit = xla::Literal::vec1(&pos);
+                let exe = self.decode_exe.as_ref().expect("decode exe");
+                let out = exe.execute::<&xla::Literal>(&[
+                    &t_lit,
+                    &p_lit,
+                    &self.k_cache,
+                    &self.v_cache,
+                ])?[0][0]
+                    .to_literal_sync()?;
+                let parts = out.to_tuple()?;
+                let mut it = parts.into_iter();
+                let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
+                self.k_cache = it.next().ok_or_else(|| anyhow!("missing k'"))?;
+                self.v_cache = it.next().ok_or_else(|| anyhow!("missing v'"))?;
+                let v = self.cfg.vocab_size;
+                let flat = logits.to_vec::<f32>()?;
+                let mut res = Vec::with_capacity(b);
+                for lane in 0..b {
+                    if last[lane].is_some() {
+                        res.push(Some(flat[lane * v..(lane + 1) * v].to_vec()));
+                    } else {
+                        res.push(None);
+                    }
+                }
+                Ok(res)
+            }
+        }
+    }
+
+    fn release(&mut self, lane: usize) {
+        self.hist[lane] = None;
+    }
+
+    fn name(&self) -> &'static str {
+        match self.variant {
+            PjrtVariant::KvCache => "pjrt-kv",
+            PjrtVariant::FullRecompute => "pjrt-full",
+        }
+    }
+}

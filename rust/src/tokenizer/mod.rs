@@ -1,0 +1,284 @@
+//! Byte-level BPE tokenizer.
+//!
+//! The LLM vocabulary V (paper §2.1) is shared between the Python compile
+//! path (which trains the merges and the LM over the resulting ids) and
+//! this Rust serving path via `artifacts/tokenizer.json`. Token
+//! *misalignment* — LLM tokens straddling lexical-token boundaries, the
+//! core difficulty SynCode addresses — arises exactly because BPE merges
+//! produce multi-byte tokens like `": "` or `ret`.
+//!
+//! Ids 0..256 are the raw bytes; id `256+k` is the concatenation of the
+//! pair recorded in `merges[k]`; special tokens (`<eos>`, `<bos>`, `<pad>`)
+//! occupy the last ids. A small trainer is included so Rust tests and the
+//! mock-LM path run without Python artifacts.
+
+use crate::util::json::{parse, Json};
+use std::collections::HashMap;
+
+/// Byte-level BPE tokenizer.
+pub struct Tokenizer {
+    /// Token id → byte string (empty for specials).
+    vocab: Vec<Vec<u8>>,
+    /// Pair → merged id, with rank = id - 256 (lower id = earlier merge).
+    merge_map: HashMap<(u32, u32), u32>,
+    pub eos_id: u32,
+    pub bos_id: u32,
+    pub pad_id: u32,
+}
+
+impl Tokenizer {
+    /// Total vocabulary size |V| (including specials).
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Bytes of a token (empty slice for specials).
+    pub fn token_bytes(&self, id: u32) -> &[u8] {
+        &self.vocab[id as usize]
+    }
+
+    /// True for `<eos>`/`<bos>`/`<pad>`.
+    pub fn is_special(&self, id: u32) -> bool {
+        id == self.eos_id || id == self.bos_id || id == self.pad_id
+    }
+
+    /// Greedy BPE encoding: repeatedly apply the earliest-ranked merge.
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (merged id, pos)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&m) = self.merge_map.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(bm, _)| m < bm).unwrap_or(true) {
+                        best = Some((m, i));
+                    }
+                }
+            }
+            match best {
+                Some((m, i)) => {
+                    ids[i] = m;
+                    ids.remove(i + 1);
+                }
+                None => return ids,
+            }
+        }
+    }
+
+    /// Decode ids to bytes (specials decode to nothing).
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            out.extend_from_slice(&self.vocab[id as usize]);
+        }
+        out
+    }
+
+    /// Decode to a lossy string (for display).
+    pub fn decode_str(&self, ids: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode(ids)).to_string()
+    }
+
+    /// Build from the merge list (ids 0..256 are bytes, then one id per
+    /// merge, then pad/bos/eos).
+    pub fn from_merges(merges: &[(u32, u32)]) -> Tokenizer {
+        let mut vocab: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merge_map = HashMap::new();
+        for (k, &(a, b)) in merges.iter().enumerate() {
+            let id = 256 + k as u32;
+            let mut bytes = vocab[a as usize].clone();
+            bytes.extend_from_slice(&vocab[b as usize]);
+            vocab.push(bytes);
+            merge_map.insert((a, b), id);
+        }
+        let pad_id = vocab.len() as u32;
+        let bos_id = pad_id + 1;
+        let eos_id = pad_id + 2;
+        vocab.push(Vec::new());
+        vocab.push(Vec::new());
+        vocab.push(Vec::new());
+        Tokenizer { vocab, merge_map, eos_id, bos_id, pad_id }
+    }
+
+    /// The trivial tokenizer: 256 byte tokens + specials. Used by tests
+    /// and anywhere artifacts are unavailable.
+    pub fn ascii_byte_level() -> Tokenizer {
+        Tokenizer::from_merges(&[])
+    }
+
+    /// Load `artifacts/tokenizer.json` (written by `python/compile/aot.py`).
+    pub fn from_json(text: &str) -> Result<Tokenizer, String> {
+        let v = parse(text).map_err(|e| e.to_string())?;
+        let merges = v
+            .get("merges")
+            .and_then(Json::as_arr)
+            .ok_or("tokenizer.json: missing merges")?;
+        let pairs: Vec<(u32, u32)> = merges
+            .iter()
+            .map(|m| {
+                let p = m.as_arr().ok_or("merge not a pair")?;
+                if p.len() != 2 {
+                    return Err("merge not a pair".to_string());
+                }
+                Ok((
+                    p[0].as_usize().ok_or("bad merge id")? as u32,
+                    p[1].as_usize().ok_or("bad merge id")? as u32,
+                ))
+            })
+            .collect::<Result<_, String>>()?;
+        let tok = Tokenizer::from_merges(&pairs);
+        if let Some(n) = v.get("vocab_size").and_then(Json::as_usize) {
+            if n != tok.vocab_size() {
+                return Err(format!(
+                    "tokenizer.json vocab_size {n} != derived {}",
+                    tok.vocab_size()
+                ));
+            }
+        }
+        Ok(tok)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Tokenizer, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Tokenizer::from_json(&text)
+    }
+
+    /// Serialise to the shared JSON format.
+    pub fn to_json(&self) -> String {
+        let mut merges: Vec<(u32, u32, u32)> =
+            self.merge_map.iter().map(|(&(a, b), &id)| (id, a, b)).collect();
+        merges.sort();
+        let pairs: Vec<Json> = merges
+            .iter()
+            .map(|&(_, a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+            .collect();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("vocab_size".to_string(), Json::Num(self.vocab_size() as f64));
+        obj.insert("merges".to_string(), Json::Arr(pairs));
+        Json::Obj(obj).to_string()
+    }
+
+    /// Train a BPE tokenizer on a corpus: `n_merges` highest-frequency
+    /// adjacent pairs, recomputed after each merge (classic algorithm,
+    /// adequate at our corpus sizes).
+    pub fn train(corpus: &[u8], n_merges: usize) -> Tokenizer {
+        let mut ids: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        let mut merges: Vec<(u32, u32)> = Vec::with_capacity(n_merges);
+        for k in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic: max count, ties by smallest pair.
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = 256 + k as u32;
+            merges.push(pair);
+            // Apply the merge in place.
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        Tokenizer::from_merges(&merges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::ascii_byte_level();
+        assert_eq!(t.vocab_size(), 259);
+        let ids = t.encode(b"hello");
+        assert_eq!(ids, vec![104, 101, 108, 108, 111]);
+        assert_eq!(t.decode(&ids), b"hello");
+    }
+
+    #[test]
+    fn trained_tokenizer_merges() {
+        let corpus = b"the cat sat on the mat the cat sat".repeat(20);
+        let t = Tokenizer::train(&corpus, 30);
+        assert!(t.vocab_size() > 259);
+        let ids = t.encode(b"the cat");
+        // merges shorten the sequence
+        assert!(ids.len() < 7, "{ids:?}");
+        assert_eq!(t.decode(&ids), b"the cat");
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let corpus = br#"{"key": "value", "n": [1, 2, 3], "b": true}"#.repeat(50);
+        let t = Tokenizer::train(&corpus, 100);
+        let mut rng = Rng::new(42);
+        let alphabet: Vec<u8> = (32..127u8).collect();
+        for _ in 0..200 {
+            let s = prop::ascii_string(&mut rng, &alphabet, 40);
+            let ids = t.encode(s.as_bytes());
+            assert_eq!(t.decode(&ids), s.as_bytes(), "roundtrip failed for {s:?}");
+        }
+    }
+
+    #[test]
+    fn json_serialisation_roundtrip() {
+        let corpus = b"for i in range(10): print(i)".repeat(30);
+        let t = Tokenizer::train(&corpus, 40);
+        let j = t.to_json();
+        let t2 = Tokenizer::from_json(&j).unwrap();
+        assert_eq!(t.vocab_size(), t2.vocab_size());
+        let sample = b"for i in range(3): print(i)";
+        assert_eq!(t.encode(sample), t2.encode(sample));
+    }
+
+    #[test]
+    fn specials_distinct_and_empty() {
+        let t = Tokenizer::train(b"abcabcabc", 5);
+        assert!(t.is_special(t.eos_id));
+        assert!(t.is_special(t.bos_id));
+        assert!(t.is_special(t.pad_id));
+        assert_ne!(t.eos_id, t.bos_id);
+        assert!(t.token_bytes(t.eos_id).is_empty());
+    }
+
+    #[test]
+    fn multibyte_tokens_exist_and_straddle() {
+        // Token misalignment: a merged token can straddle lexical tokens
+        // (e.g. `": "` spans COLON and WS in JSON).
+        let corpus = br#"{"a": 1, "b": 2, "c": 3}"#.repeat(100);
+        let t = Tokenizer::train(&corpus, 60);
+        let straddler = (0..t.vocab_size() as u32)
+            .find(|&id| t.token_bytes(id) == b"\": ");
+        assert!(straddler.is_some() || t.vocab_size() > 259);
+    }
+
+    #[test]
+    fn encode_empty() {
+        let t = Tokenizer::ascii_byte_level();
+        assert!(t.encode(b"").is_empty());
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(Tokenizer::from_json("{}").is_err());
+        assert!(Tokenizer::from_json("not json").is_err());
+    }
+}

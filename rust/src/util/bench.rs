@@ -1,0 +1,155 @@
+//! Micro/meso benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + timed sampling with mean / p50 / p95 / p99 statistics
+//! and a tabular reporter used by every `benches/` target to print the
+//! paper's tables and figure series.
+
+use std::time::Instant;
+
+/// Summary statistics for one measured quantity, in seconds.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute statistics from raw samples (seconds).
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean: xs.iter().sum::<f64>() / n as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+}
+
+/// Time a closure `iters` times after `warmup` unmeasured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for i in 0..ncols {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &widths, &mut out);
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_fn_runs() {
+        let mut count = 0;
+        let s = time_fn(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("name"));
+        assert!(r.lines().count() == 4);
+    }
+}

@@ -1,0 +1,230 @@
+//! Fixed-width bitsets used as vocabulary masks (Definition 11 of the paper).
+//!
+//! A mask `m ∈ {0,1}^|V|` is stored as `⌈|V|/64⌉` little-endian `u64` words.
+//! Union (the hot operation of Algorithm 2) is a branchless word-wise OR that
+//! the compiler auto-vectorises; this is the CPU analogue of the paper's
+//! GPU-tensor mask union.
+
+/// A bitset over a fixed universe of `len` elements (LLM vocabulary ids).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitSet(len={}, ones={})", self.len, self.count_ones())
+    }
+}
+
+impl BitSet {
+    /// Empty set over a universe of `len` elements.
+    pub fn new(len: usize) -> Self {
+        BitSet { words: vec![0u64; len.div_ceil(64)], len }
+    }
+
+    /// Full set over a universe of `len` elements.
+    pub fn full(len: usize) -> Self {
+        let mut s = Self::new(len);
+        for w in s.words.iter_mut() {
+            *w = !0u64;
+        }
+        s.clear_tail();
+        s
+    }
+
+    fn clear_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Universe size.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the universe is empty.
+    pub fn is_empty_universe(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// In-place union: `self |= other`. The hot operation of Algorithm 2.
+    #[inline]
+    pub fn union_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// In-place intersection: `self &= other`.
+    #[inline]
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a &= *b;
+        }
+    }
+
+    /// Reset all bits to zero (reuses the allocation — hot-path friendly).
+    pub fn clear_all(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = 0;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True when no bit is set.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// True when `self ⊆ other`.
+    pub fn is_subset(&self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(other.words.iter()).all(|(a, b)| a & !b == 0)
+    }
+
+    /// Iterator over the indices of set bits, ascending.
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter { set: self, word_idx: 0, cur: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Raw words (little-endian, tail bits zero). Used for serialisation and
+    /// for shipping masks to the PJRT `mask_union_softmax` kernel.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words produced by [`BitSet::words`].
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64));
+        let mut s = BitSet { words, len };
+        s.clear_tail();
+        s
+    }
+}
+
+/// Iterator over set-bit indices.
+pub struct OnesIter<'a> {
+    set: &'a BitSet,
+    word_idx: usize,
+    cur: u64,
+}
+
+impl<'a> Iterator for OnesIter<'a> {
+    type Item = usize;
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let bit = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some(self.word_idx * 64 + bit);
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.set.words.len() {
+                return None;
+            }
+            self.cur = self.set.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count_ones(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn union_intersect() {
+        let mut a = BitSet::new(100);
+        let mut b = BitSet::new(100);
+        a.set(1);
+        a.set(50);
+        b.set(50);
+        b.set(99);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.iter_ones().collect::<Vec<_>>(), vec![1, 50, 99]);
+        let mut i = a.clone();
+        i.intersect_with(&b);
+        assert_eq!(i.iter_ones().collect::<Vec<_>>(), vec![50]);
+    }
+
+    #[test]
+    fn full_has_exact_len_ones() {
+        let f = BitSet::full(67);
+        assert_eq!(f.count_ones(), 67);
+        assert!(f.get(66));
+    }
+
+    #[test]
+    fn iter_ones_empty_and_dense() {
+        let b = BitSet::new(64);
+        assert_eq!(b.iter_ones().count(), 0);
+        let f = BitSet::full(64);
+        assert_eq!(f.iter_ones().count(), 64);
+    }
+
+    #[test]
+    fn subset() {
+        let mut a = BitSet::new(10);
+        a.set(3);
+        let mut b = a.clone();
+        b.set(7);
+        assert!(a.is_subset(&b));
+        assert!(!b.is_subset(&a));
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut a = BitSet::new(70);
+        a.set(0);
+        a.set(69);
+        let b = BitSet::from_words(a.words().to_vec(), 70);
+        assert_eq!(a, b);
+    }
+}

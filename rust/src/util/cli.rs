@@ -1,0 +1,112 @@
+//! Tiny command-line argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed numeric option with default.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag (`--verbose`) or `--verbose true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        // Convention: positionals come before options; `--key value` binds
+        // the next token unless it starts with `--`.
+        let a = parse("serve file.txt --port 8080 --grammar=json --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("grammar"), Some("json"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse("run --n 5");
+        assert_eq!(a.get_num("n", 0usize), 5);
+        assert_eq!(a.get_num("missing", 7usize), 7);
+        assert_eq!(a.get_num::<f64>("n", 0.0), 5.0);
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Small, dependency-free substrates shared across the stack.
+//!
+//! The offline build environment only vendors the `xla` crate tree, so the
+//! pieces a typical Rust service would pull from crates.io (JSON, CLI
+//! parsing, bench statistics, property-test drivers, bitsets, RNG) are
+//! implemented here from scratch.
+
+pub mod bench;
+pub mod bitset;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Monotonic wall-clock helper returning seconds elapsed since `start`.
+pub fn secs_since(start: std::time::Instant) -> f64 {
+    start.elapsed().as_secs_f64()
+}

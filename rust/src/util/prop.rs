@@ -1,0 +1,83 @@
+//! Property-based testing driver (proptest is not available offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each, reporting the failing case and the seed that
+//! reproduces it. Shrinking is intentionally omitted — failures print the
+//! concrete input, which at our input sizes is directly debuggable.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs. Panics with the failing input
+/// on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\ninput = {input:#?}",
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\ninput = {input:#?}",
+            );
+        }
+    }
+}
+
+/// Generate a random ASCII string drawn from `alphabet` with length in
+/// [0, max_len].
+pub fn ascii_string(rng: &mut Rng, alphabet: &[u8], max_len: usize) -> String {
+    let len = rng.below(max_len + 1);
+    (0..len).map(|_| *rng.choose(alphabet) as char).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |r| r.below(10), |_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 100, |r| r.below(10), |&x| x < 9);
+    }
+
+    #[test]
+    fn ascii_string_respects_alphabet() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let s = ascii_string(&mut r, b"ab", 8);
+            assert!(s.len() <= 8);
+            assert!(s.chars().all(|c| c == 'a' || c == 'b'));
+        }
+    }
+}

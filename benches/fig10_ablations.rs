@@ -11,10 +11,9 @@
 //!     stays near-linear (paper reports 9× at 300 tokens).
 
 use std::sync::Arc;
-use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
+use syncode::engine::ConstraintEngine;
 use syncode::eval::dataset;
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::tokenizer::Tokenizer;
 use syncode::util::bench::Table;
 
@@ -32,18 +31,17 @@ fn long_json(n_items: usize) -> Vec<u8> {
 }
 
 struct Env {
-    cx: Arc<GrammarContext>,
-    store: Arc<MaskStore>,
+    art: Arc<CompiledGrammar>,
     tok: Arc<Tokenizer>,
 }
 
 fn env() -> Env {
-    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
     let docs = dataset::corpus("json", 150, 7);
     let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
     let tok = Arc::new(Tokenizer::train(&flat, 200));
-    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
-    Env { cx, store, tok }
+    let art = CompiledGrammar::compile("json", tok.clone(), &ArtifactConfig::default())
+        .expect("compile json");
+    Env { art, tok }
 }
 
 /// Replay `doc` through the engine `n_tokens` BPE tokens deep, computing
@@ -52,7 +50,7 @@ fn env() -> Env {
 fn replay(e: &Env, doc: &[u8], n_tokens: usize, masked: bool, incremental: bool) -> f64 {
     let ids = e.tok.encode(doc);
     let n = n_tokens.min(ids.len());
-    let mut eng = SyncodeEngine::new(e.cx.clone(), e.store.clone(), e.tok.clone());
+    let mut eng = e.art.engine();
     eng.set_incremental(incremental);
     eng.reset("");
     let t0 = std::time::Instant::now();

@@ -9,10 +9,9 @@
 //! vs full-recompute executables (the L2 before/after).
 
 use std::sync::Arc;
-use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
+use syncode::engine::ConstraintEngine;
 use syncode::eval::dataset;
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::runtime::{LanguageModel, PjrtModel, PjrtVariant};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::bench::{fmt_secs, time_fn, Table};
@@ -38,11 +37,11 @@ fn json_prefix(len: usize) -> String {
 
 fn l3_engine_ops() {
     println!("# §Perf — L3 engine hot-path operations (json grammar)\n");
-    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
     let docs = dataset::corpus("json", 150, 7);
     let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
     let tok = Arc::new(Tokenizer::train(&flat, 200));
-    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+    let art = CompiledGrammar::compile("json", tok.clone(), &ArtifactConfig::default())
+        .expect("compile json");
     let mut t = Table::new(&[
         "C_k bytes",
         "compute_mask",
@@ -52,7 +51,7 @@ fn l3_engine_ops() {
     ]);
     for len in [50usize, 200, 800, 2000] {
         let prefix = json_prefix(len);
-        let mut eng = SyncodeEngine::new(cx.clone(), store.clone(), tok.clone());
+        let mut eng = art.engine();
         eng.reset(&prefix);
         let mask_t = time_fn(3, 30, || {
             eng.append(b""); // invalidate the step cache: full recompute

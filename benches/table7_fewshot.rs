@@ -36,6 +36,7 @@ fn main() {
                     id: task.id,
                     prompt: dataset::calc_few_shot_prompt(task),
                     constraint_prefix: String::new(),
+                    grammar: None,
                     params: params.clone(),
                 });
                 let ans = r.text.lines().next().unwrap_or("").trim();
@@ -72,6 +73,7 @@ fn main() {
                     id: task.id,
                     prompt: task.prefix.clone(),
                     constraint_prefix: task.prefix.clone(),
+                    grammar: None,
                     params: params.clone(),
                 });
                 let full = format!("{}{}", task.prefix, r.text);

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI gate: format, lint, build, test. Run from the repo root.
+#
+#   ./ci.sh            # full gate
+#   ./ci.sh --fast     # skip the release build (fmt + clippy + debug tests)
+#
+# The crate is dependency-free by design (see Cargo.toml), so this needs
+# only a Rust toolchain — no network access.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+if [[ "$fast" == "0" ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "CI gate passed."

@@ -7,18 +7,18 @@
 //! ```
 
 use std::sync::Arc;
-use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
+use syncode::engine::ConstraintEngine;
 use syncode::eval::exec::eval_calc;
 use syncode::lexer::Lexer;
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::tokenizer::Tokenizer;
 
 fn main() {
-    let cx = Arc::new(GrammarContext::builtin("calc", LrMode::Lalr).unwrap());
     let tok = Arc::new(Tokenizer::ascii_byte_level());
-    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
-    let mut eng = SyncodeEngine::new(cx.clone(), store, tok.clone());
+    let art = CompiledGrammar::compile("calc", tok.clone(), &ArtifactConfig::default())
+        .expect("compile calc");
+    let cx = art.cx.clone();
+    let mut eng = art.engine();
 
     // §3.2: C_k = "math_sqrt(3) * (2" — remainder r = "2", accept
     // sequences include {int, add}, {int, rpar}, {float}.
@@ -42,7 +42,7 @@ fn main() {
     eng.reset(ck);
     let seqs = eng.accept_sequences().unwrap();
     println!("\naccept sequences A ({}):", seqs.len());
-    for s in &seqs {
+    for s in seqs {
         let names: Vec<&str> =
             s.iter().map(|&t| cx.grammar.terminals[t as usize].name.as_str()).collect();
         println!("  {{{}}}", names.join(", "));

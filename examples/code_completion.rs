@@ -33,6 +33,7 @@ fn main() {
                     id: t.id,
                     prompt: t.prefix.clone(),
                     constraint_prefix: t.prefix.clone(),
+                    grammar: None,
                     params: params.clone(),
                 });
                 let full = format!("{}{}", t.prefix, r.text);

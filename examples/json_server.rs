@@ -12,12 +12,10 @@
 //! `--unconstrained` (Standard engine for comparison).
 
 use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
 use syncode::coordinator::{EngineFactory, GenParams, GenRequest, Server, Strategy};
 use syncode::engine::baselines::StandardEngine;
-use syncode::engine::{GrammarContext, SyncodeEngine};
 use syncode::eval::{dataset, schema};
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::runtime::{MockModel, ModelFactory, PjrtModel, PjrtVariant};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::cli::Args;
@@ -26,16 +24,17 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let n = args.get_num("requests", 12usize);
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
 
     // --- model + tokenizer --------------------------------------------------
     let use_mock = args.flag("mock") || !dir.join("config.json").exists();
     let (model, tok): (ModelFactory, Arc<Tokenizer>) = if use_mock {
         eprintln!("[mock model — run `make artifacts` for the PJRT path]");
+        // Same recipe as `syncode compile/serve --grammars json` (corpus
+        // 120 docs seed 7, 160 merges).
         let docs = dataset::corpus("json", 120, 7);
         let tok = Arc::new(Tokenizer::train(
             &docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect::<Vec<u8>>(),
-            200,
+            160,
         ));
         let tok_m = tok.clone();
         (
@@ -59,19 +58,28 @@ fn main() {
     let factory: EngineFactory = if args.flag("unconstrained") {
         Box::new(|| Box::new(StandardEngine::new()))
     } else {
-        let store =
-            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        // Compile the grammar artifact (or warm-load the cache written by
+        // a previous run of this example — the CLI's caches use
+        // tokenizer-fingerprinted names, so this fixed name is private).
+        let cache = std::path::PathBuf::from(
+            args.get_or("grammar-cache", "artifacts/grammar-cache"),
+        )
+        .join("json-example.syncart");
+        let (art, warm) = CompiledGrammar::load_or_compile(
+            &cache,
+            "json",
+            tok.clone(),
+            &ArtifactConfig::default(),
+        )
+        .expect("compile json artifact");
         println!(
-            "mask store built in {:.2}s ({} unique masks, {:.2} MB)",
-            store.stats.build_secs,
-            store.stats.unique_masks,
-            store.stats.mem_bytes as f64 / 1e6
+            "artifact {} in {:.2}s ({} unique masks, {:.2} MB)",
+            if warm { "warm-loaded" } else { "compiled" },
+            art.compile_stats.total_secs,
+            art.store.stats.unique_masks,
+            art.store.stats.mem_bytes as f64 / 1e6
         );
-        let cx2 = cx.clone();
-        let tok2 = tok.clone();
-        Box::new(move || {
-            Box::new(SyncodeEngine::new(cx2.clone(), store.clone(), tok2.clone()))
-        })
+        art.engine_factory()
     };
     println!("setup: {:.2}s", t0.elapsed().as_secs_f64());
 
@@ -92,6 +100,7 @@ fn main() {
                 id: t.id,
                 prompt: t.prompt.clone(),
                 constraint_prefix: String::new(),
+                grammar: None,
                 params: params.clone(),
             })
         })

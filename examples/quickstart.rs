@@ -8,38 +8,40 @@
 //! `examples/json_server.rs` for the PJRT end-to-end driver.
 
 use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
 use syncode::coordinator::{GenParams, GenRequest, Server, Strategy};
-use syncode::engine::{GrammarContext, SyncodeEngine};
 use syncode::eval::dataset;
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::runtime::MockModel;
 use syncode::tokenizer::Tokenizer;
 
 fn main() {
-    // 1. Grammar → LR tables → post-lex pass.
-    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
-
-    // 2. Vocabulary (BPE over a grammar-sampled corpus) + DFA mask store.
+    // 1. Vocabulary: BPE over a grammar-sampled corpus.
     let docs = dataset::corpus("json", 80, 7);
     let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
     let tok = Arc::new(Tokenizer::train(&flat, 150));
-    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+
+    // 2. Compile the artifact: grammar → LR tables + DFA mask store, all
+    //    offline work behind one Arc (parallel build by default).
+    let art = CompiledGrammar::compile("json", tok.clone(), &ArtifactConfig::default())
+        .expect("compile json");
+    let s = &art.store.stats;
     println!(
-        "mask store: {} states × {} terminals, {} unique masks, {:.1} MB, built in {:.2}s",
-        store.stats.num_dfa_states,
-        store.stats.num_terminals,
-        store.stats.unique_masks,
-        store.stats.mem_bytes as f64 / 1e6,
-        store.stats.build_secs
+        "artifact: {} states × {} terminals, {} unique masks, {:.1} MB, \
+         built in {:.2}s on {} threads",
+        s.num_dfa_states,
+        s.num_terminals,
+        s.unique_masks,
+        s.mem_bytes as f64 / 1e6,
+        s.build_secs,
+        s.build_threads
     );
 
-    // 3. Serve: model + per-request SynCode engines.
+    // 3. Serve: model + per-request SynCode engines from the artifact.
     let tok_m = tok.clone();
     let srv = Server::start(
         Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m, &docs, 2, 384, 11)))),
         tok.clone(),
-        Box::new(move || Box::new(SyncodeEngine::new(cx.clone(), store.clone(), tok.clone()))),
+        art.engine_factory(),
     );
 
     // 4. Generate.
@@ -47,6 +49,7 @@ fn main() {
         id: 1,
         prompt: "Please produce a JSON object describing a person.".into(),
         constraint_prefix: String::new(),
+        grammar: None,
         params: GenParams {
             max_new_tokens: 120,
             strategy: Strategy::Temperature(0.8),

@@ -1,0 +1,536 @@
+//! The compiled-artifact layer: **compile once, serve many**.
+//!
+//! SynCode's central claim (§4.6, Definition 12) is that everything
+//! expensive about grammar-constrained decoding is *offline*: regex DFAs,
+//! LR tables and the DFA mask store are all derived from a
+//! (grammar, tokenizer, config) triple before the first request arrives.
+//! This module makes that boundary a first-class type:
+//!
+//! - [`CompiledGrammar`] owns every offline product behind one `Arc` —
+//!   the [`GrammarContext`] (grammar + LR table + post-lex pass), the
+//!   shared [`Tokenizer`], and the [`MaskStore`] — plus provenance
+//!   ([`CompileStats`]) so Table-5-style reports come for free. Engines
+//!   are constructed *from* the artifact ([`CompiledGrammar::engine`]),
+//!   never by hand-assembling the three `Arc`s at call sites.
+//! - Whole-artifact binary serialisation ([`CompiledGrammar::to_bytes`] /
+//!   [`CompiledGrammar::from_bytes`], magic `SYNCART1`) extends the mask
+//!   store's `SYNCMSK1` format with the grammar source and tokenizer, so
+//!   a server cold-starts from a cache file instead of recompiling
+//!   ([`CompiledGrammar::load_or_compile`]).
+//! - [`GrammarRegistry`] maps grammar names to artifacts so one serving
+//!   coordinator admits requests targeting *different* grammars into the
+//!   same batched decode loop (see `coordinator/server.rs`).
+//!
+//! The mask-store walk loop itself is sharded across threads
+//! (`MaskStoreConfig::threads`; see `mask/store.rs`) with a merge that is
+//! bit-identical to the serial build.
+
+mod registry;
+
+pub use registry::GrammarRegistry;
+
+use crate::engine::{GrammarContext, SyncodeEngine};
+use crate::grammar::{Grammar, GrammarError};
+use crate::lexer::postlex_for;
+use crate::mask::{MaskStore, MaskStoreConfig};
+use crate::parser::{LrMode, LrTable};
+use crate::tokenizer::Tokenizer;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Error raised while compiling, serialising or loading an artifact.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Grammar parsing / LR construction failed.
+    Grammar(GrammarError),
+    /// Tokenizer (de)serialisation failed.
+    Tokenizer(String),
+    /// A cache blob was malformed or truncated.
+    Corrupt(String),
+    /// Reading or writing a cache file failed.
+    Io(std::io::Error),
+    /// Artifact is internally inconsistent (e.g. store/tokenizer vocab).
+    Mismatch(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Grammar(e) => write!(f, "artifact: {e}"),
+            ArtifactError::Tokenizer(e) => write!(f, "artifact tokenizer: {e}"),
+            ArtifactError::Corrupt(e) => write!(f, "artifact blob: {e}"),
+            ArtifactError::Io(e) => write!(f, "artifact io: {e}"),
+            ArtifactError::Mismatch(e) => write!(f, "artifact mismatch: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<GrammarError> for ArtifactError {
+    fn from(e: GrammarError) -> Self {
+        ArtifactError::Grammar(e)
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+/// Offline compile options.
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub lr_mode: LrMode,
+    pub mask: MaskStoreConfig,
+}
+
+impl Default for ArtifactConfig {
+    fn default() -> Self {
+        // Artifact compiles default to the parallel mask-store build: the
+        // walk loop dominates offline cost and the merge is bit-identical.
+        ArtifactConfig { lr_mode: LrMode::Lalr, mask: MaskStoreConfig::parallel() }
+    }
+}
+
+/// Where the offline time went (Table 5 extension).
+#[derive(Debug, Clone, Default)]
+pub struct CompileStats {
+    /// EBNF → grammar (+ terminal DFA) construction.
+    pub grammar_secs: f64,
+    /// LR table construction.
+    pub table_secs: f64,
+    /// Mask-store build (see `MaskStore::stats` for the breakdown).
+    pub store_secs: f64,
+    pub total_secs: f64,
+    /// True when the artifact was deserialised from a cache blob.
+    pub from_cache: bool,
+}
+
+/// Everything derived offline from a (grammar, tokenizer, config) triple,
+/// behind a single `Arc`. See the module docs.
+pub struct CompiledGrammar {
+    pub name: String,
+    /// The EBNF source the grammar was compiled from (embedded in cache
+    /// blobs so warm starts need no builtin-grammar table).
+    pub source: String,
+    pub lr_mode: LrMode,
+    /// The mask-store options the store was built with. Part of cache
+    /// identity (`threads` excluded — it never changes the output).
+    pub mask_cfg: MaskStoreConfig,
+    pub cx: Arc<GrammarContext>,
+    pub tok: Arc<Tokenizer>,
+    pub store: Arc<MaskStore>,
+    pub compile_stats: CompileStats,
+}
+
+impl CompiledGrammar {
+    /// Compile a built-in grammar for `tok`.
+    pub fn compile(
+        name: &str,
+        tok: Arc<Tokenizer>,
+        cfg: &ArtifactConfig,
+    ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let source = Grammar::builtin_source(name)?;
+        CompiledGrammar::compile_ebnf(name, source, tok, cfg)
+    }
+
+    /// Compile from EBNF source (user-supplied grammar, §4.7). The post-lex
+    /// pass is chosen by `name` (`python`/`go` get their trackers, anything
+    /// else the identity pass).
+    pub fn compile_ebnf(
+        name: &str,
+        source: &str,
+        tok: Arc<Tokenizer>,
+        cfg: &ArtifactConfig,
+    ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let t0 = Instant::now();
+        let grammar = Arc::new(crate::grammar::parse_ebnf(source)?);
+        let grammar_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let table = Arc::new(LrTable::build(&grammar, cfg.lr_mode));
+        let table_secs = t1.elapsed().as_secs_f64();
+
+        let postlex = postlex_for(name, &grammar);
+        let cx = Arc::new(GrammarContext {
+            name: name.to_string(),
+            lexable: crate::lexer::lexable_terms(&grammar),
+            grammar: grammar.clone(),
+            table,
+            postlex,
+            exact_follow: cfg.lr_mode == LrMode::Lalr,
+        });
+
+        let t2 = Instant::now();
+        let store = Arc::new(MaskStore::build(&grammar, &tok, cfg.mask.clone()));
+        let store_secs = t2.elapsed().as_secs_f64();
+
+        Ok(Arc::new(CompiledGrammar {
+            name: name.to_string(),
+            source: source.to_string(),
+            lr_mode: cfg.lr_mode,
+            mask_cfg: cfg.mask.clone(),
+            cx,
+            tok,
+            store,
+            compile_stats: CompileStats {
+                grammar_secs,
+                table_secs,
+                store_secs,
+                total_secs: t0.elapsed().as_secs_f64(),
+                from_cache: false,
+            },
+        }))
+    }
+
+    /// A fresh constrained-decoding engine over this artifact.
+    pub fn engine(self: &Arc<Self>) -> SyncodeEngine {
+        SyncodeEngine::new(self.cx.clone(), self.store.clone(), self.tok.clone())
+    }
+
+    /// A per-request engine factory (the legacy single-grammar server
+    /// entrypoint; multi-grammar serving goes through [`GrammarRegistry`]).
+    pub fn engine_factory(self: &Arc<Self>) -> crate::coordinator::EngineFactory {
+        let art = self.clone();
+        Box::new(move || Box::new(art.engine()))
+    }
+
+    /// Serialise the whole artifact: magic `SYNCART1`, then the grammar
+    /// name + EBNF source, the mask-store options, the tokenizer (its
+    /// canonical JSON), and the mask-store blob (`SYNCMSK1` format,
+    /// unchanged).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let name = self.name.as_bytes();
+        let source = self.source.as_bytes();
+        let tok_json = self.tok.to_json();
+        let tok_bytes = tok_json.as_bytes();
+        let store_blob = self.store.to_bytes();
+        let mut out = Vec::with_capacity(80 + source.len() + tok_bytes.len() + store_blob.len());
+        out.extend_from_slice(b"SYNCART1");
+        let push64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
+        push64(&mut out, name.len() as u64);
+        push64(&mut out, source.len() as u64);
+        push64(
+            &mut out,
+            match self.lr_mode {
+                LrMode::Lalr => 0,
+                LrMode::Canonical => 1,
+            },
+        );
+        push64(&mut out, self.mask_cfg.with_m1 as u64);
+        push64(&mut out, self.mask_cfg.max_token_len as u64);
+        push64(&mut out, tok_bytes.len() as u64);
+        push64(&mut out, store_blob.len() as u64);
+        out.extend_from_slice(name);
+        out.extend_from_slice(source);
+        out.extend_from_slice(tok_bytes);
+        out.extend_from_slice(&store_blob);
+        out
+    }
+
+    /// Deserialise a blob written by [`CompiledGrammar::to_bytes`]. The
+    /// grammar + LR table are rebuilt from the embedded source (cheap);
+    /// the mask store — the dominant offline cost — loads directly.
+    pub fn from_bytes(data: &[u8]) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        CompiledGrammar::from_bytes_inner(data, None)
+    }
+
+    /// [`CompiledGrammar::from_bytes`] with an already-trusted tokenizer:
+    /// when the caller has *proved* (via the header check) that the blob's
+    /// tokenizer JSON equals `tok`'s, the embedded copy is skipped and the
+    /// caller's `Arc` is shared — keeping `Arc::ptr_eq` fast paths (e.g.
+    /// in `GrammarRegistry::register`) alive and avoiding a duplicate
+    /// vocabulary table per warm-loaded grammar.
+    fn from_bytes_inner(
+        data: &[u8],
+        trusted_tok: Option<Arc<Tokenizer>>,
+    ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let t0 = Instant::now();
+        let corrupt = |m: &str| ArtifactError::Corrupt(m.to_string());
+        let mut r = crate::util::blob::BlobReader::new(data);
+        // Map the reader's string errors into artifact errors.
+        fn r_<T>(res: Result<T, String>) -> Result<T, ArtifactError> {
+            res.map_err(ArtifactError::Corrupt)
+        }
+        if r_(r.take(8))? != b"SYNCART1" {
+            return Err(corrupt("bad artifact magic"));
+        }
+        let name_len = r_(r.len_field())?;
+        let source_len = r_(r.len_field())?;
+        let lr_mode = match r_(r.u64())? {
+            0 => LrMode::Lalr,
+            1 => LrMode::Canonical,
+            other => {
+                return Err(ArtifactError::Corrupt(format!("unknown lr mode {other}")))
+            }
+        };
+        let with_m1 = match r_(r.u64())? {
+            0 => false,
+            1 => true,
+            other => return Err(ArtifactError::Corrupt(format!("bad with_m1 {other}"))),
+        };
+        let max_token_len = r_(r.len_field())?;
+        let tok_len = r_(r.len_field())?;
+        let store_len = r_(r.len_field())?;
+        let name = String::from_utf8(r_(r.take(name_len))?.to_vec())
+            .map_err(|_| corrupt("non-utf8 name"))?;
+        let source = String::from_utf8(r_(r.take(source_len))?.to_vec())
+            .map_err(|_| corrupt("non-utf8 source"))?;
+        let tok_json = std::str::from_utf8(r_(r.take(tok_len))?)
+            .map_err(|_| corrupt("non-utf8 tokenizer"))?;
+        let store_blob = r_(r.take(store_len))?;
+        if !r.at_end() {
+            return Err(corrupt("trailing bytes after artifact"));
+        }
+
+        let tok = match trusted_tok {
+            Some(t) => t,
+            None => Arc::new(
+                Tokenizer::from_json(tok_json).map_err(ArtifactError::Tokenizer)?,
+            ),
+        };
+        let grammar = Arc::new(crate::grammar::parse_ebnf(&source)?);
+        let t1 = Instant::now();
+        let table = Arc::new(LrTable::build(&grammar, lr_mode));
+        let table_secs = t1.elapsed().as_secs_f64();
+        let postlex = postlex_for(&name, &grammar);
+        let store = Arc::new(
+            MaskStore::from_bytes(store_blob).map_err(ArtifactError::Corrupt)?,
+        );
+        if store.vocab_size() != tok.vocab_size() {
+            return Err(ArtifactError::Mismatch(format!(
+                "store vocab {} != tokenizer vocab {}",
+                store.vocab_size(),
+                tok.vocab_size()
+            )));
+        }
+        let cx = Arc::new(GrammarContext {
+            name: name.clone(),
+            lexable: crate::lexer::lexable_terms(&grammar),
+            grammar,
+            table,
+            postlex,
+            exact_follow: lr_mode == LrMode::Lalr,
+        });
+        Ok(Arc::new(CompiledGrammar {
+            name,
+            source,
+            lr_mode,
+            // `threads` is not part of artifact identity; 0 (= auto) is
+            // what a rebuild would use.
+            mask_cfg: MaskStoreConfig { with_m1, max_token_len, threads: 0 },
+            cx,
+            tok,
+            store,
+            compile_stats: CompileStats {
+                grammar_secs: 0.0,
+                table_secs,
+                store_secs: 0.0,
+                total_secs: t0.elapsed().as_secs_f64(),
+                from_cache: true,
+            },
+        }))
+    }
+
+    /// Cheap cache-identity check on a serialised artifact's *header* —
+    /// everything except the (large) mask-store blob. Run before the
+    /// expensive `from_bytes` so stale caches are rejected without paying
+    /// a full deserialisation. The mask-store options are part of the
+    /// identity (except `threads`, which never changes the output).
+    fn header_matches(
+        data: &[u8],
+        name: &str,
+        source: &str,
+        cfg: &ArtifactConfig,
+        tok_json: &str,
+    ) -> bool {
+        let mut r = crate::util::blob::BlobReader::new(data);
+        (|| -> Result<bool, String> {
+            if r.take(8)? != b"SYNCART1" {
+                return Ok(false);
+            }
+            let name_len = r.len_field()?;
+            let source_len = r.len_field()?;
+            let lr_mode = r.u64()?;
+            let with_m1 = r.u64()?;
+            let max_token_len = r.len_field()?;
+            let tok_len = r.len_field()?;
+            let _store_len = r.len_field()?;
+            let want_mode = match cfg.lr_mode {
+                LrMode::Lalr => 0u64,
+                LrMode::Canonical => 1,
+            };
+            Ok(lr_mode == want_mode
+                && with_m1 == cfg.mask.with_m1 as u64
+                && max_token_len == cfg.mask.max_token_len
+                && r.take(name_len)? == name.as_bytes()
+                && r.take(source_len)? == source.as_bytes()
+                && r.take(tok_len)? == tok_json.as_bytes())
+        })()
+        .unwrap_or(false)
+    }
+
+    /// Warm-start a built-in grammar from `path` when the cached artifact
+    /// matches (name, source, config, tokenizer); otherwise compile and
+    /// (best-effort) write the cache. The bool is true on a cache hit.
+    pub fn load_or_compile(
+        path: &std::path::Path,
+        name: &str,
+        tok: Arc<Tokenizer>,
+        cfg: &ArtifactConfig,
+    ) -> Result<(Arc<CompiledGrammar>, bool), ArtifactError> {
+        let source = Grammar::builtin_source(name)?;
+        if let Ok(data) = std::fs::read(path) {
+            if CompiledGrammar::header_matches(&data, name, source, cfg, &tok.to_json()) {
+                // Header proved the embedded tokenizer equals `tok`, so the
+                // caller's Arc is shared instead of deserialising a copy.
+                if let Ok(art) =
+                    CompiledGrammar::from_bytes_inner(&data, Some(tok.clone()))
+                {
+                    return Ok((art, true));
+                }
+            }
+        }
+        let art = CompiledGrammar::compile_ebnf(name, source, tok, cfg)?;
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        // Best-effort cache write: an unwritable cache must not discard a
+        // perfectly usable compile.
+        let _ = std::fs::write(path, art.to_bytes());
+        Ok((art, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ConstraintEngine;
+    use crate::util::rng::Rng;
+
+    fn byte_tok() -> Arc<Tokenizer> {
+        Arc::new(Tokenizer::ascii_byte_level())
+    }
+
+    #[test]
+    fn compile_builtin_and_generate() {
+        let art = CompiledGrammar::compile("json", byte_tok(), &ArtifactConfig::default())
+            .unwrap();
+        let mut eng = art.engine();
+        eng.reset("{");
+        let m = eng.compute_mask().unwrap().unwrap();
+        assert!(m.get(b'"' as usize));
+        assert!(art.compile_stats.total_secs > 0.0);
+        assert!(!art.compile_stats.from_cache);
+    }
+
+    #[test]
+    fn unknown_builtin_is_error_not_panic() {
+        let err = CompiledGrammar::compile("nope", byte_tok(), &ArtifactConfig::default())
+            .err()
+            .expect("must fail");
+        assert!(matches!(err, ArtifactError::Grammar(_)), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_identical_masks_on_random_prefixes() {
+        // Property: artifact → bytes → artifact gives identical masks on
+        // random valid prefixes of corpus documents.
+        let cfg = ArtifactConfig::default();
+        let mut rng = Rng::new(7);
+        for name in ["json", "calc"] {
+            let art = CompiledGrammar::compile(name, byte_tok(), &cfg).unwrap();
+            let art2 = CompiledGrammar::from_bytes(&art.to_bytes()).unwrap();
+            assert!(art2.compile_stats.from_cache);
+            assert_eq!(art.name, art2.name);
+            let mut e1 = art.engine();
+            let mut e2 = art2.engine();
+            for doc in crate::eval::dataset::corpus(name, 6, 11) {
+                let cut = rng.below(doc.len() + 1);
+                let prefix = String::from_utf8_lossy(&doc[..cut]).to_string();
+                e1.reset(&prefix);
+                e2.reset(&prefix);
+                match (e1.compute_mask(), e2.compute_mask()) {
+                    (Ok(Some(a)), Ok(Some(b))) => {
+                        assert_eq!(a, b, "{name}: masks differ at {prefix:?}")
+                    }
+                    (a, b) => assert_eq!(
+                        a.is_err(),
+                        b.is_err(),
+                        "{name}: outcome differs at {prefix:?}"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(CompiledGrammar::from_bytes(b"junk").is_err());
+        assert!(CompiledGrammar::from_bytes(b"SYNCART1short").is_err());
+        // Valid header, truncated payload.
+        let art = CompiledGrammar::compile("calc", byte_tok(), &ArtifactConfig::default())
+            .unwrap();
+        let blob = art.to_bytes();
+        assert!(CompiledGrammar::from_bytes(&blob[..blob.len() - 9]).is_err());
+        // Trailing garbage is also rejected.
+        let mut padded = blob.clone();
+        padded.extend_from_slice(b"xx");
+        assert!(CompiledGrammar::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn load_or_compile_cache_hit_and_invalidation() {
+        let dir = std::env::temp_dir().join("syncode_artifact_test");
+        let path = dir.join("calc.syncart");
+        let _ = std::fs::remove_file(&path);
+        let cfg = ArtifactConfig::default();
+        let (a1, hit1) =
+            CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &cfg).unwrap();
+        assert!(!hit1);
+        assert!(path.exists());
+        let (a2, hit2) =
+            CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &cfg).unwrap();
+        assert!(hit2, "second load must hit the cache");
+        assert_eq!(a1.store.to_bytes(), a2.store.to_bytes());
+        // A different tokenizer invalidates the cache.
+        let other = Arc::new(Tokenizer::train(b"1 + 2 + 3 + 4 + 5 + 6", 4));
+        let (_, hit3) =
+            CompiledGrammar::load_or_compile(&path, "calc", other, &cfg).unwrap();
+        assert!(!hit3, "tokenizer change must recompile");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mask_config_is_part_of_cache_identity() {
+        // An M1-enabled cache must not satisfy a --no-m1 request (or vice
+        // versa) — the ablation flag would silently measure the wrong
+        // configuration. Thread count, by contrast, never invalidates.
+        let dir = std::env::temp_dir().join("syncode_artifact_cfg_test");
+        let path = dir.join("calc.syncart");
+        let _ = std::fs::remove_file(&path);
+        let with_m1 = ArtifactConfig::default();
+        let (_, hit) =
+            CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &with_m1).unwrap();
+        assert!(!hit);
+        let no_m1 = ArtifactConfig {
+            mask: MaskStoreConfig { with_m1: false, ..MaskStoreConfig::default() },
+            ..ArtifactConfig::default()
+        };
+        let (art, hit) =
+            CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &no_m1).unwrap();
+        assert!(!hit, "with_m1 mismatch must recompile");
+        assert!(!art.mask_cfg.with_m1);
+        // Same options, different thread count: still a hit.
+        let no_m1_serial = ArtifactConfig {
+            mask: MaskStoreConfig { with_m1: false, threads: 1, ..MaskStoreConfig::default() },
+            ..ArtifactConfig::default()
+        };
+        let (_, hit) = CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &no_m1_serial)
+            .unwrap();
+        assert!(hit, "thread count must not invalidate the cache");
+        let _ = std::fs::remove_file(&path);
+    }
+}

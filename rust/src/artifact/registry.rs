@@ -1,0 +1,185 @@
+//! [`GrammarRegistry`]: named compiled artifacts behind one handle, so a
+//! single serving coordinator can constrain concurrent requests with
+//! *different* grammars (one batched decode loop, per-request engines).
+//!
+//! All registered artifacts must share one tokenizer (the model's
+//! vocabulary); `register` enforces that. The first registration becomes
+//! the default grammar for requests that don't name one.
+
+use super::{ArtifactError, CompiledGrammar};
+use crate::coordinator::{EngineProvider, GenRequest};
+use crate::engine::ConstraintEngine;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Thread-safe name → [`CompiledGrammar`] map (see module docs).
+pub struct GrammarRegistry {
+    inner: RwLock<Inner>,
+}
+
+struct Inner {
+    grammars: HashMap<String, Arc<CompiledGrammar>>,
+    default_name: Option<String>,
+}
+
+impl GrammarRegistry {
+    pub fn new() -> GrammarRegistry {
+        GrammarRegistry {
+            inner: RwLock::new(Inner { grammars: HashMap::new(), default_name: None }),
+        }
+    }
+
+    /// Register an artifact under its compiled name. The first artifact
+    /// becomes the default; later ones must share its tokenizer.
+    pub fn register(&self, art: Arc<CompiledGrammar>) -> Result<(), ArtifactError> {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(existing) = inner.grammars.values().next() {
+            // Same vocabulary is necessary but not sufficient: equal-sized
+            // tokenizers with different merges would silently mis-map token
+            // ids in the second grammar's mask store. Compare canonical
+            // serialisations unless it's literally the same tokenizer.
+            let same = Arc::ptr_eq(&existing.tok, &art.tok)
+                || (existing.tok.vocab_size() == art.tok.vocab_size()
+                    && existing.tok.to_json() == art.tok.to_json());
+            if !same {
+                return Err(ArtifactError::Mismatch(format!(
+                    "grammar '{}' was compiled against a different tokenizer \
+                     than the registry's (vocab {} vs {})",
+                    art.name,
+                    art.tok.vocab_size(),
+                    existing.tok.vocab_size()
+                )));
+            }
+        }
+        if inner.default_name.is_none() {
+            inner.default_name = Some(art.name.clone());
+        }
+        inner.grammars.insert(art.name.clone(), art);
+        Ok(())
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<Arc<CompiledGrammar>> {
+        self.inner.read().unwrap().grammars.get(name).cloned()
+    }
+
+    /// Registered grammar names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.read().unwrap().grammars.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().grammars.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The default artifact (first registered unless overridden).
+    pub fn default_grammar(&self) -> Option<Arc<CompiledGrammar>> {
+        let inner = self.inner.read().unwrap();
+        inner.default_name.as_ref().and_then(|n| inner.grammars.get(n).cloned())
+    }
+
+    /// Override the default grammar.
+    pub fn set_default(&self, name: &str) -> Result<(), ArtifactError> {
+        let mut inner = self.inner.write().unwrap();
+        if !inner.grammars.contains_key(name) {
+            return Err(ArtifactError::Mismatch(format!(
+                "cannot default to unregistered grammar '{name}'"
+            )));
+        }
+        inner.default_name = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Per-request engine construction: `None` picks the default grammar.
+    /// This is the registry half of [`EngineProvider`].
+    pub fn engine_for_name(
+        &self,
+        grammar: Option<&str>,
+    ) -> Result<Box<dyn ConstraintEngine>, String> {
+        let art = match grammar {
+            Some(name) => self.get(name).ok_or_else(|| {
+                format!(
+                    "unknown grammar '{name}' (registered: {})",
+                    self.names().join(", ")
+                )
+            })?,
+            None => self
+                .default_grammar()
+                .ok_or_else(|| "empty grammar registry".to_string())?,
+        };
+        Ok(Box::new(art.engine()))
+    }
+}
+
+impl Default for GrammarRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineProvider for Arc<GrammarRegistry> {
+    fn engine_for(&self, req: &GenRequest) -> Result<Box<dyn ConstraintEngine>, String> {
+        self.engine_for_name(req.grammar.as_deref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::ArtifactConfig;
+    use crate::tokenizer::Tokenizer;
+
+    fn registry_with(names: &[&str]) -> Arc<GrammarRegistry> {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = Arc::new(GrammarRegistry::new());
+        for n in names {
+            let art =
+                CompiledGrammar::compile(n, tok.clone(), &ArtifactConfig::default())
+                    .unwrap();
+            reg.register(art).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn register_lookup_default() {
+        let reg = registry_with(&["json", "calc"]);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["calc".to_string(), "json".to_string()]);
+        assert_eq!(reg.default_grammar().unwrap().name, "json");
+        reg.set_default("calc").unwrap();
+        assert_eq!(reg.default_grammar().unwrap().name, "calc");
+        assert!(reg.set_default("nope").is_err());
+    }
+
+    #[test]
+    fn engine_for_name_routes_by_grammar() {
+        use crate::engine::ConstraintEngine as _;
+        let reg = registry_with(&["json", "calc"]);
+        let mut je = reg.engine_for_name(Some("json")).unwrap();
+        je.reset("{");
+        assert!(je.compute_mask().unwrap().unwrap().get(b'"' as usize));
+        let mut ce = reg.engine_for_name(Some("calc")).unwrap();
+        ce.reset("1 + ");
+        assert!(ce.compute_mask().unwrap().unwrap().get(b'7' as usize));
+        assert!(reg.engine_for_name(Some("sql2")).is_err());
+        assert!(reg.engine_for_name(None).is_ok());
+    }
+
+    #[test]
+    fn mismatched_tokenizer_rejected() {
+        let reg = registry_with(&["json"]);
+        let other_tok = Arc::new(Tokenizer::train(b"abcabcabcabcabc", 8));
+        let art =
+            CompiledGrammar::compile("calc", other_tok, &ArtifactConfig::default())
+                .unwrap();
+        assert!(reg.register(art).is_err());
+    }
+}

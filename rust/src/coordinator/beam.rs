@@ -12,7 +12,8 @@
 use crate::engine::ConstraintEngine;
 use crate::runtime::LanguageModel;
 use crate::tokenizer::Tokenizer;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 /// One finished hypothesis.

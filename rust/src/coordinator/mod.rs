@@ -16,5 +16,6 @@ pub use beam::{beam_generate, BeamHypothesis};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
 pub use server::{
-    EngineFactory, FinishReason, GenParams, GenRequest, GenResponse, Server, ServerHandle,
+    EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse, Server,
+    ServerHandle,
 };

@@ -7,6 +7,12 @@
 //! mask (or opportunistically validate the unmasked sample) and pick the
 //! next token (Algorithm 3 lines 4–12), (3) run one batched decode step
 //! for all still-active lanes.
+//!
+//! Per-request engine construction goes through an [`EngineProvider`]:
+//! either a legacy single-grammar [`EngineFactory`] closure, or an
+//! `Arc<GrammarRegistry>` (see `artifact/registry.rs`), which routes each
+//! request's optional [`GenRequest::grammar`] name to its compiled
+//! artifact — so one batched decode loop serves many grammars at once.
 
 use super::metrics::Metrics;
 use super::sampler::{sample_token, Strategy};
@@ -20,6 +26,28 @@ use std::time::Instant;
 
 /// Factory producing a fresh constraint engine per request.
 pub type EngineFactory = Box<dyn Fn() -> Box<dyn ConstraintEngine> + Send>;
+
+/// Per-request engine construction (the admission-time hook). Implemented
+/// by [`EngineFactory`] (single grammar, ignores request routing) and by
+/// `Arc<GrammarRegistry>` (multi-grammar routing by request name).
+pub trait EngineProvider: Send {
+    /// Build the constraint engine for one admitted request. `Err` fails
+    /// the request with [`FinishReason::EngineError`] without occupying a
+    /// lane.
+    fn engine_for(&self, req: &GenRequest) -> Result<Box<dyn ConstraintEngine>, String>;
+}
+
+impl EngineProvider for EngineFactory {
+    fn engine_for(&self, req: &GenRequest) -> Result<Box<dyn ConstraintEngine>, String> {
+        if let Some(g) = &req.grammar {
+            return Err(format!(
+                "request targets grammar '{g}' but this server was started \
+                 with a single-grammar engine factory (use a GrammarRegistry)"
+            ));
+        }
+        Ok((self)())
+    }
+}
 
 /// Generation parameters.
 #[derive(Debug, Clone)]
@@ -44,7 +72,7 @@ impl Default for GenParams {
 }
 
 /// A generation request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct GenRequest {
     pub id: u64,
     /// Conditioning text fed to the LM (may include few-shot examples).
@@ -52,6 +80,9 @@ pub struct GenRequest {
     /// `C_0` for the constraint engine (code prefix for completion tasks;
     /// empty for freeform).
     pub constraint_prefix: String,
+    /// Registry grammar to constrain with; `None` uses the provider's
+    /// default (single-factory servers only accept `None`).
+    pub grammar: Option<String>,
     pub params: GenParams,
 }
 
@@ -140,13 +171,15 @@ pub struct Server;
 
 impl Server {
     /// Start the scheduler thread. The model factory runs *inside* the
-    /// thread (PJRT handles are not `Send`); the engine factory makes one
-    /// constraint engine per admitted request (use `StandardEngine` for
-    /// unconstrained serving).
+    /// thread (PJRT handles are not `Send`); the engine provider makes one
+    /// constraint engine per admitted request — an [`EngineFactory`]
+    /// closure for single-grammar serving (use `StandardEngine` for
+    /// unconstrained), or an `Arc<GrammarRegistry>` to route per-request
+    /// grammar names onto compiled artifacts.
     pub fn start(
         model_factory: ModelFactory,
         tok: Arc<Tokenizer>,
-        engine_factory: EngineFactory,
+        engine_provider: impl EngineProvider + 'static,
     ) -> ServerHandle {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
@@ -185,7 +218,26 @@ impl Server {
                     }
                     let Some((req, resp_tx)) = queue.pop_front() else { break };
                     metrics2.lock().unwrap().mark_started();
-                    let mut engine = engine_factory();
+                    let mut engine = match engine_provider.engine_for(&req) {
+                        Ok(e) => e,
+                        Err(msg) => {
+                            {
+                                let mut m = metrics2.lock().unwrap();
+                                m.requests_finished += 1;
+                                m.engine_errors += 1;
+                            }
+                            let _ = resp_tx.send(GenResponse {
+                                id: req.id,
+                                text: String::new(),
+                                finish: FinishReason::EngineError,
+                                tokens: 0,
+                                ttft_secs: 0.0,
+                                latency_secs: 0.0,
+                                error: Some(msg),
+                            });
+                            continue;
+                        }
+                    };
                     engine.reset(&req.constraint_prefix);
                     let mut ids = vec![tok.bos_id];
                     ids.extend(tok.encode(req.prompt.as_bytes()));
@@ -213,6 +265,11 @@ impl Server {
                             });
                         }
                         Err(e) => {
+                            {
+                                let mut m = metrics2.lock().unwrap();
+                                m.requests_finished += 1;
+                                m.engine_errors += 1;
+                            }
                             let _ = resp_tx.send(GenResponse {
                                 id: req.id,
                                 text: String::new(),
@@ -480,6 +537,7 @@ mod tests {
                 id: i,
                 prompt: "Give me a JSON object:".into(),
                 constraint_prefix: String::new(),
+                grammar: None,
                 params: GenParams {
                     max_new_tokens: 120,
                     strategy: Strategy::Temperature(0.8),
@@ -509,6 +567,7 @@ mod tests {
             id: 1,
             prompt: "hello".into(),
             constraint_prefix: String::new(),
+            grammar: None,
             params: GenParams {
                 max_new_tokens: 20,
                 strategy: Strategy::Greedy,
@@ -530,6 +589,7 @@ mod tests {
                     id: i,
                     prompt: format!("request {i}"),
                     constraint_prefix: String::new(),
+                    grammar: None,
                     params: GenParams {
                         max_new_tokens: 60,
                         strategy: Strategy::TopP { temp: 0.9, p: 0.95 },
@@ -556,6 +616,7 @@ mod tests {
             id: 9,
             prompt: "x".into(),
             constraint_prefix: String::new(),
+            grammar: None,
             params: GenParams {
                 max_new_tokens: 40,
                 strategy: Strategy::Greedy,

@@ -3,7 +3,7 @@
 //! `eval`) is built on.
 
 use crate::grammar::{Grammar, GrammarError, TermId};
-use crate::lexer::{postlex_for, Lexer, PostLex, PostLexResult};
+use crate::lexer::{lexable_terms, postlex_for, LexMeta, LexToken, Lexer, PostLex, PostLexResult};
 use crate::parser::{
     compute_accept_sequences, AcceptContext, AcceptSequences, IncrementalParser, LrMode,
     LrTable, ParseStatus, ParserState,
@@ -44,6 +44,9 @@ pub struct GrammarContext {
     pub postlex: Box<dyn PostLex>,
     /// LALR tables need exact (simulation-filtered) follow sets.
     pub exact_follow: bool,
+    /// Precomputed [`lexable_terms`] so per-step lexers allocate nothing
+    /// ([`Lexer::with_lexable`]).
+    pub lexable: Vec<TermId>,
 }
 
 /// Per-step analysis of a partial output `C_k`.
@@ -63,6 +66,7 @@ impl GrammarContext {
         let postlex = postlex_for(name, &grammar);
         Ok(GrammarContext {
             name: name.to_string(),
+            lexable: lexable_terms(&grammar),
             grammar,
             table,
             postlex,
@@ -81,6 +85,7 @@ impl GrammarContext {
         let postlex = postlex_for(name, &grammar);
         Ok(GrammarContext {
             name: name.to_string(),
+            lexable: lexable_terms(&grammar),
             grammar,
             table,
             postlex,
@@ -100,23 +105,25 @@ impl GrammarContext {
         text: &[u8],
         inc: &mut IncrementalParser,
     ) -> Result<Analysis, PrefixError> {
-        let lexer = Lexer::new(&self.grammar);
+        let lexer = Lexer::with_lexable(&self.grammar, &self.lexable);
         let lr = lexer.lex(text);
-        self.analyze_lexed(text, lr, inc)
+        self.analyze_lexed(text, &lr.tokens, &lr.meta(), inc)
     }
 
-    /// [`GrammarContext::analyze`] with lexing already done (the SynCode
-    /// engine lexes incrementally from its per-step cache).
+    /// [`GrammarContext::analyze`] with lexing already done. `tokens` and
+    /// `meta` are borrowed — the SynCode engine lexes incrementally into
+    /// its per-step cache and hands it over without cloning.
     pub fn analyze_lexed(
         &self,
         text: &[u8],
-        lr: crate::lexer::LexResult,
+        tokens: &[LexToken],
+        meta: &LexMeta,
         inc: &mut IncrementalParser,
     ) -> Result<Analysis, PrefixError> {
-        if let Some(p) = lr.error {
+        if let Some(p) = meta.error {
             return Err(PrefixError::Lex(p));
         }
-        let plr = self.postlex.apply(&self.grammar, text, &lr.tokens);
+        let plr = self.postlex.apply(&self.grammar, text, tokens);
         if plr.error {
             return Err(PrefixError::PostLex);
         }
@@ -129,15 +136,15 @@ impl GrammarContext {
             state: inc.state(),
             postlex: self.postlex.as_ref(),
             plr: &plr,
-            remainder_term: lr.remainder_term,
-            remainder: lr.remainder(text),
+            remainder_term: meta.remainder_term,
+            remainder: meta.remainder(text),
             exact_follow: self.exact_follow,
         };
         let acc = compute_accept_sequences(&cx);
         Ok(Analysis {
             acc,
-            remainder_start: lr.remainder_start,
-            remainder_term: lr.remainder_term,
+            remainder_start: meta.remainder_start,
+            remainder_term: meta.remainder_term,
             plr,
         })
     }

@@ -9,7 +9,8 @@
 
 use super::context::{Analysis, GrammarContext, PrefixError};
 use super::ConstraintEngine;
-use crate::lexer::{LexResult, LexToken, Lexer};
+use crate::grammar::TermId;
+use crate::lexer::{LexMeta, LexToken, Lexer};
 use crate::mask::{grammar_mask, MaskStore};
 use crate::parser::{IncrementalParser, ParseStatus};
 use crate::tokenizer::Tokenizer;
@@ -18,8 +19,9 @@ use std::sync::Arc;
 
 /// Per-engine incremental-lexing cache: the stable tokens and remainder
 /// offset for `text[..upto]` (valid because the engine is append-only
-/// between resets and emitted tokens are stable under extension).
-#[derive(Default, Clone)]
+/// between resets and emitted tokens are stable under extension). The
+/// token buffer is lexed into *in place* — no per-step clone.
+#[derive(Default)]
 struct LexCache {
     upto: usize,
     tokens: Vec<LexToken>,
@@ -37,6 +39,10 @@ pub struct SyncodeEngine {
     /// Cached per-step analysis (invalidated by `append`/`reset`).
     step: Option<Analysis>,
     lex_cache: LexCache,
+    /// Reusable buffer for non-committing probes (`validate_append`):
+    /// cached prefix tokens are memcpy'd in and lexing resumes — the
+    /// allocation amortises away after the first probe.
+    probe_tokens: Vec<LexToken>,
     use_lex_cache: bool,
     /// Instrumentation: total mask-store lookups (≈ |A| per step).
     pub lookups: u64,
@@ -59,31 +65,59 @@ impl SyncodeEngine {
             mask,
             step: None,
             lex_cache: LexCache::default(),
+            probe_tokens: Vec::new(),
             use_lex_cache: true,
             lookups: 0,
         }
     }
 
-    /// Lex `input` resuming from the cache when it is a valid prefix
-    /// state; `commit` updates the cache (real appends do, probes don't).
-    fn lex_cached(&mut self, input: &[u8], commit: bool) -> LexResult {
-        let lexer = Lexer::new(&self.cx.grammar);
-        let lr = if self.use_lex_cache
+    /// Lex `input` straight into the cache (the committing per-step path):
+    /// resumes from the cached remainder and appends only newly emitted
+    /// tokens, allocating nothing in steady state. On a lex error the
+    /// cache rolls back to its previous consistent state.
+    fn lex_commit(&mut self, input: &[u8]) -> LexMeta {
+        let cx = self.cx.clone();
+        let lexer = Lexer::with_lexable(&cx.grammar, &cx.lexable);
+        let resume = self.use_lex_cache
+            && self.lex_cache.upto > 0
+            && self.lex_cache.upto <= input.len();
+        let (start, prev_len) = if resume {
+            (self.lex_cache.rem_start, self.lex_cache.tokens.len())
+        } else {
+            self.lex_cache.tokens.clear();
+            (0, 0)
+        };
+        let meta = lexer.lex_into(input, start, &mut self.lex_cache.tokens);
+        if meta.error.is_none() {
+            self.lex_cache.upto = input.len();
+            self.lex_cache.rem_start = meta.remainder_start;
+        } else {
+            // Keep the cache describing the last successfully lexed text.
+            self.lex_cache.tokens.truncate(prev_len);
+            if !resume {
+                self.lex_cache.upto = 0;
+                self.lex_cache.rem_start = 0;
+            }
+        }
+        meta
+    }
+
+    /// Lex `input` into the reusable probe buffer without touching the
+    /// cache (speculative `validate_append` path).
+    fn lex_probe(&mut self, input: &[u8]) -> LexMeta {
+        let cx = self.cx.clone();
+        let lexer = Lexer::with_lexable(&cx.grammar, &cx.lexable);
+        self.probe_tokens.clear();
+        let start = if self.use_lex_cache
             && self.lex_cache.upto > 0
             && self.lex_cache.upto <= input.len()
         {
-            lexer.lex_from(input, self.lex_cache.rem_start, self.lex_cache.tokens.clone())
+            self.probe_tokens.extend_from_slice(&self.lex_cache.tokens);
+            self.lex_cache.rem_start
         } else {
-            lexer.lex(input)
+            0
         };
-        if commit && lr.error.is_none() {
-            self.lex_cache = LexCache {
-                upto: input.len(),
-                tokens: lr.tokens.clone(),
-                rem_start: lr.remainder_start,
-            };
-        }
-        lr
+        lexer.lex_into(input, start, &mut self.probe_tokens)
     }
 
     /// Toggle Algorithm-4 incrementality (Figure 10b ablation): both the
@@ -98,17 +132,19 @@ impl SyncodeEngine {
     fn ensure_step(&mut self) -> Result<&Analysis, PrefixError> {
         if self.step.is_none() {
             let text = std::mem::take(&mut self.text);
-            let lr = self.lex_cached(&text, true);
-            let a = self.cx.analyze_lexed(&text, lr, &mut self.inc);
+            let meta = self.lex_commit(&text);
+            let cx = self.cx.clone();
+            let a = cx.analyze_lexed(&text, &self.lex_cache.tokens, &meta, &mut self.inc);
             self.text = text;
             self.step = Some(a?);
         }
         Ok(self.step.as_ref().unwrap())
     }
 
-    /// The current accept sequences (for inspection/diagnostics).
-    pub fn accept_sequences(&mut self) -> Result<Vec<Vec<u16>>, PrefixError> {
-        Ok(self.ensure_step()?.acc.seqs.clone())
+    /// The current accept sequences (for inspection/diagnostics),
+    /// borrowed from the per-step cache — no per-call clone.
+    pub fn accept_sequences(&mut self) -> Result<&[Vec<TermId>], PrefixError> {
+        Ok(&self.ensure_step()?.acc.seqs)
     }
 }
 
@@ -118,7 +154,10 @@ impl ConstraintEngine for SyncodeEngine {
         self.text.extend_from_slice(prefix.as_bytes());
         self.inc.reset();
         self.step = None;
-        self.lex_cache = LexCache::default();
+        // Keep the allocations; just invalidate the cache contents.
+        self.lex_cache.upto = 0;
+        self.lex_cache.rem_start = 0;
+        self.lex_cache.tokens.clear();
     }
 
     fn append(&mut self, bytes: &[u8]) {
@@ -178,17 +217,18 @@ impl ConstraintEngine for SyncodeEngine {
 
     fn validate_append(&mut self, bytes: &[u8]) -> bool {
         // Incremental exact check (§Perf L3): lex resumes from the cached
-        // remainder and the shared incremental parser re-feeds only the
-        // few new terminals; the probe does not commit the lex cache.
+        // remainder into the reusable probe buffer and the shared
+        // incremental parser re-feeds only the few new terminals; the
+        // probe does not commit the lex cache.
         let mut probe = std::mem::take(&mut self.text);
         let plen = probe.len();
         probe.extend_from_slice(bytes);
-        let lr = self.lex_cached(&probe, false);
+        let meta = self.lex_probe(&probe);
         let ok = (|| {
-            if lr.error.is_some() {
+            if meta.error.is_some() {
                 return false;
             }
-            let plr = self.cx.postlex.apply(&self.cx.grammar, &probe, &lr.tokens);
+            let plr = self.cx.postlex.apply(&self.cx.grammar, &probe, &self.probe_tokens);
             if plr.error {
                 return false;
             }
@@ -196,7 +236,7 @@ impl ConstraintEngine for SyncodeEngine {
                 return false;
             }
             // extendable or complete?
-            if lr.remainder_start == probe.len() {
+            if meta.remainder_start == probe.len() {
                 return true;
             }
             let cx = crate::parser::AcceptContext {
@@ -204,15 +244,15 @@ impl ConstraintEngine for SyncodeEngine {
                 state: self.inc.state(),
                 postlex: self.cx.postlex.as_ref(),
                 plr: &plr,
-                remainder_term: lr.remainder_term,
-                remainder: lr.remainder(&probe),
+                remainder_term: meta.remainder_term,
+                remainder: meta.remainder(&probe),
                 exact_follow: self.cx.exact_follow,
             };
             let acc = crate::parser::compute_accept_sequences(&cx);
             if acc.eos_ok {
                 return true;
             }
-            let r = lr.remainder(&probe);
+            let r = meta.remainder(&probe);
             acc.seqs.iter().any(|seq| {
                 let dfa = &self.cx.grammar.terminals[seq[0] as usize].dfa;
                 dfa.is_live(dfa.walk(dfa.start(), r))
@@ -327,5 +367,53 @@ mod tests {
         e.reset("{");
         e.compute_mask().unwrap();
         assert!(e.lookups > 0);
+    }
+
+    #[test]
+    fn accept_sequences_borrowed_view() {
+        let mut e = engine("calc");
+        e.reset("math_sqrt(3) * (2");
+        let n = e.accept_sequences().unwrap().len();
+        assert!(n > 0);
+        // Same step → same cached sequences (no recompute, no clone).
+        assert_eq!(e.accept_sequences().unwrap().len(), n);
+    }
+
+    #[test]
+    fn probe_does_not_corrupt_lex_cache() {
+        // validate_append (probe path) must leave the committed cache
+        // intact: masks after probes equal masks computed fresh.
+        let mut e = engine("json");
+        e.reset("");
+        let target = br#"{"k": [1, true], "s": "v"}"#;
+        for &b in target.iter() {
+            let _ = e.validate_append(&[b]); // speculative probe
+            let _ = e.validate_append(b"zzz"); // failing probe
+            let m_cached = e.compute_mask().unwrap().unwrap().clone();
+            let mut fresh = engine("json");
+            fresh.reset(std::str::from_utf8(e.text()).unwrap());
+            let m_fresh = fresh.compute_mask().unwrap().unwrap().clone();
+            assert_eq!(m_cached, m_fresh, "cache diverged at {:?}", b as char);
+            e.append(&[b]);
+        }
+        assert!(e.is_complete());
+    }
+
+    #[test]
+    fn incremental_cache_matches_from_scratch() {
+        // With and without the lex/parse caches the masks agree at every
+        // step of an append-only generation.
+        let mut inc = engine("json");
+        let mut scratch = engine("json");
+        scratch.set_incremental(false);
+        inc.reset("");
+        scratch.reset("");
+        for &b in br#"{"a": [1, {"b": null}], "c": false}"#.iter() {
+            let mi = inc.compute_mask().unwrap().unwrap().clone();
+            let ms = scratch.compute_mask().unwrap().unwrap().clone();
+            assert_eq!(mi, ms, "diverged before {:?}", b as char);
+            inc.append(&[b]);
+            scratch.append(&[b]);
+        }
     }
 }

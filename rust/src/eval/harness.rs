@@ -8,11 +8,11 @@ use super::dataset::{CalcTask, CodeTask, Difficulty, JsonTask, SqlTask};
 use super::exec::{eval_calc, SqlResult};
 use super::passk;
 use super::schema;
+use crate::artifact::{ArtifactConfig, CompiledGrammar};
 use crate::coordinator::{EngineFactory, GenParams, GenRequest, Server};
 use crate::engine::baselines::{GbnfLike, OutlinesLike, StandardEngine};
-use crate::engine::{GrammarContext, SyncodeEngine};
-use crate::mask::{MaskStore, MaskStoreConfig};
-use crate::parser::LrMode;
+use crate::engine::GrammarContext;
+use crate::mask::MaskStore;
 use crate::runtime::{MockModel, ModelFactory};
 use crate::tokenizer::Tokenizer;
 use crate::util::json;
@@ -42,10 +42,13 @@ impl EngineKind {
     }
 }
 
-/// Shared evaluation environment for one grammar: context, tokenizer
-/// (trained on the grammar's corpus), mask store, and the mock-LM corpus.
+/// Shared evaluation environment for one grammar, built around a single
+/// [`CompiledGrammar`] artifact (context, tokenizer trained on the
+/// grammar's corpus, mask store) plus the mock-LM corpus. The `cx`/`tok`/
+/// `store` fields are views into the artifact for call-site convenience.
 pub struct EvalEnv {
     pub gname: String,
+    pub artifact: Arc<CompiledGrammar>,
     pub cx: Arc<GrammarContext>,
     pub tok: Arc<Tokenizer>,
     pub store: Arc<MaskStore>,
@@ -60,10 +63,9 @@ pub struct EvalEnv {
 }
 
 impl EvalEnv {
-    /// Build the environment: grammar + BPE tokenizer trained on a
-    /// grammar-sampled corpus + mask store.
+    /// Build the environment: compile the grammar artifact over a BPE
+    /// tokenizer trained on a grammar-sampled corpus.
     pub fn new(gname: &str, n_docs: usize, merges: usize, seed: u64) -> EvalEnv {
-        let cx = Arc::new(GrammarContext::builtin(gname, LrMode::Lalr).unwrap());
         let docs = super::dataset::corpus(gname, n_docs, seed);
         let flat: Vec<u8> = docs.iter().flat_map(|d| {
             let mut v = d.clone();
@@ -71,12 +73,14 @@ impl EvalEnv {
             v
         }).collect();
         let tok = Arc::new(Tokenizer::train(&flat, merges));
-        let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        let artifact = CompiledGrammar::compile(gname, tok, &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("compiling {gname}: {e}"));
         EvalEnv {
             gname: gname.to_string(),
-            cx,
-            tok,
-            store,
+            cx: artifact.cx.clone(),
+            tok: artifact.tok.clone(),
+            store: artifact.store.clone(),
+            artifact,
             docs,
             lanes: 2,
             max_seq: 512,
@@ -86,20 +90,21 @@ impl EvalEnv {
     }
 
     /// Environment bound to the AOT artifacts: tokenizer from
-    /// `tokenizer.json`, mask store built over it, PJRT model factory.
+    /// `tokenizer.json`, grammar artifact compiled over it, PJRT model
+    /// factory.
     pub fn with_artifacts(gname: &str, dir: &std::path::Path, seed: u64) -> EvalEnv {
-        let cx = Arc::new(GrammarContext::builtin(gname, LrMode::Lalr).unwrap());
         let tok = Arc::new(
             Tokenizer::from_file(&dir.join("tokenizer.json")).expect("tokenizer.json"),
         );
-        let store =
-            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        let artifact = CompiledGrammar::compile(gname, tok, &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("compiling {gname}: {e}"));
         let docs = super::dataset::corpus(gname, 20, seed);
         EvalEnv {
             gname: gname.to_string(),
-            cx,
-            tok,
-            store,
+            cx: artifact.cx.clone(),
+            tok: artifact.tok.clone(),
+            store: artifact.store.clone(),
+            artifact,
             docs,
             lanes: 2,
             max_seq: 160,
@@ -108,20 +113,20 @@ impl EvalEnv {
         }
     }
 
-    /// Engine factory for a kind.
+    /// Engine factory for a kind. SynCode engines come straight from the
+    /// compiled artifact; baselines share its context and tokenizer.
     pub fn engine_factory(&self, kind: EngineKind) -> EngineFactory {
-        let cx = self.cx.clone();
-        let tok = self.tok.clone();
-        let store = self.store.clone();
         match kind {
-            EngineKind::Syncode => Box::new(move || {
-                Box::new(SyncodeEngine::new(cx.clone(), store.clone(), tok.clone()))
-            }),
+            EngineKind::Syncode => self.artifact.engine_factory(),
             EngineKind::Standard => Box::new(|| Box::new(StandardEngine::new())),
             EngineKind::Outlines => {
+                let cx = self.cx.clone();
+                let tok = self.tok.clone();
                 Box::new(move || Box::new(OutlinesLike::new(cx.clone(), tok.clone())))
             }
             EngineKind::Gbnf => {
+                let cx = self.cx.clone();
+                let tok = self.tok.clone();
                 Box::new(move || Box::new(GbnfLike::new(cx.clone(), tok.clone())))
             }
         }
@@ -181,6 +186,7 @@ pub fn run_json(
             id: t.id,
             prompt: prompt.clone(),
             constraint_prefix: String::new(),
+            grammar: None,
             params: params.clone(),
         });
         time += resp.latency_secs;
@@ -244,6 +250,7 @@ pub fn run_sql(env: &EvalEnv, tasks: &[SqlTask], kind: EngineKind, params: &GenP
             id: t.id,
             prompt,
             constraint_prefix: String::new(),
+            grammar: None,
             params: params.clone(),
         });
         tokens += resp.tokens;
@@ -312,6 +319,7 @@ pub fn run_gpl(
                 id: t.id * 100 + s as u64,
                 prompt: t.prefix.clone(),
                 constraint_prefix: t.prefix.clone(),
+                grammar: None,
                 params: p,
             });
             time += resp.latency_secs;
@@ -362,6 +370,7 @@ pub fn run_calc_passk(
                 id: t.id * 1000 + s as u64,
                 prompt: super::dataset::calc_few_shot_prompt(t),
                 constraint_prefix: String::new(),
+                grammar: None,
                 params: p,
             });
             let answer = resp.text.lines().next().unwrap_or("").trim();

@@ -23,9 +23,10 @@ pub const BUILTIN_GRAMMARS: &[(&str, &str)] = &[
 ];
 
 impl Grammar {
-    /// Load one of the built-in grammars by name.
-    pub fn builtin(name: &str) -> Result<Grammar, GrammarError> {
-        let src = BUILTIN_GRAMMARS
+    /// Source text of a built-in grammar (the artifact layer embeds it in
+    /// cache blobs so warm starts rebuild grammar + tables from source).
+    pub fn builtin_source(name: &str) -> Result<&'static str, GrammarError> {
+        BUILTIN_GRAMMARS
             .iter()
             .find(|(n, _)| *n == name)
             .map(|(_, s)| *s)
@@ -34,8 +35,12 @@ impl Grammar {
                     "unknown builtin grammar '{name}' (have: {})",
                     BUILTIN_GRAMMARS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
                 ))
-            })?;
-        parse_ebnf(src)
+            })
+    }
+
+    /// Load one of the built-in grammars by name.
+    pub fn builtin(name: &str) -> Result<Grammar, GrammarError> {
+        parse_ebnf(Grammar::builtin_source(name)?)
     }
 
     /// Names of all built-in grammars.
@@ -49,16 +54,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn all_builtins_load() {
+    fn all_builtins_load() -> Result<(), GrammarError> {
+        // Errors propagate as Result (the artifact layer consumes them the
+        // same way) instead of panicking mid-test.
         for name in Grammar::builtin_names() {
-            let g = Grammar::builtin(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let g = Grammar::builtin(name)?;
             assert!(g.rules.len() > 1, "{name} has rules");
             assert!(g.terminals.len() > 1, "{name} has terminals");
         }
+        Ok(())
     }
 
     #[test]
     fn unknown_builtin_errors() {
         assert!(Grammar::builtin("nope").is_err());
+        assert!(Grammar::builtin_source("nope").is_err());
+        assert!(Grammar::builtin_source("json").is_ok());
     }
 }

@@ -56,26 +56,64 @@ impl LexResult {
     pub fn remainder<'a>(&self, input: &'a [u8]) -> &'a [u8] {
         &input[self.remainder_start..]
     }
+
+    /// The token-free view of this result.
+    pub fn meta(&self) -> LexMeta {
+        LexMeta {
+            remainder_start: self.remainder_start,
+            remainder_term: self.remainder_term,
+            error: self.error,
+        }
+    }
+}
+
+/// A [`LexResult`] minus the token vector — for the in-place
+/// [`Lexer::lex_into`] path, where the caller owns the token buffer (the
+/// engine's per-step cache) and no per-step `Vec` clone happens.
+#[derive(Debug, Clone, Copy)]
+pub struct LexMeta {
+    /// Byte offset where the remainder begins.
+    pub remainder_start: usize,
+    /// Terminal exactly accepting the remainder, if any.
+    pub remainder_term: Option<TermId>,
+    /// Byte position of a lexing error, if any.
+    pub error: Option<usize>,
+}
+
+impl LexMeta {
+    /// The remainder r as a slice of the original input.
+    pub fn remainder<'a>(&self, input: &'a [u8]) -> &'a [u8] {
+        &input[self.remainder_start..]
+    }
+}
+
+/// The terminals that participate in lexing (skips `%declare`d ones).
+/// Engines cache this once (see `GrammarContext::lexable`) so the per-step
+/// [`Lexer::with_lexable`] constructor allocates nothing.
+pub fn lexable_terms(g: &Grammar) -> Vec<TermId> {
+    (0..g.terminals.len() as TermId)
+        .filter(|&t| {
+            !matches!(g.terminals[t as usize].pattern, crate::grammar::TermPattern::Declared)
+        })
+        .collect()
 }
 
 /// Parallel-DFA lexer for a grammar's terminal set.
 pub struct Lexer<'g> {
     g: &'g Grammar,
     /// Terminals that participate in lexing (skips `%declare`d ones).
-    lexable: Vec<TermId>,
+    lexable: std::borrow::Cow<'g, [TermId]>,
 }
 
 impl<'g> Lexer<'g> {
     pub fn new(g: &'g Grammar) -> Lexer<'g> {
-        let lexable = (0..g.terminals.len() as TermId)
-            .filter(|&t| {
-                !matches!(
-                    g.terminals[t as usize].pattern,
-                    crate::grammar::TermPattern::Declared
-                )
-            })
-            .collect();
-        Lexer { g, lexable }
+        Lexer { g, lexable: std::borrow::Cow::Owned(lexable_terms(g)) }
+    }
+
+    /// Zero-allocation constructor for hot paths: the caller supplies a
+    /// precomputed [`lexable_terms`] slice.
+    pub fn with_lexable(g: &'g Grammar, lexable: &'g [TermId]) -> Lexer<'g> {
+        Lexer { g, lexable: std::borrow::Cow::Borrowed(lexable) }
     }
 
     /// Lex a partial output into stable tokens + remainder.
@@ -95,6 +133,22 @@ impl<'g> Lexer<'g> {
         prefix_tokens: Vec<LexToken>,
     ) -> LexResult {
         let mut tokens = prefix_tokens;
+        let meta = self.lex_into(input, start, &mut tokens);
+        LexResult {
+            tokens,
+            remainder_start: meta.remainder_start,
+            remainder_term: meta.remainder_term,
+            error: meta.error,
+        }
+    }
+
+    /// In-place incremental form: resume at byte offset `start` and
+    /// *append* newly emitted stable tokens to `out` (which must already
+    /// hold the stable tokens of `input[..start]`). This is the hot-path
+    /// entry — the engine lexes straight into its per-step cache with no
+    /// `Vec` clone per decode step. On a lex error, tokens emitted before
+    /// the error remain appended; callers that cache must truncate.
+    pub fn lex_into(&self, input: &[u8], start: usize, out: &mut Vec<LexToken>) -> LexMeta {
         let mut i = start;
         let n = input.len();
         // Per-lexable-terminal DFA state; DEAD when that automaton died.
@@ -102,7 +156,7 @@ impl<'g> Lexer<'g> {
 
         'outer: while i < n {
             states.clear();
-            for &t in &self.lexable {
+            for &t in self.lexable.iter() {
                 states.push(self.g.terminals[t as usize].dfa.start());
             }
             let mut best: Option<(usize, TermId)> = None; // (end, term)
@@ -127,13 +181,12 @@ impl<'g> Lexer<'g> {
                     // accepting prefix seen in [i, j).
                     match best {
                         Some((end, term)) => {
-                            tokens.push(self.mk_token(term, i, end));
+                            out.push(self.mk_token(term, i, end));
                             i = end;
                             continue 'outer;
                         }
                         None => {
-                            return LexResult {
-                                tokens,
+                            return LexMeta {
                                 remainder_start: i,
                                 remainder_term: None,
                                 error: Some(j),
@@ -153,9 +206,9 @@ impl<'g> Lexer<'g> {
                 Some((end, term)) if end == n => Some(term),
                 _ => None,
             };
-            return LexResult { tokens, remainder_start: i, remainder_term, error: None };
+            return LexMeta { remainder_start: i, remainder_term, error: None };
         }
-        LexResult { tokens, remainder_start: n, remainder_term: None, error: None }
+        LexMeta { remainder_start: n, remainder_term: None, error: None }
     }
 
     /// Among current DFA states, the best terminal in an accepting state

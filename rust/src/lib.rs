@@ -13,24 +13,30 @@
 //!   mask-union + masked-softmax and causal attention.
 //!
 //! The public API surface a downstream user touches (`no_run`: doctest
-//! binaries lack the rpath to libxla_extension's bundled libstdc++):
+//! binaries lack the rpath to libxla_extension's bundled libstdc++).
+//! Everything expensive is compiled *once* into a [`artifact::CompiledGrammar`]
+//! (cacheable to disk, shareable across requests); engines are built from
+//! the artifact:
 //!
 //! ```no_run
-//! use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
-//! use syncode::mask::{MaskStore, MaskStoreConfig};
-//! use syncode::parser::LrMode;
+//! use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+//! use syncode::engine::ConstraintEngine;
 //! use syncode::tokenizer::Tokenizer;
 //! use std::sync::Arc;
 //!
-//! let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
 //! let tok = Arc::new(Tokenizer::ascii_byte_level());
-//! let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
-//! let mut eng = SyncodeEngine::new(cx, store, tok);
+//! let art = CompiledGrammar::compile("json", tok, &ArtifactConfig::default()).unwrap();
+//! let mut eng = art.engine();
 //! eng.reset("");
 //! let mask = eng.compute_mask().unwrap().unwrap(); // bitset over the vocabulary
 //! assert!(mask.count_ones() > 0);
+//!
+//! // Multi-grammar serving: one registry, many grammars, one decode loop.
+//! let reg = Arc::new(GrammarRegistry::new());
+//! reg.register(art).unwrap();
 //! ```
 
+pub mod artifact;
 pub mod coordinator;
 pub mod engine;
 pub mod eval;

@@ -2,21 +2,25 @@
 //!
 //! Subcommands:
 //!
+//! - `compile`    compile a grammar artifact offline and write its cache file;
 //! - `generate`   one-shot constrained generation (mock or PJRT model);
-//! - `serve`      run the batch server over a synthetic request stream;
+//! - `serve`      run the batch server over a synthetic request stream —
+//!   `--grammars a,b,c` serves several grammars from one registry, with
+//!   each request routed per-name through the same batched decode loop;
 //! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
 //! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
 //! - `experiment` run a paper experiment (table1|table2|table3|table4);
 //! - `check`      syntax-check a file against a grammar (the oracle).
 
+use std::path::PathBuf;
 use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
 use syncode::coordinator::{GenParams, GenRequest, Server, Strategy};
 use syncode::engine::GrammarContext;
 use syncode::eval::dataset;
 use syncode::eval::harness::{self, EngineKind, EvalEnv};
-use syncode::mask::{MaskStore, MaskStoreConfig};
 use syncode::parser::{LrMode, LrTable};
-use syncode::runtime::{ModelFactory, PjrtModel, PjrtVariant};
+use syncode::runtime::{MockModel, ModelFactory, PjrtModel, PjrtVariant};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::bench::Table;
 use syncode::util::cli::Args;
@@ -24,6 +28,7 @@ use syncode::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
+        Some("compile") => cmd_compile(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
         Some("grammar") => cmd_grammar(&args),
@@ -32,8 +37,9 @@ fn main() {
         Some("check") => cmd_check(&args),
         _ => {
             eprintln!(
-                "usage: syncode <generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
-                 common: --grammar <json|calc|sql|python|go> --artifacts <dir> --mock"
+                "usage: syncode <compile|generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
+                 common: --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
+                 \x20        --cache-dir <dir> --threads <n> --mock"
             );
             std::process::exit(2);
         }
@@ -55,51 +61,196 @@ fn params_from(args: &Args) -> GenParams {
     }
 }
 
-/// Model + tokenizer from artifacts (PJRT) or the mock fallback.
-fn model_and_tok(args: &Args, env: &EvalEnv) -> (ModelFactory, Arc<Tokenizer>) {
-    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+/// Artifact compile options from the command line.
+fn artifact_cfg(args: &Args) -> ArtifactConfig {
+    let mut cfg = ArtifactConfig::default();
+    cfg.mask.threads = args.get_num("threads", 0usize); // 0 = all cores
+    if args.flag("canonical") {
+        cfg.lr_mode = LrMode::Canonical;
+    }
+    if args.flag("no-m1") {
+        cfg.mask.with_m1 = false;
+    }
+    cfg
+}
+
+/// Short stable fingerprint of (tokenizer, compile options) for cache file
+/// names: different grammar sets train different union tokenizers, and a
+/// name-only key would make alternating subcommands overwrite each other's
+/// caches on every run (permanent thrash, never warm).
+fn cache_fingerprint(tok: &Tokenizer, cfg: &ArtifactConfig) -> String {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    tok.to_json().hash(&mut h);
+    matches!(cfg.lr_mode, LrMode::Canonical).hash(&mut h);
+    cfg.mask.with_m1.hash(&mut h);
+    cfg.mask.max_token_len.hash(&mut h);
+    format!("{:016x}", h.finish())
+}
+
+/// `<cache-dir>/<grammar>-<fingerprint>.syncart`; None when no
+/// `--cache-dir` was given.
+fn cache_path(
+    args: &Args,
+    gname: &str,
+    tok: &Tokenizer,
+    cfg: &ArtifactConfig,
+) -> Option<PathBuf> {
+    let fp = cache_fingerprint(tok, cfg);
+    args.get("cache-dir").map(|d| PathBuf::from(d).join(format!("{gname}-{fp}.syncart")))
+}
+
+/// Compile or warm-load one grammar artifact, reporting which happened.
+fn artifact_for(args: &Args, gname: &str, tok: Arc<Tokenizer>) -> Arc<CompiledGrammar> {
+    let cfg = artifact_cfg(args);
+    match cache_path(args, gname, &tok, &cfg) {
+        Some(path) => {
+            let (art, hit) = CompiledGrammar::load_or_compile(&path, gname, tok, &cfg)
+                .unwrap_or_else(|e| panic!("artifact {gname}: {e}"));
+            eprintln!(
+                "[artifact {gname}: {} {} in {:.2}s]",
+                if hit { "warm-loaded from" } else { "compiled + cached to" },
+                path.display(),
+                art.compile_stats.total_secs
+            );
+            art
+        }
+        None => CompiledGrammar::compile(gname, tok, &cfg)
+            .unwrap_or_else(|e| panic!("artifact {gname}: {e}")),
+    }
+}
+
+/// The mock-serving tokenizer for a grammar set: BPE trained on the union
+/// of the grammars' corpora. `compile`, `generate` and `serve` all share
+/// this exact recipe (same defaults for --seed/--merges), so an artifact
+/// cache written by one subcommand warm-loads in the others.
+fn mock_tokenizer(args: &Args, gnames: &[String]) -> (Arc<Tokenizer>, Vec<Vec<u8>>) {
+    let seed = args.get_num("seed", 7u64);
+    let merges = args.get_num("merges", 160usize);
+    let mut union_docs: Vec<Vec<u8>> = Vec::new();
+    for g in gnames {
+        union_docs.extend(dataset::corpus(g, 120, seed));
+    }
+    let flat: Vec<u8> =
+        union_docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    (Arc::new(Tokenizer::train(&flat, merges)), union_docs)
+}
+
+/// Parse `--grammars a,b` (falling back to `--grammar`) into a non-empty
+/// list; exits with a usage error otherwise.
+fn grammars_arg(args: &Args, cmd: &str) -> Vec<String> {
+    let gnames: Vec<String> = args
+        .get_or("grammars", &args.get_or("grammar", "json"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if gnames.is_empty() {
+        eprintln!("{cmd}: no grammars specified (--grammar json or --grammars json,calc)");
+        std::process::exit(2);
+    }
+    gnames
+}
+
+/// The serving tokenizer for a grammar set, plus the mock corpus (empty in
+/// AOT mode) and whether the mock model is in play. One shared predicate
+/// (`config.json` marks a complete AOT artifacts dir) and one shared mock
+/// recipe, so compile/generate/serve agree and caches warm-load across
+/// subcommands.
+fn serving_tokenizer(args: &Args, gnames: &[String]) -> (Arc<Tokenizer>, Vec<Vec<u8>>, bool) {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let use_mock = args.flag("mock") || !dir.join("config.json").exists();
     if use_mock {
-        eprintln!("[model: mock-bigram — pass --artifacts or run `make artifacts` for PJRT]");
-        (env.model_factory(), env.tok.clone())
+        let (tok, docs) = mock_tokenizer(args, gnames);
+        (tok, docs, true)
     } else {
         let tok = Arc::new(
             Tokenizer::from_file(&dir.join("tokenizer.json")).expect("tokenizer.json"),
         );
+        (tok, Vec::new(), false)
+    }
+}
+
+/// Mock or PJRT model factory, matching `serving_tokenizer`'s decision.
+fn model_factory(
+    args: &Args,
+    use_mock: bool,
+    tok: Arc<Tokenizer>,
+    docs: Vec<Vec<u8>>,
+) -> ModelFactory {
+    if use_mock {
+        eprintln!("[model: mock-bigram — pass --artifacts or run `make artifacts` for PJRT]");
+        let lanes = args.get_num("lanes", 2usize);
+        Box::new(move || Ok(Box::new(MockModel::from_documents(tok, &docs, lanes, 512, 11))))
+    } else {
+        let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
         let variant = if args.flag("full-recompute") {
             PjrtVariant::FullRecompute
         } else {
             PjrtVariant::KvCache
         };
-        let f: ModelFactory = Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?)));
-        (f, tok)
+        Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?)))
     }
 }
 
-fn syncode_factory(
-    env: &EvalEnv,
-    tok: &Arc<Tokenizer>,
-) -> syncode::coordinator::EngineFactory {
-    // The store must match the *serving* tokenizer (which differs from the
-    // env's mock tokenizer when artifacts are loaded).
-    let store = Arc::new(MaskStore::build(&env.cx.grammar, tok, MaskStoreConfig::default()));
-    let cx = env.cx.clone();
-    let tok = tok.clone();
-    Box::new(move || {
-        Box::new(syncode::engine::SyncodeEngine::new(cx.clone(), store.clone(), tok.clone()))
-    })
+fn cmd_compile(args: &Args) {
+    // Accepts the same --grammars list as `serve`: the artifact set must
+    // target the *serving* tokenizer, and in mock mode that tokenizer is
+    // trained on the union of the listed grammars' corpora — so compile
+    // and a later serve over the same list agree and the cache warm-loads.
+    let gnames = grammars_arg(args, "compile");
+    let (tok, _, _) = serving_tokenizer(args, &gnames);
+    let cfg = artifact_cfg(args);
+    let cache_dir = args.get_or("cache-dir", "artifacts/grammar-cache");
+
+    let mut t = Table::new(&[
+        "grammar", "|V|", "|Q|", "threads", "cached", "grammar(s)", "tables(s)",
+        "store(s)", "total(s)", "blob",
+    ]);
+    for gname in &gnames {
+        let fp = cache_fingerprint(&tok, &cfg);
+        let out = PathBuf::from(&cache_dir).join(format!("{gname}-{fp}.syncart"));
+        let (art, hit) =
+            CompiledGrammar::load_or_compile(&out, gname, tok.clone(), &cfg)
+                .unwrap_or_else(|e| panic!("compile {gname}: {e}"));
+        let blob_len =
+            std::fs::metadata(&out).map(|m| m.len() as usize).unwrap_or(0);
+        let cs = &art.compile_stats;
+        let ss = &art.store.stats;
+        t.row(&[
+            gname.clone(),
+            ss.vocab_size.to_string(),
+            ss.num_dfa_states.to_string(),
+            ss.build_threads.to_string(),
+            if hit { "warm" } else { "cold" }.to_string(),
+            format!("{:.3}", cs.grammar_secs),
+            format!("{:.3}", cs.table_secs),
+            format!("{:.3}", cs.store_secs),
+            format!("{:.3}", cs.total_secs),
+            format!("{:.2}MB", blob_len as f64 / 1e6),
+        ]);
+        println!("{} {}", if hit { "already cached:" } else { "wrote" }, out.display());
+    }
+    t.print();
+    println!(
+        "warm-start it with: syncode serve --grammars {} --cache-dir {}",
+        gnames.join(","),
+        cache_dir
+    );
 }
 
 fn cmd_generate(args: &Args) {
     let gname = args.get_or("grammar", "json");
-    let env = EvalEnv::new(&gname, 80, 120, args.get_num("seed", 7));
-    let (model, tok) = model_and_tok(args, &env);
-    let srv = Server::start(model, tok.clone(), syncode_factory(&env, &tok));
+    let (tok, docs, use_mock) = serving_tokenizer(args, std::slice::from_ref(&gname));
+    let model = model_factory(args, use_mock, tok.clone(), docs);
+    let art = artifact_for(args, &gname, tok.clone());
+    let srv = Server::start(model, tok.clone(), art.engine_factory());
     let prompt = args.get_or("prompt", "Please generate a JSON object.");
     let resp = srv.generate(GenRequest {
         id: 1,
         prompt,
         constraint_prefix: args.get_or("prefix", ""),
+        grammar: None,
         params: params_from(args),
     });
     println!(
@@ -114,27 +265,57 @@ fn cmd_generate(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    let gname = args.get_or("grammar", "json");
+    let gnames = grammars_arg(args, "serve");
     let n = args.get_num("requests", 8usize);
-    let env = EvalEnv::new(&gname, 80, 120, args.get_num("seed", 7));
-    let (model, tok) = model_and_tok(args, &env);
-    let srv = Server::start(model, tok.clone(), syncode_factory(&env, &tok));
-    let tasks = dataset::json_mode_tasks(n, 3);
+    let (tok, union_docs, use_mock) = serving_tokenizer(args, &gnames);
+
+    // Registry: one compiled artifact per grammar, same tokenizer.
+    let registry = Arc::new(GrammarRegistry::new());
+    for g in &gnames {
+        let art = artifact_for(args, g, tok.clone());
+        registry.register(art).unwrap_or_else(|e| panic!("register {g}: {e}"));
+    }
+    eprintln!("[registry: {}]", registry.names().join(", "));
+
+    let model = model_factory(args, use_mock, tok.clone(), union_docs);
+    let srv = Server::start(model, tok, registry.clone());
     let params = params_from(args);
-    let rxs: Vec<_> = tasks
-        .iter()
-        .map(|t| {
-            srv.submit(GenRequest {
-                id: t.id,
-                prompt: t.prompt.clone(),
+    // Round-robin the registered grammars across the request stream: the
+    // scheduler batches them into the same decode loop.
+    let json_tasks = dataset::json_mode_tasks(n, 3);
+    let reqs: Vec<GenRequest> = (0..n as u64)
+        .map(|i| {
+            let g = gnames[i as usize % gnames.len()].clone();
+            let prompt = match g.as_str() {
+                "json" => json_tasks[i as usize].prompt.clone(),
+                _ => format!("produce a valid {g} snippet (#{i})"),
+            };
+            GenRequest {
+                id: i,
+                prompt,
                 constraint_prefix: String::new(),
+                grammar: Some(g),
                 params: params.clone(),
-            })
+            }
         })
         .collect();
-    for (t, rx) in tasks.iter().zip(rxs) {
+    let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+    for (req, rx) in reqs.iter().zip(rxs) {
         let r = rx.recv().unwrap();
-        println!("req {}: {:?} {} tokens | {}", t.id, r.finish, r.tokens, r.text);
+        let g = req.grammar.as_deref().unwrap_or("?");
+        let valid = registry
+            .get(g)
+            .map(|art| art.cx.check_complete(r.text.as_bytes()).is_ok())
+            .unwrap_or(false);
+        println!(
+            "req {:2} [{:8}] {:?} {:3} tokens valid={} | {}",
+            req.id,
+            g,
+            r.finish,
+            r.tokens,
+            valid,
+            r.text.lines().next().unwrap_or("")
+        );
     }
     println!("\n{}", srv.metrics.lock().unwrap().snapshot().report());
     srv.shutdown();
@@ -176,13 +357,15 @@ fn cmd_maskstore(args: &Args) {
     let merges = args.get_num("merges", 300usize);
     let env = EvalEnv::new(&gname, 120, merges, 7);
     let s = &env.store.stats;
-    let mut t =
-        Table::new(&["grammar", "|V|", "|Q|", "|Γ|", "build(s)", "masks", "mem", "raw"]);
+    let mut t = Table::new(&[
+        "grammar", "|V|", "|Q|", "|Γ|", "threads", "build(s)", "masks", "mem", "raw",
+    ]);
     t.row(&[
         gname.clone(),
         s.vocab_size.to_string(),
         s.num_dfa_states.to_string(),
         s.num_terminals.to_string(),
+        s.build_threads.to_string(),
         format!("{:.2}", s.build_secs),
         s.unique_masks.to_string(),
         format!("{:.1}MB", s.mem_bytes as f64 / 1e6),

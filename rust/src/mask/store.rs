@@ -30,11 +30,24 @@ pub struct MaskStoreConfig {
     /// Cap on token length considered for prefix-split positions (tokens
     /// longer than this still get condition-1 treatment).
     pub max_token_len: usize,
+    /// Worker threads for the per-(state, token) walk loop: 1 = serial
+    /// (the default), 0 = one per available core, n = exactly n. The
+    /// result is bit-identical across thread counts (sharded work merges
+    /// in shard order, so the interned pool keeps first-occurrence order).
+    pub threads: usize,
 }
 
 impl Default for MaskStoreConfig {
     fn default() -> Self {
-        MaskStoreConfig { with_m1: true, max_token_len: 64 }
+        MaskStoreConfig { with_m1: true, max_token_len: 64, threads: 1 }
+    }
+}
+
+impl MaskStoreConfig {
+    /// Default options with the parallel build enabled (one worker per
+    /// available core). Used by the artifact layer's offline compile.
+    pub fn parallel() -> Self {
+        MaskStoreConfig { threads: 0, ..MaskStoreConfig::default() }
     }
 }
 
@@ -42,6 +55,8 @@ impl Default for MaskStoreConfig {
 #[derive(Debug, Clone)]
 pub struct MaskStoreStats {
     pub build_secs: f64,
+    /// Worker threads the build actually used (0 after deserialisation).
+    pub build_threads: usize,
     pub vocab_size: usize,
     pub num_dfa_states: usize,
     pub num_terminals: usize,
@@ -123,6 +138,13 @@ impl MaskStore {
     }
 
     /// Build the store for a grammar × tokenizer pair.
+    ///
+    /// The per-(state, token) walk loop — the dominant offline cost of
+    /// Table 5 — is sharded across `cfg.threads` workers over contiguous
+    /// ranges of live DFA states. Shard outputs are merged *in shard
+    /// order*, re-interning each shard-local mask pool into the global
+    /// pool, so the result (masks, pool order, and serialised bytes) is
+    /// bit-identical to the serial build for every thread count.
     pub fn build(g: &Grammar, tok: &Tokenizer, cfg: MaskStoreConfig) -> MaskStore {
         let t0 = std::time::Instant::now();
         let nterms = g.terminals.len();
@@ -144,159 +166,86 @@ impl MaskStore {
             .collect();
 
         // ---- pass 1: suffmatch(τ, t, i) -------------------------------
-        // suff[τ][k] = bitmask over suffix starts i (bit i set ⇔
-        // dmatch(t[i..], q0^τ, {})), for token index k.
-        let mut suff: Vec<Vec<u64>> = vec![vec![0u64; tokens.len()]; nterms];
-        for (term_idx, term) in g.terminals.iter().enumerate() {
-            if matches!(term.pattern, TermPattern::Declared) {
-                continue; // declared terminals never match text
-            }
-            let dfa = &term.dfa;
-            let suffv = &mut suff[term_idx];
-            for (k, &(_, bytes)) in tokens.iter().enumerate() {
-                let n = bytes.len().min(63);
-                let mut bits = 0u64;
-                // dmatch(t[i..], q0, {}) = live-all-the-way OR some strict
-                // prefix of the suffix lands in F.
-                for i in 0..=n {
-                    let mut q = dfa.start();
-                    let mut ok = false;
-                    if dfa.is_accept(q) && i < n {
-                        ok = true; // ε prefix in F with nonempty leftover
-                    }
-                    if !ok {
-                        let mut live = true;
-                        for (j, &b) in bytes.iter().enumerate().skip(i) {
-                            q = dfa.step(q, b);
-                            if q == DEAD {
-                                live = false;
-                                break;
-                            }
-                            if dfa.is_accept(q) && j + 1 < bytes.len() {
-                                ok = true; // condition 2 split
-                                break;
-                            }
-                        }
-                        if live && q != DEAD && dfa.is_live(q) {
-                            ok = true; // condition 1
-                        }
-                        if i == n && n == bytes.len() {
-                            // empty suffix: dmatch(ε) = start live
-                            ok = dfa.is_live(dfa.start());
-                        }
-                    }
-                    if ok {
-                        bits |= 1 << i;
-                    }
-                }
-                suffv[k] = bits;
-            }
-        }
+        let suff = suffix_match_table(g, &tokens);
 
         // ---- pass 2: per (state, token) walks; assemble M₀ / M₁ --------
-        let mut pool: Vec<BitSet> = Vec::new();
-        let mut pool_idx: HashMap<u64, Vec<u32>> = HashMap::new(); // hash → candidates
-        let mut intern = |mask: BitSet, pool: &mut Vec<BitSet>| -> u32 {
-            if mask.is_empty() {
-                return NONE;
-            }
-            use std::hash::{Hash, Hasher};
-            let mut h = std::collections::hash_map::DefaultHasher::new();
-            mask.hash(&mut h);
-            let key = h.finish();
-            let cands = pool_idx.entry(key).or_default();
-            for &c in cands.iter() {
-                if pool[c as usize] == mask {
-                    return c;
-                }
-            }
-            let id = pool.len() as u32;
-            pool.push(mask);
-            cands.push(id);
-            id
+        // Work items: every live state of every lexable terminal, in
+        // (terminal, state) order — the serial iteration order.
+        let items: Vec<(u16, u32)> = g
+            .terminals
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !matches!(t.pattern, TermPattern::Declared))
+            .flat_map(|(ti, t)| {
+                (0..t.dfa.num_states() as u32)
+                    .filter(move |&q| t.dfa.is_live(q))
+                    .map(move |q| (ti as u16, q))
+            })
+            .collect();
+
+        let threads = match cfg.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+        .min(items.len().max(1));
+
+        let shard = ShardContext {
+            g,
+            tokens: &tokens,
+            suff: &suff,
+            offsets: &offsets,
+            vocab_size,
+            nterms,
+            with_m1: cfg.with_m1,
+        };
+        let outs: Vec<ShardOut> = if threads <= 1 {
+            vec![shard.process(&items)]
+        } else {
+            // Contiguous balanced chunks; merge order = chunk order below.
+            let chunk = items.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = items
+                    .chunks(chunk)
+                    .map(|c| {
+                        let shard = &shard;
+                        s.spawn(move || shard.process(c))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("mask-store build worker panicked"))
+                    .collect()
+            })
         };
 
+        // ---- ordered merge --------------------------------------------
+        let mut interner = Interner::default();
         let mut m0 = vec![NONE; num_states as usize];
         let mut m1 = if cfg.with_m1 {
             vec![NONE; num_states as usize * nterms]
         } else {
             Vec::new()
         };
-
-        // Reusable per-token scratch: (live_all, fhits bitmask incl. bit len).
-        let mut walk_info: Vec<(bool, u64)> = vec![(false, 0); tokens.len()];
-
-        for (term_idx, term) in g.terminals.iter().enumerate() {
-            if matches!(term.pattern, TermPattern::Declared) {
-                continue;
+        for out in outs {
+            // Shard-local pool index → global pool index (first-occurrence
+            // order is preserved because shards merge in item order).
+            let map: Vec<u32> =
+                out.pool.into_iter().map(|mask| interner.intern(mask)).collect();
+            for (gidx, local) in out.m0 {
+                m0[gidx as usize] = map[local as usize];
             }
-            let dfa = &term.dfa;
-            for q in 0..dfa.num_states() as u32 {
-                if !dfa.is_live(q) {
-                    continue; // Algorithm 2 never looks up dead states
-                }
-                // Walk every token from q.
-                for (k, &(_, bytes)) in tokens.iter().enumerate() {
-                    let mut cur = q;
-                    let mut fhits = 0u64;
-                    if dfa.is_accept(cur) {
-                        fhits |= 1; // i = 0
-                    }
-                    let mut live_all = true;
-                    for (j, &b) in bytes.iter().enumerate() {
-                        cur = dfa.step(cur, b);
-                        if cur == DEAD {
-                            live_all = false;
-                            break;
-                        }
-                        if dfa.is_accept(cur) && j + 1 <= 63 {
-                            fhits |= 1 << (j + 1);
-                        }
-                    }
-                    if live_all && !dfa.is_live(cur) {
-                        live_all = false;
-                    }
-                    walk_info[k] = (live_all, fhits);
-                }
-
-                // M₀(q): live_all OR a strict-prefix F hit.
-                let mut mask = BitSet::new(vocab_size);
-                for (k, &(id, bytes)) in tokens.iter().enumerate() {
-                    let (live_all, fhits) = walk_info[k];
-                    let strict = fhits & ((1u64 << bytes.len().min(63)) - 1);
-                    if live_all || strict != 0 {
-                        mask.set(id as usize);
-                    }
-                }
-                let g_idx = (offsets[term_idx] + q) as usize;
-                m0[g_idx] = intern(mask, &mut pool);
-
-                // M₁(q, τnext): live_all OR some F-hit position i with
-                // suffmatch(τnext, t, i).
-                if cfg.with_m1 {
-                    for nt in 0..nterms {
-                        if matches!(g.terminals[nt].pattern, TermPattern::Declared) {
-                            continue;
-                        }
-                        let mut mask = BitSet::new(vocab_size);
-                        let suffv = &suff[nt];
-                        for (k, &(id, _)) in tokens.iter().enumerate() {
-                            let (live_all, fhits) = walk_info[k];
-                            if live_all || (fhits & suffv[k]) != 0 {
-                                mask.set(id as usize);
-                            }
-                        }
-                        m1[g_idx * nterms + nt] = intern(mask, &mut pool);
-                    }
-                }
+            for (flat, local) in out.m1 {
+                m1[flat] = map[local as usize];
             }
         }
+        let pool = interner.pool;
 
         let mask_bytes = vocab_size.div_ceil(64) * 8;
         let mem_bytes = pool.len() * mask_bytes + (m0.len() + m1.len()) * 4;
         let raw_bytes = (m0.len() + m1.len()) * mask_bytes;
         let stats = MaskStoreStats {
             build_secs: t0.elapsed().as_secs_f64(),
+            build_threads: threads,
             vocab_size,
             num_dfa_states: num_states as usize,
             num_terminals: nterms,
@@ -362,46 +311,57 @@ impl MaskStore {
 
     /// Deserialise a blob written by [`MaskStore::to_bytes`].
     pub fn from_bytes(data: &[u8]) -> Result<MaskStore, String> {
-        let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
-            if *pos + n > data.len() {
-                return Err("truncated mask store blob".into());
-            }
-            let s = &data[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        let magic = take(&mut pos, 8)?;
-        if magic != b"SYNCMSK1" {
+        let mut r = crate::util::blob::BlobReader::new(data);
+        if r.take(8)? != b"SYNCMSK1" {
             return Err("bad mask store magic".into());
         }
-        let read64 = |pos: &mut usize| -> Result<u64, String> {
-            Ok(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()))
-        };
-        let vocab_size = read64(&mut pos)? as usize;
-        let eos_id = read64(&mut pos)? as u32;
-        let num_states = read64(&mut pos)? as usize;
-        let nterms = read64(&mut pos)? as usize;
-        let n_off = read64(&mut pos)? as usize;
-        let n_m0 = read64(&mut pos)? as usize;
-        let n_m1 = read64(&mut pos)? as usize;
-        let n_pool = read64(&mut pos)? as usize;
-        let read_u32s = |pos: &mut usize, n: usize| -> Result<Vec<u32>, String> {
-            let bytes = take(pos, n * 4)?;
-            Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
-        };
-        let offsets = read_u32s(&mut pos, n_off)?;
-        let m0 = read_u32s(&mut pos, n_m0)?;
-        let m1 = read_u32s(&mut pos, n_m1)?;
+        let vocab_size = r.len_field()?;
+        let eos_id = r.u64()? as u32;
+        let num_states = r.len_field()?;
+        let nterms = r.len_field()?;
+        let n_off = r.len_field()?;
+        let n_m0 = r.len_field()?;
+        let n_m1 = r.len_field()?;
+        let n_pool = r.len_field()?;
+        let offsets = r.u32s(n_off)?;
+        let m0 = r.u32s(n_m0)?;
+        let m1 = r.u32s(n_m1)?;
         let words_per = vocab_size.div_ceil(64);
-        let mut pool = Vec::with_capacity(n_pool);
+        let mut pool = Vec::with_capacity(n_pool.min(1 << 20));
         for _ in 0..n_pool {
-            let bytes = take(&mut pos, words_per * 8)?;
+            let bytes = r.take(words_per * 8)?;
             let words: Vec<u64> = bytes
                 .chunks_exact(8)
                 .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
                 .collect();
             pool.push(BitSet::from_words(words, vocab_size));
+        }
+
+        // ---- structural validation ------------------------------------
+        // The blob is untrusted (a cache file): every index a lookup can
+        // follow must be in range, or serving would panic instead of
+        // falling back to a rebuild.
+        if vocab_size == 0 || (eos_id as usize) >= vocab_size {
+            return Err("eos id outside vocabulary".into());
+        }
+        if offsets.len() != nterms {
+            return Err("offsets/terminal count mismatch".into());
+        }
+        if m0.len() != num_states {
+            return Err("m0/state count mismatch".into());
+        }
+        let m1_expect = num_states
+            .checked_mul(nterms)
+            .ok_or("oversized m1 dimensions")?;
+        if !m1.is_empty() && m1.len() != m1_expect {
+            return Err("m1/state×terminal count mismatch".into());
+        }
+        if offsets.iter().any(|&o| o as usize > num_states) {
+            return Err("terminal offset out of range".into());
+        }
+        let pool_len = pool.len() as u32;
+        if m0.iter().chain(m1.iter()).any(|&v| v != NONE && v >= pool_len) {
+            return Err("mask pool index out of range".into());
         }
         let mask_bytes = words_per * 8;
         let mem_bytes = pool.len() * mask_bytes + (m0.len() + m1.len()) * 4;
@@ -413,6 +373,7 @@ impl MaskStore {
             num_states,
             stats: MaskStoreStats {
                 build_secs: 0.0,
+                build_threads: 0,
                 vocab_size,
                 num_dfa_states: num_states,
                 num_terminals: nterms,
@@ -446,6 +407,184 @@ impl MaskStore {
         let s = MaskStore::build(g, tok, cfg);
         let _ = std::fs::write(path, s.to_bytes());
         s
+    }
+}
+
+/// Hash-deduplicating mask interner (first-occurrence pool order).
+#[derive(Default)]
+struct Interner {
+    pool: Vec<BitSet>,
+    /// hash → candidate pool indices (collision chain).
+    index: HashMap<u64, Vec<u32>>,
+}
+
+impl Interner {
+    fn intern(&mut self, mask: BitSet) -> u32 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        mask.hash(&mut h);
+        let key = h.finish();
+        let cands = self.index.entry(key).or_default();
+        for &c in cands.iter() {
+            if self.pool[c as usize] == mask {
+                return c;
+            }
+        }
+        let id = self.pool.len() as u32;
+        self.pool.push(mask);
+        cands.push(id);
+        id
+    }
+}
+
+/// Pass 1: suff[τ][k] = bitmask over suffix starts i (bit i set ⇔
+/// dmatch(t[i..], q0^τ, {})), for token index k — the "jump into the next
+/// terminal" primitive of Definition 10 condition 3.
+fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u64>> {
+    let mut suff: Vec<Vec<u64>> = vec![vec![0u64; tokens.len()]; g.terminals.len()];
+    for (term_idx, term) in g.terminals.iter().enumerate() {
+        if matches!(term.pattern, TermPattern::Declared) {
+            continue; // declared terminals never match text
+        }
+        let dfa = &term.dfa;
+        let suffv = &mut suff[term_idx];
+        for (k, &(_, bytes)) in tokens.iter().enumerate() {
+            let n = bytes.len().min(63);
+            let mut bits = 0u64;
+            // dmatch(t[i..], q0, {}) = live-all-the-way OR some strict
+            // prefix of the suffix lands in F.
+            for i in 0..=n {
+                let mut q = dfa.start();
+                let mut ok = false;
+                if dfa.is_accept(q) && i < n {
+                    ok = true; // ε prefix in F with nonempty leftover
+                }
+                if !ok {
+                    let mut live = true;
+                    for (j, &b) in bytes.iter().enumerate().skip(i) {
+                        q = dfa.step(q, b);
+                        if q == DEAD {
+                            live = false;
+                            break;
+                        }
+                        if dfa.is_accept(q) && j + 1 < bytes.len() {
+                            ok = true; // condition 2 split
+                            break;
+                        }
+                    }
+                    if live && q != DEAD && dfa.is_live(q) {
+                        ok = true; // condition 1
+                    }
+                    if i == n && n == bytes.len() {
+                        // empty suffix: dmatch(ε) = start live
+                        ok = dfa.is_live(dfa.start());
+                    }
+                }
+                if ok {
+                    bits |= 1 << i;
+                }
+            }
+            suffv[k] = bits;
+        }
+    }
+    suff
+}
+
+/// Read-only inputs shared by every build shard.
+struct ShardContext<'a> {
+    g: &'a Grammar,
+    tokens: &'a [(u32, &'a [u8])],
+    suff: &'a [Vec<u64>],
+    offsets: &'a [u32],
+    vocab_size: usize,
+    nterms: usize,
+    with_m1: bool,
+}
+
+/// One shard's output: sparse (index, local-pool-id) entries plus the
+/// shard-local interned pool. Empty masks are simply absent (NONE).
+struct ShardOut {
+    pool: Vec<BitSet>,
+    /// (global state index, local pool id)
+    m0: Vec<(u32, u32)>,
+    /// (flat m1 index = gidx * nterms + next, local pool id)
+    m1: Vec<(usize, u32)>,
+}
+
+impl ShardContext<'_> {
+    /// Walk every token from every (terminal, state) item and assemble the
+    /// shard's M₀/M₁ entries — the body of the paper's offline loop.
+    fn process(&self, items: &[(u16, u32)]) -> ShardOut {
+        let mut interner = Interner::default();
+        let mut out = ShardOut { pool: Vec::new(), m0: Vec::new(), m1: Vec::new() };
+        // Reusable per-token scratch: (live_all, fhits bitmask incl. bit len).
+        let mut walk_info: Vec<(bool, u64)> = vec![(false, 0); self.tokens.len()];
+
+        for &(term_idx, q) in items {
+            let dfa = &self.g.terminals[term_idx as usize].dfa;
+            // Walk every token from q.
+            for (k, &(_, bytes)) in self.tokens.iter().enumerate() {
+                let mut cur = q;
+                let mut fhits = 0u64;
+                if dfa.is_accept(cur) {
+                    fhits |= 1; // i = 0
+                }
+                let mut live_all = true;
+                for (j, &b) in bytes.iter().enumerate() {
+                    cur = dfa.step(cur, b);
+                    if cur == DEAD {
+                        live_all = false;
+                        break;
+                    }
+                    if dfa.is_accept(cur) && j + 1 <= 63 {
+                        fhits |= 1 << (j + 1);
+                    }
+                }
+                if live_all && !dfa.is_live(cur) {
+                    live_all = false;
+                }
+                walk_info[k] = (live_all, fhits);
+            }
+
+            // M₀(q): live_all OR a strict-prefix F hit.
+            let mut mask = BitSet::new(self.vocab_size);
+            for (k, &(id, bytes)) in self.tokens.iter().enumerate() {
+                let (live_all, fhits) = walk_info[k];
+                let strict = fhits & ((1u64 << bytes.len().min(63)) - 1);
+                if live_all || strict != 0 {
+                    mask.set(id as usize);
+                }
+            }
+            let g_idx = (self.offsets[term_idx as usize] + q) as usize;
+            if !mask.is_empty() {
+                out.m0.push((g_idx as u32, interner.intern(mask)));
+            }
+
+            // M₁(q, τnext): live_all OR some F-hit position i with
+            // suffmatch(τnext, t, i).
+            if self.with_m1 {
+                for nt in 0..self.nterms {
+                    if matches!(
+                        self.g.terminals[nt].pattern,
+                        TermPattern::Declared
+                    ) {
+                        continue;
+                    }
+                    let mut mask = BitSet::new(self.vocab_size);
+                    let suffv = &self.suff[nt];
+                    for (k, &(id, _)) in self.tokens.iter().enumerate() {
+                        let (live_all, fhits) = walk_info[k];
+                        if live_all || (fhits & suffv[k]) != 0 {
+                            mask.set(id as usize);
+                        }
+                    }
+                    if !mask.is_empty() {
+                        out.m1.push((g_idx * self.nterms + nt, interner.intern(mask)));
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -667,5 +806,37 @@ mod tests {
         assert!(s.stats.build_secs >= 0.0);
         assert!(s.stats.num_dfa_states > 10);
         assert!(s.stats.mem_bytes > 0);
+        assert_eq!(s.stats.build_threads, 1);
+    }
+
+    #[test]
+    fn parallel_build_bit_identical_to_serial() {
+        // The sharded build must agree with the serial one not just on
+        // every mask lookup but on the serialised bytes (pool order is
+        // first-occurrence order regardless of thread count).
+        let g = Grammar::builtin("json").unwrap();
+        let corpus = br#"{"alpha": [1, 2.5, true], "beta": {"s": "x"}}"#.repeat(40);
+        let t = Tokenizer::train(&corpus, 40);
+        let serial = MaskStore::build(&g, &t, MaskStoreConfig::default());
+        for threads in [2usize, 3, 8] {
+            let cfg = MaskStoreConfig { threads, ..MaskStoreConfig::default() };
+            let par = MaskStore::build(&g, &t, cfg);
+            assert_eq!(
+                serial.to_bytes(),
+                par.to_bytes(),
+                "parallel ({threads} threads) differs from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_build_without_m1() {
+        let g = Grammar::builtin("calc").unwrap();
+        let t = Tokenizer::ascii_byte_level();
+        let cfg_s = MaskStoreConfig { with_m1: false, ..MaskStoreConfig::default() };
+        let cfg_p = MaskStoreConfig { with_m1: false, threads: 4, ..MaskStoreConfig::default() };
+        let serial = MaskStore::build(&g, &t, cfg_s);
+        let par = MaskStore::build(&g, &t, cfg_p);
+        assert_eq!(serial.to_bytes(), par.to_bytes());
     }
 }

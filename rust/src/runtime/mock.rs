@@ -6,7 +6,8 @@
 
 use super::LanguageModel;
 use crate::tokenizer::Tokenizer;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
 

@@ -11,12 +11,16 @@
 //!   used by tests and benches so the whole stack runs without artifacts.
 
 mod mock;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 
 pub use mock::MockModel;
 pub use pjrt::{PjrtModel, PjrtVariant};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Constructs the model inside the scheduler thread (see
 /// [`LanguageModel`]'s `Send` note).

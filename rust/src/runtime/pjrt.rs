@@ -20,9 +20,22 @@
 //! constants, so the Rust side feeds only tokens/positions/caches.
 
 use super::LanguageModel;
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::{parse, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::path::{Path, PathBuf};
+
+/// Adapt `xla`-crate results into the local error substrate (the shim has
+/// no blanket `From<E: std::error::Error>` — see `util/error.rs`).
+trait IntoLocal<T> {
+    fn e(self) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> IntoLocal<T> for std::result::Result<T, E> {
+    fn e(self) -> Result<T> {
+        self.map_err(Error::msg)
+    }
+}
 
 /// Which executable drives `decode`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +104,7 @@ impl PjrtModel {
             n_heads: field("n_heads")?,
             d_head: field("d_head")?,
         };
-        let client = xla::PjRtClient::cpu()?;
+        let client = xla::PjRtClient::cpu().e()?;
         let (prefill_exe, decode_exe, forward_exe) = match variant {
             PjrtVariant::KvCache => (
                 Some(load_exe(&client, dir, "prefill.hlo.txt")?),
@@ -111,8 +124,8 @@ impl PjrtModel {
             cfg.d_head as i64,
         ];
         let zeros = vec![0f32; cache_len];
-        let k_cache = xla::Literal::vec1(&zeros).reshape(&dims)?;
-        let v_cache = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        let k_cache = xla::Literal::vec1(&zeros).reshape(&dims).e()?;
+        let v_cache = xla::Literal::vec1(&zeros).reshape(&dims).e()?;
         Ok(PjrtModel {
             hist: vec![None; cfg.lanes],
             cfg,
@@ -139,12 +152,12 @@ impl PjrtModel {
                 lens[lane] = h.len() as i32;
             }
         }
-        let t_lit = xla::Literal::vec1(&tokens).reshape(&[b as i64, s as i64])?;
+        let t_lit = xla::Literal::vec1(&tokens).reshape(&[b as i64, s as i64]).e()?;
         let l_lit = xla::Literal::vec1(&lens);
         let exe = self.forward_exe.as_ref().expect("forward exe");
-        let out = exe.execute::<&xla::Literal>(&[&t_lit, &l_lit])?[0][0].to_literal_sync()?;
-        let logits_lit = out.to_tuple1()?;
-        let flat = logits_lit.to_vec::<f32>()?;
+        let out = exe.execute::<&xla::Literal>(&[&t_lit, &l_lit]).e()?[0][0].to_literal_sync().e()?;
+        let logits_lit = out.to_tuple1().e()?;
+        let flat = logits_lit.to_vec::<f32>().e()?;
         let mut res = Vec::with_capacity(b);
         for (lane, h) in self.hist.iter().enumerate() {
             if h.is_some() {
@@ -199,14 +212,14 @@ impl LanguageModel for PjrtModel {
                     &lane_lit,
                     &self.k_cache,
                     &self.v_cache,
-                ])?[0][0]
-                    .to_literal_sync()?;
-                let parts = out.to_tuple()?;
+                ]).e()?[0][0]
+                    .to_literal_sync().e()?;
+                let parts = out.to_tuple().e()?;
                 let mut it = parts.into_iter();
                 let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
                 self.k_cache = it.next().ok_or_else(|| anyhow!("missing k'"))?;
                 self.v_cache = it.next().ok_or_else(|| anyhow!("missing v'"))?;
-                Ok(logits.to_vec::<f32>()?)
+                Ok(logits.to_vec::<f32>().e()?)
             }
         }
     }
@@ -252,15 +265,15 @@ impl LanguageModel for PjrtModel {
                     &p_lit,
                     &self.k_cache,
                     &self.v_cache,
-                ])?[0][0]
-                    .to_literal_sync()?;
-                let parts = out.to_tuple()?;
+                ]).e()?[0][0]
+                    .to_literal_sync().e()?;
+                let parts = out.to_tuple().e()?;
                 let mut it = parts.into_iter();
                 let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
                 self.k_cache = it.next().ok_or_else(|| anyhow!("missing k'"))?;
                 self.v_cache = it.next().ok_or_else(|| anyhow!("missing v'"))?;
                 let v = self.cfg.vocab_size;
-                let flat = logits.to_vec::<f32>()?;
+                let flat = logits.to_vec::<f32>().e()?;
                 let mut res = Vec::with_capacity(b);
                 for lane in 0..b {
                     if last[lane].is_some() {

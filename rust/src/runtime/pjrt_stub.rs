@@ -1,0 +1,78 @@
+//! Stub PJRT model used when the crate is built without the `xla` feature
+//! (the offline default). Mirrors the API of `pjrt.rs` so call sites
+//! compile unchanged; `load` always fails with a clear message and the
+//! trait methods are unreachable because no instance can exist.
+
+use super::LanguageModel;
+use crate::bail;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Which executable drives `decode` (mirrors `pjrt.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PjrtVariant {
+    /// KV-cache decode step (optimised path).
+    KvCache,
+    /// Stateless full-sequence recompute each step (perf baseline).
+    FullRecompute,
+}
+
+/// Unconstructible stand-in for the PJRT-backed model.
+pub struct PjrtModel {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl PjrtModel {
+    /// Always fails: the binary was built without the `xla` feature.
+    pub fn load(dir: &Path, variant: PjrtVariant) -> Result<PjrtModel> {
+        bail!(
+            "PJRT model ({variant:?}) from {} unavailable: built without the \
+             `xla` feature (use --mock, or rebuild with --features xla in an \
+             environment that vendors the xla crate)",
+            dir.display()
+        )
+    }
+}
+
+impl LanguageModel for PjrtModel {
+    fn vocab_size(&self) -> usize {
+        match self._unconstructible {}
+    }
+
+    fn lanes(&self) -> usize {
+        match self._unconstructible {}
+    }
+
+    fn max_seq(&self) -> usize {
+        match self._unconstructible {}
+    }
+
+    fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> Result<Vec<f32>> {
+        match self._unconstructible {}
+    }
+
+    fn decode(&mut self, _last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>> {
+        match self._unconstructible {}
+    }
+
+    fn release(&mut self, _lane: usize) {
+        match self._unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = PjrtModel::load(Path::new("artifacts"), PjrtVariant::KvCache)
+            .err()
+            .expect("stub must fail");
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

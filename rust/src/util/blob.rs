@@ -1,0 +1,85 @@
+//! Bounds-checked little-endian blob reading, shared by the binary
+//! deserialisers (`SYNCMSK1` mask stores, `SYNCART1` artifacts).
+//!
+//! Length fields come from the untrusted blob itself, so the overflow
+//! invariant lives here once: `pos + n` is never computed before checking
+//! that `n` fits in the remaining bytes.
+
+/// Cursor over an untrusted byte blob.
+pub struct BlobReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    pub fn new(data: &'a [u8]) -> BlobReader<'a> {
+        BlobReader { data, pos: 0 }
+    }
+
+    /// Next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos > self.data.len() || n > self.data.len() - self.pos {
+            return Err("truncated blob".into());
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 length/count field narrowed to `usize`.
+    pub fn len_field(&mut self) -> Result<usize, String> {
+        usize::try_from(self.u64()?).map_err(|_| "oversized length field".to_string())
+    }
+
+    /// `n` little-endian u32s.
+    pub fn u32s(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        let nbytes = n.checked_mul(4).ok_or_else(|| "oversized table".to_string())?;
+        Ok(self
+            .take(nbytes)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// True when the cursor consumed the whole blob.
+    pub fn at_end(&self) -> bool {
+        self.pos == self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_fields_in_order() {
+        let mut blob = Vec::new();
+        blob.extend_from_slice(b"MAGIC!!!");
+        blob.extend_from_slice(&7u64.to_le_bytes());
+        blob.extend_from_slice(&3u32.to_le_bytes());
+        blob.extend_from_slice(&9u32.to_le_bytes());
+        let mut r = BlobReader::new(&blob);
+        assert_eq!(r.take(8).unwrap(), b"MAGIC!!!");
+        assert_eq!(r.u64().unwrap(), 7);
+        assert_eq!(r.u32s(2).unwrap(), vec![3, 9]);
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn truncation_and_overflow_are_errors_not_panics() {
+        let blob = 1u64.to_le_bytes();
+        let mut r = BlobReader::new(&blob);
+        assert!(r.take(9).is_err());
+        // A length field near usize::MAX must not overflow `pos + n`.
+        let mut r = BlobReader::new(&blob);
+        assert!(r.take(usize::MAX).is_err());
+        let mut r = BlobReader::new(&blob);
+        assert!(r.u32s(usize::MAX / 2).is_err());
+        // After an error the cursor is still usable for valid reads.
+        assert_eq!(r.u64().unwrap(), 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal `anyhow`-compatible error substrate (crates.io is unavailable
+//! offline — see the note in `util/mod.rs`).
+//!
+//! Provides the subset the runtime/coordinator layers use: an opaque
+//! [`Error`] with a context chain, the [`Result`] alias, the
+//! [`Context`] extension trait, and the `anyhow!`/`bail!` macros
+//! (exported at the crate root, as macros are).
+
+use std::fmt;
+
+/// An opaque error: a message plus outer context frames.
+pub struct Error {
+    /// Context frames, outermost first; the last entry is the root message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context frame (outermost first).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The full context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` lookalike.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension adding `.context(..)` / `.with_context(..)` to results whose
+/// error is displayable.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (crate-root export).
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] (crate-root export).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_context() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(e.to_string(), "outer: root");
+        assert_eq!(e.chain().len(), 2);
+    }
+
+    #[test]
+    fn context_trait_on_results() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.context("loading x").unwrap_err();
+        assert_eq!(e.to_string(), "loading x: boom");
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.with_context(|| format!("file {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "file 3: boom");
+    }
+
+    #[test]
+    fn macros_produce_errors() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 7");
+        let e = anyhow!("x = {}", 2);
+        assert_eq!(e.to_string(), "x = 2");
+    }
+}

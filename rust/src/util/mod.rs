@@ -7,7 +7,9 @@
 
 pub mod bench;
 pub mod bitset;
+pub mod blob;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

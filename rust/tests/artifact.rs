@@ -1,0 +1,187 @@
+//! Integration tests for the compiled-artifact layer: whole-artifact
+//! round-trips, serial-vs-parallel build equivalence at artifact level,
+//! and multi-grammar serving through a `GrammarRegistry` — several server
+//! lanes decoding against *different* grammars in one batched loop.
+
+use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{FinishReason, GenParams, GenRequest, Server, Strategy};
+use syncode::engine::baselines::StandardEngine;
+use syncode::coordinator::EngineFactory;
+use syncode::mask::MaskStoreConfig;
+use syncode::runtime::{MockModel, ModelFactory};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::rng::Rng;
+
+fn mixed_docs() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"name": "alice", "age": 30}"#.to_vec(),
+        br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+        b"math_sqrt(3) * (2.27) + 14".to_vec(),
+        b"1 + 2 * (3 + 4)".to_vec(),
+        br#"{"nested": {"a": null}}"#.to_vec(),
+        b"math_sin(30) + math_cos(60)".to_vec(),
+    ]
+}
+
+fn registry_json_calc(tok: &Arc<Tokenizer>) -> Arc<GrammarRegistry> {
+    let reg = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("{g}: {e}"));
+        reg.register(art).unwrap();
+    }
+    reg
+}
+
+#[test]
+fn registry_serves_two_grammars_in_one_batch() {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry_json_calc(&tok);
+    let tok_m = tok.clone();
+    let model: ModelFactory = Box::new(move || {
+        Ok(Box::new(MockModel::from_documents(tok_m, &mixed_docs(), 2, 256, 11)))
+    });
+    let srv = Server::start(model, tok.clone(), reg.clone());
+
+    // Interleave grammars so both occupy lanes of the same decode loop.
+    let reqs: Vec<GenRequest> = (0..6u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: format!("request {i}"),
+            constraint_prefix: String::new(),
+            grammar: Some(if i % 2 == 0 { "json" } else { "calc" }.to_string()),
+            params: GenParams {
+                max_new_tokens: 80,
+                strategy: Strategy::Temperature(0.8),
+                seed: i * 13 + 1,
+                opportunistic: i % 3 == 0,
+            },
+        })
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap();
+        let gname = req.grammar.clone().unwrap();
+        assert!(resp.error.is_none(), "{gname}: {:?}", resp.error);
+        let art = reg.get(&gname).unwrap();
+        if resp.finish == FinishReason::Eos {
+            assert!(
+                art.cx.check_complete(resp.text.as_bytes()).is_ok(),
+                "{gname}: EOS output invalid: {:?}",
+                resp.text
+            );
+        } else {
+            assert!(
+                art.cx.prefix_valid(resp.text.as_bytes()),
+                "{gname}: invalid prefix: {:?}",
+                resp.text
+            );
+        }
+    }
+    let snap = srv.metrics.lock().unwrap().snapshot();
+    assert_eq!(snap.requests_finished, 6);
+    srv.shutdown();
+}
+
+#[test]
+fn unknown_grammar_fails_request_not_server() {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry_json_calc(&tok);
+    let tok_m = tok.clone();
+    let model: ModelFactory = Box::new(move || {
+        Ok(Box::new(MockModel::from_documents(tok_m, &mixed_docs(), 2, 256, 3)))
+    });
+    let srv = Server::start(model, tok.clone(), reg);
+    let bad = srv.generate(GenRequest {
+        id: 1,
+        prompt: "x".into(),
+        constraint_prefix: String::new(),
+        grammar: Some("fortran".into()),
+        params: GenParams::default(),
+    });
+    assert_eq!(bad.finish, FinishReason::EngineError);
+    assert!(bad.error.unwrap().contains("unknown grammar"));
+    // The server stays healthy for routable requests afterwards.
+    let ok = srv.generate(GenRequest {
+        id: 2,
+        prompt: "y".into(),
+        constraint_prefix: String::new(),
+        grammar: Some("calc".into()),
+        params: GenParams { max_new_tokens: 30, ..GenParams::default() },
+    });
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    srv.shutdown();
+}
+
+#[test]
+fn single_factory_rejects_grammar_routing() {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let tok_m = tok.clone();
+    let model: ModelFactory = Box::new(move || {
+        Ok(Box::new(MockModel::from_documents(tok_m, &mixed_docs(), 2, 256, 5)))
+    });
+    let factory: EngineFactory = Box::new(|| Box::new(StandardEngine::new()));
+    let srv = Server::start(model, tok, factory);
+    let resp = srv.generate(GenRequest {
+        id: 1,
+        prompt: "x".into(),
+        constraint_prefix: String::new(),
+        grammar: Some("json".into()),
+        params: GenParams { max_new_tokens: 10, ..GenParams::default() },
+    });
+    assert_eq!(resp.finish, FinishReason::EngineError);
+    assert!(resp.error.unwrap().contains("single-grammar"));
+    srv.shutdown();
+}
+
+#[test]
+fn artifact_roundtrip_identical_masks_on_random_prefixes() {
+    // Serialise → deserialise → byte-level mask agreement on random
+    // prefixes, across a grammar with a post-lex pass (python) too.
+    let mut rng = Rng::new(97);
+    for gname in ["json", "python"] {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let art = CompiledGrammar::compile(gname, tok, &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("{gname}: {e}"));
+        let art2 = CompiledGrammar::from_bytes(&art.to_bytes())
+            .unwrap_or_else(|e| panic!("{gname}: {e}"));
+        use syncode::engine::ConstraintEngine as _;
+        let mut e1 = art.engine();
+        let mut e2 = art2.engine();
+        for doc in syncode::eval::dataset::corpus(gname, 8, 29) {
+            let cut = rng.below(doc.len() + 1);
+            let prefix = String::from_utf8_lossy(&doc[..cut]).to_string();
+            e1.reset(&prefix);
+            e2.reset(&prefix);
+            match (e1.compute_mask(), e2.compute_mask()) {
+                (Ok(Some(a)), Ok(Some(b))) => {
+                    assert_eq!(a, b, "{gname}: masks differ at {prefix:?}")
+                }
+                (a, b) => assert_eq!(
+                    a.is_err(),
+                    b.is_err(),
+                    "{gname}: outcome differs at {prefix:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_artifact_equals_serial_artifact() {
+    // Artifact-level restatement of the store property: a parallel-built
+    // artifact serialises identically to a serially-built one.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let serial_cfg = ArtifactConfig {
+        mask: MaskStoreConfig::default(), // threads = 1
+        ..ArtifactConfig::default()
+    };
+    let parallel_cfg = ArtifactConfig {
+        mask: MaskStoreConfig { threads: 4, ..MaskStoreConfig::default() },
+        ..ArtifactConfig::default()
+    };
+    let a = CompiledGrammar::compile("sql", tok.clone(), &serial_cfg).unwrap();
+    let b = CompiledGrammar::compile("sql", tok, &parallel_cfg).unwrap();
+    assert_eq!(a.to_bytes(), b.to_bytes());
+}

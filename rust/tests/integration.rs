@@ -4,13 +4,12 @@
 //! not run).
 
 use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar};
 use syncode::coordinator::{FinishReason, GenParams, GenRequest, Server, Strategy};
 use syncode::engine::baselines::OutlinesLike;
-use syncode::engine::{ConstraintEngine, GrammarContext, SyncodeEngine};
+use syncode::engine::ConstraintEngine;
 use syncode::eval::harness::{EngineKind, EvalEnv};
 use syncode::eval::{dataset, schema};
-use syncode::mask::{MaskStore, MaskStoreConfig};
-use syncode::parser::LrMode;
 use syncode::runtime::{LanguageModel, PjrtModel, PjrtVariant};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::rng::Rng;
@@ -43,6 +42,7 @@ fn constrained_serving_all_grammars() {
                 id: i,
                 prompt: format!("produce {gname} #{i}"),
                 constraint_prefix: String::new(),
+                grammar: None,
                 params: GenParams {
                     max_new_tokens: 90,
                     strategy: Strategy::Temperature(0.9),
@@ -88,6 +88,7 @@ fn gpl_completion_prefix_invariant() {
                 id: t.id,
                 prompt: t.prefix.clone(),
                 constraint_prefix: t.prefix.clone(),
+                grammar: None,
                 params: GenParams {
                     max_new_tokens: 50,
                     strategy: Strategy::TopP { temp: 0.8, p: 0.9 },
@@ -115,12 +116,11 @@ fn syncode_mask_superset_of_exact_across_grammars() {
     // by the online validator — Theorem 1 soundness, empirically.
     let mut rng = Rng::new(41);
     for gname in ["json", "calc", "sql"] {
-        let cx = Arc::new(GrammarContext::builtin(gname, LrMode::Lalr).unwrap());
         let tok = Arc::new(Tokenizer::ascii_byte_level());
-        let store =
-            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
-        let mut sync = SyncodeEngine::new(cx.clone(), store, tok.clone());
-        let mut outl = OutlinesLike::new(cx.clone(), tok.clone());
+        let art = CompiledGrammar::compile(gname, tok.clone(), &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("{gname}: {e}"));
+        let mut sync = art.engine();
+        let mut outl = OutlinesLike::new(art.cx.clone(), tok.clone());
         for doc in dataset::corpus(gname, 8, 43) {
             let cut = rng.below(doc.len() + 1);
             let prefix = String::from_utf8_lossy(&doc[..cut]).to_string();
@@ -204,17 +204,14 @@ fn pjrt_constrained_e2e_valid_json() {
     // The full three-layer path: AOT model + SynCode → valid JSON.
     let Some(dir) = artifacts_dir() else { return };
     let tok = Arc::new(Tokenizer::from_file(&dir.join("tokenizer.json")).unwrap());
-    let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
-    let store = Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
-    let cx2 = cx.clone();
-    let tok2 = tok.clone();
+    let art = CompiledGrammar::compile("json", tok.clone(), &ArtifactConfig::default())
+        .expect("compile json");
+    let cx = art.cx.clone();
     let dir2 = dir.clone();
     let srv = Server::start(
         Box::new(move || Ok(Box::new(PjrtModel::load(&dir2, PjrtVariant::KvCache)?))),
         tok.clone(),
-        Box::new(move || {
-            Box::new(SyncodeEngine::new(cx2.clone(), store.clone(), tok2.clone()))
-        }),
+        art.engine_factory(),
     );
     let tasks = dataset::json_mode_tasks(2, 3);
     for t in &tasks {
@@ -222,6 +219,7 @@ fn pjrt_constrained_e2e_valid_json() {
             id: t.id,
             prompt: t.prompt.clone(),
             constraint_prefix: String::new(),
+            grammar: None,
             params: GenParams {
                 max_new_tokens: 120,
                 strategy: Strategy::TopP { temp: 0.7, p: 0.9 },

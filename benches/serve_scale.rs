@@ -1,0 +1,139 @@
+//! Serving-scale bench: token throughput vs `--replicas` × `--mask-threads`
+//! on the mock model, with the single-thread configuration (1 replica,
+//! inline masks — the pre-coordinator serial path) as baseline.
+//!
+//! ```bash
+//! cargo bench --bench serve_scale            # 1x0 1x2 2x0 2x2 grid
+//! cargo bench --bench serve_scale -- --replicas 4 --mask-threads 4
+//! ```
+//!
+//! Also checks the correctness half of the scaling claim: every
+//! configuration must produce byte-identical outputs per request id
+//! (`identical` column) and zero syntax errors (`errs` column).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{Coordinator, CoordinatorConfig, GenParams, GenRequest, Strategy};
+use syncode::eval::dataset;
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel};
+use syncode::util::bench::Table;
+use syncode::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_num("requests", 32usize);
+    let max_tokens = args.get_num("max-tokens", 64usize);
+    // Matches `syncode serve`'s --lanes default so the measured baseline
+    // is the exact configuration the CLI runs.
+    let lanes = args.get_num("lanes", 2usize);
+    // The grid needs a multi-replica column distinct from the 1-replica
+    // baseline and a pooled column distinct from inline masks, so values
+    // below those floors are clamped — with a notice, not silently.
+    let replicas = args.get_num("replicas", 2usize);
+    if replicas < 2 {
+        eprintln!("[serve_scale: --replicas {replicas} clamped to 2 (baseline is already 1)]");
+    }
+    let replicas = replicas.max(2);
+    let mask_threads = args.get_num("mask-threads", 2usize);
+    if mask_threads < 1 {
+        eprintln!("[serve_scale: --mask-threads 0 clamped to 1 (baseline is already 0)]");
+    }
+    let mask_threads = mask_threads.max(1);
+
+    // The `serve --grammars json,calc` mock recipe, shared with the CLI
+    // via `dataset::mock_serving_recipe` so the bench measures exactly
+    // the workload whose scaling it is the acceptance evidence for.
+    let gnames = ["json", "calc"];
+    let (tok, union_docs) = dataset::mock_serving_recipe(&gnames, 120, 7, 160);
+    let tok = Arc::new(tok);
+    let registry = Arc::new(GrammarRegistry::new());
+    for g in gnames {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("compile {g}: {e}"));
+        registry.register(art).unwrap();
+    }
+
+    let reqs: Vec<GenRequest> = (0..n as u64)
+        .map(|i| {
+            let g = gnames[i as usize % gnames.len()];
+            GenRequest {
+                id: i,
+                prompt: format!("produce a valid {g} snippet (#{i})"),
+                constraint_prefix: String::new(),
+                grammar: Some(g.to_string()),
+                params: GenParams {
+                    max_new_tokens: max_tokens,
+                    strategy: Strategy::TopP { temp: 0.8, p: 0.95 },
+                    seed: i * 17 + 3,
+                    opportunistic: true,
+                },
+            }
+        })
+        .collect();
+
+    let grid = [(1usize, 0usize), (1, mask_threads), (replicas, 0), (replicas, mask_threads)];
+    let mut t = Table::new(&[
+        "replicas", "mask-thr", "wall(s)", "tokens", "tok/s", "speedup", "prewarmed",
+        "pool-wait(µs)", "errs", "identical",
+    ]);
+    let mut baseline: Option<(f64, HashMap<u64, String>)> = None;
+    for (nr, mt) in grid {
+        let factories = {
+            let tok = tok.clone();
+            let docs = union_docs.clone();
+            replicate_factory(nr, move || {
+                Ok(Box::new(MockModel::from_documents(tok.clone(), &docs, lanes, 512, 11))
+                    as Box<dyn LanguageModel>)
+            })
+        };
+        let srv = Coordinator::start(
+            factories,
+            tok.clone(),
+            registry.clone(),
+            CoordinatorConfig { mask_threads: mt, queue_cap: 256 },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+        let mut outputs: HashMap<u64, String> = HashMap::new();
+        let mut tokens = 0usize;
+        let mut errs = 0usize;
+        for (req, rx) in reqs.iter().zip(rxs) {
+            let resp = rx.recv().expect("response");
+            tokens += resp.tokens;
+            let g = req.grammar.as_deref().unwrap();
+            let ok = registry.get(g).map(|art| art.response_valid(&resp)).unwrap_or(false);
+            errs += !ok as usize;
+            outputs.insert(resp.id, resp.text);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = srv.snapshot();
+        srv.shutdown();
+        let tps = tokens as f64 / wall.max(1e-9);
+        let (speedup, identical) = match &baseline {
+            Some((base_tps, base_out)) => (tps / base_tps, base_out == &outputs),
+            None => (1.0, true),
+        };
+        if baseline.is_none() {
+            baseline = Some((tps, outputs));
+        }
+        t.row(&[
+            nr.to_string(),
+            mt.to_string(),
+            format!("{wall:.2}"),
+            tokens.to_string(),
+            format!("{tps:.1}"),
+            format!("{speedup:.2}x"),
+            snap.masks_prewarmed.to_string(),
+            format!("{:.1}", snap.mask_wait_mean * 1e6),
+            errs.to_string(),
+            identical.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "baseline = 1 replica × inline masks (the pre-coordinator serial path); \
+         identical = byte-identical outputs per request id vs baseline"
+    );
+}

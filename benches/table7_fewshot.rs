@@ -38,7 +38,8 @@ fn main() {
                     constraint_prefix: String::new(),
                     grammar: None,
                     params: params.clone(),
-                });
+                })
+                .expect_served("table7 bench");
                 let ans = r.text.lines().next().unwrap_or("").trim();
                 if env.cx.check_complete(ans.as_bytes()).is_err() {
                     errs[ei] += 1;
@@ -75,7 +76,8 @@ fn main() {
                     constraint_prefix: task.prefix.clone(),
                     grammar: None,
                     params: params.clone(),
-                });
+                })
+                .expect_served("table7 bench");
                 let full = format!("{}{}", task.prefix, r.text);
                 match env.cx.check_complete(full.as_bytes()) {
                     Ok(()) => {}

@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
-# CI gate: format, lint, build, test. Run from the repo root.
+# CI gate: format, lint, build, test, serving stress. Run from the repo root.
 #
 #   ./ci.sh            # full gate
-#   ./ci.sh --fast     # skip the release build (fmt + clippy + debug tests)
+#   ./ci.sh --fast     # skip release build + stress (fmt + clippy + debug tests)
 #
 # The crate is dependency-free by design (see Cargo.toml), so this needs
 # only a Rust toolchain — no network access.
 
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "ERROR: cargo not found — install a Rust toolchain before running the CI gate." >&2
+  echo "       (see ROADMAP.md: some build containers ship without one)" >&2
+  exit 1
+fi
 
 fast=0
 [[ "${1:-}" == "--fast" ]] && fast=1
@@ -26,5 +32,25 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [[ "$fast" == "0" ]]; then
+  # Serving stress under a time cap: 2 replicas × 2 mask threads over a
+  # mixed multi-grammar batch on the mock model must finish with zero
+  # syntax errors (the ISSUE-2 acceptance path).
+  echo "== serving stress (2 replicas x 2 mask threads, 120s cap) =="
+  # Guard the substitution: under set -e a crash/timeout inside $(...)
+  # would otherwise kill the script before the diagnostic prints.
+  if ! out=$(timeout 120 cargo run --release --quiet -- serve \
+    --grammars json,calc --replicas 2 --mask-threads 2 \
+    --requests 12 --max-tokens 60 --mock); then
+    echo "ERROR: serving stress crashed or exceeded the 120s cap" >&2
+    exit 1
+  fi
+  echo "$out" | tail -n 8
+  if ! grep -q "syntax errors: 0/12" <<<"$out"; then
+    echo "ERROR: serving stress reported syntax errors" >&2
+    exit 1
+  fi
+fi
 
 echo "CI gate passed."

@@ -35,7 +35,8 @@ fn main() {
                     constraint_prefix: t.prefix.clone(),
                     grammar: None,
                     params: params.clone(),
-                });
+                })
+                .expect_served("code_completion example");
                 let full = format!("{}{}", t.prefix, r.text);
                 let ok = env.cx.check_complete(full.as_bytes()).is_ok();
                 println!(

@@ -1,46 +1,55 @@
-//! **End-to-end driver** (EXPERIMENTS.md §E2E): load the AOT-trained JAX
-//! transformer through PJRT, serve batched JSON-mode requests with
-//! SynCode constraints, and report latency/throughput + validity — the
-//! proof that all three layers compose with Python off the request path.
+//! **End-to-end driver**: load the AOT-trained JAX transformer through
+//! PJRT (or the mock bigram LM), serve batched JSON-mode requests with
+//! SynCode constraints through the multi-replica coordinator, and report
+//! latency/throughput + validity — the proof that all layers compose with
+//! Python off the request path.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example json_server
+//! cargo run --release --example json_server -- --mock --replicas 2 --mask-threads 2
 //! ```
 //!
 //! Flags: `--requests N` (default 12), `--mock` (bigram LM instead of
 //! PJRT), `--full-recompute` (the §Perf "before" L2 variant),
-//! `--unconstrained` (Standard engine for comparison).
+//! `--unconstrained` (Standard engine for comparison), `--replicas N`
+//! (model replicas behind one admission queue), `--mask-threads M`
+//! (shared mask worker pool; 0 = inline mask computation).
 
 use std::sync::Arc;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar};
-use syncode::coordinator::{EngineFactory, GenParams, GenRequest, Server, Strategy};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, EngineFactory, GenParams, GenRequest, GenResponse, Strategy,
+};
 use syncode::engine::baselines::StandardEngine;
 use syncode::eval::{dataset, schema};
-use syncode::runtime::{MockModel, ModelFactory, PjrtModel, PjrtVariant};
+use syncode::runtime::{
+    replicate_factory, LanguageModel, MockModel, ModelFactory, PjrtModel, PjrtVariant,
+};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::cli::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let n = args.get_num("requests", 12usize);
+    let replicas = args.get_num("replicas", 1usize).max(1);
+    let mask_threads = args.get_num("mask-threads", 0usize);
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
 
     // --- model + tokenizer --------------------------------------------------
     let use_mock = args.flag("mock") || !dir.join("config.json").exists();
-    let (model, tok): (ModelFactory, Arc<Tokenizer>) = if use_mock {
+    let (models, tok): (Vec<ModelFactory>, Arc<Tokenizer>) = if use_mock {
         eprintln!("[mock model — run `make artifacts` for the PJRT path]");
-        // Same recipe as `syncode compile/serve --grammars json` (corpus
-        // 120 docs seed 7, 160 merges).
-        let docs = dataset::corpus("json", 120, 7);
-        let tok = Arc::new(Tokenizer::train(
-            &docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect::<Vec<u8>>(),
-            160,
-        ));
+        // The shared mock recipe (`dataset::mock_serving_recipe`), same
+        // defaults as `syncode compile/serve --grammars json`, so caches
+        // warm-load across the CLI and this example.
+        let (tok, docs) = dataset::mock_serving_recipe(&["json"], 120, 7, 160);
+        let tok = Arc::new(tok);
         let tok_m = tok.clone();
-        (
-            Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m, &docs, 2, 384, 3)))),
-            tok,
-        )
+        let models = replicate_factory(replicas, move || {
+            Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs, 2, 384, 3))
+                as Box<dyn LanguageModel>)
+        });
+        (models, tok)
     } else {
         let tok =
             Arc::new(Tokenizer::from_file(&dir.join("tokenizer.json")).expect("tokenizer"));
@@ -50,7 +59,11 @@ fn main() {
             PjrtVariant::KvCache
         };
         println!("loading PJRT model from {} ({variant:?})", dir.display());
-        (Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?))), tok)
+        let dir_m = dir.clone();
+        let models = replicate_factory(replicas, move || {
+            Ok(Box::new(PjrtModel::load(&dir_m, variant)?) as Box<dyn LanguageModel>)
+        });
+        (models, tok)
     };
 
     // --- engine -------------------------------------------------------------
@@ -84,7 +97,9 @@ fn main() {
     println!("setup: {:.2}s", t0.elapsed().as_secs_f64());
 
     // --- serve a batch of requests -------------------------------------------
-    let srv = Server::start(model, tok, factory);
+    println!("[coordinator: {replicas} replica(s), {mask_threads} mask thread(s)]");
+    let cfg = CoordinatorConfig { mask_threads, ..CoordinatorConfig::default() };
+    let srv = Coordinator::start(models, tok, factory, cfg);
     let tasks = dataset::json_mode_tasks(n, 3);
     let params = GenParams {
         max_new_tokens: args.get_num("max-tokens", 110),
@@ -108,7 +123,7 @@ fn main() {
     let mut valid_json = 0;
     let mut valid_schema = 0;
     for (t, rx) in tasks.iter().zip(rxs) {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap_or_else(|_| GenResponse::rejected(t.id, "no response"));
         let parsed = syncode::util::json::parse(r.text.trim());
         let sv = parsed
             .as_ref()
@@ -129,9 +144,13 @@ fn main() {
         );
     }
     let wall = t_subm.elapsed().as_secs_f64();
-    let snap = srv.metrics.lock().unwrap().snapshot();
     println!("\n=== e2e summary ===");
-    println!("{}", snap.report());
+    if replicas > 1 {
+        for (i, snap) in srv.replica_snapshots().iter().enumerate() {
+            println!("replica {i}: {}", snap.report());
+        }
+    }
+    println!("global: {}", srv.snapshot().report());
     println!(
         "wall={:.2}s  valid JSON {}/{}  schema-valid {}/{}",
         wall, valid_json, n, valid_schema, n

@@ -56,7 +56,8 @@ fn main() {
             seed: 42,
             opportunistic: true,
         },
-    });
+    })
+    .expect_served("quickstart example");
     println!("\ngenerated ({:?}, {} tokens):\n{}", resp.finish, resp.tokens, resp.text);
 
     // 5. It is valid JSON by construction.

@@ -190,8 +190,25 @@ impl CompiledGrammar {
         SyncodeEngine::new(self.cx.clone(), self.store.clone(), self.tok.clone())
     }
 
+    /// Is a server response grammatically acceptable for this grammar?
+    /// Failed/rejected responses never count (their empty text would
+    /// trivially pass the prefix check); complete generations must parse;
+    /// truncated ones (MaxTokens / SeqOverflow) must still be a valid
+    /// grammar prefix. The single definition of "syntax error" shared by
+    /// `syncode serve`, `benches/serve_scale.rs` and the serving tests.
+    pub fn response_valid(&self, resp: &crate::coordinator::GenResponse) -> bool {
+        resp.error.is_none()
+            && if resp.finish == crate::coordinator::FinishReason::Eos {
+                self.cx.check_complete(resp.text.as_bytes()).is_ok()
+            } else {
+                self.cx.prefix_valid(resp.text.as_bytes())
+            }
+    }
+
     /// A per-request engine factory (the legacy single-grammar server
     /// entrypoint; multi-grammar serving goes through [`GrammarRegistry`]).
+    /// The closure is `Send + Sync` (it captures only this `Arc`), so one
+    /// factory can be shared across all replica schedulers.
     pub fn engine_factory(self: &Arc<Self>) -> crate::coordinator::EngineFactory {
         let art = self.clone();
         Box::new(move || Box::new(art.engine()))

@@ -5,6 +5,11 @@
 //! All registered artifacts must share one tokenizer (the model's
 //! vocabulary); `register` enforces that. The first registration becomes
 //! the default grammar for requests that don't name one.
+//!
+//! One registry serves *all* replica schedulers of a coordinator: lookups
+//! take a read lock and clone an `Arc`, and the compiled artifacts are
+//! immutable, so N replicas admitting concurrently never contend beyond
+//! that read lock — compile once, serve many grammars × many replicas.
 
 use super::{ArtifactError, CompiledGrammar};
 use crate::coordinator::{EngineProvider, GenRequest};
@@ -171,6 +176,27 @@ mod tests {
         assert!(ce.compute_mask().unwrap().unwrap().get(b'7' as usize));
         assert!(reg.engine_for_name(Some("sql2")).is_err());
         assert!(reg.engine_for_name(None).is_ok());
+    }
+
+    #[test]
+    fn concurrent_engine_construction_across_threads() {
+        // The coordinator shares one registry across N replica scheduler
+        // threads; engine_for_name must be safely callable concurrently
+        // and the engines it returns must be independent.
+        let reg = registry_with(&["json", "calc"]);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..8 {
+                        let name = if (t + i) % 2 == 0 { "json" } else { "calc" };
+                        let mut e = reg.engine_for_name(Some(name)).unwrap();
+                        e.reset(if name == "json" { "{" } else { "1 + " });
+                        assert!(e.compute_mask().unwrap().unwrap().count_ones() > 0);
+                    }
+                });
+            }
+        });
     }
 
     #[test]

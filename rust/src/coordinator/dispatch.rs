@@ -1,0 +1,493 @@
+//! The dispatcher: a bounded shared admission queue with backpressure,
+//! fronting N replica schedulers (see `replica.rs`) that all pull from it.
+//!
+//! Topology (`docs/serving.md` has the full picture):
+//!
+//! ```text
+//!  submit() ──► SharedQueue (bounded, blocking) ──► replica 0 ─┐
+//!                                              └─► replica 1 ─┼─► MaskPool
+//!                                              └─► replica N ─┘   (shared)
+//! ```
+//!
+//! Routing is pull-based: an idle replica parks on the queue; a busy one
+//! opportunistically `try_pop`s into its free lanes — so load balances by
+//! construction, with no routing table. All replicas share one
+//! [`EngineProvider`] (usually an `Arc<GrammarRegistry>`); each records
+//! its own metrics, merged into the global view at snapshot time.
+//!
+//! Liveness: `submit`/`generate` never panic. A closed queue (shutdown or
+//! every replica dead) yields `FinishReason::Rejected` responses, and
+//! the last replica to exit drains still-queued requests with rejections
+//! so no caller is left waiting.
+
+use super::maskpool::MaskPool;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::replica::{run_replica, ReplicaCtx, ReplicaMetrics};
+use super::types::{EngineProvider, GenRequest, GenResponse};
+use crate::runtime::ModelFactory;
+use crate::tokenizer::Tokenizer;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+pub(crate) type PendingReq = (GenRequest, Sender<GenResponse>);
+
+/// Bounded MPMC admission queue. `push` blocks when full (backpressure on
+/// submitters), `pop_blocking` parks idle replicas, `try_pop` feeds busy
+/// replicas' free lanes without blocking the decode loop.
+pub(crate) struct SharedQueue {
+    cap: usize,
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Global metrics (queue-depth histogram).
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+struct QueueInner {
+    q: VecDeque<PendingReq>,
+    closed: bool,
+}
+
+impl SharedQueue {
+    fn new(cap: usize, metrics: Arc<Mutex<Metrics>>) -> Arc<SharedQueue> {
+        Arc::new(SharedQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            metrics,
+        })
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Returns the
+    /// request back if the queue is closed.
+    pub fn push(&self, req: GenRequest, tx: Sender<GenResponse>) -> Result<(), PendingReq> {
+        let depth = {
+            let mut inner = self.inner.lock().unwrap();
+            while inner.q.len() >= self.cap && !inner.closed {
+                inner = self.not_full.wait(inner).unwrap();
+            }
+            if inner.closed {
+                return Err((req, tx));
+            }
+            inner.q.push_back((req, tx));
+            inner.q.len()
+        };
+        self.metrics.lock().unwrap().queue_depth.record(depth);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, parking until an item arrives. `None` once the queue is
+    /// closed *and* drained (the replica shutdown signal).
+    pub fn pop_blocking(&self) -> Option<PendingReq> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = inner.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking dequeue.
+    pub fn try_pop(&self) -> Option<PendingReq> {
+        let mut inner = self.inner.lock().unwrap();
+        let x = inner.q.pop_front();
+        if x.is_some() {
+            self.not_full.notify_one();
+        }
+        x
+    }
+
+    /// Close intake: subsequent pushes fail, blocked pushers wake, idle
+    /// replicas drain what's left and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Drain-and-reject everything still queued (dead coordinator).
+    fn reject_pending(&self, msg: &str) {
+        while let Some((req, tx)) = self.try_pop() {
+            let _ = tx.send(GenResponse::rejected(req.id, msg));
+        }
+    }
+}
+
+/// Dropped by each replica thread on exit (normal or unwinding). The last
+/// one out closes the queue and rejects still-queued requests, so a
+/// coordinator with no live replicas can never strand a submitter.
+pub(crate) struct ReplicaGuard {
+    queue: Arc<SharedQueue>,
+    live: Arc<AtomicUsize>,
+}
+
+impl Drop for ReplicaGuard {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queue.close();
+            self.queue.reject_pending("no live replicas");
+        }
+    }
+}
+
+/// Coordinator tuning knobs (`serve --replicas N --mask-threads M`).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Mask worker pool size. 0 = no pool: every lane's mask work runs
+    /// inline on its replica's scheduler thread (the pre-pool behaviour,
+    /// and the baseline configuration of `benches/serve_scale.rs`).
+    pub mask_threads: usize,
+    /// Admission queue bound; `submit` blocks (backpressure) at this many
+    /// queued requests.
+    pub queue_cap: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { mask_threads: 0, queue_cap: 256 }
+    }
+}
+
+/// Handle to a running coordinator (or single-replica server).
+pub struct ServerHandle {
+    queue: Arc<SharedQueue>,
+    /// Dispatcher-side metrics (queue depth, recorded per enqueue).
+    /// Replica and mask-worker counters live in their own per-thread
+    /// instances and are merged in by [`Self::snapshot`], so no shared
+    /// mutex sits on any per-token hot path.
+    shared: Arc<Mutex<Metrics>>,
+    replica_metrics: Vec<Arc<Mutex<Metrics>>>,
+    pool_metrics: Vec<Arc<Mutex<Metrics>>>,
+    replicas: Vec<std::thread::JoinHandle<()>>,
+    pool: Option<MaskPool>,
+}
+
+impl ServerHandle {
+    /// Submit a request; the response arrives on the returned channel.
+    /// Never panics: if the coordinator is shut down (or every replica is
+    /// dead) the channel immediately yields a
+    /// [`super::FinishReason::Rejected`] response. Blocks while the
+    /// admission queue is full (backpressure).
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        if let Err((req, tx)) = self.queue.push(req, tx) {
+            let _ = tx.send(GenResponse::rejected(req.id, "coordinator is shut down"));
+        }
+        rx
+    }
+
+    /// Blocking convenience: submit and wait. Never panics: a scheduler
+    /// that dies without responding yields a `Rejected` response.
+    pub fn generate(&self, req: GenRequest) -> GenResponse {
+        let id = req.id;
+        match self.submit(req).recv() {
+            Ok(resp) => resp,
+            Err(_) => GenResponse::rejected(id, "scheduler exited without responding"),
+        }
+    }
+
+    /// Stop intake without joining the schedulers: queued and in-flight
+    /// requests still complete; later `submit`s are rejected.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Snapshot of the global metrics: dispatcher accounting merged with
+    /// every replica's and every mask worker's counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut agg = self.shared.lock().unwrap().clone();
+        for m in self.replica_metrics.iter().chain(&self.pool_metrics) {
+            agg.merge(&m.lock().unwrap());
+        }
+        agg.snapshot()
+    }
+
+    /// Per-replica metric snapshots, indexed by replica id.
+    pub fn replica_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.replica_metrics.iter().map(|m| m.lock().unwrap().snapshot()).collect()
+    }
+
+    /// Stop the coordinator: close intake, drain queued + in-flight lanes
+    /// (no response is lost), then join replicas and mask workers.
+    pub fn shutdown(mut self) {
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        self.queue.close();
+        for j in self.replicas.drain(..) {
+            let _ = j.join();
+        }
+        // Replica guards already rejected leftovers if no replica ever
+        // served; belt-and-braces for the zero-replica edge.
+        self.queue.reject_pending("coordinator is shut down");
+        // All PoolClients died with the replicas; workers see the closed
+        // channel and exit.
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// The multi-replica serving coordinator.
+pub struct Coordinator;
+
+impl Coordinator {
+    /// Start one replica scheduler per model factory (each factory runs
+    /// *inside* its replica thread — PJRT handles are not `Send`), all
+    /// pulling from one bounded admission queue and sharing one
+    /// `engine_provider` and, when `cfg.mask_threads > 0`, one mask
+    /// worker pool.
+    pub fn start(
+        model_factories: Vec<ModelFactory>,
+        tok: Arc<Tokenizer>,
+        engine_provider: impl EngineProvider + 'static,
+        cfg: CoordinatorConfig,
+    ) -> ServerHandle {
+        assert!(!model_factories.is_empty(), "coordinator needs at least one replica");
+        let shared = Arc::new(Mutex::new(Metrics::default()));
+        let queue = SharedQueue::new(cfg.queue_cap, shared.clone());
+        let provider: Arc<dyn EngineProvider> = Arc::new(engine_provider);
+        let (pool, client, pool_metrics) = if cfg.mask_threads > 0 {
+            let (p, c, wm) = MaskPool::start(cfg.mask_threads, tok.clone());
+            (Some(p), Some(c), wm)
+        } else {
+            (None, None, Vec::new())
+        };
+        let live = Arc::new(AtomicUsize::new(model_factories.len()));
+        let mut replicas = Vec::with_capacity(model_factories.len());
+        let mut replica_metrics = Vec::with_capacity(model_factories.len());
+        for (id, model_factory) in model_factories.into_iter().enumerate() {
+            let local = Arc::new(Mutex::new(Metrics::default()));
+            replica_metrics.push(local.clone());
+            let ctx = ReplicaCtx {
+                id,
+                model_factory,
+                tok: tok.clone(),
+                provider: provider.clone(),
+                queue: queue.clone(),
+                pool: client.clone(),
+                metrics: ReplicaMetrics { local },
+                guard: ReplicaGuard { queue: queue.clone(), live: live.clone() },
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("syncode-replica-{id}"))
+                .spawn(move || run_replica(ctx))
+                .expect("spawn replica scheduler");
+            replicas.push(handle);
+        }
+        // The coordinator keeps no client of its own: workers exit when
+        // the last replica drops its clone.
+        drop(client);
+        ServerHandle { queue, shared, replica_metrics, pool_metrics, replicas, pool }
+    }
+}
+
+/// Single-replica compatibility front (the pre-coordinator API): one
+/// model, inline mask computation, default queue bound.
+pub struct Server;
+
+impl Server {
+    /// Start a single scheduler thread. The model factory runs *inside*
+    /// the thread; the engine provider makes one constraint engine per
+    /// admitted request — an [`super::EngineFactory`] closure for
+    /// single-grammar serving (use `StandardEngine` for unconstrained),
+    /// or an `Arc<GrammarRegistry>` to route per-request grammar names
+    /// onto compiled artifacts.
+    pub fn start(
+        model_factory: ModelFactory,
+        tok: Arc<Tokenizer>,
+        engine_provider: impl EngineProvider + 'static,
+    ) -> ServerHandle {
+        Coordinator::start(vec![model_factory], tok, engine_provider, CoordinatorConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineFactory, FinishReason, GenParams, Strategy};
+    use crate::engine::baselines::StandardEngine;
+    use crate::engine::{GrammarContext, SyncodeEngine};
+    use crate::mask::{MaskStore, MaskStoreConfig};
+    use crate::parser::LrMode;
+    use crate::runtime::MockModel;
+
+    fn json_docs() -> Vec<Vec<u8>> {
+        vec![
+            br#"{"name": "alice", "age": 30}"#.to_vec(),
+            br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+            br#"{"nested": {"a": null}}"#.to_vec(),
+        ]
+    }
+
+    fn start_server(constrained: bool) -> (ServerHandle, Arc<Tokenizer>) {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let tok_m = tok.clone();
+        let model: ModelFactory = Box::new(move || {
+            Ok(Box::new(MockModel::from_documents(tok_m, &json_docs(), 2, 256, 11)))
+        });
+        let factory: EngineFactory = if constrained {
+            let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+            let store = Arc::new(MaskStore::build(
+                &cx.grammar,
+                &tok,
+                MaskStoreConfig::default(),
+            ));
+            let tok2 = tok.clone();
+            Box::new(move || {
+                Box::new(SyncodeEngine::new(cx.clone(), store.clone(), tok2.clone()))
+            })
+        } else {
+            Box::new(|| Box::new(StandardEngine::new()))
+        };
+        (Server::start(model, tok.clone(), factory), tok)
+    }
+
+    #[test]
+    fn constrained_server_emits_valid_json() {
+        let (srv, _) = start_server(true);
+        let cx = GrammarContext::builtin("json", LrMode::Lalr).unwrap();
+        for i in 0..4 {
+            let resp = srv.generate(GenRequest {
+                id: i,
+                prompt: "Give me a JSON object:".into(),
+                constraint_prefix: String::new(),
+                grammar: None,
+                params: GenParams {
+                    max_new_tokens: 120,
+                    strategy: Strategy::Temperature(0.8),
+                    seed: i * 31 + 5,
+                    opportunistic: true,
+                },
+            });
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            if resp.finish == FinishReason::Eos {
+                assert!(
+                    cx.check_complete(resp.text.as_bytes()).is_ok(),
+                    "invalid JSON from constrained server: {:?}",
+                    resp.text
+                );
+            } else {
+                // max-token truncation: still a valid *prefix*
+                assert!(cx.prefix_valid(resp.text.as_bytes()), "{:?}", resp.text);
+            }
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unconstrained_server_runs() {
+        let (srv, _) = start_server(false);
+        let resp = srv.generate(GenRequest {
+            id: 1,
+            prompt: "hello".into(),
+            constraint_prefix: String::new(),
+            grammar: None,
+            params: GenParams {
+                max_new_tokens: 20,
+                strategy: Strategy::Greedy,
+                seed: 3,
+                opportunistic: true,
+            },
+        });
+        assert!(resp.error.is_none());
+        assert!(resp.tokens <= 20);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batched_requests_all_complete() {
+        let (srv, _) = start_server(true);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                srv.submit(GenRequest {
+                    id: i,
+                    prompt: format!("request {i}"),
+                    constraint_prefix: String::new(),
+                    grammar: None,
+                    params: GenParams {
+                        max_new_tokens: 60,
+                        strategy: Strategy::TopP { temp: 0.9, p: 0.95 },
+                        seed: i,
+                        opportunistic: i % 2 == 0,
+                    },
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        let snap = srv.snapshot();
+        assert_eq!(snap.requests_finished, 6);
+        assert!(snap.decode_steps > 0);
+        // Every enqueue records the observed queue depth.
+        assert!(snap.queue_depth_mean >= 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn metrics_track_opportunistic() {
+        let (srv, _) = start_server(true);
+        let _ = srv.generate(GenRequest {
+            id: 9,
+            prompt: "x".into(),
+            constraint_prefix: String::new(),
+            grammar: None,
+            params: GenParams {
+                max_new_tokens: 40,
+                strategy: Strategy::Greedy,
+                seed: 2,
+                opportunistic: true,
+            },
+        });
+        let snap = srv.snapshot();
+        assert!(snap.opportunistic_hits + snap.full_mask_computations > 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected_not_panic() {
+        let (srv, _) = start_server(false);
+        srv.close();
+        let resp = srv.generate(GenRequest {
+            id: 77,
+            prompt: "late".into(),
+            ..Default::default()
+        });
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.error.is_some());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dead_replica_rejects_instead_of_hanging() {
+        // Model construction fails → the only replica exits → its guard
+        // closes the queue and generate() returns an error response
+        // instead of panicking or blocking forever.
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let model: ModelFactory =
+            Box::new(|| Err(crate::util::error::Error::msg("no accelerator")));
+        let factory: EngineFactory = Box::new(|| Box::new(StandardEngine::new()));
+        let srv = Server::start(model, tok, factory);
+        let resp = srv.generate(GenRequest { id: 1, prompt: "hi".into(), ..Default::default() });
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,487 @@
+//! The mask worker pool: grammar-mask computation and exact re-validation
+//! off the scheduler thread.
+//!
+//! Replica schedulers submit two kinds of jobs and collect the results in
+//! a submit/collect pipeline (see `replica.rs`):
+//!
+//! - **Step** — decide the next token for one lane from its fresh logits
+//!   (opportunistic validation, full-mask fallback, exact re-validation —
+//!   the per-lane half of Algorithm 3). Steps for different lanes run
+//!   concurrently, so lane A's mask work overlaps lane B's.
+//! - **Prewarm** — after a token is committed, run the next step's
+//!   incremental lex/parse/accept-sequence analysis (and, for
+//!   non-opportunistic lanes, assemble the full mask) on `C_{k+1}`
+//!   *while the model executes its batched decode*. The engine caches
+//!   both (see `SyncodeEngine`'s step and mask caches), so the next
+//!   step's `token_allowed`/`compute_mask` are cache hits — the
+//!   XGrammar-style mask/decode overlap.
+//!
+//! The pool is shared by all replicas. Engines move scheduler → worker →
+//! scheduler by value over channels (hence `ConstraintEngine: Send`); a
+//! lane's engine is never touched by two threads at once. Workers survive
+//! job panics (the affected lane finishes with an engine error; the pool
+//! keeps serving).
+
+use super::metrics::Metrics;
+use super::sampler::{sample_token, Strategy};
+use super::types::FinishReason;
+use crate::engine::ConstraintEngine;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a step decided for its lane.
+pub(crate) enum StepOutcome {
+    /// Token committed (already appended to the engine).
+    Token(u32),
+    Finish(FinishReason, Option<String>),
+}
+
+/// One lane's step work, moved to a worker.
+pub(crate) struct StepRequest {
+    pub lane: usize,
+    pub engine: Box<dyn ConstraintEngine>,
+    pub logits: Vec<f32>,
+    pub rng: Rng,
+    pub strategy: Strategy,
+    pub opportunistic: bool,
+}
+
+/// The step result, moved back to the scheduler.
+pub(crate) struct StepResult {
+    pub lane: usize,
+    pub engine: Box<dyn ConstraintEngine>,
+    pub rng: Rng,
+    pub decision: Decision,
+}
+
+/// A prewarmed engine on its way back to the scheduler.
+pub(crate) struct Prewarmed {
+    pub lane: usize,
+    pub engine: Box<dyn ConstraintEngine>,
+}
+
+enum Job {
+    Step {
+        req: StepRequest,
+        reply: Sender<StepResult>,
+        queued: Instant,
+    },
+    Prewarm {
+        lane: usize,
+        engine: Box<dyn ConstraintEngine>,
+        /// Opportunistic lanes only need the next step's *analysis*
+        /// warmed (their hit path never reads the assembled mask);
+        /// non-opportunistic lanes consult the full mask every step, so
+        /// warm that too.
+        opportunistic: bool,
+        reply: Sender<Prewarmed>,
+        queued: Instant,
+    },
+}
+
+/// Owner half of the pool: holds the worker threads for joining. Workers
+/// exit when every [`PoolClient`] (one per replica) has been dropped.
+pub(crate) struct MaskPool {
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable submit handle; each replica scheduler owns one.
+#[derive(Clone)]
+pub(crate) struct PoolClient {
+    tx: Sender<Job>,
+}
+
+impl PoolClient {
+    /// Returns the request back on failure (pool gone) so the caller can
+    /// recover the engine.
+    pub fn submit_step(
+        &self,
+        req: StepRequest,
+        reply: &Sender<StepResult>,
+    ) -> Result<(), StepRequest> {
+        self.tx
+            .send(Job::Step { req, reply: reply.clone(), queued: Instant::now() })
+            .map_err(|e| match e.0 {
+                Job::Step { req, .. } => req,
+                Job::Prewarm { .. } => unreachable!("sent a step job"),
+            })
+    }
+
+    /// Returns the engine back on failure (pool gone).
+    pub fn submit_prewarm(
+        &self,
+        lane: usize,
+        engine: Box<dyn ConstraintEngine>,
+        opportunistic: bool,
+        reply: &Sender<Prewarmed>,
+    ) -> Result<(), Box<dyn ConstraintEngine>> {
+        self.tx
+            .send(Job::Prewarm {
+                lane,
+                engine,
+                opportunistic,
+                reply: reply.clone(),
+                queued: Instant::now(),
+            })
+            .map_err(|e| match e.0 {
+                Job::Prewarm { engine, .. } => engine,
+                Job::Step { .. } => unreachable!("sent a prewarm job"),
+            })
+    }
+}
+
+impl MaskPool {
+    /// Spawn `threads` workers sharing one injector queue. Each worker
+    /// records job/wait accounting into its **own** `Metrics` instance
+    /// (returned for snapshot-time merging) so no shared mutex sits on
+    /// the per-job hot path.
+    pub fn start(
+        threads: usize,
+        tok: Arc<Tokenizer>,
+    ) -> (MaskPool, PoolClient, Vec<Arc<Mutex<Metrics>>>) {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut worker_metrics = Vec::with_capacity(threads.max(1));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let tok = tok.clone();
+                let metrics = Arc::new(Mutex::new(Metrics::default()));
+                worker_metrics.push(metrics.clone());
+                std::thread::Builder::new()
+                    .name(format!("syncode-mask-{i}"))
+                    .spawn(move || worker_loop(&rx, &tok, &metrics))
+                    .expect("spawn mask worker")
+            })
+            .collect();
+        (MaskPool { workers }, PoolClient { tx }, worker_metrics)
+    }
+
+    /// Join the workers. Call only after every `PoolClient` is gone (i.e.
+    /// after the replica threads are joined), or this blocks forever.
+    pub fn shutdown(self) {
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>, tok: &Tokenizer, metrics: &Arc<Mutex<Metrics>>) {
+    loop {
+        // Holding the lock across the blocking recv is fine: whichever
+        // worker holds it takes the next job and releases immediately;
+        // the rest queue on the mutex instead of the channel.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // all clients dropped
+        };
+        match job {
+            Job::Step { req, reply, queued } => {
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.mask_pool_jobs += 1;
+                    m.mask_pool_wait.record(queued.elapsed().as_secs_f64());
+                }
+                // A panicking engine loses only its own lane: the reply
+                // channel ends up with a missing result and the scheduler
+                // finishes that lane with an engine error.
+                if let Ok(res) = catch_unwind(AssertUnwindSafe(|| run_step(req, tok))) {
+                    let _ = reply.send(res);
+                }
+            }
+            Job::Prewarm { lane, mut engine, opportunistic, reply, queued } => {
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.mask_pool_jobs += 1;
+                    m.masks_prewarmed += 1;
+                    m.mask_pool_wait.record(queued.elapsed().as_secs_f64());
+                }
+                let warmed = catch_unwind(AssertUnwindSafe(move || {
+                    // Errors (invalid prefix) are deliberately ignored:
+                    // the next step hits the same error on the scheduler
+                    // path and finishes the lane there, keeping behaviour
+                    // identical to the unpooled configuration.
+                    if opportunistic {
+                        // The hit path only consults the step analysis
+                        // (is_complete → ensure_step); assembling the full
+                        // mask here would do exactly the work the
+                        // opportunistic optimization exists to skip.
+                        let _ = engine.is_complete();
+                    } else {
+                        let _ = engine.compute_mask();
+                    }
+                    Prewarmed { lane, engine }
+                }));
+                if let Ok(p) = warmed {
+                    let _ = reply.send(p);
+                }
+            }
+        }
+    }
+}
+
+fn run_step(mut req: StepRequest, tok: &Tokenizer) -> StepResult {
+    let decision = decide_token(
+        req.engine.as_mut(),
+        &req.logits,
+        &mut req.rng,
+        req.strategy,
+        req.opportunistic,
+        tok,
+    );
+    StepResult { lane: req.lane, engine: req.engine, rng: req.rng, decision }
+}
+
+/// A step decision plus what it cost.
+pub(crate) struct Decision {
+    pub outcome: StepOutcome,
+    pub opportunistic_hit: bool,
+    pub full_mask: bool,
+}
+
+/// Decide (and commit) the next token for one lane: masked sampling with
+/// the opportunistic fast path, then exact re-validation of the committed
+/// token (Algorithm 3 lines 4–12). This is the single implementation both
+/// the pooled and the inline (mask-threads = 0) paths run, so the two
+/// configurations are byte-identical for identical seeds.
+///
+/// Sequence-length and token-budget limits are checked by the scheduler
+/// *before* this runs (they need model state).
+pub(crate) fn decide_token(
+    engine: &mut dyn ConstraintEngine,
+    logits: &[f32],
+    rng: &mut Rng,
+    strategy: Strategy,
+    opportunistic: bool,
+    tok: &Tokenizer,
+) -> Decision {
+    let mut hit = false;
+    let mut full = false;
+    let outcome =
+        decide_inner(engine, logits, rng, strategy, opportunistic, tok, &mut hit, &mut full);
+    Decision { outcome, opportunistic_hit: hit, full_mask: full }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decide_inner(
+    engine: &mut dyn ConstraintEngine,
+    logits: &[f32],
+    rng: &mut Rng,
+    strategy: Strategy,
+    opportunistic: bool,
+    tok: &Tokenizer,
+    hit: &mut bool,
+    full: &mut bool,
+) -> StepOutcome {
+    // Opportunistic path: sample unmasked, validate, fall back to the
+    // full mask only on a miss.
+    let token = if opportunistic {
+        let cand = sample_token(logits, None, strategy, rng);
+        match cand {
+            Some(c) => match engine.token_allowed(c) {
+                Ok(true) => {
+                    *hit = true;
+                    Some(c)
+                }
+                Ok(false) => match engine.compute_mask() {
+                    Ok(Some(mask)) => {
+                        *full = true;
+                        sample_token(logits, Some(mask), strategy, rng)
+                    }
+                    Ok(None) => Some(c),
+                    Err(e) => {
+                        return StepOutcome::Finish(
+                            FinishReason::EngineError,
+                            Some(e.to_string()),
+                        )
+                    }
+                },
+                Err(e) => {
+                    return StepOutcome::Finish(FinishReason::EngineError, Some(e.to_string()))
+                }
+            },
+            None => None,
+        }
+    } else {
+        match engine.compute_mask() {
+            Ok(Some(mask)) => {
+                *full = true;
+                sample_token(logits, Some(mask), strategy, rng)
+            }
+            Ok(None) => sample_token(logits, None, strategy, rng),
+            Err(e) => {
+                return StepOutcome::Finish(FinishReason::EngineError, Some(e.to_string()))
+            }
+        }
+    };
+
+    let Some(token) = token else {
+        return StepOutcome::Finish(
+            FinishReason::EngineError,
+            Some("empty mask (dead end)".to_string()),
+        );
+    };
+    if token == tok.eos_id {
+        return StepOutcome::Finish(FinishReason::Eos, None);
+    }
+
+    // Exact final validation: the α=1 mask over-approximates (Definition 8
+    // prefix acceptance), so a sampled token can rarely dead-end the
+    // generation. Re-validate the committed token exactly; on a miss, walk
+    // the masked candidates in logit order until one survives.
+    let token = if engine.validate_append(tok.token_bytes(token)) {
+        token
+    } else {
+        match engine.compute_mask() {
+            Ok(Some(mask)) => {
+                let mut cands: Vec<(u32, f32)> = mask
+                    .iter_ones()
+                    .map(|i| (i as u32, logits.get(i).copied().unwrap_or(f32::MIN)))
+                    .collect();
+                cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                let mut chosen = None;
+                for (cand, _) in cands.into_iter().take(64) {
+                    if cand == tok.eos_id {
+                        return StepOutcome::Finish(FinishReason::Eos, None);
+                    }
+                    if engine.validate_append(tok.token_bytes(cand)) {
+                        chosen = Some(cand);
+                        break;
+                    }
+                }
+                match chosen {
+                    Some(c) => c,
+                    None => {
+                        return StepOutcome::Finish(
+                            FinishReason::EngineError,
+                            Some("no valid continuation".to_string()),
+                        )
+                    }
+                }
+            }
+            Ok(None) => token,
+            Err(e) => {
+                return StepOutcome::Finish(FinishReason::EngineError, Some(e.to_string()))
+            }
+        }
+    };
+
+    engine.append(tok.token_bytes(token));
+    StepOutcome::Token(token)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{GrammarContext, SyncodeEngine};
+    use crate::mask::{MaskStore, MaskStoreConfig};
+    use crate::parser::LrMode;
+
+    fn engine() -> (Box<dyn ConstraintEngine>, Arc<Tokenizer>) {
+        let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let store =
+            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        (Box::new(SyncodeEngine::new(cx, store, tok.clone())), tok)
+    }
+
+    /// Uniform logits so sampling is driven purely by the mask/rng.
+    fn flat_logits(n: usize) -> Vec<f32> {
+        vec![0.0; n]
+    }
+
+    #[test]
+    fn decide_token_commits_valid_byte() {
+        let (mut e, tok) = engine();
+        e.reset("");
+        let logits = flat_logits(tok.vocab_size());
+        let mut rng = Rng::new(3);
+        let d = decide_token(
+            e.as_mut(),
+            &logits,
+            &mut rng,
+            Strategy::Greedy,
+            false,
+            &tok,
+        );
+        match d.outcome {
+            StepOutcome::Token(t) => {
+                assert!(!tok.is_special(t));
+                // token was appended
+                assert!(!e.text().is_empty());
+            }
+            StepOutcome::Finish(r, err) => panic!("unexpected finish {r:?} {err:?}"),
+        }
+        assert!(d.full_mask);
+    }
+
+    #[test]
+    fn pooled_step_matches_inline() {
+        // The same (engine state, logits, rng) must decide the same token
+        // through the pool as inline — the byte-identical contract.
+        let (mut inline_e, tok) = engine();
+        inline_e.reset("{");
+        let logits: Vec<f32> =
+            (0..tok.vocab_size()).map(|i| ((i * 37) % 101) as f32 / 100.0).collect();
+        let mut rng = Rng::new(9);
+        let d = decide_token(
+            inline_e.as_mut(),
+            &logits,
+            &mut rng,
+            Strategy::Temperature(0.9),
+            true,
+            &tok,
+        );
+
+        let (pool, client, worker_metrics) = MaskPool::start(2, tok.clone());
+        let (mut pooled_e, _) = engine();
+        pooled_e.reset("{");
+        let (rtx, rrx) = channel();
+        client
+            .submit_step(
+                StepRequest {
+                    lane: 0,
+                    engine: pooled_e,
+                    logits: logits.clone(),
+                    rng: Rng::new(9),
+                    strategy: Strategy::Temperature(0.9),
+                    opportunistic: true,
+                },
+                &rtx,
+            )
+            .unwrap();
+        drop(rtx);
+        let res = rrx.recv().unwrap();
+        match (&d.outcome, &res.decision.outcome) {
+            (StepOutcome::Token(a), StepOutcome::Token(b)) => assert_eq!(a, b),
+            _ => panic!("outcomes differ in kind"),
+        }
+        assert_eq!(res.engine.text(), inline_e.text());
+        drop(client);
+        pool.shutdown();
+        let jobs: u64 = worker_metrics.iter().map(|m| m.lock().unwrap().mask_pool_jobs).sum();
+        assert!(jobs >= 1);
+    }
+
+    #[test]
+    fn prewarm_roundtrips_engine() {
+        let (mut e, tok) = engine();
+        e.reset("{");
+        let (pool, client, worker_metrics) = MaskPool::start(1, tok);
+        let (ptx, prx) = channel();
+        client.submit_prewarm(4, e, false, &ptx).unwrap();
+        drop(ptx);
+        let p = prx.recv().unwrap();
+        assert_eq!(p.lane, 4);
+        assert_eq!(p.engine.text(), b"{");
+        drop(client);
+        pool.shutdown();
+        let m = worker_metrics[0].lock().unwrap();
+        assert_eq!(m.masks_prewarmed, 1);
+        assert_eq!(m.mask_pool_wait.count(), 1);
+    }
+}

@@ -1,6 +1,14 @@
 //! Serving metrics: latency/TTFT histograms, token counters, mask-step
-//! accounting. The `json_server` example prints a snapshot after its run
-//! (the e2e latency/throughput evidence in EXPERIMENTS.md).
+//! accounting, admission-queue depth and mask-pool wait tracking.
+//!
+//! Recording is sharded to keep mutexes off the per-token hot path: each
+//! replica records only into its **own** `Metrics`; the dispatcher
+//! (queue depth) and mask pool (job/wait counters) record into one
+//! **coordinator-shared** instance; `ServerHandle::snapshot` merges them
+//! all into the global view on demand, while `replica_snapshots` exposes
+//! the per-replica split so imbalance is visible. `syncode serve` and
+//! `examples/json_server` print both; `docs/serving.md` describes how to
+//! read them.
 
 use std::time::Instant;
 
@@ -61,6 +69,55 @@ impl Histogram {
     pub fn max(&self) -> f64 {
         self.max_secs
     }
+
+    /// Fold another histogram into this one (per-replica → aggregate).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_secs += other.sum_secs;
+        self.max_secs = self.max_secs.max(other.max_secs);
+    }
+}
+
+/// Count/mean/max gauge for small-integer observations (admission-queue
+/// depth, active-lane counts).
+#[derive(Debug, Clone, Default)]
+pub struct DepthGauge {
+    count: u64,
+    sum: u64,
+    max: usize,
+}
+
+impl DepthGauge {
+    pub fn record(&mut self, depth: usize) {
+        self.count += 1;
+        self.sum += depth as u64;
+        self.max = self.max.max(depth);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &DepthGauge) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Aggregated server metrics.
@@ -72,8 +129,19 @@ pub struct Metrics {
     pub full_mask_computations: u64,
     pub opportunistic_hits: u64,
     pub engine_errors: u64,
+    /// Jobs executed by the mask worker pool (steps + prewarms).
+    pub mask_pool_jobs: u64,
+    /// Prewarm jobs that warmed the next step's analysis/mask while the
+    /// model was inside its batched decode.
+    pub masks_prewarmed: u64,
     pub latency: Histogram,
     pub ttft: Histogram,
+    /// Submit → dequeue wait of mask-pool jobs (the pool's saturation
+    /// signal: rising waits mean masks queue behind each other again).
+    pub mask_pool_wait: Histogram,
+    /// Admission-queue depth observed at each enqueue (the dispatcher's
+    /// backpressure signal).
+    pub queue_depth: DepthGauge,
     started: Option<Instant>,
 }
 
@@ -86,10 +154,16 @@ pub struct MetricsSnapshot {
     pub full_mask_computations: u64,
     pub opportunistic_hits: u64,
     pub engine_errors: u64,
+    pub mask_pool_jobs: u64,
+    pub masks_prewarmed: u64,
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
     pub mean_ttft: f64,
+    pub mask_wait_mean: f64,
+    pub mask_wait_p99: f64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
 }
@@ -101,6 +175,27 @@ impl Metrics {
         }
     }
 
+    /// Fold another `Metrics` into this one (used to aggregate per-replica
+    /// metrics into a combined view).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_finished += other.requests_finished;
+        self.tokens_generated += other.tokens_generated;
+        self.decode_steps += other.decode_steps;
+        self.full_mask_computations += other.full_mask_computations;
+        self.opportunistic_hits += other.opportunistic_hits;
+        self.engine_errors += other.engine_errors;
+        self.mask_pool_jobs += other.mask_pool_jobs;
+        self.masks_prewarmed += other.masks_prewarmed;
+        self.latency.merge(&other.latency);
+        self.ttft.merge(&other.ttft);
+        self.mask_pool_wait.merge(&other.mask_pool_wait);
+        self.queue_depth.merge(&other.queue_depth);
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let wall = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsSnapshot {
@@ -110,10 +205,16 @@ impl Metrics {
             full_mask_computations: self.full_mask_computations,
             opportunistic_hits: self.opportunistic_hits,
             engine_errors: self.engine_errors,
+            mask_pool_jobs: self.mask_pool_jobs,
+            masks_prewarmed: self.masks_prewarmed,
             mean_latency: self.latency.mean(),
             p50_latency: self.latency.quantile(0.5),
             p99_latency: self.latency.quantile(0.99),
             mean_ttft: self.ttft.mean(),
+            mask_wait_mean: self.mask_pool_wait.mean(),
+            mask_wait_p99: self.mask_pool_wait.quantile(0.99),
+            queue_depth_mean: self.queue_depth.mean(),
+            queue_depth_max: self.queue_depth.max(),
             wall_secs: wall,
             tokens_per_sec: if wall > 0.0 { self.tokens_generated as f64 / wall } else { 0.0 },
         }
@@ -123,7 +224,7 @@ impl Metrics {
 impl MetricsSnapshot {
     /// One-line human report.
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} steps={} masks={} opp-hits={} errors={} \
              latency(mean/p50/p99)={:.3}s/{:.3}s/{:.3}s ttft={:.3}s throughput={:.1} tok/s",
             self.requests_finished,
@@ -137,7 +238,23 @@ impl MetricsSnapshot {
             self.p99_latency,
             self.mean_ttft,
             self.tokens_per_sec,
-        )
+        );
+        if self.mask_pool_jobs > 0 {
+            s.push_str(&format!(
+                " pool(jobs={} prewarmed={} wait mean/p99={:.1}µs/{:.1}µs)",
+                self.mask_pool_jobs,
+                self.masks_prewarmed,
+                self.mask_wait_mean * 1e6,
+                self.mask_wait_p99 * 1e6,
+            ));
+        }
+        if self.queue_depth_max > 0 || self.queue_depth_mean > 0.0 {
+            s.push_str(&format!(
+                " queue(depth mean/max={:.1}/{})",
+                self.queue_depth_mean, self.queue_depth_max
+            ));
+        }
+        s
     }
 }
 
@@ -173,5 +290,51 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for i in 1..=10 {
+            a.record(i as f64 * 1e-3);
+            b.record(i as f64 * 1e-2);
+        }
+        let mean_a = a.mean();
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert!(a.mean() > mean_a);
+        assert!((a.max() - b.max()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth_histogram_tracks_mean_and_max() {
+        let mut d = DepthGauge::default();
+        for depth in [0usize, 1, 2, 3, 100] {
+            d.record(depth);
+        }
+        assert_eq!(d.count(), 5);
+        assert_eq!(d.max(), 100);
+        assert!((d.mean() - 21.2).abs() < 1e-9);
+        let mut e = DepthGauge::default();
+        e.record(7);
+        d.merge(&e);
+        assert_eq!(d.count(), 6);
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.tokens_generated = 10;
+        b.tokens_generated = 5;
+        b.engine_errors = 2;
+        b.latency.record(0.5);
+        b.queue_depth.record(4);
+        a.merge(&b);
+        assert_eq!(a.tokens_generated, 15);
+        assert_eq!(a.engine_errors, 2);
+        assert_eq!(a.latency.count(), 1);
+        assert_eq!(a.queue_depth.max(), 4);
     }
 }

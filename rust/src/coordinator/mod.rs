@@ -1,21 +1,37 @@
-//! L3 serving coordinator: request queue → continuous batcher → decode
-//! scheduler, with masked sampling (Algorithm 1/3) and per-request
-//! metrics. The layer a vLLM-style router would sit on.
+//! L3 serving coordinator: bounded admission queue → N replica schedulers
+//! → shared mask worker pool, with masked sampling (Algorithm 1/3) and
+//! per-replica + global metrics. The layer a vLLM-style router would sit
+//! on.
 //!
-//! One scheduler thread owns the model (PJRT executables are not Sync) and
-//! a constraint engine per lane; callers submit requests over a channel
-//! and receive responses over per-request channels. Python is never
-//! involved: the model is an AOT HLO executable (or the mock).
+//! The subsystem is layered (see `docs/serving.md`):
+//!
+//! - [`dispatch`](Coordinator) — the bounded shared queue with
+//!   backpressure; replicas pull from it, so load balances without a
+//!   router. [`Server`] is the single-replica compatibility front.
+//! - `replica` — one scheduler thread per model replica; owns its
+//!   [`crate::runtime::LanguageModel`] (PJRT executables are not `Send`,
+//!   so the factory runs in-thread) and the continuous-batching decode
+//!   loop.
+//! - `maskpool` — grammar-mask computation and exact re-validation off
+//!   the scheduler threads: per-lane step decisions run concurrently, and
+//!   prewarm jobs overlap the *next* step's mask work with the model's
+//!   batched decode (the XGrammar-style systems win).
+//!
+//! Python is never involved: each model is an AOT HLO executable (or the
+//! mock).
 
 pub mod beam;
+mod dispatch;
+mod maskpool;
 mod metrics;
+mod replica;
 mod sampler;
-mod server;
+mod types;
 
 pub use beam::{beam_generate, BeamHypothesis};
-pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use dispatch::{Coordinator, CoordinatorConfig, Server, ServerHandle};
+pub use metrics::{DepthGauge, Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
-pub use server::{
-    EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse, Server,
-    ServerHandle,
+pub use types::{
+    EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse,
 };

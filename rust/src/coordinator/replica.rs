@@ -1,0 +1,442 @@
+//! One replica scheduler: a thread that owns one [`LanguageModel`]
+//! (constructed in-thread — PJRT handles are not `Send`), pulls admissions
+//! from the shared dispatcher queue, and runs the continuous-batching
+//! decode loop over the model's lanes.
+//!
+//! Each iteration: (1) admit queued requests into free lanes (prefill),
+//! (2) for every lane holding fresh logits, decide the next token
+//! (Algorithm 3 lines 4–12) — through the mask worker pool when one is
+//! configured (lanes' mask work runs concurrently), inline otherwise,
+//! (3) submit prewarm jobs for the committed tokens and run one batched
+//! decode step for all still-active lanes *while the pool warms the next
+//! step's masks*, (4) collect the prewarmed engines and install the fresh
+//! logits.
+//!
+//! The pooled and inline paths share one token-decision implementation
+//! (`maskpool::decide_token`) and per-lane RNG streams travel with the
+//! jobs, so both configurations produce byte-identical output for
+//! identical seeds.
+
+use super::dispatch::{ReplicaGuard, SharedQueue};
+use super::maskpool::{
+    decide_token, Decision, PoolClient, Prewarmed, StepOutcome, StepRequest, StepResult,
+};
+use super::metrics::Metrics;
+use super::types::{EngineProvider, FinishReason, GenRequest, GenResponse};
+use crate::engine::ConstraintEngine;
+use crate::runtime::{LanguageModel, ModelFactory};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-replica metrics sink. A replica records only into its own
+/// instance; the coordinator-wide view is merged on demand by
+/// `ServerHandle::snapshot`, so the shared mutex stays off the per-token
+/// hot path (only the dispatcher and the mask pool touch it).
+pub(crate) struct ReplicaMetrics {
+    pub local: Arc<Mutex<Metrics>>,
+}
+
+impl ReplicaMetrics {
+    fn with(&self, f: impl Fn(&mut Metrics)) {
+        f(&mut self.local.lock().unwrap());
+    }
+}
+
+/// Everything a replica thread needs, moved into it at spawn.
+pub(crate) struct ReplicaCtx {
+    pub id: usize,
+    pub model_factory: ModelFactory,
+    pub tok: Arc<Tokenizer>,
+    pub provider: Arc<dyn EngineProvider>,
+    pub queue: Arc<SharedQueue>,
+    pub pool: Option<PoolClient>,
+    pub metrics: ReplicaMetrics,
+    /// Liveness guard: when the last replica exits (normally or via
+    /// panic/unwind), its drop closes the queue and rejects what's left,
+    /// so submitters never hang on a dead coordinator.
+    pub guard: ReplicaGuard,
+}
+
+/// One lane's in-flight request. The engine is `Option` because it
+/// travels to the mask pool and back within an iteration.
+struct Lane {
+    req: GenRequest,
+    resp_tx: Sender<GenResponse>,
+    engine: Option<Box<dyn ConstraintEngine>>,
+    logits: Vec<f32>,
+    generated: Vec<u32>,
+    rng: Rng,
+    t_admit: Instant,
+    ttft: Option<f64>,
+    prompt_len: usize,
+}
+
+pub(crate) fn run_replica(ctx: ReplicaCtx) {
+    let ReplicaCtx { id, model_factory, tok, provider, queue, pool, metrics, guard } = ctx;
+    let _guard = guard;
+    let mut model: Box<dyn LanguageModel> = match model_factory() {
+        Ok(m) => m,
+        Err(e) => {
+            // This replica can't serve; exit and let the others pull from
+            // the queue. If it was the last one, the guard rejects
+            // pending requests instead of stranding them.
+            eprintln!("[replica {id}: model construction failed: {e}]");
+            return;
+        }
+    };
+    let nlanes = model.lanes().max(1);
+    let mut lanes: Vec<Option<Lane>> = (0..nlanes).map(|_| None).collect();
+
+    loop {
+        // ---- intake ----------------------------------------------------
+        // Idle replica: park on the shared queue until a request arrives
+        // or the queue is closed *and* drained.
+        let mut next = None;
+        if lanes.iter().all(|l| l.is_none()) {
+            match queue.pop_blocking() {
+                Some(p) => next = Some(p),
+                None => break,
+            }
+        }
+
+        // ---- admission (continuous batching) ---------------------------
+        for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some((req, resp_tx)) = next.take().or_else(|| queue.try_pop()) else { break };
+            metrics.with(|m| m.mark_started());
+            let mut engine = match provider.engine_for(&req) {
+                Ok(e) => e,
+                Err(msg) => {
+                    metrics.with(|m| {
+                        m.requests_finished += 1;
+                        m.engine_errors += 1;
+                    });
+                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
+                    continue;
+                }
+            };
+            engine.reset(&req.constraint_prefix);
+            let mut ids = vec![tok.bos_id];
+            ids.extend(tok.encode(req.prompt.as_bytes()));
+            // Keep the full prompt where possible (tail-clamp only when it
+            // alone overflows); generation stops at SeqOverflow if the
+            // budget runs out.
+            let cap = model.max_seq().saturating_sub(8).max(1);
+            if ids.len() > cap {
+                ids = ids[ids.len() - cap..].to_vec();
+            }
+            let t_admit = Instant::now();
+            match model.prefill(lane_idx, &ids) {
+                Ok(logits) => {
+                    let rng = Rng::new(req.params.seed ^ req.id);
+                    *slot = Some(Lane {
+                        prompt_len: ids.len(),
+                        req,
+                        resp_tx,
+                        engine: Some(engine),
+                        logits,
+                        generated: Vec::new(),
+                        rng,
+                        t_admit,
+                        ttft: None,
+                    });
+                }
+                Err(e) => {
+                    metrics.with(|m| {
+                        m.requests_finished += 1;
+                        m.engine_errors += 1;
+                    });
+                    let _ = resp_tx.send(GenResponse::failed(req.id, format!("prefill: {e}")));
+                }
+            }
+        }
+
+        // ---- budget / sequence-length limits ---------------------------
+        // Checked on the scheduler (they need model state) before the
+        // step work is farmed out.
+        let max_seq = model.max_seq();
+        for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+            let reason = slot.as_ref().and_then(|l| budget_finish(l, max_seq));
+            if let Some(r) = reason {
+                let lane = slot.take().unwrap();
+                finish_lane(lane, r, None, &tok, &metrics);
+                model.release(lane_idx);
+            }
+        }
+
+        // ---- token decision per lane (pooled or inline) ----------------
+        let mut last: Vec<Option<u32>> = vec![None; nlanes];
+        match &pool {
+            Some(client) => {
+                step_wave_pooled(
+                    client, &mut lanes, &mut last, &tok, &metrics, model.as_mut(),
+                );
+            }
+            None => {
+                for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                    let Some(lane) = slot.as_mut() else { continue };
+                    let engine = lane.engine.as_mut().expect("inline engine present");
+                    let d = decide_token(
+                        engine.as_mut(),
+                        &lane.logits,
+                        &mut lane.rng,
+                        lane.req.params.strategy,
+                        lane.req.params.opportunistic,
+                        &tok,
+                    );
+                    apply_outcome(slot, lane_idx, d, &mut last, &tok, &metrics, model.as_mut());
+                }
+            }
+        }
+
+        // ---- prewarm submit (pool only) --------------------------------
+        // Engines of continuing lanes go back to the pool so the *next*
+        // step's lex/parse/mask assembly runs concurrently with the
+        // batched decode below.
+        let mut prewarm: Option<(Receiver<Prewarmed>, usize)> = None;
+        if let Some(client) = &pool {
+            let (ptx, prx) = channel::<Prewarmed>();
+            let mut expect = 0usize;
+            for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                if last[lane_idx].is_none() {
+                    continue;
+                }
+                let Some(lane) = slot.as_mut() else { continue };
+                // Don't warm a step that will never run: the next
+                // iteration's budget check finishes this lane first.
+                if budget_finish(lane, max_seq).is_some() {
+                    continue;
+                }
+                let opportunistic = lane.req.params.opportunistic;
+                let Some(engine) = lane.engine.take() else { continue };
+                match client.submit_prewarm(lane_idx, engine, opportunistic, &ptx) {
+                    Ok(()) => expect += 1,
+                    Err(engine) => lane.engine = Some(engine), // pool gone: skip prewarm
+                }
+            }
+            drop(ptx);
+            prewarm = Some((prx, expect));
+        }
+
+        // ---- batched decode step ---------------------------------------
+        let mut decode_result = None;
+        if last.iter().any(|t| t.is_some()) {
+            metrics.with(|m| m.decode_steps += 1);
+            decode_result = Some(model.decode(&last));
+        }
+
+        // ---- collect prewarmed engines ---------------------------------
+        if let Some((prx, expect)) = prewarm {
+            for _ in 0..expect {
+                let Ok(p) = prx.recv() else { break };
+                if let Some(lane) = lanes.get_mut(p.lane).and_then(|s| s.as_mut()) {
+                    lane.engine = Some(p.engine);
+                }
+            }
+            // A lane whose engine never came back lost it to a worker
+            // panic; it cannot continue.
+            for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                let lost = slot.as_ref().is_some_and(|l| l.engine.is_none());
+                if lost {
+                    let lane = slot.take().unwrap();
+                    finish_lane(
+                        lane,
+                        FinishReason::EngineError,
+                        Some("mask worker failed during prewarm".to_string()),
+                        &tok,
+                        &metrics,
+                    );
+                    model.release(lane_idx);
+                }
+            }
+        }
+
+        // ---- install fresh logits --------------------------------------
+        match decode_result {
+            Some(Ok(all)) => {
+                for (lane_idx, lg) in all.into_iter().enumerate() {
+                    if let (Some(lane), Some(lg)) =
+                        (lanes.get_mut(lane_idx).and_then(|s| s.as_mut()), lg)
+                    {
+                        lane.logits = lg;
+                    }
+                }
+            }
+            Some(Err(e)) => {
+                // Model failure: fail all active lanes.
+                for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                    if let Some(lane) = slot.take() {
+                        finish_lane(
+                            lane,
+                            FinishReason::EngineError,
+                            Some(format!("decode: {e}")),
+                            &tok,
+                            &metrics,
+                        );
+                        model.release(lane_idx);
+                    }
+                }
+            }
+            None => {}
+        }
+    }
+}
+
+/// Submit one step job per active lane, then collect the decisions.
+/// Lanes' mask work runs concurrently on the pool workers while this
+/// thread matches results back to lanes.
+fn step_wave_pooled(
+    client: &PoolClient,
+    lanes: &mut [Option<Lane>],
+    last: &mut [Option<u32>],
+    tok: &Arc<Tokenizer>,
+    metrics: &ReplicaMetrics,
+    model: &mut dyn LanguageModel,
+) {
+    let (rtx, rrx) = channel::<StepResult>();
+    let mut expected = 0usize;
+    for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+        let Some(lane) = slot.as_mut() else { continue };
+        let engine = lane.engine.take().expect("engine present at step");
+        let req = StepRequest {
+            lane: lane_idx,
+            engine,
+            logits: std::mem::take(&mut lane.logits),
+            rng: lane.rng.clone(),
+            strategy: lane.req.params.strategy,
+            opportunistic: lane.req.params.opportunistic,
+        };
+        match client.submit_step(req, &rtx) {
+            Ok(()) => expected += 1,
+            Err(req) => {
+                // Pool unavailable (shutdown race): decide inline so the
+                // lane isn't lost.
+                let StepRequest { engine, logits, .. } = req;
+                lane.engine = Some(engine);
+                lane.logits = logits;
+                let engine = lane.engine.as_mut().unwrap();
+                let d = decide_token(
+                    engine.as_mut(),
+                    &lane.logits,
+                    &mut lane.rng,
+                    lane.req.params.strategy,
+                    lane.req.params.opportunistic,
+                    tok,
+                );
+                apply_outcome(slot, lane_idx, d, last, tok, metrics, model);
+            }
+        }
+    }
+    drop(rtx);
+    for _ in 0..expected {
+        let Ok(res) = rrx.recv() else { break };
+        let lane_idx = res.lane;
+        let Some(slot) = lanes.get_mut(lane_idx) else { continue };
+        let Some(lane) = slot.as_mut() else { continue };
+        lane.engine = Some(res.engine);
+        lane.rng = res.rng;
+        apply_outcome(slot, lane_idx, res.decision, last, tok, metrics, model);
+    }
+    // Lanes whose step result never arrived (worker panic) can't continue.
+    for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+        let lost =
+            last[lane_idx].is_none() && slot.as_ref().is_some_and(|l| l.engine.is_none());
+        if lost {
+            let lane = slot.take().unwrap();
+            finish_lane(
+                lane,
+                FinishReason::EngineError,
+                Some("mask worker failed".to_string()),
+                tok,
+                metrics,
+            );
+            model.release(lane_idx);
+        }
+    }
+}
+
+/// Budget / sequence-length stop conditions — the per-lane checks that
+/// need model state, shared by the per-iteration finish pass and the
+/// prewarm skip so the two can never diverge.
+fn budget_finish(lane: &Lane, max_seq: usize) -> Option<FinishReason> {
+    if lane.generated.len() >= lane.req.params.max_new_tokens {
+        Some(FinishReason::MaxTokens)
+    } else if lane.prompt_len + lane.generated.len() + 2 >= max_seq {
+        Some(FinishReason::SeqOverflow)
+    } else {
+        None
+    }
+}
+
+/// Apply one step decision to its lane: stamp TTFT and record the token,
+/// or finish the lane and release its model slot. The single
+/// implementation behind the inline, pooled-collect and pool-fallback
+/// paths — the byte-identity contract depends on these never diverging.
+fn apply_outcome(
+    slot: &mut Option<Lane>,
+    lane_idx: usize,
+    d: Decision,
+    last: &mut [Option<u32>],
+    tok: &Tokenizer,
+    metrics: &ReplicaMetrics,
+    model: &mut dyn LanguageModel,
+) {
+    metrics.with(|m| {
+        m.opportunistic_hits += d.opportunistic_hit as u64;
+        m.full_mask_computations += d.full_mask as u64;
+    });
+    match d.outcome {
+        StepOutcome::Token(t) => {
+            if let Some(lane) = slot.as_mut() {
+                if lane.ttft.is_none() {
+                    lane.ttft = Some(lane.t_admit.elapsed().as_secs_f64());
+                }
+                lane.generated.push(t);
+                last[lane_idx] = Some(t);
+            }
+        }
+        StepOutcome::Finish(r, err) => {
+            if let Some(lane) = slot.take() {
+                finish_lane(lane, r, err, tok, metrics);
+                model.release(lane_idx);
+            }
+        }
+    }
+}
+
+fn finish_lane(
+    lane: Lane,
+    finish: FinishReason,
+    error: Option<String>,
+    tok: &Tokenizer,
+    metrics: &ReplicaMetrics,
+) {
+    let latency = lane.t_admit.elapsed().as_secs_f64();
+    let text = tok.decode_str(&lane.generated);
+    let tokens = lane.generated.len() as u64;
+    let ttft = lane.ttft.unwrap_or(latency);
+    let has_error = error.is_some();
+    metrics.with(|m| {
+        m.requests_finished += 1;
+        m.tokens_generated += tokens;
+        m.latency.record(latency);
+        m.ttft.record(ttft);
+        if has_error {
+            m.engine_errors += 1;
+        }
+    });
+    let _ = lane.resp_tx.send(GenResponse {
+        id: lane.req.id,
+        text,
+        finish,
+        tokens: lane.generated.len(),
+        ttft_secs: ttft,
+        latency_secs: latency,
+        error,
+    });
+}

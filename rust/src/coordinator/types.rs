@@ -1,0 +1,149 @@
+//! Request/response vocabulary shared by the dispatcher, the replica
+//! schedulers and the mask worker pool, plus the per-request engine
+//! construction hook ([`EngineProvider`]).
+//!
+//! These types used to live inside the monolithic `server.rs`; they are
+//! split out so every serving layer (dispatch → replica → mask pool) can
+//! depend on them without depending on each other.
+
+use super::sampler::Strategy;
+use crate::engine::ConstraintEngine;
+
+/// Factory producing a fresh constraint engine per request. `Sync` because
+/// one provider is shared by every replica scheduler thread.
+pub type EngineFactory = Box<dyn Fn() -> Box<dyn ConstraintEngine> + Send + Sync>;
+
+/// Per-request engine construction (the admission-time hook). Implemented
+/// by [`EngineFactory`] (single grammar, ignores request routing) and by
+/// `Arc<GrammarRegistry>` (multi-grammar routing by request name).
+///
+/// `Send + Sync`: the coordinator shares one provider across all replica
+/// scheduler threads (each admission builds its engine in-thread).
+pub trait EngineProvider: Send + Sync {
+    /// Build the constraint engine for one admitted request. `Err` fails
+    /// the request with [`FinishReason::EngineError`] without occupying a
+    /// lane.
+    fn engine_for(&self, req: &GenRequest) -> Result<Box<dyn ConstraintEngine>, String>;
+}
+
+impl EngineProvider for EngineFactory {
+    fn engine_for(&self, req: &GenRequest) -> Result<Box<dyn ConstraintEngine>, String> {
+        if let Some(g) = &req.grammar {
+            return Err(format!(
+                "request targets grammar '{g}' but this server was started \
+                 with a single-grammar engine factory (use a GrammarRegistry)"
+            ));
+        }
+        Ok((self)())
+    }
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    pub strategy: Strategy,
+    pub seed: u64,
+    /// Opportunistic masking (Beurer-Kellner et al. 2024): sample first,
+    /// validate, and only build the full mask on a miss.
+    pub opportunistic: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 128,
+            strategy: Strategy::Greedy,
+            seed: 0,
+            opportunistic: true,
+        }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone, Default)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Conditioning text fed to the LM (may include few-shot examples).
+    pub prompt: String,
+    /// `C_0` for the constraint engine (code prefix for completion tasks;
+    /// empty for freeform).
+    pub constraint_prefix: String,
+    /// Registry grammar to constrain with; `None` uses the provider's
+    /// default (single-factory servers only accept `None`).
+    pub grammar: Option<String>,
+    pub params: GenParams,
+}
+
+/// Why a generation stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// The constraint engine rejected the prefix or the mask went empty.
+    EngineError,
+    /// Prompt + generation hit the model's max sequence length.
+    SeqOverflow,
+    /// The request never reached a scheduler: the coordinator is shut
+    /// down, the admission queue was closed, or no replica is alive.
+    Rejected,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated completion text (prompt excluded).
+    pub text: String,
+    pub finish: FinishReason,
+    pub tokens: usize,
+    pub ttft_secs: f64,
+    pub latency_secs: f64,
+    pub error: Option<String>,
+}
+
+impl GenResponse {
+    /// A response for a request that never reached a scheduler thread
+    /// (dead coordinator, closed queue). Replaces the old
+    /// `expect("server alive")` panics in `submit`/`generate`.
+    pub fn rejected(id: u64, msg: &str) -> GenResponse {
+        GenResponse {
+            id,
+            text: String::new(),
+            finish: FinishReason::Rejected,
+            tokens: 0,
+            ttft_secs: 0.0,
+            latency_secs: 0.0,
+            error: Some(msg.to_string()),
+        }
+    }
+
+    /// Assert this response actually reached a scheduler, restoring the
+    /// old loud-failure behaviour for batch/eval callers: a `Rejected`
+    /// response (dead coordinator, e.g. every replica's model failed to
+    /// construct) would otherwise flow into experiment tables as an
+    /// empty-text "generation" with zero tokens. Interactive servers
+    /// should branch on [`FinishReason::Rejected`] instead.
+    ///
+    /// # Panics
+    /// If the response is `Rejected`.
+    pub fn expect_served(self, context: &str) -> GenResponse {
+        if self.finish == FinishReason::Rejected {
+            panic!("{context}: request {} was rejected, not served: {:?}", self.id, self.error);
+        }
+        self
+    }
+
+    /// A zero-token engine-error response (admission failures).
+    pub(crate) fn failed(id: u64, msg: String) -> GenResponse {
+        GenResponse {
+            id,
+            text: String::new(),
+            finish: FinishReason::EngineError,
+            tokens: 0,
+            ttft_secs: 0.0,
+            latency_secs: 0.0,
+            error: Some(msg),
+        }
+    }
+}

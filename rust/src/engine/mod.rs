@@ -19,6 +19,12 @@ pub use syncode::SyncodeEngine;
 use crate::util::bitset::BitSet;
 
 /// A per-request constrained-decoding engine (one per live sequence).
+///
+/// `Send` is load-bearing: the serving coordinator's mask worker pool
+/// (`coordinator/maskpool.rs`) moves engines scheduler → worker →
+/// scheduler by value, so every implementation must stay `Send` (shared
+/// state behind `Arc`, no `Rc`/`RefCell`). An engine is only ever touched
+/// by one thread at a time, so `Sync` is *not* required.
 pub trait ConstraintEngine: Send {
     /// Start a new completion whose fixed prefix (prompt-side code) is
     /// `prefix` — `C_0` in the paper. Empty for freeform generation.
@@ -59,6 +65,17 @@ pub trait ConstraintEngine: Send {
     /// Engine name for reports.
     fn name(&self) -> &'static str;
 }
+
+// The mask pool's contract, checked at compile time: every engine (and
+// the boxed trait object the coordinator ships around) crosses threads.
+const _: () = {
+    const fn assert_send<T: Send + ?Sized>() {}
+    assert_send::<SyncodeEngine>();
+    assert_send::<baselines::StandardEngine>();
+    assert_send::<baselines::OutlinesLike>();
+    assert_send::<baselines::GbnfLike>();
+    assert_send::<Box<dyn ConstraintEngine>>();
+};
 
 #[cfg(test)]
 mod tests {

@@ -36,6 +36,11 @@ pub struct SyncodeEngine {
     text: Vec<u8>,
     inc: IncrementalParser,
     mask: BitSet,
+    /// Does `mask` hold the assembled mask for the current step? Makes
+    /// `compute_mask` idempotent per step, so a mask assembled by a
+    /// prewarm job (mask pool, during the model's batched decode) is a
+    /// cache hit when the scheduler asks for it on the next step.
+    mask_valid: bool,
     /// Cached per-step analysis (invalidated by `append`/`reset`).
     step: Option<Analysis>,
     lex_cache: LexCache,
@@ -63,6 +68,7 @@ impl SyncodeEngine {
             text: Vec::new(),
             inc,
             mask,
+            mask_valid: false,
             step: None,
             lex_cache: LexCache::default(),
             probe_tokens: Vec::new(),
@@ -127,6 +133,7 @@ impl SyncodeEngine {
     pub fn set_incremental(&mut self, on: bool) {
         self.inc.incremental = on;
         self.use_lex_cache = on;
+        self.mask_valid = false;
     }
 
     fn ensure_step(&mut self) -> Result<&Analysis, PrefixError> {
@@ -154,6 +161,7 @@ impl ConstraintEngine for SyncodeEngine {
         self.text.extend_from_slice(prefix.as_bytes());
         self.inc.reset();
         self.step = None;
+        self.mask_valid = false;
         // Keep the allocations; just invalidate the cache contents.
         self.lex_cache.upto = 0;
         self.lex_cache.rem_start = 0;
@@ -163,6 +171,7 @@ impl ConstraintEngine for SyncodeEngine {
     fn append(&mut self, bytes: &[u8]) {
         self.text.extend_from_slice(bytes);
         self.step = None;
+        self.mask_valid = false;
     }
 
     fn text(&self) -> &[u8] {
@@ -171,10 +180,13 @@ impl ConstraintEngine for SyncodeEngine {
 
     fn compute_mask(&mut self) -> Result<Option<&BitSet>, PrefixError> {
         self.ensure_step()?;
-        let a = self.step.as_ref().unwrap();
-        let r = &self.text[a.remainder_start..];
-        grammar_mask(&self.store, &self.cx.grammar, &a.acc, r, &mut self.mask);
-        self.lookups += a.acc.seqs.len() as u64;
+        if !self.mask_valid {
+            let a = self.step.as_ref().unwrap();
+            let r = &self.text[a.remainder_start..];
+            grammar_mask(&self.store, &self.cx.grammar, &a.acc, r, &mut self.mask);
+            self.lookups += a.acc.seqs.len() as u64;
+            self.mask_valid = true;
+        }
         Ok(Some(&self.mask))
     }
 
@@ -397,6 +409,24 @@ mod tests {
             e.append(&[b]);
         }
         assert!(e.is_complete());
+    }
+
+    #[test]
+    fn mask_cached_within_step_recomputed_after_append() {
+        // compute_mask is idempotent per step (the prewarm contract): the
+        // second call is a cache hit (no new store lookups) with the same
+        // bits; append invalidates and the next call recomputes.
+        let mut e = engine("json");
+        e.reset("{");
+        let m1 = e.compute_mask().unwrap().unwrap().clone();
+        let lookups_after_first = e.lookups;
+        let m2 = e.compute_mask().unwrap().unwrap().clone();
+        assert_eq!(m1, m2);
+        assert_eq!(e.lookups, lookups_after_first, "cache hit must not re-probe the store");
+        e.append(b"\"k");
+        let m3 = e.compute_mask().unwrap().unwrap().clone();
+        assert!(e.lookups > lookups_after_first);
+        assert_ne!(m1, m3, "different step should produce a different mask");
     }
 
     #[test]

@@ -350,6 +350,27 @@ pub fn corpus(gname: &str, n_docs: usize, seed: u64) -> Vec<Vec<u8>> {
     (0..n_docs).map(|_| sample_doc(gname, &mut rng)).collect()
 }
 
+/// The mock serving recipe: a BPE tokenizer trained on the union of the
+/// grammars' corpora (multi-grammar registries must share one
+/// vocabulary), plus that union corpus for the bigram mock LM. The single
+/// definition behind `syncode compile/generate/serve --mock`,
+/// `examples/json_server.rs`, and `benches/serve_scale.rs` — artifact
+/// caches only warm-load across them because they all use exactly this.
+pub fn mock_serving_recipe(
+    gnames: &[&str],
+    docs_per_grammar: usize,
+    seed: u64,
+    merges: usize,
+) -> (crate::tokenizer::Tokenizer, Vec<Vec<u8>>) {
+    let mut union_docs: Vec<Vec<u8>> = Vec::new();
+    for g in gnames {
+        union_docs.extend(corpus(g, docs_per_grammar, seed));
+    }
+    let flat: Vec<u8> =
+        union_docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    (crate::tokenizer::Tokenizer::train(&flat, merges), union_docs)
+}
+
 fn sample_doc(gname: &str, rng: &mut Rng) -> Vec<u8> {
     match gname {
         "json" => sample_json(rng, 0).to_string().into_bytes(),

@@ -188,7 +188,8 @@ pub fn run_json(
             constraint_prefix: String::new(),
             grammar: None,
             params: params.clone(),
-        });
+        })
+        .expect_served("eval harness");
         time += resp.latency_secs;
         tokens += resp.tokens;
         if resp.finish == crate::coordinator::FinishReason::MaxTokens {
@@ -252,7 +253,8 @@ pub fn run_sql(env: &EvalEnv, tasks: &[SqlTask], kind: EngineKind, params: &GenP
             constraint_prefix: String::new(),
             grammar: None,
             params: params.clone(),
-        });
+        })
+        .expect_served("eval harness");
         tokens += resp.tokens;
         time += resp.latency_secs;
         // paper: "\n" is an additional stopping condition for SQL
@@ -321,7 +323,8 @@ pub fn run_gpl(
                 constraint_prefix: t.prefix.clone(),
                 grammar: None,
                 params: p,
-            });
+            })
+            .expect_served("eval harness");
             time += resp.latency_secs;
             total += 1;
             let full = format!("{}{}", t.prefix, resp.text);
@@ -372,7 +375,8 @@ pub fn run_calc_passk(
                 constraint_prefix: String::new(),
                 grammar: None,
                 params: p,
-            });
+            })
+            .expect_served("eval harness");
             let answer = resp.text.lines().next().unwrap_or("").trim();
             if let Ok(v) = eval_calc(&env.cx.grammar, &env.cx.table, answer.as_bytes()) {
                 if (v - t.expected).abs() < 1e-6 {

@@ -6,7 +6,10 @@
 //! - `generate`   one-shot constrained generation (mock or PJRT model);
 //! - `serve`      run the batch server over a synthetic request stream —
 //!   `--grammars a,b,c` serves several grammars from one registry, with
-//!   each request routed per-name through the same batched decode loop;
+//!   each request routed per-name through a batched decode loop;
+//!   `--replicas N` runs N model replicas behind one bounded admission
+//!   queue and `--mask-threads M` computes grammar masks on a shared
+//!   worker pool, overlapped with the batched decode (`docs/serving.md`);
 //! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
 //! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
 //! - `experiment` run a paper experiment (table1|table2|table3|table4);
@@ -15,12 +18,16 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
-use syncode::coordinator::{GenParams, GenRequest, Server, Strategy};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, GenParams, GenRequest, Server, Strategy,
+};
 use syncode::engine::GrammarContext;
 use syncode::eval::dataset;
 use syncode::eval::harness::{self, EngineKind, EvalEnv};
 use syncode::parser::{LrMode, LrTable};
-use syncode::runtime::{MockModel, ModelFactory, PjrtModel, PjrtVariant};
+use syncode::runtime::{
+    replicate_factory, LanguageModel, MockModel, ModelFactory, PjrtModel, PjrtVariant,
+};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::bench::Table;
 use syncode::util::cli::Args;
@@ -39,7 +46,8 @@ fn main() {
             eprintln!(
                 "usage: syncode <compile|generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
                  common: --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
-                 \x20        --cache-dir <dir> --threads <n> --mock"
+                 \x20        --cache-dir <dir> --threads <n> --mock\n\
+                 serve:  --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>"
             );
             std::process::exit(2);
         }
@@ -127,13 +135,9 @@ fn artifact_for(args: &Args, gname: &str, tok: Arc<Tokenizer>) -> Arc<CompiledGr
 fn mock_tokenizer(args: &Args, gnames: &[String]) -> (Arc<Tokenizer>, Vec<Vec<u8>>) {
     let seed = args.get_num("seed", 7u64);
     let merges = args.get_num("merges", 160usize);
-    let mut union_docs: Vec<Vec<u8>> = Vec::new();
-    for g in gnames {
-        union_docs.extend(dataset::corpus(g, 120, seed));
-    }
-    let flat: Vec<u8> =
-        union_docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
-    (Arc::new(Tokenizer::train(&flat, merges)), union_docs)
+    let names: Vec<&str> = gnames.iter().map(String::as_str).collect();
+    let (tok, union_docs) = dataset::mock_serving_recipe(&names, 120, seed, merges);
+    (Arc::new(tok), union_docs)
 }
 
 /// Parse `--grammars a,b` (falling back to `--grammar`) into a non-empty
@@ -171,17 +175,25 @@ fn serving_tokenizer(args: &Args, gnames: &[String]) -> (Arc<Tokenizer>, Vec<Vec
     }
 }
 
-/// Mock or PJRT model factory, matching `serving_tokenizer`'s decision.
-fn model_factory(
+/// One factory per replica; each runs inside its own scheduler thread
+/// (mock replicas share the corpus recipe, PJRT replicas each load the
+/// same artifacts dir).
+fn model_factories(
     args: &Args,
     use_mock: bool,
-    tok: Arc<Tokenizer>,
-    docs: Vec<Vec<u8>>,
-) -> ModelFactory {
+    tok: &Arc<Tokenizer>,
+    docs: &[Vec<u8>],
+    replicas: usize,
+) -> Vec<ModelFactory> {
     if use_mock {
         eprintln!("[model: mock-bigram — pass --artifacts or run `make artifacts` for PJRT]");
         let lanes = args.get_num("lanes", 2usize);
-        Box::new(move || Ok(Box::new(MockModel::from_documents(tok, &docs, lanes, 512, 11))))
+        let tok = tok.clone();
+        let docs = docs.to_vec();
+        replicate_factory(replicas, move || {
+            Ok(Box::new(MockModel::from_documents(tok.clone(), &docs, lanes, 512, 11))
+                as Box<dyn LanguageModel>)
+        })
     } else {
         let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
         let variant = if args.flag("full-recompute") {
@@ -189,8 +201,20 @@ fn model_factory(
         } else {
             PjrtVariant::KvCache
         };
-        Box::new(move || Ok(Box::new(PjrtModel::load(&dir, variant)?)))
+        replicate_factory(replicas, move || {
+            Ok(Box::new(PjrtModel::load(&dir, variant)?) as Box<dyn LanguageModel>)
+        })
     }
+}
+
+/// Single-replica convenience (`generate`).
+fn model_factory(
+    args: &Args,
+    use_mock: bool,
+    tok: Arc<Tokenizer>,
+    docs: Vec<Vec<u8>>,
+) -> ModelFactory {
+    model_factories(args, use_mock, &tok, &docs, 1).pop().expect("one factory")
 }
 
 fn cmd_compile(args: &Args) {
@@ -277,8 +301,17 @@ fn cmd_serve(args: &Args) {
     }
     eprintln!("[registry: {}]", registry.names().join(", "));
 
-    let model = model_factory(args, use_mock, tok.clone(), union_docs);
-    let srv = Server::start(model, tok, registry.clone());
+    let replicas = args.get_num("replicas", 1usize).max(1);
+    let cfg = CoordinatorConfig {
+        mask_threads: args.get_num("mask-threads", 0usize),
+        queue_cap: args.get_num("queue-cap", 256usize),
+    };
+    eprintln!(
+        "[coordinator: {} replica(s), {} mask thread(s), queue cap {}]",
+        replicas, cfg.mask_threads, cfg.queue_cap
+    );
+    let factories = model_factories(args, use_mock, &tok, &union_docs, replicas);
+    let srv = Coordinator::start(factories, tok, registry.clone(), cfg);
     let params = params_from(args);
     // Round-robin the registered grammars across the request stream: the
     // scheduler batches them into the same decode loop.
@@ -300,13 +333,14 @@ fn cmd_serve(args: &Args) {
         })
         .collect();
     let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+    let mut syntax_errors = 0usize;
     for (req, rx) in reqs.iter().zip(rxs) {
-        let r = rx.recv().unwrap();
+        let r = rx
+            .recv()
+            .unwrap_or_else(|_| syncode::coordinator::GenResponse::rejected(req.id, "no response"));
         let g = req.grammar.as_deref().unwrap_or("?");
-        let valid = registry
-            .get(g)
-            .map(|art| art.cx.check_complete(r.text.as_bytes()).is_ok())
-            .unwrap_or(false);
+        let valid = registry.get(g).map(|art| art.response_valid(&r)).unwrap_or(false);
+        syntax_errors += !valid as usize;
         println!(
             "req {:2} [{:8}] {:?} {:3} tokens valid={} | {}",
             req.id,
@@ -317,7 +351,14 @@ fn cmd_serve(args: &Args) {
             r.text.lines().next().unwrap_or("")
         );
     }
-    println!("\n{}", srv.metrics.lock().unwrap().snapshot().report());
+    println!("\nsyntax errors: {syntax_errors}/{n}");
+    println!();
+    if replicas > 1 {
+        for (i, snap) in srv.replica_snapshots().iter().enumerate() {
+            println!("replica {i}: {}", snap.report());
+        }
+    }
+    println!("global: {}", srv.snapshot().report());
     srv.shutdown();
 }
 

@@ -26,6 +26,17 @@ use crate::util::error::Result;
 /// [`LanguageModel`]'s `Send` note).
 pub type ModelFactory = Box<dyn FnOnce() -> Result<Box<dyn LanguageModel>> + Send>;
 
+/// Build N per-replica [`ModelFactory`]s from one cloneable recipe — the
+/// multi-replica coordinator takes one factory per replica. Each factory
+/// still runs *inside* its replica's scheduler thread (the model itself
+/// is not `Send`); only the recipe closure crosses threads.
+pub fn replicate_factory<F>(replicas: usize, recipe: F) -> Vec<ModelFactory>
+where
+    F: Fn() -> Result<Box<dyn LanguageModel>> + Clone + Send + 'static,
+{
+    (0..replicas.max(1)).map(|_| Box::new(recipe.clone()) as ModelFactory).collect()
+}
+
 /// A batched, stateful decoder language model with `lanes()` independent
 /// sequence slots (continuous batching admits into free lanes).
 ///
@@ -62,6 +73,23 @@ mod tests {
     use super::*;
     use crate::tokenizer::Tokenizer;
     use std::sync::Arc;
+
+    #[test]
+    fn replicate_factory_builds_independent_models() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let docs: Vec<Vec<u8>> = vec![b"ab ab".to_vec()];
+        let factories = replicate_factory(3, move || {
+            Ok(Box::new(MockModel::from_documents(tok.clone(), &docs, 1, 64, 5))
+                as Box<dyn LanguageModel>)
+        });
+        assert_eq!(factories.len(), 3);
+        let logits: Vec<Vec<f32>> = factories
+            .into_iter()
+            .map(|f| f().unwrap().prefill(0, &[b'a' as u32]).unwrap())
+            .collect();
+        assert_eq!(logits[0], logits[1]);
+        assert_eq!(logits[1], logits[2]);
+    }
 
     #[test]
     fn mock_model_smoke() {

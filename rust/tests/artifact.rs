@@ -79,7 +79,7 @@ fn registry_serves_two_grammars_in_one_batch() {
             );
         }
     }
-    let snap = srv.metrics.lock().unwrap().snapshot();
+    let snap = srv.snapshot();
     assert_eq!(snap.requests_finished, 6);
     srv.shutdown();
 }

@@ -1,0 +1,251 @@
+//! Integration tests for the multi-replica serving coordinator:
+//! multi-grammar routing under concurrent load, shutdown draining,
+//! non-panicking submission, backpressure, and byte-identical parity
+//! between the pooled (replicas × mask threads) and serial paths.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, FinishReason, GenParams, GenRequest, GenResponse, Strategy,
+};
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel, ModelFactory};
+use syncode::tokenizer::Tokenizer;
+
+/// Mixed corpus so the mock model emits plausible bytes for both grammars.
+fn docs() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"name": "alice", "age": 30}"#.to_vec(),
+        br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+        br#"{"nested": {"a": null}}"#.to_vec(),
+        b"1 + 2 * 3".to_vec(),
+        b"math_sqrt(4) - 1".to_vec(),
+        b"(7 - 2) / 5".to_vec(),
+    ]
+}
+
+fn registry(tok: &Arc<Tokenizer>) -> Arc<GrammarRegistry> {
+    let reg = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default()).unwrap();
+        reg.register(art).unwrap();
+    }
+    reg
+}
+
+fn factories(tok: &Arc<Tokenizer>, replicas: usize, lanes: usize) -> Vec<ModelFactory> {
+    let tok = tok.clone();
+    replicate_factory(replicas, move || {
+        Ok(Box::new(MockModel::from_documents(tok.clone(), &docs(), lanes, 256, 11))
+            as Box<dyn LanguageModel>)
+    })
+}
+
+fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: format!("produce {grammar} #{id}"),
+        constraint_prefix: String::new(),
+        grammar: Some(grammar.to_string()),
+        params: GenParams {
+            max_new_tokens,
+            strategy: Strategy::TopP { temp: 0.85, p: 0.95 },
+            seed: id * 13 + 7,
+            opportunistic: id % 2 == 0,
+        },
+    }
+}
+
+/// The shared validity rule (`CompiledGrammar::response_valid`): no
+/// error, complete generations parse, truncated ones are valid prefixes.
+fn assert_grammatical(reg: &GrammarRegistry, grammar: &str, resp: &GenResponse) {
+    assert!(resp.error.is_none(), "req {}: {:?}", resp.id, resp.error);
+    let art = reg.get(grammar).unwrap();
+    assert!(
+        art.response_valid(resp),
+        "req {} emitted invalid {grammar} ({:?}): {:?}",
+        resp.id,
+        resp.finish,
+        resp.text
+    );
+}
+
+#[test]
+fn pooled_coordinator_is_byte_identical_to_serial() {
+    // The acceptance contract: the replica/mask-pool pipeline must
+    // produce exactly the outputs of the old serial step path for
+    // identical seeds.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let reqs: Vec<GenRequest> =
+        (0..8).map(|i| request(i, if i % 2 == 0 { "json" } else { "calc" }, 48)).collect();
+
+    let mut outputs: Vec<HashMap<u64, (String, usize)>> = Vec::new();
+    for (replicas, mask_threads) in [(1usize, 0usize), (2, 2)] {
+        let srv = Coordinator::start(
+            factories(&tok, replicas, 2),
+            tok.clone(),
+            reg.clone(),
+            CoordinatorConfig { mask_threads, ..Default::default() },
+        );
+        let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+        let mut out = HashMap::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            out.insert(resp.id, (resp.text, resp.tokens));
+        }
+        srv.shutdown();
+        outputs.push(out);
+    }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "pooled (2 replicas × 2 mask threads) diverged from the serial path"
+    );
+}
+
+#[test]
+fn multi_grammar_routing_under_concurrent_load() {
+    // Several grammars through one registry, across 2 replicas and a
+    // 2-thread mask pool, submitted from 3 concurrent client threads.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let srv = Coordinator::start(
+        factories(&tok, 2, 2),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig { mask_threads: 2, ..Default::default() },
+    );
+
+    let per_thread = 6u64;
+    let mut results: Vec<(u64, String, GenResponse)> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..3u64 {
+            let srv = &srv;
+            handles.push(s.spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..per_thread {
+                    let id = t * per_thread + i;
+                    let grammar = if id % 2 == 0 { "json" } else { "calc" };
+                    let resp = srv.generate(request(id, grammar, 40));
+                    got.push((id, grammar.to_string(), resp));
+                }
+                got
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().unwrap());
+        }
+    });
+
+    assert_eq!(results.len(), 18);
+    for (id, grammar, resp) in &results {
+        assert_eq!(*id, resp.id);
+        assert_grammatical(&reg, grammar, resp);
+    }
+    let snap = srv.snapshot();
+    assert_eq!(snap.requests_finished, 18);
+    // Per-replica metrics must add up to the global request count.
+    let per_replica: u64 = srv.replica_snapshots().iter().map(|s| s.requests_finished).sum();
+    assert_eq!(per_replica, 18);
+    // The pool actually ran jobs and prewarmed masks during decode.
+    assert!(snap.mask_pool_jobs > 0, "mask pool never ran");
+    assert!(snap.masks_prewarmed > 0, "no prewarm overlap happened");
+    srv.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_and_queued_without_losing_responses() {
+    // One replica with 2 lanes and 6 requests: 2 go in-flight, 4 queue.
+    // close() immediately after submission — every request must still get
+    // a real (non-rejected) response.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let srv = Coordinator::start(
+        factories(&tok, 1, 2),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig { mask_threads: 2, ..Default::default() },
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|i| srv.submit(request(i, if i % 2 == 0 { "json" } else { "calc" }, 32)))
+        .collect();
+    srv.close();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response channel closed without a response");
+        assert_ne!(
+            resp.finish,
+            FinishReason::Rejected,
+            "queued request {i} was dropped by shutdown"
+        );
+        assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
+    }
+    // After close, new submissions are rejected — without panicking.
+    let late = srv.generate(request(99, "json", 8));
+    assert_eq!(late.finish, FinishReason::Rejected);
+    srv.shutdown();
+}
+
+#[test]
+fn unknown_grammar_fails_request_not_server() {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let srv = Coordinator::start(
+        factories(&tok, 2, 2),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig { mask_threads: 1, ..Default::default() },
+    );
+    let bad = srv.generate(request(1, "sql2", 8));
+    assert_eq!(bad.finish, FinishReason::EngineError);
+    assert!(bad.error.unwrap().contains("unknown grammar"));
+    // The server keeps serving afterwards.
+    let good = srv.generate(request(2, "json", 24));
+    assert_grammatical(&reg, "json", &good);
+    srv.shutdown();
+}
+
+#[test]
+fn backpressure_bounded_queue_still_completes_everything() {
+    // queue_cap = 2 forces submitters to block; the replicas drain the
+    // queue concurrently so every request completes.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let srv = Coordinator::start(
+        factories(&tok, 2, 2),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig { mask_threads: 2, queue_cap: 2 },
+    );
+    let n = 12u64;
+    let mut done = 0usize;
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for t in 0..2u64 {
+            let srv = &srv;
+            let tx = tx.clone();
+            s.spawn(move || {
+                for i in 0..n / 2 {
+                    let id = t * (n / 2) + i;
+                    let g = if id % 2 == 0 { "json" } else { "calc" };
+                    // submit blocks on the full queue (backpressure)
+                    tx.send(srv.submit(request(id, g, 24))).unwrap();
+                }
+            });
+        }
+        drop(tx);
+        while let Ok(resp_rx) = rx.recv() {
+            let resp = resp_rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            done += 1;
+        }
+    });
+    assert_eq!(done, n as usize);
+    let snap = srv.snapshot();
+    assert_eq!(snap.requests_finished, n);
+    // The bounded queue was observed at depth ≥ 1 and never above cap.
+    assert!(snap.queue_depth_max >= 1);
+    assert!(snap.queue_depth_max <= 2, "queue exceeded its bound");
+    srv.shutdown();
+}

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
-# CI gate: format, lint, build, test, serving stress. Run from the repo root.
+# CI gate: format, lint, build (incl. benches), test, serving stress, and
+# an HTTP smoke over real sockets. Run from the repo root.
 #
-#   ./ci.sh            # full gate
-#   ./ci.sh --fast     # skip release build + stress (fmt + clippy + debug tests)
+#   ./ci.sh            # full gate (what main runs in .github/workflows/ci.yml)
+#   ./ci.sh --fast     # fmt + clippy + debug tests (the pull-request tier)
 #
 # The crate is dependency-free by design (see Cargo.toml), so this needs
-# only a Rust toolchain — no network access.
+# only the Rust toolchain pinned in rust-toolchain.toml (plus python3 for
+# the HTTP smoke driver) — no network access. docs/ci.md walks through
+# every stage.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -28,6 +31,11 @@ cargo clippy --all-targets -- -D warnings
 if [[ "$fast" == "0" ]]; then
   echo "== cargo build --release =="
   cargo build --release
+
+  # Codegen (not just clippy's type-check) for the 10 bench targets so
+  # they can't rot unnoticed between bench runs.
+  echo "== cargo build --benches =="
+  cargo build --benches
 fi
 
 echo "== cargo test -q =="
@@ -37,20 +45,75 @@ if [[ "$fast" == "0" ]]; then
   # Serving stress under a time cap: 2 replicas × 2 mask threads over a
   # mixed multi-grammar batch on the mock model must finish with zero
   # syntax errors (the ISSUE-2 acceptance path).
-  echo "== serving stress (2 replicas x 2 mask threads, 120s cap) =="
+  req=12
+  echo "== serving stress (2 replicas x 2 mask threads, $req requests, 120s cap) =="
   # Guard the substitution: under set -e a crash/timeout inside $(...)
   # would otherwise kill the script before the diagnostic prints.
   if ! out=$(timeout 120 cargo run --release --quiet -- serve \
     --grammars json,calc --replicas 2 --mask-threads 2 \
-    --requests 12 --max-tokens 60 --mock); then
+    --requests "$req" --max-tokens 60 --mock); then
     echo "ERROR: serving stress crashed or exceeded the 120s cap" >&2
     exit 1
   fi
   echo "$out" | tail -n 8
-  if ! grep -q "syntax errors: 0/12" <<<"$out"; then
+  if ! grep -q "syntax errors: 0/$req" <<<"$out"; then
     echo "ERROR: serving stress reported syntax errors" >&2
     exit 1
   fi
+
+  # HTTP smoke: the same coordinator behind real sockets. Concurrent
+  # POST /v1/generate for json+calc must return 200s with zero syntax
+  # errors, /metrics must parse as Prometheus text, and the server must
+  # drain cleanly on POST /admin/shutdown (the ISSUE-3 acceptance path).
+  echo "== http smoke (serve --http, concurrent clients, 120s cap) =="
+  http_log=$(mktemp)
+  cargo run --release --quiet -- serve --http 127.0.0.1:0 \
+    --grammars json,calc --replicas 2 --queue-cap 64 --mock >"$http_log" 2>&1 &
+  http_pid=$!
+  trap 'kill "$http_pid" 2>/dev/null || true' EXIT
+
+  # The server prints its ephemeral port; wait for it (compile is cached
+  # from the build stage, so this is start-up time only).
+  addr=""
+  for _ in $(seq 1 240); do
+    addr=$(sed -n 's/^\[http\] listening on //p' "$http_log" | head -n 1)
+    [[ -n "$addr" ]] && break
+    if ! kill -0 "$http_pid" 2>/dev/null; then
+      echo "ERROR: http server exited before listening; log:" >&2
+      cat "$http_log" >&2
+      exit 1
+    fi
+    sleep 0.5
+  done
+  if [[ -z "$addr" ]]; then
+    echo "ERROR: http server never reported its address; log:" >&2
+    cat "$http_log" >&2
+    exit 1
+  fi
+
+  if ! timeout 120 python3 scripts/http_smoke.py "$addr"; then
+    echo "ERROR: http smoke failed; server log tail:" >&2
+    tail -n 40 "$http_log" >&2
+    exit 1
+  fi
+
+  # The smoke ends with a graceful /admin/shutdown: the server must drain
+  # and exit 0 on its own.
+  for _ in $(seq 1 120); do
+    kill -0 "$http_pid" 2>/dev/null || break
+    sleep 0.5
+  done
+  if kill -0 "$http_pid" 2>/dev/null; then
+    echo "ERROR: http server did not exit after graceful shutdown" >&2
+    exit 1
+  fi
+  if ! wait "$http_pid"; then
+    echo "ERROR: http server exited nonzero; log tail:" >&2
+    tail -n 40 "$http_log" >&2
+    exit 1
+  fi
+  trap - EXIT
+  grep -A 2 "drained" "$http_log" || true
 fi
 
 echo "CI gate passed."

@@ -1,0 +1,101 @@
+//! **HTTP client driver**: exercise a running `syncode serve --http`
+//! instance over real sockets using only the crate's own minimal client
+//! (`net::http::fetch`) — no curl, no external dependencies.
+//!
+//! ```bash
+//! # terminal 1
+//! cargo run --release -- serve --http 127.0.0.1:8642 --grammars json,calc --mock
+//! # terminal 2
+//! cargo run --release --example http_client -- --addr 127.0.0.1:8642 --requests 8
+//! cargo run --release --example http_client -- --addr 127.0.0.1:8642 --shutdown
+//! ```
+//!
+//! Fires `--requests N` concurrent `POST /v1/generate` calls alternating
+//! over the registered grammars, prints each verdict, then dumps
+//! `/healthz` and a few `/metrics` lines. `--shutdown` instead posts
+//! `/admin/shutdown` and exits.
+
+use syncode::net::http::fetch;
+use syncode::util::cli::Args;
+use syncode::util::json::{parse, Json};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let addr = args.get_or("addr", "127.0.0.1:8642");
+
+    if args.flag("shutdown") {
+        let (status, body) = fetch(addr.as_str(), "POST", "/admin/shutdown", Some("{}"))
+            .expect("server unreachable");
+        println!("shutdown -> {status} {body}");
+        return;
+    }
+
+    // Which grammars does this server have?
+    let (status, body) =
+        fetch(addr.as_str(), "GET", "/v1/grammars", None).expect("server unreachable");
+    assert_eq!(status, 200, "grammar listing failed: {body}");
+    let listing = parse(&body).expect("grammar listing json");
+    let grammars: Vec<String> = listing
+        .get("grammars")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|g| g.get("name").and_then(Json::as_str))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    assert!(!grammars.is_empty(), "server has no grammars registered");
+    println!("grammars: {}", grammars.join(", "));
+
+    // Concurrent generation round-robined over the grammars.
+    let n = args.get_num("requests", 8usize);
+    let max_tokens = args.get_num("max-tokens", 60usize);
+    let results: Vec<(u16, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let g = grammars[i % grammars.len()].clone();
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let body = format!(
+                        r#"{{"grammar": "{g}", "prompt": "produce a valid {g} snippet (#{i})",
+                            "max_tokens": {max_tokens}, "seed": {i}}}"#
+                    );
+                    fetch(addr.as_str(), "POST", "/v1/generate", Some(&body))
+                        .expect("request failed")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    let mut invalid = 0usize;
+    for (i, (status, body)) in results.iter().enumerate() {
+        if *status != 200 {
+            println!("req {i:2} -> {status} {body}");
+            invalid += 1;
+            continue;
+        }
+        let v = parse(body).expect("response json");
+        let valid = v.get("valid").and_then(Json::as_bool).unwrap_or(false);
+        invalid += !valid as usize;
+        println!(
+            "req {i:2} [{:8}] {:12} {:3} tokens valid={valid} | {}",
+            v.get("grammar").and_then(Json::as_str).unwrap_or("?"),
+            v.get("finish").and_then(Json::as_str).unwrap_or("?"),
+            v.get("tokens").and_then(Json::as_f64).unwrap_or(0.0),
+            v.get("text").and_then(Json::as_str).unwrap_or("").lines().next().unwrap_or(""),
+        );
+    }
+    println!("\ninvalid or failed: {invalid}/{n}");
+
+    let (_, health) = fetch(addr.as_str(), "GET", "/healthz", None).expect("healthz");
+    println!("healthz: {health}");
+    let (_, metrics) = fetch(addr.as_str(), "GET", "/metrics", None).expect("metrics");
+    let interesting = ["syncode_requests_finished_total ", "syncode_tokens_per_second "];
+    for line in metrics.lines() {
+        if interesting.iter().any(|p| line.starts_with(p)) {
+            println!("metrics: {line}");
+        }
+    }
+}

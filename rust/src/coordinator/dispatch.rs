@@ -33,6 +33,27 @@ use std::sync::{Arc, Condvar, Mutex};
 
 pub(crate) type PendingReq = (GenRequest, Sender<GenResponse>);
 
+/// Why a non-blocking submission ([`ServerHandle::try_submit`]) was
+/// refused. The HTTP front maps these onto status codes (429/503) so
+/// backpressure is visible end-to-end instead of silently blocking the
+/// connection handler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at capacity — retry later (HTTP 429).
+    QueueFull,
+    /// The coordinator is shut down or has no live replicas (HTTP 503).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue is full"),
+            SubmitError::Closed => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
 /// Bounded MPMC admission queue. `push` blocks when full (backpressure on
 /// submitters), `pop_blocking` parks idle replicas, `try_pop` feeds busy
 /// replicas' free lanes without blocking the decode loop.
@@ -94,6 +115,41 @@ impl SharedQueue {
             }
             inner = self.not_empty.wait(inner).unwrap();
         }
+    }
+
+    /// Non-blocking enqueue: refuses instead of waiting when the queue is
+    /// at capacity, so network fronts can turn backpressure into a 429
+    /// rather than stalling a connection handler.
+    pub fn try_push(
+        &self,
+        req: GenRequest,
+        tx: Sender<GenResponse>,
+    ) -> Result<(), (PendingReq, SubmitError)> {
+        let depth = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.closed {
+                return Err(((req, tx), SubmitError::Closed));
+            }
+            if inner.q.len() >= self.cap {
+                return Err(((req, tx), SubmitError::QueueFull));
+            }
+            inner.q.push_back((req, tx));
+            inner.q.len()
+        };
+        self.metrics.lock().unwrap().queue_depth.record(depth);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (a live gauge, unlike the per-enqueue
+    /// `queue_depth` metric samples).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Has intake been closed (shutdown or last-replica death)?
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     /// Non-blocking dequeue.
@@ -183,6 +239,33 @@ impl ServerHandle {
             let _ = tx.send(GenResponse::rejected(req.id, "coordinator is shut down"));
         }
         rx
+    }
+
+    /// Non-blocking submit: refuses immediately instead of blocking when
+    /// the admission queue is full, distinguishing "try again later"
+    /// ([`SubmitError::QueueFull`]) from "gone" ([`SubmitError::Closed`]).
+    /// The HTTP front maps these to 429 and 503 respectively.
+    pub fn try_submit(&self, req: GenRequest) -> Result<Receiver<GenResponse>, SubmitError> {
+        let (tx, rx) = channel();
+        match self.queue.try_push(req, tx) {
+            Ok(()) => Ok(rx),
+            Err((_, e)) => Err(e),
+        }
+    }
+
+    /// Live admission-queue depth (the `/healthz` + `/metrics` gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Admission-queue capacity this coordinator was started with.
+    pub fn queue_cap(&self) -> usize {
+        self.queue.cap
+    }
+
+    /// Has intake been closed (shutdown, or every replica died)?
+    pub fn is_closed(&self) -> bool {
+        self.queue.is_closed()
     }
 
     /// Blocking convenience: submit and wait. Never panics: a scheduler
@@ -474,6 +557,38 @@ mod tests {
         assert_eq!(resp.finish, FinishReason::Rejected);
         assert!(resp.error.is_some());
         srv.shutdown();
+    }
+
+    #[test]
+    fn try_submit_reports_closed_after_shutdown() {
+        let (srv, _) = start_server(false);
+        srv.close();
+        let err = srv
+            .try_submit(GenRequest { id: 5, prompt: "late".into(), ..Default::default() })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Closed);
+        assert!(srv.is_closed());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn try_push_refuses_at_capacity_without_blocking() {
+        // Exercise the queue directly: with no replica draining it, the
+        // cap is reached deterministically and the next try_push must
+        // refuse with QueueFull instead of parking the caller.
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let q = SharedQueue::new(2, metrics);
+        let push = |id| {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            q.try_push(GenRequest { id, ..Default::default() }, tx).map_err(|(_, e)| e)
+        };
+        assert!(push(0).is_ok());
+        assert!(push(1).is_ok());
+        assert_eq!(q.depth(), 2);
+        assert_eq!(push(2).unwrap_err(), SubmitError::QueueFull);
+        q.close();
+        assert_eq!(push(3).unwrap_err(), SubmitError::Closed);
+        q.reject_pending("test over");
     }
 
     #[test]

@@ -159,9 +159,15 @@ pub struct MetricsSnapshot {
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
+    /// Requests actually measured by the latency histogram. Differs from
+    /// `requests_finished`, which also counts admission failures (engine
+    /// construction / prefill errors) that never record a latency.
+    pub latency_samples: u64,
     pub mean_ttft: f64,
     pub mask_wait_mean: f64,
     pub mask_wait_p99: f64,
+    /// Jobs measured by the mask-pool wait histogram.
+    pub mask_wait_samples: u64,
     pub queue_depth_mean: f64,
     pub queue_depth_max: usize,
     pub wall_secs: f64,
@@ -210,9 +216,11 @@ impl Metrics {
             mean_latency: self.latency.mean(),
             p50_latency: self.latency.quantile(0.5),
             p99_latency: self.latency.quantile(0.99),
+            latency_samples: self.latency.count(),
             mean_ttft: self.ttft.mean(),
             mask_wait_mean: self.mask_pool_wait.mean(),
             mask_wait_p99: self.mask_pool_wait.quantile(0.99),
+            mask_wait_samples: self.mask_pool_wait.count(),
             queue_depth_mean: self.queue_depth.mean(),
             queue_depth_max: self.queue_depth.max(),
             wall_secs: wall,

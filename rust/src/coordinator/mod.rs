@@ -29,7 +29,7 @@ mod sampler;
 mod types;
 
 pub use beam::{beam_generate, BeamHypothesis};
-pub use dispatch::{Coordinator, CoordinatorConfig, Server, ServerHandle};
+pub use dispatch::{Coordinator, CoordinatorConfig, Server, ServerHandle, SubmitError};
 pub use metrics::{DepthGauge, Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
 pub use types::{

@@ -10,6 +10,8 @@
 //!   `--replicas N` runs N model replicas behind one bounded admission
 //!   queue and `--mask-threads M` computes grammar masks on a shared
 //!   worker pool, overlapped with the batched decode (`docs/serving.md`);
+//!   `--http ADDR` serves the same coordinator over HTTP instead of the
+//!   synthetic stream (`POST /v1/generate`, `GET /healthz`, `/metrics`);
 //! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
 //! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
 //! - `experiment` run a paper experiment (table1|table2|table3|table4);
@@ -24,6 +26,7 @@ use syncode::coordinator::{
 use syncode::engine::GrammarContext;
 use syncode::eval::dataset;
 use syncode::eval::harness::{self, EngineKind, EvalEnv};
+use syncode::net::{HttpConfig, HttpServer};
 use syncode::parser::{LrMode, LrTable};
 use syncode::runtime::{
     replicate_factory, LanguageModel, MockModel, ModelFactory, PjrtModel, PjrtVariant,
@@ -47,7 +50,8 @@ fn main() {
                 "usage: syncode <compile|generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
                  common: --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
                  \x20        --cache-dir <dir> --threads <n> --mock\n\
-                 serve:  --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>"
+                 serve:  --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
+                 \x20        --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream)"
             );
             std::process::exit(2);
         }
@@ -312,6 +316,26 @@ fn cmd_serve(args: &Args) {
     );
     let factories = model_factories(args, use_mock, &tok, &union_docs, replicas);
     let srv = Coordinator::start(factories, tok, registry.clone(), cfg);
+
+    // Network mode: adapt the coordinator onto HTTP and run until a
+    // graceful shutdown (`POST /admin/shutdown`) drains it.
+    if let Some(addr) = args.get("http") {
+        let http_cfg = HttpConfig { workers: args.get_num("http-workers", 8usize) };
+        let server = HttpServer::bind(addr, srv, registry, http_cfg)
+            .unwrap_or_else(|e| panic!("http bind {addr}: {e}"));
+        // Machine-readable (ci.sh greps it); `--http 127.0.0.1:0` picks an
+        // ephemeral port, surfaced only here.
+        println!("[http] listening on {}", server.local_addr());
+        println!(
+            "[http] POST /v1/generate | GET /v1/grammars /healthz /metrics | POST /admin/shutdown"
+        );
+        let handle = server.wait();
+        println!("[http] drained; final metrics:");
+        println!("global: {}", handle.snapshot().report());
+        handle.shutdown();
+        return;
+    }
+
     let params = params_from(args);
     // Round-robin the registered grammars across the request stream: the
     // scheduler batches them into the same decode loop.

@@ -1,0 +1,440 @@
+//! Hand-rolled HTTP/1.1 wire protocol: request parsing, response
+//! serialisation, and a tiny blocking client for tests/examples.
+//!
+//! Deliberately minimal (the crate is dependency-free): one request per
+//! connection (`Connection: close` on every response), bodies delimited
+//! by `Content-Length` only (chunked transfer is refused with 501), and
+//! hard limits on header and body sizes so a malicious peer cannot make
+//! the server buffer unbounded input. Parsing failures map directly onto
+//! the error [`Response`] the server should write back, so the connection
+//! handler never has to translate errors itself.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line or single header line, in bytes.
+pub const MAX_LINE: usize = 8 * 1024;
+/// Most accepted header lines per request.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted request body, in bytes.
+pub const MAX_BODY: usize = 1024 * 1024;
+/// Total wall-clock budget for *reading* one request (line + headers +
+/// body). A hard deadline, not a per-read idle timeout: a slow-loris
+/// client trickling one byte per poll still loses its worker after this
+/// long. Generation time is not covered — the response may take as long
+/// as the coordinator needs.
+pub const READ_DEADLINE: Duration = Duration::from_secs(10);
+
+/// A parsed HTTP request. `path` excludes any query string (the API has
+/// no query parameters; they are split off and ignored for routing).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// An HTTP response ready to serialise.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+        }
+    }
+
+    /// Serialise onto a stream. Always `Connection: close`: the server
+    /// handles one request per connection.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// JSON error body for a failed request (`{"error": "..."}`).
+pub fn error_response(status: u16, msg: &str) -> Response {
+    let body = crate::util::json::Json::Obj(
+        [("error".to_string(), crate::util::json::Json::Str(msg.to_string()))]
+            .into_iter()
+            .collect(),
+    );
+    Response::json(status, body.to_string())
+}
+
+/// A buffered connection reader with a hard wall-clock deadline. The
+/// socket gets a short poll timeout; every poll re-checks the deadline,
+/// so total read time is bounded no matter how slowly the peer trickles
+/// bytes (each worker is a scarce resource — see `net/server.rs`).
+struct DeadlineReader<'a> {
+    r: BufReader<&'a mut TcpStream>,
+    deadline: Instant,
+}
+
+impl<'a> DeadlineReader<'a> {
+    fn new(stream: &'a mut TcpStream) -> DeadlineReader<'a> {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+        DeadlineReader { r: BufReader::new(stream), deadline: Instant::now() + READ_DEADLINE }
+    }
+
+    /// Park until buffered bytes are ready, returning how many (0 = EOF).
+    /// Timeout polls loop until the deadline; hard I/O errors and the
+    /// deadline both map to the error response to write back. Returns a
+    /// count rather than the chunk so callers take the short-lived
+    /// `fill_buf` borrow themselves (it never blocks once data is ready).
+    fn wait_ready(&mut self) -> Result<usize, Response> {
+        loop {
+            if Instant::now() > self.deadline {
+                return Err(error_response(408, "request read deadline exceeded"));
+            }
+            match self.r.fill_buf() {
+                Ok(chunk) => return Ok(chunk.len()), // 0 = EOF
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue; // poll tick; deadline re-checked above
+                }
+                Err(_) => return Err(error_response(400, "read error")),
+            }
+        }
+    }
+
+    /// The buffered chunk `wait_ready` reported (instant: data is already
+    /// in the `BufReader`).
+    fn ready_chunk(&mut self) -> Result<&[u8], Response> {
+        self.r.fill_buf().map_err(|_| error_response(400, "read error"))
+    }
+
+    /// One CRLF- (or bare-LF-) terminated line, bounded by [`MAX_LINE`].
+    /// `Ok(None)` means EOF before any byte arrived.
+    fn read_line(&mut self) -> Result<Option<String>, Response> {
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            if self.wait_ready()? == 0 {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(error_response(400, "truncated header line"))
+                };
+            }
+            let chunk = self.ready_chunk()?;
+            let (eol, take) = match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => (true, pos),
+                None => (false, chunk.len()),
+            };
+            buf.extend_from_slice(&chunk[..take]);
+            self.r.consume(take + eol as usize);
+            if buf.len() > MAX_LINE {
+                return Err(error_response(431, "header line too long"));
+            }
+            if eol {
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return String::from_utf8(buf)
+                    .map(Some)
+                    .map_err(|_| error_response(400, "non-UTF-8 header"));
+            }
+        }
+    }
+
+    /// Exactly `len` body bytes, under the same deadline.
+    fn read_body(&mut self, len: usize) -> Result<Vec<u8>, Response> {
+        let mut body = Vec::with_capacity(len);
+        while body.len() < len {
+            if self.wait_ready()? == 0 {
+                return Err(error_response(400, "body shorter than Content-Length"));
+            }
+            let chunk = self.ready_chunk()?;
+            let take = chunk.len().min(len - body.len());
+            body.extend_from_slice(&chunk[..take]);
+            self.r.consume(take);
+        }
+        Ok(body)
+    }
+}
+
+/// Read one request from a connection.
+///
+/// - `Ok(Some(req))` — a complete request;
+/// - `Ok(None)` — the peer closed the connection before sending anything
+///   (a clean no-op, e.g. a health prober or the shutdown wake-up dial);
+/// - `Err(resp)` — a protocol violation; write `resp` back and close.
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>, Response> {
+    let mut r = DeadlineReader::new(stream);
+
+    let line = match r.read_line() {
+        Ok(Some(l)) => l,
+        Ok(None) => return Ok(None),
+        Err(resp) => return Err(resp),
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if parts.next().is_none() && !m.is_empty() => (m, t, v),
+        _ => return Err(error_response(400, "malformed request line")),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(error_response(400, "unsupported HTTP version"));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    if !path.starts_with('/') {
+        return Err(error_response(400, "request target must be an absolute path"));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = match r.read_line() {
+            Ok(Some(l)) => l,
+            Ok(None) => return Err(error_response(400, "connection closed mid-headers")),
+            Err(resp) => return Err(resp),
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(error_response(431, "too many header fields"));
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(error_response(400, "malformed header line"));
+        };
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+
+    let req = Request { method: method.to_string(), path, headers, body: Vec::new() };
+    if req.header("Transfer-Encoding").is_some() {
+        return Err(error_response(501, "chunked transfer encoding is not supported"));
+    }
+    let len = match req.header("Content-Length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Err(error_response(400, "bad Content-Length")),
+        },
+        None if req.method == "POST" || req.method == "PUT" => {
+            return Err(error_response(411, "POST requires Content-Length"));
+        }
+        None => 0,
+    };
+    if len > MAX_BODY {
+        return Err(error_response(
+            413,
+            &format!("body of {len} bytes exceeds the {MAX_BODY}-byte limit"),
+        ));
+    }
+    let body = r.read_body(len)?;
+    Ok(Some(Request { body, ..req }))
+}
+
+/// Minimal blocking client: one request, one response, connection closed.
+/// Returns `(status, body)`. Used by `examples/http_client.rs`, the
+/// serving tests and anything else that wants to poke the server without
+/// an external tool.
+pub fn fetch(
+    addr: impl ToSocketAddrs,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: syncode\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    read_response(&mut stream)
+}
+
+/// Parse a response from a stream: status line, headers, then the body
+/// (delimited by Content-Length when present, else read-to-EOF).
+pub fn read_response(stream: &mut TcpStream) -> std::io::Result<(u16, String)> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let status: u16 = line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(&format!("bad status line: {line:?}")))?;
+    let mut content_length = None;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(bad("eof in response headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse::<usize>().ok();
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut buf = vec![0u8; n];
+            r.read_exact(&mut buf)?;
+            buf
+        }
+        None => {
+            let mut buf = Vec::new();
+            r.read_to_end(&mut buf)?;
+            buf
+        }
+    };
+    String::from_utf8(body).map(|b| (status, b)).map_err(|_| bad("non-UTF-8 body"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    /// Push raw bytes through a real socket pair and parse them.
+    fn parse_raw(raw: &[u8]) -> Result<Option<Request>, Response> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+            // Drop closes the write side so the reader sees EOF.
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let out = read_request(&mut conn);
+        writer.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse_raw(
+            b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn strips_query_string() {
+        let req =
+            parse_raw(b"GET /healthz?verbose=1 HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.path, "/healthz");
+    }
+
+    #[test]
+    fn empty_connection_is_clean_eof() {
+        assert!(parse_raw(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_status_codes() {
+        let status = |raw: &[u8]| parse_raw(raw).unwrap_err().status;
+        assert_eq!(status(b"garbage\r\n\r\n"), 400);
+        assert_eq!(status(b"GET / SPDY/9\r\n\r\n"), 400);
+        assert_eq!(status(b"GET relative HTTP/1.1\r\n\r\n"), 400);
+        assert_eq!(status(b"POST /x HTTP/1.1\r\n\r\n"), 411); // no length
+        assert_eq!(status(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"), 400);
+        assert_eq!(status(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"), 400);
+        assert_eq!(
+            status(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            501
+        );
+        // Declared body never arrives in full.
+        assert_eq!(status(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort"), 400);
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(parse_raw(raw.as_bytes()).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn oversized_header_line_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        raw.extend_from_slice(&vec![b'a'; MAX_LINE + 10]);
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert_eq!(parse_raw(&raw).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_parser() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn).unwrap().unwrap();
+            assert_eq!(req.body, b"ping");
+            error_response(429, "slow down").write_to(&mut conn).unwrap();
+        });
+        let (status, body) = fetch(addr, "POST", "/v1/generate", Some("ping")).unwrap();
+        server.join().unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(
+            crate::util::json::parse(&body).unwrap().get("error").unwrap().as_str(),
+            Some("slow down")
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! JSON body codec for the HTTP API: typed decode of `POST /v1/generate`
+//! bodies and encode of every response payload.
+//!
+//! The value-level parser/serialiser is `crate::util::json` (strict
+//! RFC 8259, the same parser the Table 1 oracle uses); this module is the
+//! schema layer on top — field extraction, type/range validation with
+//! actionable error messages, and the response shapes. Unknown top-level
+//! keys are rejected so a typo (`"max_token"`) fails loudly as a 400
+//! instead of silently running with defaults.
+
+use crate::coordinator::{FinishReason, GenParams, GenRequest, GenResponse, Strategy};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+
+/// Upper bound on `max_tokens`: a single request cannot pin a lane
+/// arbitrarily long.
+pub const MAX_TOKENS_CAP: usize = 4096;
+
+/// A decoded `/v1/generate` body, ready to become a [`GenRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateBody {
+    /// Registry grammar name; `None` routes to the registry default.
+    pub grammar: Option<String>,
+    pub prompt: String,
+    /// Constraint prefix `C_0` (code-completion tasks).
+    pub prefix: String,
+    pub max_tokens: usize,
+    pub seed: u64,
+    pub strategy: Strategy,
+    pub opportunistic: bool,
+}
+
+impl GenerateBody {
+    /// Into the coordinator's request type (the id is assigned by the
+    /// server, not the client).
+    pub fn into_request(self, id: u64) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: self.prompt,
+            constraint_prefix: self.prefix,
+            grammar: self.grammar,
+            params: GenParams {
+                max_new_tokens: self.max_tokens,
+                strategy: self.strategy,
+                seed: self.seed,
+                opportunistic: self.opportunistic,
+            },
+        }
+    }
+}
+
+/// Decode and validate a `/v1/generate` body. Every failure is a
+/// human-readable message destined for a 400 response; nothing panics on
+/// malformed, truncated or non-UTF-8 input.
+pub fn decode_generate(body: &[u8]) -> Result<GenerateBody, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = parse(text).map_err(|e| e.to_string())?;
+    let obj = v.as_obj().ok_or("body must be a JSON object")?;
+
+    const KNOWN: &[&str] = &[
+        "grammar",
+        "prompt",
+        "prefix",
+        "max_tokens",
+        "seed",
+        "strategy",
+        "temperature",
+        "top_p",
+        "top_k",
+        "opportunistic",
+    ];
+    for k in obj.keys() {
+        if !KNOWN.contains(&k.as_str()) {
+            return Err(format!("unknown field '{k}' (known: {})", KNOWN.join(", ")));
+        }
+    }
+
+    let prompt = req_str(obj, "prompt")?;
+    let grammar = opt_str(obj, "grammar")?;
+    let prefix = opt_str(obj, "prefix")?.unwrap_or_default();
+    let max_tokens = opt_uint(obj, "max_tokens")?.unwrap_or(120) as usize;
+    if max_tokens == 0 || max_tokens > MAX_TOKENS_CAP {
+        return Err(format!("max_tokens must be in 1..={MAX_TOKENS_CAP}"));
+    }
+    let seed = opt_uint(obj, "seed")?.unwrap_or(7);
+    let temperature = opt_f64(obj, "temperature")?.unwrap_or(0.7) as f32;
+    if !(temperature.is_finite() && temperature > 0.0) {
+        return Err("temperature must be a positive number".to_string());
+    }
+    let top_p = opt_f64(obj, "top_p")?.unwrap_or(0.95) as f32;
+    if !(top_p.is_finite() && top_p > 0.0 && top_p <= 1.0) {
+        return Err("top_p must be in (0, 1]".to_string());
+    }
+    let top_k = opt_uint(obj, "top_k")?.unwrap_or(40) as usize;
+    if top_k == 0 {
+        return Err("top_k must be positive".to_string());
+    }
+    let strategy = match opt_str(obj, "strategy")?.as_deref() {
+        None | Some("topp") => Strategy::TopP { temp: temperature, p: top_p },
+        Some("greedy") => Strategy::Greedy,
+        Some("temp") => Strategy::Temperature(temperature),
+        Some("topk") => Strategy::TopK { temp: temperature, k: top_k },
+        Some(other) => {
+            return Err(format!("unknown strategy '{other}' (greedy|temp|topp|topk)"));
+        }
+    };
+    let opportunistic = match obj.get("opportunistic") {
+        None => true,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("opportunistic must be a boolean".to_string()),
+    };
+
+    Ok(GenerateBody { grammar, prompt, prefix, max_tokens, seed, strategy, opportunistic })
+}
+
+fn req_str(obj: &BTreeMap<String, Json>, key: &str) -> Result<String, String> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(format!("{key} must be a string")),
+        None => Err(format!("missing required field '{key}'")),
+    }
+}
+
+fn opt_str(obj: &BTreeMap<String, Json>, key: &str) -> Result<Option<String>, String> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(format!("{key} must be a string")),
+    }
+}
+
+fn opt_f64(obj: &BTreeMap<String, Json>, key: &str) -> Result<Option<f64>, String> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(_) => Err(format!("{key} must be a number")),
+    }
+}
+
+fn opt_uint(obj: &BTreeMap<String, Json>, key: &str) -> Result<Option<u64>, String> {
+    match opt_f64(obj, key)? {
+        None => Ok(None),
+        Some(n) if n.fract() == 0.0 && (0.0..=u64::MAX as f64).contains(&n) => {
+            Ok(Some(n as u64))
+        }
+        Some(_) => Err(format!("{key} must be a non-negative integer")),
+    }
+}
+
+/// Wire name of a finish reason (snake_case, stable API surface).
+pub fn finish_str(f: &FinishReason) -> &'static str {
+    match f {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::EngineError => "engine_error",
+        FinishReason::SeqOverflow => "seq_overflow",
+        FinishReason::Rejected => "rejected",
+    }
+}
+
+/// Parse a wire finish-reason name back (tests and clients re-validating
+/// responses with `CompiledGrammar::response_valid`).
+pub fn finish_from_str(s: &str) -> Option<FinishReason> {
+    Some(match s {
+        "eos" => FinishReason::Eos,
+        "max_tokens" => FinishReason::MaxTokens,
+        "engine_error" => FinishReason::EngineError,
+        "seq_overflow" => FinishReason::SeqOverflow,
+        "rejected" => FinishReason::Rejected,
+        _ => return None,
+    })
+}
+
+/// Encode a finished generation as the `/v1/generate` response body.
+/// `grammar` is the grammar that actually constrained the request (the
+/// registry default when the client named none); `valid` is the verdict
+/// of [`crate::artifact::CompiledGrammar::response_valid`].
+pub fn encode_generate_response(resp: &GenResponse, grammar: &str, valid: bool) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(resp.id as f64));
+    m.insert("grammar".to_string(), Json::Str(grammar.to_string()));
+    m.insert("text".to_string(), Json::Str(resp.text.clone()));
+    m.insert("finish".to_string(), Json::Str(finish_str(&resp.finish).to_string()));
+    m.insert("tokens".to_string(), Json::Num(resp.tokens as f64));
+    m.insert("valid".to_string(), Json::Bool(valid));
+    m.insert("ttft_secs".to_string(), Json::Num(resp.ttft_secs));
+    m.insert("latency_secs".to_string(), Json::Num(resp.latency_secs));
+    if let Some(e) = &resp.error {
+        m.insert("error".to_string(), Json::Str(e.clone()));
+    }
+    Json::Obj(m).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode(s: &str) -> Result<GenerateBody, String> {
+        decode_generate(s.as_bytes())
+    }
+
+    #[test]
+    fn minimal_body_gets_defaults() {
+        let b = decode(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(b.prompt, "hi");
+        assert_eq!(b.grammar, None);
+        assert_eq!(b.prefix, "");
+        assert_eq!(b.max_tokens, 120);
+        assert_eq!(b.seed, 7);
+        assert!(b.opportunistic);
+        assert!(matches!(b.strategy, Strategy::TopP { .. }));
+    }
+
+    #[test]
+    fn full_body_roundtrip() {
+        let b = decode(
+            r#"{"prompt": "p", "grammar": "calc", "prefix": "1 + ", "max_tokens": 32,
+               "seed": 99, "strategy": "temp", "temperature": 0.5, "opportunistic": false}"#,
+        )
+        .unwrap();
+        assert_eq!(b.grammar.as_deref(), Some("calc"));
+        assert_eq!(b.prefix, "1 + ");
+        assert_eq!(b.max_tokens, 32);
+        assert_eq!(b.seed, 99);
+        assert!(!b.opportunistic);
+        assert_eq!(b.strategy, Strategy::Temperature(0.5));
+        let req = b.into_request(3);
+        assert_eq!(req.id, 3);
+        assert_eq!(req.params.max_new_tokens, 32);
+        assert_eq!(req.constraint_prefix, "1 + ");
+    }
+
+    #[test]
+    fn escapes_and_utf8_survive_decode() {
+        let b = decode(r#"{"prompt": "a\"b\\c\nd\tе — héllo ☃ 😀"}"#).unwrap();
+        assert_eq!(b.prompt, "a\"b\\c\nd\tе — héllo ☃ 😀");
+        // And the same content survives the encode direction.
+        let resp = GenResponse {
+            id: 1,
+            text: "x \"quoted\" \\slash\n☃".to_string(),
+            finish: FinishReason::Eos,
+            tokens: 4,
+            ttft_secs: 0.25,
+            latency_secs: 0.5,
+            error: None,
+        };
+        let enc = encode_generate_response(&resp, "json", true);
+        let v = parse(&enc).unwrap();
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "x \"quoted\" \\slash\n☃");
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "eos");
+        assert_eq!(v.get("valid").unwrap().as_bool(), Some(true));
+        assert!(v.get("error").is_none());
+    }
+
+    #[test]
+    fn nested_and_wrong_shape_bodies_error() {
+        // Values may nest arbitrarily, but the schema wants flat types:
+        // each of these must be a clean Err, never a panic.
+        assert!(decode(r#"{"prompt": {"deep": [1, {"x": null}]}}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "max_tokens": "ten"}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "max_tokens": 2.5}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "max_tokens": -4}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "max_tokens": 0}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "max_tokens": 1000000}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "opportunistic": "yes"}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "strategy": "beam"}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "temperature": -1}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "top_p": 1.5}"#).is_err());
+        assert!(decode(r#"[1, 2, 3]"#).is_err());
+        assert!(decode(r#""just a string""#).is_err());
+    }
+
+    #[test]
+    fn truncated_and_garbage_input_error_not_panic() {
+        for bad in [
+            "",
+            "{",
+            r#"{"prompt": "#,
+            r#"{"prompt": "unterminated"#,
+            r#"{"prompt": "p""#,
+            "not json at all",
+            r#"{"prompt": "p",}"#,
+        ] {
+            assert!(decode(bad).is_err(), "accepted: {bad:?}");
+        }
+        // Invalid UTF-8 bytes.
+        assert!(decode_generate(&[0xff, 0xfe, b'{', b'}']).is_err());
+        // Truncated multi-byte UTF-8 sequence inside a string.
+        assert!(decode_generate(b"{\"prompt\": \"\xe2\x98\"}").is_err());
+    }
+
+    #[test]
+    fn unknown_fields_rejected() {
+        let e = decode(r#"{"prompt": "p", "max_token": 5}"#).unwrap_err();
+        assert!(e.contains("max_token"), "{e}");
+    }
+
+    #[test]
+    fn topk_strategy() {
+        let b = decode(r#"{"prompt": "p", "strategy": "topk", "top_k": 5}"#).unwrap();
+        assert_eq!(b.strategy, Strategy::TopK { temp: 0.7, k: 5 });
+        assert!(decode(r#"{"prompt": "p", "strategy": "topk", "top_k": 0}"#).is_err());
+    }
+
+    #[test]
+    fn finish_reason_names_roundtrip() {
+        for f in [
+            FinishReason::Eos,
+            FinishReason::MaxTokens,
+            FinishReason::EngineError,
+            FinishReason::SeqOverflow,
+            FinishReason::Rejected,
+        ] {
+            assert_eq!(finish_from_str(finish_str(&f)).unwrap(), f);
+        }
+        assert!(finish_from_str("nope").is_none());
+    }
+}

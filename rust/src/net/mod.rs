@@ -1,0 +1,24 @@
+//! Network front for the serving coordinator: a dependency-free HTTP/1.1
+//! server (`std::net` + an accept pool) exposing constrained generation,
+//! the grammar registry, health and Prometheus metrics over real sockets.
+//!
+//! Layers, mirroring the coordinator's own layering:
+//!
+//! - [`http`] — wire protocol: hand-rolled request parsing with hard
+//!   limits, response serialisation, a tiny blocking client;
+//! - [`json`] — body schema codec over `crate::util::json` (typed decode
+//!   of `/v1/generate`, response encode, finish-reason wire names);
+//! - [`prom`] — Prometheus text rendering of the coordinator metrics;
+//! - [`server`] — the accept pool, router and graceful-shutdown drain
+//!   adapting it all onto [`crate::coordinator::ServerHandle`].
+//!
+//! `syncode serve --http ADDR` is the CLI entrypoint; `docs/serving.md`
+//! documents the API and status-code semantics (429 = backpressure,
+//! 503 = draining/closed).
+
+pub mod http;
+pub mod json;
+pub mod prom;
+pub mod server;
+
+pub use server::{HttpConfig, HttpServer};

@@ -1,0 +1,275 @@
+//! Prometheus text-format rendering (`GET /metrics`) of the coordinator's
+//! [`MetricsSnapshot`]s plus the HTTP front's own counters.
+//!
+//! Exposition format 0.0.4: `# HELP` / `# TYPE` preambles, one
+//! `name{labels} value` sample per line. Latency histograms are exported
+//! as summaries (the coordinator pre-aggregates into log buckets; mean ×
+//! count reconstructs `_sum`), per-replica counters carry a
+//! `replica="N"` label so imbalance is visible to a scraper exactly as it
+//! is in `replica_snapshots()`.
+
+use crate::coordinator::MetricsSnapshot;
+use std::fmt::Write as _;
+
+/// HTTP-front observations that live outside the coordinator: response
+/// counts by status class and the live queue gauge.
+#[derive(Debug, Clone, Default)]
+pub struct HttpStats {
+    /// `(status code, responses sent)` pairs, sorted by code.
+    pub responses: Vec<(u16, u64)>,
+    /// Live admission-queue depth at scrape time.
+    pub queue_depth: usize,
+    /// Admission-queue capacity (`--queue-cap`).
+    pub queue_cap: usize,
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    header(out, name, "counter", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    header(out, name, "gauge", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// A pre-aggregated histogram exported as a Prometheus summary.
+fn summary(out: &mut String, name: &str, help: &str, p50: f64, p99: f64, mean: f64, count: u64) {
+    header(out, name, "summary", help);
+    let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {p50}");
+    let _ = writeln!(out, "{name}{{quantile=\"0.99\"}} {p99}");
+    let _ = writeln!(out, "{name}_sum {}", mean * count as f64);
+    let _ = writeln!(out, "{name}_count {count}");
+}
+
+/// Render the full exposition: global coordinator counters, the serving
+/// summaries, per-replica splits, and the HTTP front's own stats.
+pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &HttpStats) -> String {
+    let mut out = String::with_capacity(4096);
+
+    counter(
+        &mut out,
+        "syncode_requests_finished_total",
+        "Generations completed (all finish reasons).",
+        global.requests_finished,
+    );
+    counter(
+        &mut out,
+        "syncode_tokens_generated_total",
+        "Tokens committed across all requests.",
+        global.tokens_generated,
+    );
+    counter(
+        &mut out,
+        "syncode_decode_steps_total",
+        "Batched model decode steps.",
+        global.decode_steps,
+    );
+    counter(
+        &mut out,
+        "syncode_full_mask_computations_total",
+        "Steps that assembled the full grammar mask (opportunistic miss or disabled).",
+        global.full_mask_computations,
+    );
+    counter(
+        &mut out,
+        "syncode_opportunistic_hits_total",
+        "Steps where the unmasked sample already satisfied the grammar.",
+        global.opportunistic_hits,
+    );
+    counter(
+        &mut out,
+        "syncode_engine_errors_total",
+        "Requests finished with an engine error.",
+        global.engine_errors,
+    );
+    counter(
+        &mut out,
+        "syncode_mask_pool_jobs_total",
+        "Jobs executed by the shared mask worker pool (steps + prewarms).",
+        global.mask_pool_jobs,
+    );
+    counter(
+        &mut out,
+        "syncode_masks_prewarmed_total",
+        "Next-step masks warmed during the batched decode.",
+        global.masks_prewarmed,
+    );
+    gauge(
+        &mut out,
+        "syncode_tokens_per_second",
+        "Throughput since the first admission.",
+        global.tokens_per_sec,
+    );
+
+    // _count/_sum come from the histograms' own sample counts, not
+    // requests_finished/mask_pool_jobs: admission failures finish a
+    // request without recording a latency, and sum = mean × samples only
+    // holds against the samples the mean was computed over.
+    summary(
+        &mut out,
+        "syncode_request_latency_seconds",
+        "Admission-to-finish latency of measured requests.",
+        global.p50_latency,
+        global.p99_latency,
+        global.mean_latency,
+        global.latency_samples,
+    );
+    summary(
+        &mut out,
+        "syncode_mask_pool_wait_seconds",
+        "Submit-to-dequeue wait of mask pool jobs (pool saturation signal).",
+        global.mask_wait_mean, // histogram keeps no p50; mean doubles as the mid quantile
+        global.mask_wait_p99,
+        global.mask_wait_mean,
+        global.mask_wait_samples,
+    );
+
+    gauge(
+        &mut out,
+        "syncode_queue_depth",
+        "Admission-queue depth at scrape time.",
+        http.queue_depth as f64,
+    );
+    gauge(
+        &mut out,
+        "syncode_queue_capacity",
+        "Admission-queue bound (submissions beyond it are rejected with 429).",
+        http.queue_cap as f64,
+    );
+    gauge(
+        &mut out,
+        "syncode_queue_depth_enqueue_mean",
+        "Mean queue depth observed at each enqueue (the backpressure signal).",
+        global.queue_depth_mean,
+    );
+    gauge(
+        &mut out,
+        "syncode_queue_depth_enqueue_max",
+        "Max queue depth observed at any enqueue.",
+        global.queue_depth_max as f64,
+    );
+
+    if !replicas.is_empty() {
+        header(
+            &mut out,
+            "syncode_replica_requests_finished_total",
+            "counter",
+            "Generations completed, split by replica.",
+        );
+        for (i, r) in replicas.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "syncode_replica_requests_finished_total{{replica=\"{i}\"}} {}",
+                r.requests_finished
+            );
+        }
+        header(
+            &mut out,
+            "syncode_replica_tokens_generated_total",
+            "counter",
+            "Tokens committed, split by replica.",
+        );
+        for (i, r) in replicas.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "syncode_replica_tokens_generated_total{{replica=\"{i}\"}} {}",
+                r.tokens_generated
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "syncode_http_responses_total",
+        "counter",
+        "HTTP responses sent, by status code.",
+    );
+    for (code, n) in &http.responses {
+        let _ = writeln!(out, "syncode_http_responses_total{{code=\"{code}\"}} {n}");
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    fn snapshot() -> MetricsSnapshot {
+        let mut m = Metrics::default();
+        m.mark_started();
+        m.requests_finished = 4;
+        m.tokens_generated = 64;
+        m.decode_steps = 70;
+        m.latency.record(0.125);
+        m.latency.record(0.25);
+        m.queue_depth.record(3);
+        m.snapshot()
+    }
+
+    /// Every non-comment line must be `name{optional labels} value` with a
+    /// finite value — the shape a Prometheus scraper requires.
+    fn assert_parses(text: &str) {
+        assert!(!text.is_empty());
+        for line in text.lines() {
+            if line.starts_with('#') {
+                let mut w = line.split_whitespace();
+                assert_eq!(w.next(), Some("#"));
+                assert!(matches!(w.next(), Some("HELP" | "TYPE")), "bad comment: {line}");
+                continue;
+            }
+            let (name, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+            assert!(!name.is_empty());
+            let metric = name.split('{').next().unwrap();
+            assert!(
+                metric.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name: {line}"
+            );
+            if let Some(rest) = name.split_once('{').map(|(_, r)| r) {
+                assert!(rest.ends_with('}'), "unterminated labels: {line}");
+            }
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+            assert!(v.is_finite(), "non-finite value: {line}");
+        }
+    }
+
+    #[test]
+    fn render_is_scrapeable() {
+        let g = snapshot();
+        let reps = vec![snapshot(), snapshot()];
+        let http = HttpStats {
+            responses: vec![(200, 10), (429, 2), (503, 1)],
+            queue_depth: 5,
+            queue_cap: 64,
+        };
+        let text = render(&g, &reps, &http);
+        assert_parses(&text);
+        assert!(text.contains("syncode_requests_finished_total 4"));
+        assert!(text.contains("syncode_queue_depth 5"));
+        assert!(text.contains("syncode_queue_capacity 64"));
+        assert!(text.contains("syncode_replica_requests_finished_total{replica=\"1\"} 4"));
+        assert!(text.contains("syncode_http_responses_total{code=\"429\"} 2"));
+        assert!(text.contains("syncode_request_latency_seconds{quantile=\"0.99\"}"));
+        // Sample count comes from the latency histogram (2 recorded), not
+        // from requests_finished (4, which includes admission failures).
+        assert!(text.contains("syncode_request_latency_seconds_count 2"));
+    }
+
+    #[test]
+    fn render_empty_metrics_safe() {
+        let g = Metrics::default().snapshot();
+        let text = render(&g, &[], &HttpStats::default());
+        assert_parses(&text);
+        assert!(text.contains("syncode_requests_finished_total 0"));
+        // No replica section when there is no per-replica split.
+        assert!(!text.contains("replica=\""));
+    }
+}

@@ -1,0 +1,384 @@
+//! The HTTP front: a dependency-free accept-pool server adapting requests
+//! onto the serving coordinator ([`crate::coordinator::ServerHandle`]).
+//!
+//! Endpoints:
+//!
+//! - `POST /v1/generate` — constrained generation; body schema in
+//!   `net/json.rs`, response includes the grammar-validity verdict;
+//! - `GET  /v1/grammars` — registry listing with per-grammar stats;
+//! - `GET  /healthz` — liveness + queue gauge (503 while draining);
+//! - `GET  /metrics` — Prometheus text rendering (`net/prom.rs`);
+//! - `POST /admin/shutdown` — graceful drain (see below); loopback peers
+//!   only, so a non-loopback bind is not one request away from a remote
+//!   denial of service.
+//!
+//! Backpressure is visible end-to-end: submissions go through the
+//! non-blocking [`ServerHandle::try_submit`], so a full admission queue
+//! answers 429 and a closed coordinator 503 — a load balancer can react
+//! instead of piling blocked connections onto a saturated server.
+//!
+//! Concurrency model: N worker threads all `accept()` on one shared
+//! listener (the kernel load-balances), one request per connection. A
+//! `/v1/generate` handler parks its worker on the response channel while
+//! the coordinator decodes, so `workers` bounds concurrent HTTP requests
+//! — size it ≥ total model lanes to keep every lane feedable.
+//!
+//! Graceful shutdown ([`HttpServer::shutdown`] or the admin endpoint):
+//! mark draining (healthz flips 503 so load balancers stop routing),
+//! close coordinator intake (in-flight lanes still drain — no accepted
+//! request loses its response), wake and join the accept workers, then
+//! hand the coordinator handle back to the caller for final metrics and
+//! replica join.
+
+use super::http::{self, error_response, Request, Response};
+use super::json::{decode_generate, encode_generate_response};
+use super::prom::{self, HttpStats};
+use crate::artifact::{CompiledGrammar, GrammarRegistry};
+use crate::coordinator::{FinishReason, ServerHandle, SubmitError};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// HTTP front tuning.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Accept-pool size = max concurrent HTTP requests (a generate
+    /// handler occupies its worker until the coordinator responds).
+    pub workers: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { workers: 8 }
+    }
+}
+
+/// Shared application state behind all connection workers.
+struct AppState {
+    handle: ServerHandle,
+    registry: Arc<GrammarRegistry>,
+    next_id: AtomicU64,
+    draining: AtomicBool,
+    /// Responses sent, by status code (the `/metrics` HTTP section).
+    codes: Mutex<BTreeMap<u16, u64>>,
+    /// Fires once when `/admin/shutdown` is accepted.
+    shutdown_tx: Mutex<Option<Sender<()>>>,
+}
+
+impl AppState {
+    fn record(&self, status: u16) {
+        *self.codes.lock().unwrap().entry(status).or_insert(0) += 1;
+    }
+}
+
+/// A running HTTP front over a coordinator.
+pub struct HttpServer {
+    addr: SocketAddr,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    state: Arc<AppState>,
+    stop: Arc<AtomicBool>,
+    shutdown_rx: Receiver<()>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back with
+    /// [`local_addr`](Self::local_addr)) and start the accept pool. Takes
+    /// ownership of the coordinator handle; it is returned by
+    /// [`shutdown`](Self::shutdown)/[`wait`](Self::wait).
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        handle: ServerHandle,
+        registry: Arc<GrammarRegistry>,
+        cfg: HttpConfig,
+    ) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let (tx, rx) = channel();
+        let state = Arc::new(AppState {
+            handle,
+            registry,
+            next_id: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            codes: Mutex::new(BTreeMap::new()),
+            shutdown_tx: Mutex::new(Some(tx)),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let listener = listener.try_clone().expect("clone listener");
+                let state = state.clone();
+                let stop = stop.clone();
+                std::thread::Builder::new()
+                    .name(format!("syncode-http-{i}"))
+                    .spawn(move || worker_loop(&listener, &state, &stop))
+                    .expect("spawn http worker")
+            })
+            .collect();
+        Ok(HttpServer { addr: local, workers, state, stop, shutdown_rx: rx })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a `POST /admin/shutdown` arrives, then drain and
+    /// return the coordinator handle (for final metrics + replica join).
+    pub fn wait(self) -> ServerHandle {
+        let _ = self.shutdown_rx.recv();
+        self.drain()
+    }
+
+    /// Programmatic graceful shutdown (same drain path as the admin
+    /// endpoint).
+    pub fn shutdown(self) -> ServerHandle {
+        self.drain()
+    }
+
+    fn drain(mut self) -> ServerHandle {
+        // Order matters: flip healthz first (stop new routing), then stop
+        // coordinator intake (in-flight lanes still complete), then stop
+        // accepting and join the workers — which finishes every HTTP
+        // request already being handled.
+        self.state.draining.store(true, Ordering::Release);
+        self.state.handle.close();
+        self.stop.store(true, Ordering::Release);
+        // Wake workers parked in accept(); each dial is one no-op
+        // connection (read_request sees clean EOF). An unspecified bind
+        // address (0.0.0.0 / ::) is not dialable — connect via loopback
+        // on the same port.
+        let mut dial = self.addr;
+        if dial.ip().is_unspecified() {
+            dial.set_ip(if dial.is_ipv4() {
+                std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+            } else {
+                std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+            });
+        }
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect_timeout(&dial, std::time::Duration::from_secs(1));
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Workers are gone; ours is the last Arc.
+        match Arc::try_unwrap(self.state) {
+            Ok(state) => state.handle,
+            Err(_) => unreachable!("http workers joined but AppState still shared"),
+        }
+    }
+}
+
+fn worker_loop(listener: &TcpListener, state: &Arc<AppState>, stop: &Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let mut conn = match listener.accept() {
+            Ok((c, _)) => c,
+            Err(_) => {
+                // Transient accept failure (EMFILE, aborted handshake):
+                // don't spin the core.
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                continue;
+            }
+        };
+        // Serve the accepted connection even when the stop flag is
+        // already set: a real client that raced the shutdown gets its
+        // 503 (never a silent connection drop), and a wake-up dial
+        // reads as clean EOF below. The loop condition exits afterwards.
+        let last = stop.load(Ordering::Acquire);
+        let peer_is_loopback =
+            conn.peer_addr().map(|p| p.ip().is_loopback()).unwrap_or(false);
+        match http::read_request(&mut conn) {
+            Ok(Some(req)) => {
+                let resp = route(state, &req, peer_is_loopback);
+                state.record(resp.status);
+                let _ = resp.write_to(&mut conn);
+            }
+            Ok(None) => {} // peer sent nothing (probe or wake-up dial)
+            Err(resp) => {
+                state.record(resp.status);
+                let _ = resp.write_to(&mut conn);
+            }
+        }
+        if last {
+            return;
+        }
+    }
+}
+
+fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(state, req),
+        ("GET", "/v1/grammars") => handle_grammars(state),
+        ("GET", "/healthz") => handle_healthz(state),
+        ("GET", "/metrics") => handle_metrics(state),
+        // Only loopback peers may stop the service: on a non-loopback
+        // bind (0.0.0.0), an unauthenticated remote shutdown would be a
+        // one-request denial of service.
+        ("POST", "/admin/shutdown") if peer_is_loopback => handle_shutdown(state),
+        ("POST", "/admin/shutdown") => {
+            error_response(403, "shutdown is only accepted from loopback")
+        }
+        (_, "/v1/generate") | (_, "/admin/shutdown") => {
+            error_response(405, "use POST")
+        }
+        (_, "/v1/grammars") | (_, "/healthz") | (_, "/metrics") => {
+            error_response(405, "use GET")
+        }
+        (_, path) => error_response(404, &format!("no route for {path}")),
+    }
+}
+
+/// Resolve which compiled grammar will constrain (and validate) a request.
+fn resolve_grammar(
+    state: &AppState,
+    name: Option<&str>,
+) -> Result<Arc<CompiledGrammar>, Response> {
+    match name {
+        Some(g) => state.registry.get(g).ok_or_else(|| {
+            error_response(
+                400,
+                &format!(
+                    "unknown grammar '{g}' (registered: {})",
+                    state.registry.names().join(", ")
+                ),
+            )
+        }),
+        None => state
+            .registry
+            .default_grammar()
+            .ok_or_else(|| error_response(503, "grammar registry is empty")),
+    }
+}
+
+fn handle_generate(state: &Arc<AppState>, req: &Request) -> Response {
+    let body = match decode_generate(&req.body) {
+        Ok(b) => b,
+        Err(e) => return error_response(400, &e),
+    };
+    let art = match resolve_grammar(state, body.grammar.as_deref()) {
+        Ok(a) => a,
+        Err(resp) => return resp,
+    };
+    let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+    // Non-blocking admission: backpressure becomes a status code instead
+    // of a parked connection handler.
+    let rx = match state.handle.try_submit(body.into_request(id)) {
+        Ok(rx) => rx,
+        Err(SubmitError::QueueFull) => {
+            return error_response(429, "admission queue is full, retry later");
+        }
+        Err(SubmitError::Closed) => {
+            return error_response(503, "coordinator is shut down");
+        }
+    };
+    let resp = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return error_response(503, "scheduler exited without responding"),
+    };
+    if resp.finish == FinishReason::Rejected {
+        let msg = resp.error.as_deref().unwrap_or("request rejected");
+        return error_response(503, msg);
+    }
+    if resp.finish == FinishReason::EngineError {
+        // A server-side failure (model decode error, mask dead end, lost
+        // pool worker) must not read as success to status-code-driven
+        // clients and monitors.
+        let msg = resp.error.as_deref().unwrap_or("engine error");
+        return error_response(500, msg);
+    }
+    let valid = art.response_valid(&resp);
+    Response::json(200, encode_generate_response(&resp, &art.name, valid))
+}
+
+fn handle_grammars(state: &Arc<AppState>) -> Response {
+    let default = state.registry.default_grammar().map(|a| a.name.clone());
+    let grammars: Vec<Json> = state
+        .registry
+        .names()
+        .into_iter()
+        .filter_map(|n| state.registry.get(&n))
+        .map(|art| {
+            let s = &art.store.stats;
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(art.name.clone()));
+            m.insert(
+                "lr_mode".to_string(),
+                Json::Str(format!("{:?}", art.lr_mode).to_lowercase()),
+            );
+            m.insert("vocab_size".to_string(), Json::Num(s.vocab_size as f64));
+            m.insert("dfa_states".to_string(), Json::Num(s.num_dfa_states as f64));
+            m.insert("terminals".to_string(), Json::Num(s.num_terminals as f64));
+            m.insert("unique_masks".to_string(), Json::Num(s.unique_masks as f64));
+            m.insert("mask_store_bytes".to_string(), Json::Num(s.mem_bytes as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert(
+        "default".to_string(),
+        default.map(Json::Str).unwrap_or(Json::Null),
+    );
+    top.insert("grammars".to_string(), Json::Arr(grammars));
+    Response::json(200, Json::Obj(top).to_string())
+}
+
+fn handle_healthz(state: &Arc<AppState>) -> Response {
+    let draining = state.draining.load(Ordering::Acquire);
+    let closed = state.handle.is_closed();
+    let status = if draining {
+        "draining"
+    } else if closed {
+        "closed" // every replica died without an explicit shutdown
+    } else {
+        "ok"
+    };
+    let mut m = BTreeMap::new();
+    m.insert("status".to_string(), Json::Str(status.to_string()));
+    m.insert("grammars".to_string(), Json::Num(state.registry.len() as f64));
+    m.insert(
+        "queue_depth".to_string(),
+        Json::Num(state.handle.queue_depth() as f64),
+    );
+    m.insert(
+        "queue_capacity".to_string(),
+        Json::Num(state.handle.queue_cap() as f64),
+    );
+    let code = if status == "ok" { 200 } else { 503 };
+    Response::json(code, Json::Obj(m).to_string())
+}
+
+fn handle_metrics(state: &Arc<AppState>) -> Response {
+    let responses: Vec<(u16, u64)> =
+        state.codes.lock().unwrap().iter().map(|(&c, &n)| (c, n)).collect();
+    let http = HttpStats {
+        responses,
+        queue_depth: state.handle.queue_depth(),
+        queue_cap: state.handle.queue_cap(),
+    };
+    let text =
+        prom::render(&state.handle.snapshot(), &state.handle.replica_snapshots(), &http);
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4; charset=utf-8",
+        body: text.into_bytes(),
+    }
+}
+
+fn handle_shutdown(state: &Arc<AppState>) -> Response {
+    state.draining.store(true, Ordering::Release);
+    let fired = match state.shutdown_tx.lock().unwrap().take() {
+        Some(tx) => tx.send(()).is_ok(),
+        None => false,
+    };
+    let msg = if fired { "shutting down" } else { "already shutting down" };
+    let mut m = BTreeMap::new();
+    m.insert("status".to_string(), Json::Str(msg.to_string()));
+    Response::json(200, Json::Obj(m).to_string())
+}

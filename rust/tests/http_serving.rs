@@ -1,0 +1,456 @@
+//! End-to-end tests for the HTTP serving front: concurrent raw-socket
+//! clients getting grammar-valid output, malformed-request handling,
+//! backpressure surfacing as 429, dead/draining coordinators as 503, and
+//! graceful shutdown that completes in-flight generations.
+//!
+//! Everything runs over real TCP sockets on ephemeral loopback ports via
+//! the crate's own minimal client (`net::http::fetch`) or hand-written
+//! request bytes — the same path an external curl would take.
+
+use std::io::Write as _;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{Coordinator, CoordinatorConfig, GenResponse};
+use syncode::net::http::{fetch, read_response};
+use syncode::net::json::finish_from_str;
+use syncode::net::{HttpConfig, HttpServer};
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel, ModelFactory};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::json::{parse, Json};
+
+/// Mixed corpus so the mock bigram model emits plausible bytes for both
+/// registered grammars.
+fn docs() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"name": "alice", "age": 30}"#.to_vec(),
+        br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+        br#"{"nested": {"a": null}}"#.to_vec(),
+        b"1 + 2 * 3".to_vec(),
+        b"math_sqrt(4) - 1".to_vec(),
+        b"(7 - 2) / 5".to_vec(),
+    ]
+}
+
+fn registry(tok: &Arc<Tokenizer>) -> Arc<GrammarRegistry> {
+    let reg = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default()).unwrap();
+        reg.register(art).unwrap();
+    }
+    reg
+}
+
+/// Start a full coordinator + HTTP front on an ephemeral port over the
+/// mock model. Returns the server, the registry (for re-validation) and
+/// the dial address.
+fn start_mock_http(
+    replicas: usize,
+    lanes: usize,
+    queue_cap: usize,
+) -> (HttpServer, Arc<GrammarRegistry>, String) {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let tok_m = tok.clone();
+    let factories = replicate_factory(replicas, move || {
+        Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs(), lanes, 256, 11))
+            as Box<dyn LanguageModel>)
+    });
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap };
+    let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
+    let server =
+        HttpServer::bind("127.0.0.1:0", handle, reg.clone(), HttpConfig { workers: 6 })
+            .expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (server, reg, addr)
+}
+
+fn generate_body(grammar: &str, seed: u64, max_tokens: usize) -> String {
+    format!(
+        r#"{{"grammar": "{grammar}", "prompt": "produce {grammar} #{seed}",
+           "max_tokens": {max_tokens}, "seed": {seed}}}"#
+    )
+}
+
+/// Send raw bytes, half-close the write side, parse whatever comes back.
+fn raw_roundtrip(addr: &str, bytes: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(bytes).expect("write");
+    s.shutdown(Shutdown::Write).expect("half-close");
+    read_response(&mut s).expect("response")
+}
+
+fn poll_until(deadline_secs: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(deadline_secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn healthz_queue_depth(addr: &str) -> usize {
+    let (_, body) = fetch(addr, "GET", "/healthz", None).expect("healthz");
+    parse(&body)
+        .ok()
+        .and_then(|v| v.get("queue_depth").and_then(Json::as_usize))
+        .unwrap_or(usize::MAX)
+}
+
+#[test]
+fn concurrent_clients_get_grammar_valid_output() {
+    let (server, reg, addr) = start_mock_http(2, 2, 64);
+    let n = 8;
+    let results: Vec<(u16, String, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let g = if i % 2 == 0 { "json" } else { "calc" };
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let (status, body) = fetch(
+                        addr.as_str(),
+                        "POST",
+                        "/v1/generate",
+                        Some(&generate_body(g, i, 48)),
+                    )
+                    .expect("request");
+                    (status, body, g.to_string())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    for (status, body, grammar) in results {
+        assert_eq!(status, 200, "body: {body}");
+        let v = parse(&body).expect("response json");
+        assert_eq!(v.get("grammar").unwrap().as_str(), Some(grammar.as_str()));
+        assert_eq!(v.get("valid").unwrap().as_bool(), Some(true), "{body}");
+        assert!(v.get("error").is_none(), "{body}");
+        // Don't take the server's word for it: rebuild the response and
+        // re-run the shared validity oracle client-side.
+        let resp = GenResponse {
+            id: v.get("id").unwrap().as_usize().unwrap() as u64,
+            text: v.get("text").unwrap().as_str().unwrap().to_string(),
+            finish: finish_from_str(v.get("finish").unwrap().as_str().unwrap()).unwrap(),
+            tokens: v.get("tokens").unwrap().as_usize().unwrap(),
+            ttft_secs: 0.0,
+            latency_secs: 0.0,
+            error: None,
+        };
+        assert!(
+            reg.get(&grammar).unwrap().response_valid(&resp),
+            "server said valid but the oracle disagrees: {body}"
+        );
+    }
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn registry_health_and_metrics_endpoints() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+
+    let (status, body) = fetch(addr.as_str(), "GET", "/v1/grammars", None).unwrap();
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("default").unwrap().as_str(), Some("json"));
+    let names: Vec<&str> = v
+        .get("grammars")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|g| g.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(names, ["calc", "json"]);
+    for g in v.get("grammars").unwrap().as_arr().unwrap() {
+        assert!(g.get("vocab_size").unwrap().as_usize().unwrap() > 0);
+        assert!(g.get("dfa_states").unwrap().as_usize().unwrap() > 0);
+    }
+
+    let (status, body) = fetch(addr.as_str(), "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(parse(&body).unwrap().get("status").unwrap().as_str(), Some("ok"));
+
+    // Default grammar (no "grammar" field) routes to the registry default.
+    let (status, body) = fetch(
+        addr.as_str(),
+        "POST",
+        "/v1/generate",
+        Some(r#"{"prompt": "an object please", "max_tokens": 32, "seed": 3}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(parse(&body).unwrap().get("grammar").unwrap().as_str(), Some("json"));
+
+    // Metrics must reflect the finished request and parse line-by-line.
+    let (status, text) = fetch(addr.as_str(), "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let mut finished = None;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        assert!(v.is_finite(), "{line}");
+        if name == "syncode_requests_finished_total" {
+            finished = Some(v);
+        }
+    }
+    assert!(finished.unwrap_or(0.0) >= 1.0, "no finished requests in metrics");
+    assert!(text.contains("syncode_http_responses_total{code=\"200\"}"));
+    assert!(text.contains("syncode_queue_capacity 64"));
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn malformed_requests_get_4xx_and_server_survives() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+    let a = addr.as_str();
+
+    // Wire-level garbage.
+    assert_eq!(raw_roundtrip(a, b"garbage\r\n\r\n").0, 400);
+    assert_eq!(raw_roundtrip(a, b"GET /healthz FTP/1.1\r\n\r\n").0, 400);
+    assert_eq!(raw_roundtrip(a, b"POST /v1/generate HTTP/1.1\r\n\r\n").0, 411);
+    assert_eq!(
+        raw_roundtrip(a, b"POST /v1/generate HTTP/1.1\r\nContent-Length: 99\r\n\r\n{").0,
+        400 // body shorter than declared
+    );
+    let huge = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        10 * 1024 * 1024
+    );
+    assert_eq!(raw_roundtrip(a, huge.as_bytes()).0, 413);
+
+    // Routing.
+    assert_eq!(fetch(a, "GET", "/nope", None).unwrap().0, 404);
+    assert_eq!(fetch(a, "GET", "/v1/generate", None).unwrap().0, 405);
+    assert_eq!(fetch(a, "POST", "/metrics", Some("{}")).unwrap().0, 405);
+
+    // Schema-level failures (all handled by net/json.rs).
+    let post = |body: &str| fetch(a, "POST", "/v1/generate", Some(body)).unwrap();
+    assert_eq!(post("not json").0, 400);
+    assert_eq!(post("{\"prompt\": ").0, 400);
+    assert_eq!(post(r#"{"max_tokens": 5}"#).0, 400); // missing prompt
+    assert_eq!(post(r#"{"prompt": "p", "max_tokens": "ten"}"#).0, 400);
+    assert_eq!(post(r#"{"prompt": "p", "max_token": 5}"#).0, 400); // typo field
+    let (status, body) = post(r#"{"prompt": "p", "grammar": "sql2"}"#);
+    assert_eq!(status, 400);
+    assert!(body.contains("calc"), "error should list registered grammars: {body}");
+
+    // After all that abuse the server still serves.
+    let (status, body) = post(&generate_body("calc", 5, 24));
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(fetch(a, "GET", "/healthz", None).unwrap().0, 200);
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn utf8_and_escapes_roundtrip_through_the_wire() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+    let body = r#"{"grammar": "json", "seed": 1, "max_tokens": 24,
+                   "prompt": "héllo ☃ 😀 \"quoted\" back\\slash\nnewline"}"#;
+    let (status, resp) = fetch(addr.as_str(), "POST", "/v1/generate", Some(body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp).unwrap();
+    assert_eq!(v.get("valid").unwrap().as_bool(), Some(true));
+    server.shutdown().shutdown();
+}
+
+// --------------------------------------------------------------------------
+// Backpressure and shutdown need a model whose decode can be held open
+// deterministically.
+
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// A model whose first decode signals `entered` and then blocks until the
+/// gate opens — pinning its (single) lane so the admission queue fills
+/// deterministically. Logits are uniform; the grammar mask does all the
+/// shaping.
+struct StallModel {
+    vocab: usize,
+    gate: Arc<Gate>,
+    entered: Option<Sender<()>>,
+}
+
+impl LanguageModel for StallModel {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn max_seq(&self) -> usize {
+        256
+    }
+
+    fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> syncode::util::error::Result<Vec<f32>> {
+        Ok(vec![0.0; self.vocab])
+    }
+
+    fn decode(
+        &mut self,
+        last: &[Option<u32>],
+    ) -> syncode::util::error::Result<Vec<Option<Vec<f32>>>> {
+        if let Some(tx) = self.entered.take() {
+            let _ = tx.send(());
+        }
+        self.gate.wait();
+        Ok(last.iter().map(|t| t.map(|_| vec![0.0; self.vocab])).collect())
+    }
+
+    fn release(&mut self, _lane: usize) {}
+
+    fn name(&self) -> &'static str {
+        "stall"
+    }
+}
+
+/// HTTP front over a single stalling replica with a 1-deep admission
+/// queue. Returns `(server, addr, gate, entered_rx)`.
+fn start_stalled_http(queue_cap: usize) -> (HttpServer, String, Arc<Gate>, Receiver<()>) {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let gate = Gate::new();
+    let (etx, erx) = channel();
+    let vocab = tok.vocab_size();
+    let gate_m = gate.clone();
+    let entered = Arc::new(Mutex::new(Some(etx)));
+    let factories = replicate_factory(1, move || {
+        Ok(Box::new(StallModel {
+            vocab,
+            gate: gate_m.clone(),
+            entered: entered.lock().unwrap().take(),
+        }) as Box<dyn LanguageModel>)
+    });
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap };
+    let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
+    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 6 })
+        .expect("bind");
+    let addr = server.local_addr().to_string();
+    (server, addr, gate, erx)
+}
+
+#[test]
+fn full_queue_maps_to_429_and_drains_after() {
+    let (server, addr, gate, entered) = start_stalled_http(1);
+
+    // A: admitted into the only lane, stalls inside decode.
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        fetch(addr_a.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 1, 2)))
+            .expect("request A")
+    });
+    entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+
+    // B: sits in the admission queue, filling it (cap 1).
+    let addr_b = addr.clone();
+    let b = std::thread::spawn(move || {
+        fetch(addr_b.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 2, 2)))
+            .expect("request B")
+    });
+    poll_until(30, "queue depth 1", || healthz_queue_depth(&addr) == 1);
+
+    // C: queue full — backpressure must surface as 429, immediately.
+    let (status, body) =
+        fetch(addr.as_str(), "POST", "/v1/generate", Some(&generate_body("calc", 3, 2)))
+            .unwrap();
+    assert_eq!(status, 429, "{body}");
+    assert!(parse(&body).unwrap().get("error").is_some());
+
+    // Open the gate: A and B must both complete with valid output.
+    gate.release();
+    for (label, t) in [("A", a), ("B", b)] {
+        let (status, body) = t.join().expect("client thread");
+        assert_eq!(status, 200, "request {label}: {body}");
+        assert_eq!(
+            parse(&body).unwrap().get("valid").unwrap().as_bool(),
+            Some(true),
+            "request {label}: {body}"
+        );
+    }
+
+    // The 429 is visible on /metrics.
+    let (_, text) = fetch(addr.as_str(), "GET", "/metrics", None).unwrap();
+    assert!(text.contains("syncode_http_responses_total{code=\"429\"} 1"), "{text}");
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn dead_coordinator_maps_to_503() {
+    // The only replica's model fails to construct → the replica guard
+    // closes the queue → HTTP must answer 503, not hang or panic.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let factories: Vec<ModelFactory> =
+        vec![Box::new(|| Err(syncode::util::error::Error::msg("no accelerator")))];
+    let handle =
+        Coordinator::start(factories, tok, reg.clone(), CoordinatorConfig::default());
+    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 2 })
+        .expect("bind");
+    let addr = server.local_addr().to_string();
+
+    poll_until(30, "coordinator closed", || {
+        fetch(addr.as_str(), "GET", "/healthz", None).unwrap().0 == 503
+    });
+    let (status, body) =
+        fetch(addr.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 1, 8)))
+            .unwrap();
+    assert_eq!(status, 503, "{body}");
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn graceful_shutdown_completes_inflight_requests() {
+    let (server, addr, gate, entered) = start_stalled_http(4);
+
+    // An in-flight generation, pinned inside the model.
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        fetch(addr_a.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 9, 2)))
+            .expect("in-flight request")
+    });
+    entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+
+    // Shutdown arrives while it is still decoding.
+    let (status, body) =
+        fetch(addr.as_str(), "POST", "/admin/shutdown", Some("{}")).unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // The drain must wait for the lane, not drop it.
+    gate.release();
+    let handle = server.wait();
+    let (status, body) = a.join().expect("client thread");
+    assert_eq!(status, 200, "in-flight request lost in shutdown: {body}");
+    assert_eq!(parse(&body).unwrap().get("valid").unwrap().as_bool(), Some(true));
+
+    // Workers are gone: the port no longer accepts requests.
+    assert!(fetch(addr.as_str(), "GET", "/healthz", None).is_err());
+    assert_eq!(handle.snapshot().requests_finished, 1);
+    handle.shutdown();
+}

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Concurrent HTTP smoke driver for `syncode serve --http` (the ci.sh gate).
+
+Usage: http_smoke.py ADDR   (e.g. 127.0.0.1:8642, already listening)
+
+Fires concurrent `POST /v1/generate` requests alternating over the json and
+calc grammars, asserts every response is 200 with `valid: true` (zero syntax
+errors), validates that `/metrics` parses as Prometheus text and reflects the
+finished requests, then drains the server via `POST /admin/shutdown`.
+Stdlib only — CI needs nothing beyond python3.
+"""
+
+import json
+import sys
+import threading
+import urllib.error
+import urllib.request
+
+N_REQUESTS = 8
+
+
+def req(addr, method, path, body=None):
+    r = urllib.request.Request(
+        f"http://{addr}{path}",
+        method=method,
+        data=body.encode() if body is not None else None,
+    )
+    try:
+        with urllib.request.urlopen(r, timeout=110) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def check_metrics(text):
+    """Every line must be a comment or `name{labels} value` with a float value."""
+    finished = None
+    for line in text.splitlines():
+        if line.startswith("#"):
+            parts = line.split()
+            assert parts[0] == "#" and parts[1] in ("HELP", "TYPE"), f"bad comment: {line}"
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name, f"no metric name: {line}"
+        float(value)  # raises on a malformed sample
+        if name == "syncode_requests_finished_total":
+            finished = float(value)
+    assert finished is not None, "syncode_requests_finished_total missing"
+    assert finished >= N_REQUESTS, f"metrics report only {finished} finished requests"
+    server_errors = [
+        line
+        for line in text.splitlines()
+        if line.startswith("syncode_http_responses_total") and 'code="5' in line
+    ]
+    assert not server_errors, f"5xx responses during smoke: {server_errors}"
+
+
+def main():
+    addr = sys.argv[1]
+
+    status, body = req(addr, "GET", "/healthz")
+    assert status == 200, f"healthz: {status} {body}"
+
+    status, body = req(addr, "GET", "/v1/grammars")
+    assert status == 200, f"grammars: {status} {body}"
+    grammars = [g["name"] for g in json.loads(body)["grammars"]]
+    assert "json" in grammars and "calc" in grammars, f"registry: {grammars}"
+
+    results = [None] * N_REQUESTS
+
+    def fire(i):
+        g = grammars[i % len(grammars)]
+        payload = json.dumps(
+            {"grammar": g, "prompt": f"produce {g} #{i}", "max_tokens": 48, "seed": i}
+        )
+        results[i] = req(addr, "POST", "/v1/generate", payload)
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(N_REQUESTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    syntax_errors = 0
+    for i, (status, body) in enumerate(results):
+        assert status == 200, f"request {i}: {status} {body}"
+        resp = json.loads(body)
+        if not resp.get("valid"):
+            syntax_errors += 1
+            print(f"INVALID response {i}: {body}", file=sys.stderr)
+    assert syntax_errors == 0, f"syntax errors: {syntax_errors}/{N_REQUESTS}"
+
+    status, text = req(addr, "GET", "/metrics")
+    assert status == 200, f"metrics: {status}"
+    check_metrics(text)
+
+    status, body = req(addr, "POST", "/admin/shutdown", "{}")
+    assert status == 200, f"shutdown: {status} {body}"
+    print(f"http smoke OK: {N_REQUESTS}/{N_REQUESTS} valid, metrics parsed, graceful shutdown")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,16 +2,23 @@
 //!
 //! 1. **serial vs parallel** mask-store build time (the sharded walk loop
 //!    of `mask/store.rs`; results are bit-identical, asserted here);
-//! 2. **cold start vs warm start**: full `CompiledGrammar::compile` vs
-//!    `CompiledGrammar::from_bytes` on the serialised artifact — the
-//!    paper's compile-once/serve-many boundary made measurable.
+//! 2. **cold start vs warm start**: full `CompiledGrammar::compile`
+//!    against the *two* warm paths — `from_bytes` on a `fs::read` buffer
+//!    (the pre-mmap copy-deserialisation) and `from_file` (mmap'd
+//!    `SYNCMSK2`, zero-copy view) — the paper's compile-once/serve-many
+//!    boundary made measurable, before/after the zero-copy load.
+//!
+//! Pass `--json <path>` to append one trajectory entry per grammar to a
+//! `BENCH_*.json` file (see `BENCH_coldwarm.json` at the repo root).
 
 use std::sync::Arc;
+use std::time::Instant;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar};
 use syncode::eval::dataset;
 use syncode::mask::{MaskStore, MaskStoreConfig};
 use syncode::tokenizer::Tokenizer;
 use syncode::util::bench::Table;
+use syncode::util::json::{parse, Json};
 
 fn tok_for(gname: &str, merges: usize) -> Arc<Tokenizer> {
     let docs = dataset::corpus(gname, 200 + merges, 7);
@@ -19,7 +26,25 @@ fn tok_for(gname: &str, merges: usize) -> Arc<Tokenizer> {
     Arc::new(Tokenizer::train(&flat, merges))
 }
 
+/// One cold/warm measurement, destined for the trajectory file.
+struct Entry {
+    grammar: String,
+    vocab: usize,
+    cold_s: f64,
+    warm_copy_s: f64,
+    warm_mmap_s: f64,
+    blob_mb: f64,
+    zero_copy: bool,
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let threads_avail =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("# Artifact layer — build parallelism and cold/warm start\n");
@@ -32,10 +57,10 @@ fn main() {
     for gname in ["json", "calc", "sql", "python", "go"] {
         let tok = tok_for(gname, 512);
         let g = syncode::grammar::Grammar::builtin(gname).unwrap();
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let serial = MaskStore::build(&g, &tok, MaskStoreConfig::default());
         let serial_secs = t0.elapsed().as_secs_f64();
-        let t1 = std::time::Instant::now();
+        let t1 = Instant::now();
         let par = MaskStore::build(&g, &tok, MaskStoreConfig::parallel());
         let par_secs = t1.elapsed().as_secs_f64();
         let identical = serial.to_bytes() == par.to_bytes();
@@ -52,35 +77,108 @@ fn main() {
     }
     t.print();
 
-    // ---- cold start vs warm start --------------------------------------
+    // ---- cold start vs warm start (copy-load vs mmap-load) -------------
     println!("\n# Cold compile vs warm load (whole artifact)\n");
+    let dir = std::env::temp_dir().join("syncode_coldwarm_bench");
+    let _ = std::fs::create_dir_all(&dir);
     let mut t = Table::new(&[
-        "grammar", "cold(s)", "warm(s)", "speedup", "blob MB",
+        "grammar", "cold(s)", "warm-copy(s)", "warm-mmap(s)", "copy/mmap", "blob MB",
+        "zero-copy",
     ]);
+    let mut entries = Vec::new();
     for gname in ["json", "sql", "python"] {
         let tok = tok_for(gname, 512);
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let art = CompiledGrammar::compile(gname, tok, &ArtifactConfig::default())
             .unwrap_or_else(|e| panic!("{gname}: {e}"));
         let cold = t0.elapsed().as_secs_f64();
         let blob = art.to_bytes();
-        let t1 = std::time::Instant::now();
-        let warm_art = CompiledGrammar::from_bytes(&blob).unwrap();
-        let warm = t1.elapsed().as_secs_f64();
-        assert!(warm_art.compile_stats.from_cache);
-        assert_eq!(art.store.to_bytes(), warm_art.store.to_bytes());
+        let path = dir.join(format!("{gname}.syncart"));
+        std::fs::write(&path, &blob).unwrap();
+
+        // Copy path: read the whole file, deserialise every table.
+        let t1 = Instant::now();
+        let data = std::fs::read(&path).unwrap();
+        let warm_copy_art = CompiledGrammar::from_bytes(&data).unwrap();
+        let warm_copy = t1.elapsed().as_secs_f64();
+        assert!(warm_copy_art.compile_stats.from_cache);
+        assert!(!warm_copy_art.store.stats.zero_copy);
+
+        // Mmap path: map the file, validate headers, serve in place.
+        let t2 = Instant::now();
+        let warm_mmap_art = CompiledGrammar::from_file(&path).unwrap();
+        let warm_mmap = t2.elapsed().as_secs_f64();
+        assert!(warm_mmap_art.compile_stats.from_cache);
+        let zero_copy = warm_mmap_art.store.stats.zero_copy;
+        assert_eq!(art.store.to_bytes(), warm_copy_art.store.to_bytes());
+        assert_eq!(art.store.to_bytes(), warm_mmap_art.store.to_bytes());
+
         t.row(&[
             gname.to_string(),
             format!("{cold:.3}"),
-            format!("{warm:.3}"),
-            format!("{:.1}x", cold / warm.max(1e-9)),
+            format!("{warm_copy:.4}"),
+            format!("{warm_mmap:.4}"),
+            format!("{:.1}x", warm_copy / warm_mmap.max(1e-9)),
             format!("{:.2}", blob.len() as f64 / 1e6),
+            zero_copy.to_string(),
         ]);
+        entries.push(Entry {
+            grammar: gname.to_string(),
+            vocab: warm_mmap_art.tok.vocab_size(),
+            cold_s: cold,
+            warm_copy_s: warm_copy,
+            warm_mmap_s: warm_mmap,
+            blob_mb: blob.len() as f64 / 1e6,
+            zero_copy,
+        });
+        let _ = std::fs::remove_file(&path);
     }
     t.print();
     println!(
         "\nshape check: parallel build approaches core-count speedup on the\n\
-         walk loop; warm start skips the store build entirely, so its time\n\
-         is dominated by LR-table reconstruction (small)."
+         walk loop; warm-copy skips the store build but still pays a full\n\
+         allocate-and-copy deserialisation; warm-mmap pays header validation\n\
+         plus page faults only (its time is dominated by LR-table\n\
+         reconstruction, which both warm paths share)."
     );
+
+    if let Some(path) = json_out {
+        append_trajectory(&path, &entries);
+        println!("\n[appended {} entries to {path}]", entries.len());
+    }
+}
+
+/// Append entries to the `BENCH_*.json` trajectory file: an object with an
+/// `entries` array (created if missing/invalid) that accumulates one row
+/// per (run, grammar) so the cold/warm numbers are trackable across PRs.
+fn append_trajectory(path: &str, entries: &[Entry]) {
+    let mut obj = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut arr: Vec<Json> = obj
+        .get("entries")
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    for e in entries {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("unix_time".to_string(), Json::Num(now as f64));
+        m.insert("grammar".to_string(), Json::Str(e.grammar.clone()));
+        m.insert("vocab".to_string(), Json::Num(e.vocab as f64));
+        m.insert("cold_s".to_string(), Json::Num(e.cold_s));
+        m.insert("warm_copy_s".to_string(), Json::Num(e.warm_copy_s));
+        m.insert("warm_mmap_s".to_string(), Json::Num(e.warm_mmap_s));
+        m.insert("blob_mb".to_string(), Json::Num(e.blob_mb));
+        m.insert("zero_copy".to_string(), Json::Bool(e.zero_copy));
+        arr.push(Json::Obj(m));
+    }
+    obj.insert("bench".to_string(), Json::Str("artifact_coldwarm".to_string()));
+    obj.insert("entries".to_string(), Json::Arr(arr));
+    let _ = std::fs::write(path, Json::Obj(obj).to_string());
 }

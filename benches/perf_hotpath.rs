@@ -46,6 +46,8 @@ fn l3_engine_ops() {
         "C_k bytes",
         "compute_mask",
         "token_allowed",
+        "walks/step",
+        "walks/probe",
         "validate_append",
         "append+mask (step)",
     ]);
@@ -53,16 +55,29 @@ fn l3_engine_ops() {
         let prefix = json_prefix(len);
         let mut eng = art.engine();
         eng.reset(&prefix);
+        let mut steps = 0u64;
+        let walks_before_mask = eng.walks;
         let mask_t = time_fn(3, 30, || {
             eng.append(b""); // invalidate the step cache: full recompute
             let _ = eng.compute_mask().unwrap();
+            steps += 1;
         });
+        // Remainder DFA walks per step: ≤ |A| (one per unique head), done
+        // while the step's LookupPlan is built.
+        let walks_per_step = (eng.walks - walks_before_mask) as f64 / steps.max(1) as f64;
         eng.reset(&prefix);
         let _ = eng.compute_mask().unwrap();
         let tid = tok.encode(b",").first().copied().unwrap_or(b',' as u32);
+        let mut probes = 0u64;
+        let walks_before_probe = eng.walks;
         let allow_t = time_fn(3, 200, || {
             let _ = eng.token_allowed(tid).unwrap();
+            probes += 1;
         });
+        // The tentpole invariant made visible: probing re-uses the plan,
+        // so this column must read 0.000 (it was ~|A| walks per probe).
+        let walks_per_probe =
+            (eng.walks - walks_before_probe) as f64 / probes.max(1) as f64;
         let val_t = time_fn(3, 50, || {
             let _ = eng.validate_append(b", ");
         });
@@ -84,6 +99,8 @@ fn l3_engine_ops() {
             prefix.len().to_string(),
             fmt_secs(mask_t.mean),
             fmt_secs(allow_t.mean),
+            format!("{walks_per_step:.1}"),
+            format!("{walks_per_probe:.3}"),
             fmt_secs(val_t.mean),
             fmt_secs(step_t.mean),
         ]);

@@ -61,14 +61,44 @@ if [[ "$fast" == "0" ]]; then
     exit 1
   fi
 
+  # Cold-start gate (ISSUE-4): compile writes the artifact caches, a
+  # second compile over the same set must warm-load every grammar with a
+  # zero store-build time (and, on unix, serve it zero-copy from an mmap).
+  echo "== cold-start gate (compile → warm re-load from cache) =="
+  cache_dir=$(mktemp -d)
+  cargo run --release --quiet -- compile --grammars json,calc \
+    --cache-dir "$cache_dir" --mock >/dev/null
+  warm_out=$(cargo run --release --quiet -- compile --grammars json,calc \
+    --cache-dir "$cache_dir" --mock)
+  if [[ $(grep -c "already cached:" <<<"$warm_out") -ne 2 ]]; then
+    echo "ERROR: second compile did not warm-load both grammars:" >&2
+    echo "$warm_out" >&2
+    exit 1
+  fi
+  # Every grammar row of the warm pass must report a cache hit ($5,
+  # "cached" column) and a zero store-build time ($9, "store(s)" column —
+  # 0.000 exactly when the build was skipped). Column order matches
+  # cmd_compile's Table in rust/src/main.rs.
+  if ! awk '$1=="json" || $1=="calc" {
+        rows++
+        if ($5 != "warm" || $9 != "0.000") { bad=1 }
+      } END { exit (rows == 2 && !bad) ? 0 : 1 }' <<<"$warm_out"; then
+    echo "ERROR: warm pass rebuilt a store (expected cached=warm, store(s)=0.000):" >&2
+    echo "$warm_out" >&2
+    exit 1
+  fi
+
   # HTTP smoke: the same coordinator behind real sockets. Concurrent
   # POST /v1/generate for json+calc must return 200s with zero syntax
   # errors, /metrics must parse as Prometheus text, and the server must
   # drain cleanly on POST /admin/shutdown (the ISSUE-3 acceptance path).
-  echo "== http smoke (serve --http, concurrent clients, 120s cap) =="
+  # It re-serves from the cold-start gate's cache, proving the warm-load
+  # path carries real traffic.
+  echo "== http smoke (serve --http from warm cache, concurrent clients, 120s cap) =="
   http_log=$(mktemp)
   cargo run --release --quiet -- serve --http 127.0.0.1:0 \
-    --grammars json,calc --replicas 2 --queue-cap 64 --mock >"$http_log" 2>&1 &
+    --grammars json,calc --replicas 2 --queue-cap 64 --mock \
+    --cache-dir "$cache_dir" >"$http_log" 2>&1 &
   http_pid=$!
   trap 'kill "$http_pid" 2>/dev/null || true' EXIT
 
@@ -87,6 +117,14 @@ if [[ "$fast" == "0" ]]; then
   done
   if [[ -z "$addr" ]]; then
     echo "ERROR: http server never reported its address; log:" >&2
+    cat "$http_log" >&2
+    exit 1
+  fi
+
+  # Both grammars must have come from the cold-start gate's cache (the
+  # registry logs one warm-loaded line per artifact before binding).
+  if [[ $(grep -c "warm-loaded" "$http_log") -lt 2 ]]; then
+    echo "ERROR: http serve recompiled instead of warm-loading the cache; log:" >&2
     cat "$http_log" >&2
     exit 1
   fi

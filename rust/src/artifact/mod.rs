@@ -13,10 +13,13 @@
 //!   are constructed *from* the artifact ([`CompiledGrammar::engine`]),
 //!   never by hand-assembling the three `Arc`s at call sites.
 //! - Whole-artifact binary serialisation ([`CompiledGrammar::to_bytes`] /
-//!   [`CompiledGrammar::from_bytes`], magic `SYNCART1`) extends the mask
-//!   store's `SYNCMSK1` format with the grammar source and tokenizer, so
-//!   a server cold-starts from a cache file instead of recompiling
-//!   ([`CompiledGrammar::load_or_compile`]).
+//!   [`CompiledGrammar::from_bytes`], magic `SYNCART1`) wraps the mask
+//!   store's section (`SYNCMSK2`, 8-byte-aligned; legacy `SYNCMSK1` still
+//!   reads) with the grammar source and tokenizer, so a server
+//!   cold-starts from a cache file instead of recompiling
+//!   ([`CompiledGrammar::load_or_compile`]) — and warm starts are
+//!   zero-copy: the cache file is `mmap`'d and the store serves lookups
+//!   straight from the mapping (`docs/artifacts.md`).
 //! - [`GrammarRegistry`] maps grammar names to artifacts so one serving
 //!   coordinator admits requests targeting *different* grammars into the
 //!   same batched decode loop (see `coordinator/server.rs`).
@@ -35,6 +38,7 @@ use crate::lexer::postlex_for;
 use crate::mask::{MaskStore, MaskStoreConfig};
 use crate::parser::{LrMode, LrTable};
 use crate::tokenizer::Tokenizer;
+use crate::util::blob::Blob;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -216,15 +220,16 @@ impl CompiledGrammar {
 
     /// Serialise the whole artifact: magic `SYNCART1`, then the grammar
     /// name + EBNF source, the mask-store options, the tokenizer (its
-    /// canonical JSON), and the mask-store blob (`SYNCMSK1` format,
-    /// unchanged).
+    /// canonical JSON), and — after zero-padding to an 8-byte boundary so
+    /// the section is readable in place from a mapped file — the
+    /// mask-store blob (`SYNCMSK2`). See `docs/artifacts.md`.
     pub fn to_bytes(&self) -> Vec<u8> {
         let name = self.name.as_bytes();
         let source = self.source.as_bytes();
         let tok_json = self.tok.to_json();
         let tok_bytes = tok_json.as_bytes();
         let store_blob = self.store.to_bytes();
-        let mut out = Vec::with_capacity(80 + source.len() + tok_bytes.len() + store_blob.len());
+        let mut out = Vec::with_capacity(96 + source.len() + tok_bytes.len() + store_blob.len());
         out.extend_from_slice(b"SYNCART1");
         let push64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
         push64(&mut out, name.len() as u64);
@@ -243,6 +248,7 @@ impl CompiledGrammar {
         out.extend_from_slice(name);
         out.extend_from_slice(source);
         out.extend_from_slice(tok_bytes);
+        crate::util::blob::pad8(&mut out);
         out.extend_from_slice(&store_blob);
         out
     }
@@ -250,18 +256,47 @@ impl CompiledGrammar {
     /// Deserialise a blob written by [`CompiledGrammar::to_bytes`]. The
     /// grammar + LR table are rebuilt from the embedded source (cheap);
     /// the mask store — the dominant offline cost — loads directly.
+    /// Always copies the store into owned storage; the zero-copy path is
+    /// [`CompiledGrammar::from_blob`] / [`CompiledGrammar::from_file`].
     pub fn from_bytes(data: &[u8]) -> Result<Arc<CompiledGrammar>, ArtifactError> {
-        CompiledGrammar::from_bytes_inner(data, None)
+        CompiledGrammar::from_parts(data, None, None)
     }
 
-    /// [`CompiledGrammar::from_bytes`] with an already-trusted tokenizer:
-    /// when the caller has *proved* (via the header check) that the blob's
-    /// tokenizer JSON equals `tok`'s, the embedded copy is skipped and the
-    /// caller's `Arc` is shared — keeping `Arc::ptr_eq` fast paths (e.g.
-    /// in `GrammarRegistry::register`) alive and avoiding a duplicate
-    /// vocabulary table per warm-loaded grammar.
-    fn from_bytes_inner(
+    /// Warm-load from an 8-aligned [`Blob`] (typically a mapped cache
+    /// file): header fields and the embedded tokenizer/source are parsed
+    /// normally, but the mask-store section — virtually the whole blob —
+    /// is served *in place* from the mapping (see
+    /// [`MaskStore::from_blob_section`]); nothing store-sized is copied.
+    pub fn from_blob(blob: Arc<Blob>) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        CompiledGrammar::from_blob_inner(blob, None)
+    }
+
+    /// Map `path` and warm-load it zero-copy.
+    pub fn from_file(path: &std::path::Path) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let blob = Blob::from_file(path)?;
+        CompiledGrammar::from_blob(Arc::new(blob))
+    }
+
+    fn from_blob_inner(
+        blob: Arc<Blob>,
+        trusted_tok: Option<Arc<Tokenizer>>,
+    ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let data: &[u8] = &blob;
+        CompiledGrammar::from_parts(data, Some(&blob), trusted_tok)
+    }
+
+    /// Shared deserialiser. `blob` present → the store section becomes a
+    /// zero-copy view into it (`data` must be `&blob[..]`); absent → the
+    /// store is copy-deserialised from `data`.
+    ///
+    /// `trusted_tok`: when the caller has *proved* (via the header check)
+    /// that the blob's tokenizer JSON equals `tok`'s, the embedded copy is
+    /// skipped and the caller's `Arc` is shared — keeping `Arc::ptr_eq`
+    /// fast paths (e.g. in `GrammarRegistry::register`) alive and avoiding
+    /// a duplicate vocabulary table per warm-loaded grammar.
+    fn from_parts(
         data: &[u8],
+        blob: Option<&Arc<Blob>>,
         trusted_tok: Option<Arc<Tokenizer>>,
     ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
         let t0 = Instant::now();
@@ -297,7 +332,14 @@ impl CompiledGrammar {
             .map_err(|_| corrupt("non-utf8 source"))?;
         let tok_json = std::str::from_utf8(r_(r.take(tok_len))?)
             .map_err(|_| corrupt("non-utf8 tokenizer"))?;
-        let store_blob = r_(r.take(store_len))?;
+        // Back-compat: legacy artifacts embed the SYNCMSK1 store directly
+        // after the tokenizer; current ones pad to an 8-byte boundary so
+        // the SYNCMSK2 section is alignable for in-place reads.
+        if r.peek(8) != b"SYNCMSK1" {
+            r_(r.align8())?;
+        }
+        let store_off = r.pos();
+        r_(r.take(store_len))?;
         if !r.at_end() {
             return Err(corrupt("trailing bytes after artifact"));
         }
@@ -313,9 +355,12 @@ impl CompiledGrammar {
         let table = Arc::new(LrTable::build(&grammar, lr_mode));
         let table_secs = t1.elapsed().as_secs_f64();
         let postlex = postlex_for(&name, &grammar);
-        let store = Arc::new(
-            MaskStore::from_bytes(store_blob).map_err(ArtifactError::Corrupt)?,
-        );
+        let store = match blob {
+            Some(b) => MaskStore::from_blob_section(b.clone(), store_off, store_len),
+            None => MaskStore::from_bytes(&data[store_off..store_off + store_len]),
+        }
+        .map_err(ArtifactError::Corrupt)?;
+        let store = Arc::new(store);
         if store.vocab_size() != tok.vocab_size() {
             return Err(ArtifactError::Mismatch(format!(
                 "store vocab {} != tokenizer vocab {}",
@@ -392,6 +437,11 @@ impl CompiledGrammar {
     /// Warm-start a built-in grammar from `path` when the cached artifact
     /// matches (name, source, config, tokenizer); otherwise compile and
     /// (best-effort) write the cache. The bool is true on a cache hit.
+    ///
+    /// The cache file is *mapped*, not read: the header check touches a
+    /// few KB, and on a hit the mask store serves straight from the
+    /// mapping — warm start is O(validate header + page faults) instead
+    /// of O(copy whole store).
     pub fn load_or_compile(
         path: &std::path::Path,
         name: &str,
@@ -399,12 +449,12 @@ impl CompiledGrammar {
         cfg: &ArtifactConfig,
     ) -> Result<(Arc<CompiledGrammar>, bool), ArtifactError> {
         let source = Grammar::builtin_source(name)?;
-        if let Ok(data) = std::fs::read(path) {
-            if CompiledGrammar::header_matches(&data, name, source, cfg, &tok.to_json()) {
+        if let Ok(blob) = Blob::from_file(path) {
+            if CompiledGrammar::header_matches(&blob, name, source, cfg, &tok.to_json()) {
                 // Header proved the embedded tokenizer equals `tok`, so the
                 // caller's Arc is shared instead of deserialising a copy.
                 if let Ok(art) =
-                    CompiledGrammar::from_bytes_inner(&data, Some(tok.clone()))
+                    CompiledGrammar::from_blob_inner(Arc::new(blob), Some(tok.clone()))
                 {
                     return Ok((art, true));
                 }
@@ -415,8 +465,10 @@ impl CompiledGrammar {
             let _ = std::fs::create_dir_all(dir);
         }
         // Best-effort cache write: an unwritable cache must not discard a
-        // perfectly usable compile.
-        let _ = std::fs::write(path, art.to_bytes());
+        // perfectly usable compile. Atomic (temp file + rename) because
+        // other processes may be serving from a mapping of the stale file
+        // — an in-place write would truncate under their page faults.
+        let _ = crate::util::blob::write_atomic(path, &art.to_bytes());
         Ok((art, false))
     }
 }
@@ -484,6 +536,77 @@ mod tests {
     }
 
     #[test]
+    fn legacy_syncart1_with_embedded_syncmsk1_still_loads() {
+        // Format stability: a PR-1-era artifact — SYNCART1 header with the
+        // SYNCMSK1 store appended directly after the tokenizer, no
+        // alignment padding — must keep warm-loading, with identical masks.
+        let cfg = ArtifactConfig::default();
+        let art = CompiledGrammar::compile("json", byte_tok(), &cfg).unwrap();
+        let name = art.name.as_bytes();
+        let source = art.source.as_bytes();
+        let tok_json = art.tok.to_json();
+        let store_v1 = art.store.to_bytes_v1();
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(b"SYNCART1");
+        let push64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
+        push64(&mut legacy, name.len() as u64);
+        push64(&mut legacy, source.len() as u64);
+        push64(&mut legacy, 0); // Lalr
+        push64(&mut legacy, art.mask_cfg.with_m1 as u64);
+        push64(&mut legacy, art.mask_cfg.max_token_len as u64);
+        push64(&mut legacy, tok_json.len() as u64);
+        push64(&mut legacy, store_v1.len() as u64);
+        legacy.extend_from_slice(name);
+        legacy.extend_from_slice(source);
+        legacy.extend_from_slice(tok_json.as_bytes());
+        legacy.extend_from_slice(&store_v1); // unpadded, as PR 1 wrote it
+        let old = CompiledGrammar::from_bytes(&legacy).unwrap();
+        assert!(old.compile_stats.from_cache);
+        // And through the blob/mmap entry point too (copy fallback).
+        let old_blob =
+            CompiledGrammar::from_blob(Arc::new(crate::util::blob::Blob::from_vec(
+                legacy,
+            )))
+            .unwrap();
+        assert!(!old_blob.store.stats.zero_copy, "legacy stores are copied");
+        use crate::engine::ConstraintEngine as _;
+        for prefix in ["{", "{\"k\": [1, ", "{\"s\": \"ab"] {
+            let mut e1 = art.engine();
+            let mut e2 = old.engine();
+            let mut e3 = old_blob.engine();
+            e1.reset(prefix);
+            e2.reset(prefix);
+            e3.reset(prefix);
+            let m1 = e1.compute_mask().unwrap().unwrap().clone();
+            assert_eq!(&m1, e2.compute_mask().unwrap().unwrap(), "at {prefix:?}");
+            assert_eq!(&m1, e3.compute_mask().unwrap().unwrap(), "at {prefix:?}");
+        }
+    }
+
+    #[test]
+    fn from_file_is_zero_copy_and_mask_identical() {
+        let dir = std::env::temp_dir().join("syncode_artifact_mmap_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("json.syncart");
+        let cfg = ArtifactConfig::default();
+        let art = CompiledGrammar::compile("json", byte_tok(), &cfg).unwrap();
+        std::fs::write(&path, art.to_bytes()).unwrap();
+        let mapped = CompiledGrammar::from_file(&path).unwrap();
+        if crate::util::blob::Blob::HOST_VIEWABLE && cfg!(unix) {
+            assert!(
+                mapped.store.stats.zero_copy && mapped.store.stats.mapped,
+                "warm load must serve the store from an actual mapping"
+            );
+        }
+        assert_eq!(art.store.to_bytes(), mapped.store.to_bytes());
+        use crate::engine::ConstraintEngine as _;
+        let mut e = mapped.engine();
+        e.reset("{");
+        assert!(e.compute_mask().unwrap().unwrap().get(b'"' as usize));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn from_bytes_rejects_garbage() {
         assert!(CompiledGrammar::from_bytes(b"junk").is_err());
         assert!(CompiledGrammar::from_bytes(b"SYNCART1short").is_err());
@@ -512,6 +635,9 @@ mod tests {
             CompiledGrammar::load_or_compile(&path, "calc", byte_tok(), &cfg).unwrap();
         assert!(hit2, "second load must hit the cache");
         assert_eq!(a1.store.to_bytes(), a2.store.to_bytes());
+        if crate::util::blob::Blob::HOST_VIEWABLE && cfg!(unix) {
+            assert!(a2.store.stats.zero_copy, "cache hit must be served zero-copy");
+        }
         // A different tokenizer invalidates the cache.
         let other = Arc::new(Tokenizer::train(b"1 + 2 + 3 + 4 + 5 + 6", 4));
         let (_, hit3) =

@@ -4,6 +4,7 @@
 
 use crate::grammar::{Grammar, GrammarError, TermId};
 use crate::lexer::{lexable_terms, postlex_for, LexMeta, LexToken, Lexer, PostLex, PostLexResult};
+use crate::mask::LookupPlan;
 use crate::parser::{
     compute_accept_sequences, AcceptContext, AcceptSequences, IncrementalParser, LrMode,
     LrTable, ParseStatus, ParserState,
@@ -52,6 +53,9 @@ pub struct GrammarContext {
 /// Per-step analysis of a partial output `C_k`.
 pub struct Analysis {
     pub acc: AcceptSequences,
+    /// The remainder walked once through each unique head DFA (shared by
+    /// mask assembly, opportunistic probes and prefix-validity checks).
+    pub plan: LookupPlan,
     /// Remainder byte range start in the analysed text.
     pub remainder_start: usize,
     pub remainder_term: Option<TermId>,
@@ -141,8 +145,10 @@ impl GrammarContext {
             exact_follow: self.exact_follow,
         };
         let acc = compute_accept_sequences(&cx);
+        let plan = LookupPlan::build(&self.grammar, &acc, meta.remainder(text));
         Ok(Analysis {
             acc,
+            plan,
             remainder_start: meta.remainder_start,
             remainder_term: meta.remainder_term,
             plr,
@@ -158,14 +164,9 @@ impl GrammarContext {
         match self.analyze(text, &mut inc) {
             Err(_) => false,
             Ok(a) => {
-                if a.acc.eos_ok || a.remainder_start == text.len() {
-                    return true;
-                }
-                let r = &text[a.remainder_start..];
-                a.acc.seqs.iter().any(|seq| {
-                    let dfa = &self.grammar.terminals[seq[0] as usize].dfa;
-                    dfa.is_live(dfa.walk(dfa.start(), r))
-                })
+                // The head walks were already done while building the
+                // analysis' lookup plan — no re-walk here.
+                a.acc.eos_ok || a.remainder_start == text.len() || a.plan.any_live()
             }
         }
     }
@@ -231,6 +232,29 @@ mod tests {
             .check_complete(b"SELECT a, count(*) FROM t JOIN u ON t.id = u.id WHERE a > 3 GROUP BY a ORDER BY a DESC LIMIT 5")
             .is_ok());
         assert!(cx.check_complete(b"SELECT FROM t").is_err());
+    }
+
+    #[test]
+    fn lookup_plan_dedupes_heads_and_matches_direct_walks() {
+        // The plan performs one walk per *unique* head terminal and its
+        // cached (q, live) equals a direct walk of the remainder.
+        let cx = GrammarContext::builtin("calc", LrMode::Lalr).unwrap();
+        let text = b"math_sqrt(3) * (2";
+        let mut inc = cx.new_parser();
+        let a = cx.analyze(text, &mut inc).unwrap();
+        let r = &text[a.remainder_start..];
+        assert!(a.plan.walks() <= a.acc.seqs.len());
+        let unique: std::collections::HashSet<_> =
+            a.acc.seqs.iter().map(|s| s[0]).collect();
+        assert_eq!(a.plan.walks(), unique.len());
+        for (i, seq) in a.acc.seqs.iter().enumerate() {
+            let h = a.plan.head(i);
+            assert_eq!(h.term, seq[0]);
+            let dfa = &cx.grammar.terminals[seq[0] as usize].dfa;
+            let q = dfa.walk(dfa.start(), r);
+            assert_eq!(h.q, q);
+            assert_eq!(h.live, dfa.is_live(q));
+        }
     }
 
     #[test]

@@ -14,6 +14,9 @@ mod syncode;
 pub mod baselines;
 
 pub use context::{Analysis, GrammarContext, PrefixError};
+// Re-exported for engine-side callers; the types live in `mask` (they are
+// pure store-lookup plans, below the engine in the layering).
+pub use crate::mask::{HeadWalk, LookupPlan};
 pub use syncode::SyncodeEngine;
 
 use crate::util::bitset::BitSet;

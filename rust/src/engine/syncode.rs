@@ -11,7 +11,7 @@ use super::context::{Analysis, GrammarContext, PrefixError};
 use super::ConstraintEngine;
 use crate::grammar::TermId;
 use crate::lexer::{LexMeta, LexToken, Lexer};
-use crate::mask::{grammar_mask, MaskStore};
+use crate::mask::{grammar_mask_planned, MaskStore};
 use crate::parser::{IncrementalParser, ParseStatus};
 use crate::tokenizer::Tokenizer;
 use crate::util::bitset::BitSet;
@@ -51,6 +51,11 @@ pub struct SyncodeEngine {
     use_lex_cache: bool,
     /// Instrumentation: total mask-store lookups (≈ |A| per step).
     pub lookups: u64,
+    /// Instrumentation: total remainder DFA walks. With the per-step
+    /// [`LookupPlan`](super::LookupPlan) this grows by at most one walk
+    /// per unique accept-sequence head *per step* — `token_allowed`
+    /// probes perform zero walks of their own.
+    pub walks: u64,
 }
 
 impl SyncodeEngine {
@@ -74,6 +79,7 @@ impl SyncodeEngine {
             probe_tokens: Vec::new(),
             use_lex_cache: true,
             lookups: 0,
+            walks: 0,
         }
     }
 
@@ -143,7 +149,11 @@ impl SyncodeEngine {
             let cx = self.cx.clone();
             let a = cx.analyze_lexed(&text, &self.lex_cache.tokens, &meta, &mut self.inc);
             self.text = text;
-            self.step = Some(a?);
+            let a = a?;
+            // The step's remainder walks happen exactly here, once, while
+            // the analysis builds its LookupPlan.
+            self.walks += a.plan.walks() as u64;
+            self.step = Some(a);
         }
         Ok(self.step.as_ref().unwrap())
     }
@@ -182,8 +192,8 @@ impl ConstraintEngine for SyncodeEngine {
         self.ensure_step()?;
         if !self.mask_valid {
             let a = self.step.as_ref().unwrap();
-            let r = &self.text[a.remainder_start..];
-            grammar_mask(&self.store, &self.cx.grammar, &a.acc, r, &mut self.mask);
+            // Walk-free: the plan carries the remainder's landing states.
+            grammar_mask_planned(&self.store, &a.acc, &a.plan, &mut self.mask);
             self.lookups += a.acc.seqs.len() as u64;
             self.mask_valid = true;
         }
@@ -203,18 +213,17 @@ impl ConstraintEngine for SyncodeEngine {
         if bytes.is_empty() {
             return Ok(false);
         }
-        let g = &self.cx.grammar;
-        let r_start = a.remainder_start;
-        let r = &self.text[r_start..];
-        for seq in &a.acc.seqs {
-            let dfa = &g.terminals[seq[0] as usize].dfa;
-            let q = dfa.walk(dfa.start(), r);
-            if !dfa.is_live(q) {
+        // Opportunistic probe = O(|A|) pure store lookups. The remainder
+        // walks were done once for the step by the LookupPlan — probing a
+        // thousand candidate tokens performs zero additional walks.
+        for (i, seq) in a.acc.seqs.iter().enumerate() {
+            let h = a.plan.head(i);
+            if !h.live {
                 continue;
             }
             let hit = match seq.len() {
-                1 => self.store.m0_contains(seq[0], q, token_id as usize),
-                _ => self.store.m1_contains(seq[0], q, seq[1], token_id as usize),
+                1 => self.store.m0_contains(h.term, h.q, token_id as usize),
+                _ => self.store.m1_contains(h.term, h.q, seq[1], token_id as usize),
             };
             if hit {
                 return Ok(true);
@@ -427,6 +436,52 @@ mod tests {
         let m3 = e.compute_mask().unwrap().unwrap().clone();
         assert!(e.lookups > lookups_after_first);
         assert_ne!(m1, m3, "different step should produce a different mask");
+    }
+
+    #[test]
+    fn token_allowed_performs_no_walks_beyond_the_plan() {
+        // The tentpole contract: at most one remainder DFA walk per
+        // unique accept-sequence head per *step* — probing the whole
+        // vocabulary must not add a single walk.
+        let mut e = engine("json");
+        e.reset("{\"k");
+        let vocab = e.compute_mask().unwrap().unwrap().len() as u32;
+        let walks_after_step = e.walks;
+        let n = e.accept_sequences().unwrap().len() as u64;
+        assert!(walks_after_step <= n, "plan walked more than |A| heads");
+        assert!(walks_after_step > 0);
+        for id in 0..vocab {
+            let _ = e.token_allowed(id).unwrap();
+        }
+        assert_eq!(
+            e.walks, walks_after_step,
+            "token_allowed probes must reuse the step's LookupPlan"
+        );
+        // A new step re-walks (once), an idempotent recompute does not.
+        e.append(b"\"");
+        e.compute_mask().unwrap();
+        let walks_next_step = e.walks;
+        assert!(walks_next_step > walks_after_step);
+        e.compute_mask().unwrap();
+        assert_eq!(e.walks, walks_next_step);
+    }
+
+    #[test]
+    fn planned_masks_match_token_allowed_over_vocabulary() {
+        // Bit-identity between the planned full mask and per-token
+        // opportunistic probes (both now read the same cached walks).
+        let mut e = engine("calc");
+        for prefix in ["", "math_sqrt(3", "1 + ", "2."] {
+            e.reset(prefix);
+            let mask = e.compute_mask().unwrap().unwrap().clone();
+            for id in 0..mask.len() as u32 {
+                assert_eq!(
+                    e.token_allowed(id).unwrap(),
+                    mask.get(id as usize),
+                    "token {id} at {prefix:?}"
+                );
+            }
+        }
     }
 
     #[test]

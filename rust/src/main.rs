@@ -119,9 +119,15 @@ fn artifact_for(args: &Args, gname: &str, tok: Arc<Tokenizer>) -> Arc<CompiledGr
         Some(path) => {
             let (art, hit) = CompiledGrammar::load_or_compile(&path, gname, tok, &cfg)
                 .unwrap_or_else(|e| panic!("artifact {gname}: {e}"));
+            let ss = &art.store.stats;
+            let how = match (hit, ss.zero_copy, ss.mapped) {
+                (true, true, true) => "warm-loaded (zero-copy mmap) from",
+                (true, true, false) => "warm-loaded (zero-copy view) from",
+                (true, false, _) => "warm-loaded (copy) from",
+                (false, ..) => "compiled + cached to",
+            };
             eprintln!(
-                "[artifact {gname}: {} {} in {:.2}s]",
-                if hit { "warm-loaded from" } else { "compiled + cached to" },
+                "[artifact {gname}: {how} {} in {:.2}s]",
                 path.display(),
                 art.compile_stats.total_secs
             );
@@ -232,7 +238,7 @@ fn cmd_compile(args: &Args) {
     let cache_dir = args.get_or("cache-dir", "artifacts/grammar-cache");
 
     let mut t = Table::new(&[
-        "grammar", "|V|", "|Q|", "threads", "cached", "grammar(s)", "tables(s)",
+        "grammar", "|V|", "|Q|", "threads", "cached", "load", "grammar(s)", "tables(s)",
         "store(s)", "total(s)", "blob",
     ]);
     for gname in &gnames {
@@ -251,6 +257,12 @@ fn cmd_compile(args: &Args) {
             ss.num_dfa_states.to_string(),
             ss.build_threads.to_string(),
             if hit { "warm" } else { "cold" }.to_string(),
+            match (ss.zero_copy, ss.mapped) {
+                (true, true) => "mmap",
+                (true, false) => "view",
+                _ => "copy",
+            }
+            .to_string(),
             format!("{:.3}", cs.grammar_secs),
             format!("{:.3}", cs.table_secs),
             format!("{:.3}", cs.store_secs),

@@ -27,10 +27,79 @@ use crate::grammar::{Grammar, TermId};
 use crate::parser::AcceptSequences;
 use crate::util::bitset::BitSet;
 
+/// One remainder walk through an accept-sequence head DFA: terminal τ,
+/// the state `q = walk(q₀^τ, r)` it lands in, and whether that state is
+/// live. Computed once per step and reused by every store lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeadWalk {
+    pub term: TermId,
+    pub q: u32,
+    pub live: bool,
+}
+
+/// Per-step lookup plan: the remainder `r` walked through each *unique*
+/// accept-sequence head DFA exactly once, with the landing state and
+/// liveness cached. `compute_mask` ([`grammar_mask_planned`]),
+/// `token_allowed` (opportunistic masking) and the mask-pool prewarm all
+/// consume the same plan through the engine's cached per-step analysis —
+/// before this existed, `token_allowed` re-walked `r` for every candidate
+/// token, an O(|A|·|r|) cost *per probe* on the serving hot path.
+#[derive(Debug, Clone)]
+pub struct LookupPlan {
+    /// Parallel to `acc.seqs`: index into `heads` of seq\[0\]'s walk.
+    seq_head: Vec<u32>,
+    /// Deduplicated head walks, in first-occurrence order.
+    heads: Vec<HeadWalk>,
+}
+
+impl LookupPlan {
+    /// Walk `r` through every unique head DFA of `acc` once.
+    pub fn build(g: &Grammar, acc: &AcceptSequences, r: &[u8]) -> LookupPlan {
+        let mut heads: Vec<HeadWalk> = Vec::new();
+        let mut seq_head = Vec::with_capacity(acc.seqs.len());
+        for seq in &acc.seqs {
+            let term = seq[0];
+            let idx = match heads.iter().position(|h| h.term == term) {
+                Some(i) => i,
+                None => {
+                    let dfa = &g.terminals[term as usize].dfa;
+                    let q = dfa.walk(dfa.start(), r);
+                    heads.push(HeadWalk { term, q, live: dfa.is_live(q) });
+                    heads.len() - 1
+                }
+            };
+            seq_head.push(idx as u32);
+        }
+        LookupPlan { seq_head, heads }
+    }
+
+    /// The cached walk for accept sequence `i` (index into `acc.seqs`).
+    #[inline]
+    pub fn head(&self, i: usize) -> &HeadWalk {
+        &self.heads[self.seq_head[i] as usize]
+    }
+
+    /// Number of DFA walks this plan performed — the per-step walk cost,
+    /// `≤ |A|` (exactly the number of distinct head terminals).
+    pub fn walks(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Does any accept sequence keep the remainder alive?
+    pub fn any_live(&self) -> bool {
+        self.heads.iter().any(|h| h.live)
+    }
+}
+
 /// Compute the grammar mask (Algorithm 2): union of per-sequence masks.
 ///
 /// `scratch` is the output mask (cleared first); reusing it avoids
 /// per-step allocation on the serving hot path.
+///
+/// This is the *reference* implementation: it re-walks the remainder for
+/// every sequence. The engine hot path uses [`grammar_mask_planned`] with
+/// the per-step [`LookupPlan`] instead; the two are asserted bit-identical
+/// in tests.
 pub fn grammar_mask(
     store: &MaskStore,
     g: &Grammar,
@@ -41,6 +110,33 @@ pub fn grammar_mask(
     scratch.clear_all();
     for seq in &acc.seqs {
         union_sequence_mask(store, g, seq, remainder, scratch);
+    }
+    if acc.eos_ok {
+        scratch.set(store.eos_id() as usize);
+    }
+}
+
+/// [`grammar_mask`] driven by a prebuilt [`LookupPlan`]: the remainder
+/// walks were done once when the step's analysis was computed, so mask
+/// assembly is pure store lookups + word-wise unions — zero DFA walks.
+pub fn grammar_mask_planned(
+    store: &MaskStore,
+    acc: &AcceptSequences,
+    plan: &LookupPlan,
+    scratch: &mut BitSet,
+) {
+    scratch.clear_all();
+    for (i, seq) in acc.seqs.iter().enumerate() {
+        let h = plan.head(i);
+        if !h.live {
+            continue;
+        }
+        match seq.len() {
+            1 => store.union_m0(h.term, h.q, scratch),
+            // Longer sequences fall back to the α=1 prefix (sound
+            // over-approximation, Lemma 3), same as the reference path.
+            _ => store.union_m1(h.term, h.q, seq[1], scratch),
+        }
     }
     if acc.eos_ok {
         scratch.set(store.eos_id() as usize);
@@ -136,6 +232,31 @@ mod tests {
         assert!(m.get(b'7' as usize));
         assert!(m.get(store.eos_id() as usize));
         assert!(!m.get(b'a' as usize));
+    }
+
+    #[test]
+    fn planned_mask_bit_identical_to_reference() {
+        // The LookupPlan fast path must produce exactly the bytes the
+        // walk-per-sequence reference produces, including duplicate head
+        // terminals and dead walks.
+        let (g, tok, store) = setup();
+        let int = g.term_id("INT").unwrap();
+        let float = g.term_id("FLOAT").unwrap();
+        let plus = g.term_id("PLUS").unwrap();
+        for (seqs, eos_ok, r) in [
+            (vec![vec![int], vec![float], vec![int, plus]], false, b"2".as_slice()),
+            (vec![vec![float, plus], vec![float]], true, b"2.".as_slice()),
+            (vec![vec![int]], false, b"abc".as_slice()), // dead walk
+            (vec![], true, b"".as_slice()),
+        ] {
+            let acc = AcceptSequences { seqs, eos_ok };
+            let plan = LookupPlan::build(&g, &acc, r);
+            let mut reference = BitSet::new(tok.vocab_size());
+            grammar_mask(&store, &g, &acc, r, &mut reference);
+            let mut planned = BitSet::new(tok.vocab_size());
+            grammar_mask_planned(&store, &acc, &plan, &mut planned);
+            assert_eq!(reference, planned, "diverged at r={r:?}");
+        }
     }
 
     #[test]

@@ -14,12 +14,30 @@
 //!
 //! Identical masks are interned into a shared pool; tables store pool
 //! indices. `MaskStoreStats` reports build time and memory for Table 5.
+//!
+//! # Storage formats
+//!
+//! Two serialised formats exist (see `docs/artifacts.md` for the byte-level
+//! layout):
+//!
+//! - **`SYNCMSK2`** (current writer): index tables and the interned mask
+//!   pool are 8-byte-aligned little-endian sections, so a store can be
+//!   served either from owned vectors or **in place** from an `mmap`'d
+//!   [`Blob`] ([`MaskStore::from_blob`]) — warm start costs header
+//!   validation plus page faults, with zero per-mask copies. The header
+//!   records `eos_id` and the build-relevant [`MaskStoreConfig`] fields so
+//!   a stale, differently-configured cache can never be served.
+//! - **`SYNCMSK1`** (legacy): unaligned; always deserialised with a copy.
+//!   [`MaskStore::from_bytes`] keeps reading it; [`MaskStore::to_bytes_v1`]
+//!   keeps writing it for format-stability tests.
 
 use crate::grammar::{Grammar, TermId, TermPattern};
 use crate::regex::DEAD;
 use crate::tokenizer::Tokenizer;
-use crate::util::bitset::BitSet;
+use crate::util::bitset::{BitSet, BitView};
+use crate::util::blob::{pad8, Blob, BlobReader};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Build options.
 #[derive(Debug, Clone)]
@@ -28,7 +46,9 @@ pub struct MaskStoreConfig {
     /// sequences get precise masks (2-length fall back to M₀ semantics).
     pub with_m1: bool,
     /// Cap on token length considered for prefix-split positions (tokens
-    /// longer than this still get condition-1 treatment).
+    /// longer than this are excluded from the store). Clamped to
+    /// [`MaskStoreConfig::MAX_SPLIT_LEN`]; see
+    /// [`MaskStoreConfig::effective_max_token_len`].
     pub max_token_len: usize,
     /// Worker threads for the per-(state, token) walk loop: 1 = serial
     /// (the default), 0 = one per available core, n = exactly n. The
@@ -44,6 +64,18 @@ impl Default for MaskStoreConfig {
 }
 
 impl MaskStoreConfig {
+    /// Hard upper bound on per-token split positions: split bitmasks are
+    /// 128-bit, holding positions 0..=127, so a token of up to 127 bytes
+    /// keeps *every* split point including its final one.
+    pub const MAX_SPLIT_LEN: usize = 127;
+
+    /// The cap the build actually applies: `max_token_len` clamped so the
+    /// split-position bitmask can represent the final split point of the
+    /// longest admitted token.
+    pub fn effective_max_token_len(&self) -> usize {
+        self.max_token_len.min(Self::MAX_SPLIT_LEN)
+    }
+
     /// Default options with the parallel build enabled (one worker per
     /// available core). Used by the artifact layer's offline compile.
     pub fn parallel() -> Self {
@@ -67,23 +99,54 @@ pub struct MaskStoreStats {
     pub mem_bytes: usize,
     /// Bytes the tables would occupy without interning (paper's layout).
     pub raw_bytes: usize,
+    /// True when the store is a borrowed view over a blob — lookups read
+    /// the serialised bytes in place, no table was deserialised-by-copy.
+    pub zero_copy: bool,
+    /// True when that blob is an actual file mapping (the mmap fast
+    /// path); false for an owned in-memory blob (e.g. the non-unix
+    /// read-file fallback), where the file was still read+copied once.
+    pub mapped: bool,
+}
+
+/// Table storage: either owned vectors (built or copy-deserialised) or a
+/// borrowed view into an 8-aligned [`Blob`] (the zero-copy warm path).
+enum StoreData {
+    Owned {
+        offsets: Vec<u32>,
+        m0: Vec<u32>,
+        m1: Vec<u32>,
+        /// Interned pool, flattened: mask `i` is words
+        /// `[i*words_per, (i+1)*words_per)`.
+        pool: Vec<u64>,
+    },
+    View {
+        blob: Arc<Blob>,
+        offsets: Sect,
+        m0: Sect,
+        m1: Sect,
+        pool: Sect,
+    },
+}
+
+/// A section of a blob: absolute byte offset + element count.
+#[derive(Clone, Copy)]
+struct Sect {
+    off: usize,
+    len: usize,
 }
 
 /// The precomputed DFA mask store.
 pub struct MaskStore {
     vocab_size: usize,
     eos_id: u32,
-    /// Global state index offsets per terminal: state q of terminal τ is
-    /// `offsets[τ] + q`.
-    offsets: Vec<u32>,
     num_states: usize,
-    /// Interned mask pool.
-    pool: Vec<BitSet>,
-    /// M₀: pool index per global state (u32::MAX = empty mask).
-    m0: Vec<u32>,
-    /// M₁: pool index per (global state, next terminal); empty when !with_m1.
-    m1: Vec<u32>,
     nterms: usize,
+    words_per: usize,
+    with_m1: bool,
+    /// Effective token-length cap the store was built with; `None` for
+    /// legacy `SYNCMSK1` blobs, which did not record it.
+    max_token_len: Option<usize>,
+    data: StoreData,
     pub stats: MaskStoreStats,
 }
 
@@ -95,17 +158,74 @@ impl MaskStore {
         self.eos_id
     }
 
+    /// Was the store built with M₁ tables?
+    pub fn with_m1(&self) -> bool {
+        self.with_m1
+    }
+
+    /// Effective token-length cap recorded in the store header (`None`
+    /// for legacy blobs).
+    pub fn max_token_len(&self) -> Option<usize> {
+        self.max_token_len
+    }
+
+    // ---- table accessors (one match, then plain slices) ----------------
+
+    fn offsets(&self) -> &[u32] {
+        match &self.data {
+            StoreData::Owned { offsets, .. } => offsets,
+            StoreData::View { blob, offsets: s, .. } => {
+                blob.u32s(s.off, s.len).expect("offsets section validated at load")
+            }
+        }
+    }
+
+    fn m0_tab(&self) -> &[u32] {
+        match &self.data {
+            StoreData::Owned { m0, .. } => m0,
+            StoreData::View { blob, m0: s, .. } => {
+                blob.u32s(s.off, s.len).expect("m0 section validated at load")
+            }
+        }
+    }
+
+    fn m1_tab(&self) -> &[u32] {
+        match &self.data {
+            StoreData::Owned { m1, .. } => m1,
+            StoreData::View { blob, m1: s, .. } => {
+                blob.u32s(s.off, s.len).expect("m1 section validated at load")
+            }
+        }
+    }
+
+    fn pool_words(&self) -> &[u64] {
+        match &self.data {
+            StoreData::Owned { pool, .. } => pool,
+            StoreData::View { blob, pool: s, .. } => {
+                blob.u64s(s.off, s.len).expect("pool section validated at load")
+            }
+        }
+    }
+
+    /// Borrowed view of interned mask `idx` — for a mapped store this
+    /// reads straight out of the mapping.
+    #[inline]
+    fn pool_mask(&self, idx: u32) -> BitView<'_> {
+        let start = idx as usize * self.words_per;
+        BitView::new(&self.pool_words()[start..start + self.words_per], self.vocab_size)
+    }
+
     #[inline]
     fn gidx(&self, term: TermId, q: u32) -> usize {
-        (self.offsets[term as usize] + q) as usize
+        (self.offsets()[term as usize] + q) as usize
     }
 
     /// Union `M₀(q_τ)` into `out`.
     #[inline]
     pub fn union_m0(&self, term: TermId, q: u32, out: &mut BitSet) {
-        let idx = self.m0[self.gidx(term, q)];
+        let idx = self.m0_tab()[self.gidx(term, q)];
         if idx != NONE {
-            out.union_with(&self.pool[idx as usize]);
+            out.union_with_view(self.pool_mask(idx));
         }
     }
 
@@ -113,28 +233,27 @@ impl MaskStore {
     /// not built — a sound over-approximation).
     #[inline]
     pub fn union_m1(&self, term: TermId, q: u32, next: TermId, out: &mut BitSet) {
-        if self.m1.is_empty() {
+        if !self.with_m1 {
             return self.union_m0(term, q, out);
         }
-        let idx = self.m1[self.gidx(term, q) * self.nterms + next as usize];
+        let idx = self.m1_tab()[self.gidx(term, q) * self.nterms + next as usize];
         if idx != NONE {
-            out.union_with(&self.pool[idx as usize]);
+            out.union_with_view(self.pool_mask(idx));
         }
     }
 
     /// Membership test for one token (used by opportunistic masking).
     pub fn m1_contains(&self, term: TermId, q: u32, next: TermId, token: usize) -> bool {
-        if self.m1.is_empty() {
-            let idx = self.m0[self.gidx(term, q)];
-            return idx != NONE && self.pool[idx as usize].get(token);
+        if !self.with_m1 {
+            return self.m0_contains(term, q, token);
         }
-        let idx = self.m1[self.gidx(term, q) * self.nterms + next as usize];
-        idx != NONE && self.pool[idx as usize].get(token)
+        let idx = self.m1_tab()[self.gidx(term, q) * self.nterms + next as usize];
+        idx != NONE && self.pool_mask(idx).get(token)
     }
 
     pub fn m0_contains(&self, term: TermId, q: u32, token: usize) -> bool {
-        let idx = self.m0[self.gidx(term, q)];
-        idx != NONE && self.pool[idx as usize].get(token)
+        let idx = self.m0_tab()[self.gidx(term, q)];
+        idx != NONE && self.pool_mask(idx).get(token)
     }
 
     /// Build the store for a grammar × tokenizer pair.
@@ -149,6 +268,7 @@ impl MaskStore {
         let t0 = std::time::Instant::now();
         let nterms = g.terminals.len();
         let vocab_size = tok.vocab_size();
+        let max_token_len = cfg.effective_max_token_len();
 
         // Global state numbering.
         let mut offsets = Vec::with_capacity(nterms);
@@ -162,7 +282,7 @@ impl MaskStore {
         let tokens: Vec<(u32, &[u8])> = (0..vocab_size as u32)
             .filter(|&id| !tok.is_special(id))
             .map(|id| (id, tok.token_bytes(id)))
-            .filter(|(_, b)| !b.is_empty() && b.len() <= cfg.max_token_len)
+            .filter(|(_, b)| !b.is_empty() && b.len() <= max_token_len)
             .collect();
 
         // ---- pass 1: suffmatch(τ, t, i) -------------------------------
@@ -238,10 +358,16 @@ impl MaskStore {
                 m1[flat] = map[local as usize];
             }
         }
-        let pool = interner.pool;
+        let words_per = vocab_size.div_ceil(64);
+        let unique_masks = interner.pool.len();
+        let pool: Vec<u64> = interner
+            .pool
+            .iter()
+            .flat_map(|mask| mask.words().iter().copied())
+            .collect();
 
-        let mask_bytes = vocab_size.div_ceil(64) * 8;
-        let mem_bytes = pool.len() * mask_bytes + (m0.len() + m1.len()) * 4;
+        let mask_bytes = words_per * 8;
+        let mem_bytes = unique_masks * mask_bytes + (m0.len() + m1.len()) * 4;
         let raw_bytes = (m0.len() + m1.len()) * mask_bytes;
         let stats = MaskStoreStats {
             build_secs: t0.elapsed().as_secs_f64(),
@@ -249,22 +375,24 @@ impl MaskStore {
             vocab_size,
             num_dfa_states: num_states as usize,
             num_terminals: nterms,
-            unique_masks: pool.len(),
+            unique_masks,
             m0_entries: m0.len(),
             m1_entries: m1.len(),
             mem_bytes,
             raw_bytes,
+            zero_copy: false,
+            mapped: false,
         };
 
         MaskStore {
             vocab_size,
             eos_id: tok.eos_id,
-            offsets,
             num_states: num_states as usize,
-            pool,
-            m0,
-            m1,
             nterms,
+            words_per,
+            with_m1: cfg.with_m1,
+            max_token_len: Some(max_token_len),
+            data: StoreData::Owned { offsets, m0, m1, pool },
             stats,
         }
     }
@@ -277,10 +405,50 @@ impl MaskStore {
         self.num_states
     }
 
-    /// Serialise to a compact binary blob (paper §4.3: "we cache and
-    /// reuse this table for future inferences"). Format: header of u64
-    /// dims, then offsets, m0, m1 index tables, then the interned pool.
+    // ---- serialisation ------------------------------------------------
+
+    /// Serialise to the current `SYNCMSK2` format (paper §4.3: "we cache
+    /// and reuse this table for future inferences"): a fixed u64 header
+    /// (dims + `eos_id` + the build-relevant config), then the offsets /
+    /// M₀ / M₁ index tables and the interned pool as 8-byte-aligned
+    /// little-endian sections, readable in place via
+    /// [`MaskStore::from_blob`].
     pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let push64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
+        out.extend_from_slice(b"SYNCMSK2");
+        push64(&mut out, self.vocab_size as u64);
+        push64(&mut out, self.eos_id as u64);
+        push64(&mut out, self.num_states as u64);
+        push64(&mut out, self.nterms as u64);
+        push64(&mut out, self.with_m1 as u64);
+        // u64::MAX = "not recorded" (store was loaded from a legacy blob).
+        push64(&mut out, self.max_token_len.map(|n| n as u64).unwrap_or(u64::MAX));
+        push64(&mut out, self.m0_tab().len() as u64);
+        push64(&mut out, self.m1_tab().len() as u64);
+        push64(&mut out, (self.pool_words().len() / self.words_per.max(1)) as u64);
+        for &v in self.offsets() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        pad8(&mut out);
+        for &v in self.m0_tab() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        pad8(&mut out);
+        for &v in self.m1_tab() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        pad8(&mut out);
+        for &w in self.pool_words() {
+            push64(&mut out, w);
+        }
+        out
+    }
+
+    /// Serialise to the legacy `SYNCMSK1` format. Kept (a) so the
+    /// format-stability tests can assert old blobs still load and (b) as
+    /// the reference layout documented in `docs/artifacts.md`.
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
         let mut out = Vec::new();
         let push64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
         out.extend_from_slice(b"SYNCMSK1");
@@ -288,30 +456,171 @@ impl MaskStore {
         push64(&mut out, self.eos_id as u64);
         push64(&mut out, self.num_states as u64);
         push64(&mut out, self.nterms as u64);
-        push64(&mut out, self.offsets.len() as u64);
-        push64(&mut out, self.m0.len() as u64);
-        push64(&mut out, self.m1.len() as u64);
-        push64(&mut out, self.pool.len() as u64);
-        for &v in &self.offsets {
+        push64(&mut out, self.offsets().len() as u64);
+        push64(&mut out, self.m0_tab().len() as u64);
+        push64(&mut out, self.m1_tab().len() as u64);
+        push64(&mut out, (self.pool_words().len() / self.words_per.max(1)) as u64);
+        for &v in self.offsets() {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        for &v in &self.m0 {
+        for &v in self.m0_tab() {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        for &v in &self.m1 {
+        for &v in self.m1_tab() {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        for mask in &self.pool {
-            for &w in mask.words() {
-                push64(&mut out, w);
-            }
+        for &w in self.pool_words() {
+            push64(&mut out, w);
         }
         out
     }
 
-    /// Deserialise a blob written by [`MaskStore::to_bytes`].
+    /// Deserialise a blob written by [`MaskStore::to_bytes`] (`SYNCMSK2`)
+    /// or the legacy [`MaskStore::to_bytes_v1`] (`SYNCMSK1`). Always
+    /// copies into owned storage; use [`MaskStore::from_blob`] for the
+    /// zero-copy path.
     pub fn from_bytes(data: &[u8]) -> Result<MaskStore, String> {
-        let mut r = crate::util::blob::BlobReader::new(data);
+        match data.get(..8) {
+            Some(b"SYNCMSK1") => MaskStore::parse_v1(data),
+            Some(b"SYNCMSK2") => MaskStore::parse_v2_owned(data),
+            _ => Err("bad mask store magic".into()),
+        }
+    }
+
+    /// Zero-copy load: validate the header and index tables of a
+    /// `SYNCMSK2` blob and serve lookups directly from `blob`'s bytes.
+    /// Legacy `SYNCMSK1` content falls back to the copying loader, and so
+    /// do big-endian hosts (the format is little-endian). A misaligned
+    /// `SYNCMSK2` section is an error, never a panic.
+    pub fn from_blob(blob: Arc<Blob>) -> Result<MaskStore, String> {
+        let len = blob.len();
+        MaskStore::from_blob_section(blob, 0, len)
+    }
+
+    /// [`MaskStore::from_blob`] for a store embedded inside a larger blob
+    /// (the `SYNCART1` artifact): the section at `[off, off+len)` must be
+    /// 8-aligned relative to the blob start for the in-place view.
+    pub fn from_blob_section(
+        blob: Arc<Blob>,
+        off: usize,
+        len: usize,
+    ) -> Result<MaskStore, String> {
+        if off.checked_add(len).map(|end| end > blob.len()).unwrap_or(true) {
+            return Err("mask store section out of range".into());
+        }
+        let data = &blob[off..off + len];
+        match data.get(..8) {
+            // Legacy format: unaligned u32 tables — copy-deserialise.
+            Some(b"SYNCMSK1") => MaskStore::parse_v1(data),
+            Some(b"SYNCMSK2") => {
+                if !Blob::HOST_VIEWABLE {
+                    // Big-endian host: the LE sections need byte-swapping,
+                    // so zero-copy is impossible — copy-deserialise.
+                    return MaskStore::parse_v2_owned(data);
+                }
+                if off % 8 != 0 {
+                    return Err(format!("misaligned mask store section (offset {off})"));
+                }
+                MaskStore::parse_v2_view(blob.clone(), off, len)
+            }
+            _ => Err("bad mask store magic".into()),
+        }
+    }
+
+    /// Parse the `SYNCMSK2` header; returns the dims/config plus the
+    /// reader positioned at the start of the offsets section.
+    fn parse_v2_header(data: &[u8]) -> Result<(V2Header, BlobReader<'_>), String> {
+        let mut r = BlobReader::new(data);
+        if r.take(8)? != b"SYNCMSK2" {
+            return Err("bad mask store magic".into());
+        }
+        let vocab_size = r.len_field()?;
+        let eos_id = r.u64()? as u32;
+        let num_states = r.len_field()?;
+        let nterms = r.len_field()?;
+        let with_m1 = match r.u64()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("bad with_m1 flag {other}")),
+        };
+        let max_token_len = match r.u64()? {
+            u64::MAX => None,
+            n => Some(usize::try_from(n).map_err(|_| "oversized max_token_len")?),
+        };
+        let n_m0 = r.len_field()?;
+        let n_m1 = r.len_field()?;
+        let n_pool = r.len_field()?;
+        let header = V2Header {
+            vocab_size,
+            eos_id,
+            num_states,
+            nterms,
+            with_m1,
+            max_token_len,
+            n_m0,
+            n_m1,
+            n_pool,
+        };
+        Ok((header, r))
+    }
+
+    fn parse_v2_owned(data: &[u8]) -> Result<MaskStore, String> {
+        let (h, mut r) = MaskStore::parse_v2_header(data)?;
+        let offsets = r.u32s(h.nterms)?;
+        r.align8()?;
+        let m0 = r.u32s(h.n_m0)?;
+        r.align8()?;
+        let m1 = r.u32s(h.n_m1)?;
+        r.align8()?;
+        let words_per = h.vocab_size.div_ceil(64);
+        let pool_words =
+            h.n_pool.checked_mul(words_per).ok_or("oversized mask pool")?;
+        let pool = r.u64s(pool_words)?;
+        if !r.at_end() {
+            return Err("trailing bytes after mask store".into());
+        }
+        h.validate(&offsets, &m0, &m1)?;
+        Ok(h.into_store(StoreData::Owned { offsets, m0, m1, pool }, false, false))
+    }
+
+    fn parse_v2_view(blob: Arc<Blob>, off: usize, len: usize) -> Result<MaskStore, String> {
+        let data = &blob[off..off + len];
+        let (h, mut r) = MaskStore::parse_v2_header(data)?;
+        // Walk the sections with the reader (bounds + zero-padding checks),
+        // recording each section's absolute offset for the in-place views.
+        let words_per = h.vocab_size.div_ceil(64);
+        let sec = |r: &mut BlobReader<'_>, elems: usize, size: usize| -> Result<usize, String> {
+            let start = off + r.pos();
+            r.take(elems.checked_mul(size).ok_or("oversized table")?)?;
+            Ok(start)
+        };
+        let offsets = Sect { off: sec(&mut r, h.nterms, 4)?, len: h.nterms };
+        r.align8()?;
+        let m0 = Sect { off: sec(&mut r, h.n_m0, 4)?, len: h.n_m0 };
+        r.align8()?;
+        let m1 = Sect { off: sec(&mut r, h.n_m1, 4)?, len: h.n_m1 };
+        r.align8()?;
+        let pool_words =
+            h.n_pool.checked_mul(words_per).ok_or("oversized mask pool")?;
+        let pool = Sect { off: sec(&mut r, pool_words, 8)?, len: pool_words };
+        if !r.at_end() {
+            return Err("trailing bytes after mask store".into());
+        }
+        // Materialise the views once to validate indices (and alignment:
+        // section offsets are 8-aligned by construction, but a hostile
+        // header could still make Blob::u32s refuse — treat as corrupt).
+        let off_v = blob.u32s(offsets.off, offsets.len).ok_or("misaligned offsets section")?;
+        let m0_v = blob.u32s(m0.off, m0.len).ok_or("misaligned m0 section")?;
+        let m1_v = blob.u32s(m1.off, m1.len).ok_or("misaligned m1 section")?;
+        blob.u64s(pool.off, pool.len).ok_or("misaligned pool section")?;
+        h.validate(off_v, m0_v, m1_v)?;
+        let mapped = blob.is_mapped();
+        let data = StoreData::View { blob: blob.clone(), offsets, m0, m1, pool };
+        Ok(h.into_store(data, true, mapped))
+    }
+
+    fn parse_v1(data: &[u8]) -> Result<MaskStore, String> {
+        let mut r = BlobReader::new(data);
         if r.take(8)? != b"SYNCMSK1" {
             return Err("bad mask store magic".into());
         }
@@ -327,86 +636,149 @@ impl MaskStore {
         let m0 = r.u32s(n_m0)?;
         let m1 = r.u32s(n_m1)?;
         let words_per = vocab_size.div_ceil(64);
-        let mut pool = Vec::with_capacity(n_pool.min(1 << 20));
-        for _ in 0..n_pool {
-            let bytes = r.take(words_per * 8)?;
-            let words: Vec<u64> = bytes
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            pool.push(BitSet::from_words(words, vocab_size));
-        }
-
-        // ---- structural validation ------------------------------------
-        // The blob is untrusted (a cache file): every index a lookup can
-        // follow must be in range, or serving would panic instead of
-        // falling back to a rebuild.
-        if vocab_size == 0 || (eos_id as usize) >= vocab_size {
-            return Err("eos id outside vocabulary".into());
-        }
-        if offsets.len() != nterms {
-            return Err("offsets/terminal count mismatch".into());
-        }
-        if m0.len() != num_states {
-            return Err("m0/state count mismatch".into());
-        }
-        let m1_expect = num_states
-            .checked_mul(nterms)
-            .ok_or("oversized m1 dimensions")?;
-        if !m1.is_empty() && m1.len() != m1_expect {
-            return Err("m1/state×terminal count mismatch".into());
-        }
-        if offsets.iter().any(|&o| o as usize > num_states) {
-            return Err("terminal offset out of range".into());
-        }
-        let pool_len = pool.len() as u32;
-        if m0.iter().chain(m1.iter()).any(|&v| v != NONE && v >= pool_len) {
-            return Err("mask pool index out of range".into());
-        }
-        let mask_bytes = words_per * 8;
-        let mem_bytes = pool.len() * mask_bytes + (m0.len() + m1.len()) * 4;
-        let raw_bytes = (m0.len() + m1.len()) * mask_bytes;
-        Ok(MaskStore {
+        let pool_words = n_pool.checked_mul(words_per).ok_or("oversized mask pool")?;
+        let pool = r.u64s(pool_words)?;
+        let h = V2Header {
             vocab_size,
             eos_id,
-            offsets,
             num_states,
-            stats: MaskStoreStats {
-                build_secs: 0.0,
-                build_threads: 0,
-                vocab_size,
-                num_dfa_states: num_states,
-                num_terminals: nterms,
-                unique_masks: pool.len(),
-                m0_entries: m0.len(),
-                m1_entries: m1.len(),
-                mem_bytes,
-                raw_bytes,
-            },
-            pool,
-            m0,
-            m1,
             nterms,
-        })
+            // Legacy blobs record neither flag; M₁ presence is inferable
+            // from the table, the length cap is simply unknown.
+            with_m1: !m1.is_empty(),
+            max_token_len: None,
+            n_m0,
+            n_m1,
+            n_pool,
+        };
+        h.validate(&offsets, &m0, &m1)?;
+        Ok(h.into_store(StoreData::Owned { offsets, m0, m1, pool }, false, false))
     }
 
-    /// Load from `path` when present, else build and cache there.
+    /// Does a deserialised store match the (grammar, tokenizer, config)
+    /// triple a caller wants to serve? This is the cache-validation
+    /// predicate of [`MaskStore::load_or_build`]: the grammar's shape
+    /// (terminal count + total DFA states — a store built for a different
+    /// grammar would index out of range or serve unsound masks),
+    /// vocabulary size, EOS id and the build-relevant config fields must
+    /// all agree. Legacy `SYNCMSK1` blobs never recorded `max_token_len`,
+    /// so only the inferable fields are checked for them (see
+    /// `docs/artifacts.md`).
+    pub fn matches(&self, g: &Grammar, tok: &Tokenizer, cfg: &MaskStoreConfig) -> bool {
+        self.nterms == g.terminals.len()
+            && self.num_states == g.total_dfa_states()
+            && self.vocab_size == tok.vocab_size()
+            && self.eos_id == tok.eos_id
+            && self.with_m1 == cfg.with_m1
+            && self
+                .max_token_len
+                .map(|n| n == cfg.effective_max_token_len())
+                .unwrap_or(true)
+    }
+
+    /// Load from `path` when present and matching (vocab, EOS, config —
+    /// see [`MaskStore::matches`]), else build and cache there. The load
+    /// maps the file (zero-copy on unix); a stale or corrupt cache falls
+    /// through to a rebuild that overwrites it in the current format.
     pub fn load_or_build(
         path: &std::path::Path,
         g: &Grammar,
         tok: &Tokenizer,
         cfg: MaskStoreConfig,
     ) -> MaskStore {
-        if let Ok(data) = std::fs::read(path) {
-            if let Ok(s) = MaskStore::from_bytes(&data) {
-                if s.vocab_size == tok.vocab_size() {
+        if let Ok(blob) = Blob::from_file(path) {
+            if let Ok(s) = MaskStore::from_blob(Arc::new(blob)) {
+                if s.matches(g, tok, &cfg) {
                     return s;
                 }
             }
         }
         let s = MaskStore::build(g, tok, cfg);
-        let _ = std::fs::write(path, s.to_bytes());
+        // Atomic replace: another process may be serving from a mapping
+        // of the stale file — an in-place write would truncate under it.
+        let _ = crate::util::blob::write_atomic(path, &s.to_bytes());
         s
+    }
+}
+
+/// Parsed `SYNCMSK2` header (also the common denominator `SYNCMSK1`
+/// parses into).
+struct V2Header {
+    vocab_size: usize,
+    eos_id: u32,
+    num_states: usize,
+    nterms: usize,
+    with_m1: bool,
+    max_token_len: Option<usize>,
+    n_m0: usize,
+    n_m1: usize,
+    n_pool: usize,
+}
+
+impl V2Header {
+    /// Structural validation shared by every deserialisation path. The
+    /// blob is untrusted (a cache file): every index a lookup can follow
+    /// must be in range, or serving would panic instead of falling back
+    /// to a rebuild.
+    fn validate(&self, offsets: &[u32], m0: &[u32], m1: &[u32]) -> Result<(), String> {
+        if self.vocab_size == 0 || (self.eos_id as usize) >= self.vocab_size {
+            return Err("eos id outside vocabulary".into());
+        }
+        if offsets.len() != self.nterms {
+            return Err("offsets/terminal count mismatch".into());
+        }
+        if m0.len() != self.num_states {
+            return Err("m0/state count mismatch".into());
+        }
+        let m1_expect = self
+            .num_states
+            .checked_mul(self.nterms)
+            .ok_or("oversized m1 dimensions")?;
+        if self.with_m1 && m1.len() != m1_expect {
+            return Err("m1/state×terminal count mismatch".into());
+        }
+        if !self.with_m1 && !m1.is_empty() {
+            return Err("m1 table present but with_m1 unset".into());
+        }
+        if offsets.iter().any(|&o| o as usize > self.num_states) {
+            return Err("terminal offset out of range".into());
+        }
+        let pool_len = u32::try_from(self.n_pool).map_err(|_| "oversized pool")?;
+        if m0.iter().chain(m1.iter()).any(|&v| v != NONE && v >= pool_len) {
+            return Err("mask pool index out of range".into());
+        }
+        Ok(())
+    }
+
+    fn into_store(self, data: StoreData, zero_copy: bool, mapped: bool) -> MaskStore {
+        let words_per = self.vocab_size.div_ceil(64);
+        let mask_bytes = words_per * 8;
+        let mem_bytes = self.n_pool * mask_bytes + (self.n_m0 + self.n_m1) * 4;
+        let raw_bytes = (self.n_m0 + self.n_m1) * mask_bytes;
+        MaskStore {
+            vocab_size: self.vocab_size,
+            eos_id: self.eos_id,
+            num_states: self.num_states,
+            nterms: self.nterms,
+            words_per,
+            with_m1: self.with_m1,
+            max_token_len: self.max_token_len,
+            data,
+            stats: MaskStoreStats {
+                build_secs: 0.0,
+                build_threads: 0,
+                vocab_size: self.vocab_size,
+                num_dfa_states: self.num_states,
+                num_terminals: self.nterms,
+                unique_masks: self.n_pool,
+                m0_entries: self.n_m0,
+                m1_entries: self.n_m1,
+                mem_bytes,
+                raw_bytes,
+                zero_copy,
+                mapped,
+            },
+        }
     }
 }
 
@@ -440,8 +812,14 @@ impl Interner {
 /// Pass 1: suff[τ][k] = bitmask over suffix starts i (bit i set ⇔
 /// dmatch(t[i..], q0^τ, {})), for token index k — the "jump into the next
 /// terminal" primitive of Definition 10 condition 3.
-fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u64>> {
-    let mut suff: Vec<Vec<u64>> = vec![vec![0u64; tokens.len()]; g.terminals.len()];
+///
+/// Split bitmasks are 128-bit: a token of up to
+/// [`MaskStoreConfig::MAX_SPLIT_LEN`] bytes keeps every suffix-start
+/// position 0..=len, including the final one (positions beyond the u64
+/// range used to be silently dropped — a completeness loss for 64-byte
+/// tokens under the default cap).
+fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u128>> {
+    let mut suff: Vec<Vec<u128>> = vec![vec![0u128; tokens.len()]; g.terminals.len()];
     for (term_idx, term) in g.terminals.iter().enumerate() {
         if matches!(term.pattern, TermPattern::Declared) {
             continue; // declared terminals never match text
@@ -449,8 +827,8 @@ fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u64>> {
         let dfa = &term.dfa;
         let suffv = &mut suff[term_idx];
         for (k, &(_, bytes)) in tokens.iter().enumerate() {
-            let n = bytes.len().min(63);
-            let mut bits = 0u64;
+            let n = bytes.len().min(MaskStoreConfig::MAX_SPLIT_LEN);
+            let mut bits = 0u128;
             // dmatch(t[i..], q0, {}) = live-all-the-way OR some strict
             // prefix of the suffix lands in F.
             for i in 0..=n {
@@ -494,7 +872,7 @@ fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u64>> {
 struct ShardContext<'a> {
     g: &'a Grammar,
     tokens: &'a [(u32, &'a [u8])],
-    suff: &'a [Vec<u64>],
+    suff: &'a [Vec<u128>],
     offsets: &'a [u32],
     vocab_size: usize,
     nterms: usize,
@@ -518,14 +896,14 @@ impl ShardContext<'_> {
         let mut interner = Interner::default();
         let mut out = ShardOut { pool: Vec::new(), m0: Vec::new(), m1: Vec::new() };
         // Reusable per-token scratch: (live_all, fhits bitmask incl. bit len).
-        let mut walk_info: Vec<(bool, u64)> = vec![(false, 0); self.tokens.len()];
+        let mut walk_info: Vec<(bool, u128)> = vec![(false, 0); self.tokens.len()];
 
         for &(term_idx, q) in items {
             let dfa = &self.g.terminals[term_idx as usize].dfa;
             // Walk every token from q.
             for (k, &(_, bytes)) in self.tokens.iter().enumerate() {
                 let mut cur = q;
-                let mut fhits = 0u64;
+                let mut fhits = 0u128;
                 if dfa.is_accept(cur) {
                     fhits |= 1; // i = 0
                 }
@@ -536,7 +914,7 @@ impl ShardContext<'_> {
                         live_all = false;
                         break;
                     }
-                    if dfa.is_accept(cur) && j + 1 <= 63 {
+                    if dfa.is_accept(cur) && j + 1 <= MaskStoreConfig::MAX_SPLIT_LEN {
                         fhits |= 1 << (j + 1);
                     }
                 }
@@ -550,7 +928,8 @@ impl ShardContext<'_> {
             let mut mask = BitSet::new(self.vocab_size);
             for (k, &(id, bytes)) in self.tokens.iter().enumerate() {
                 let (live_all, fhits) = walk_info[k];
-                let strict = fhits & ((1u64 << bytes.len().min(63)) - 1);
+                let strict_bits = bytes.len().min(MaskStoreConfig::MAX_SPLIT_LEN);
+                let strict = fhits & ((1u128 << strict_bits) - 1);
                 if live_all || strict != 0 {
                     mask.set(id as usize);
                 }
@@ -604,6 +983,37 @@ mod tests {
         let t = Tokenizer::train(&corpus, merges);
         let s = MaskStore::build(&g, &t, MaskStoreConfig::default());
         (g, t, s)
+    }
+
+    /// Every (m0, m1) lookup two stores can answer must agree.
+    fn assert_lookups_agree(g: &Grammar, vocab: usize, a: &MaskStore, b: &MaskStore, tag: &str) {
+        for (ti, term) in g.terminals.iter().enumerate() {
+            if matches!(term.pattern, crate::grammar::TermPattern::Declared) {
+                continue;
+            }
+            let dfa = &term.dfa;
+            for q in 0..dfa.num_states() as u32 {
+                if !dfa.is_live(q) {
+                    continue;
+                }
+                for id in (0..vocab).step_by(3) {
+                    assert_eq!(
+                        a.m0_contains(ti as TermId, q, id),
+                        b.m0_contains(ti as TermId, q, id),
+                        "{tag}: m0 term {ti} state {q} token {id}"
+                    );
+                }
+                for nt in (0..g.terminals.len()).step_by(2) {
+                    for id in (0..vocab).step_by(7) {
+                        assert_eq!(
+                            a.m1_contains(ti as TermId, q, nt as TermId, id),
+                            b.m1_contains(ti as TermId, q, nt as TermId, id),
+                            "{tag}: m1 term {ti} state {q} next {nt} token {id}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -756,12 +1166,58 @@ mod tests {
     }
 
     #[test]
+    fn suffix_split_survives_64_byte_token() {
+        // Regression (ISSUE 4 satellite): split-position bitmasks used to
+        // be u64, so a 64-byte token's *final* split point (position 63)
+        // fell off the mask and the token was silently dropped from M₀ —
+        // a completeness loss at exactly the default max_token_len.
+        //
+        // Token: `"` + 61×`a` + `"` + `x` (64 bytes). From JSON STRING's
+        // start state the only F-hit is after the closing quote at
+        // position 63; byte 64 (`x`) kills the DFA. Condition 2 (prefix
+        // in F, nonempty leftover) therefore holds only via that final
+        // split point.
+        let g = Grammar::builtin("json").unwrap();
+        let mut merges: Vec<(u32, u32)> = vec![(b'"' as u32, b'a' as u32)];
+        let mut last = 256u32;
+        for _ in 0..60 {
+            merges.push((last, b'a' as u32));
+            last += 1;
+        }
+        merges.push((last, b'"' as u32));
+        last += 1;
+        let quoted = last; // `"a…a"` — 63 bytes
+        merges.push((quoted, b'x' as u32));
+        last += 1;
+        let token = last; // 64 bytes, split point only at 63
+        let tok = Tokenizer::from_merges(&merges);
+        assert_eq!(tok.token_bytes(token).len(), 64);
+        let cfg = MaskStoreConfig::default();
+        assert_eq!(cfg.max_token_len, 64, "regression targets the default cap");
+        let s = MaskStore::build(&g, &tok, cfg);
+        let string = g.term_id("STRING").unwrap();
+        let dfa = &g.terminals[string as usize].dfa;
+        assert!(
+            s.m0_contains(string, dfa.start(), token as usize),
+            "64-byte token with only a final split point must stay in M₀"
+        );
+        // Sanity: the 63-byte complete string is in via live_all/accept …
+        assert!(s.m0_contains(string, dfa.start(), quoted as usize));
+        // … and a token that dies immediately is NOT over-approximated in.
+        assert!(!s.m0_contains(string, dfa.start(), b'x' as usize));
+    }
+
+    #[test]
     fn serialisation_roundtrip() {
         let (g, t, s) = store_for("json", 40);
         let blob = s.to_bytes();
         let s2 = MaskStore::from_bytes(&blob).unwrap();
         assert_eq!(s.vocab_size(), s2.vocab_size());
         assert_eq!(s.num_states(), s2.num_states());
+        assert_eq!(s2.with_m1(), s.with_m1());
+        assert_eq!(s2.max_token_len(), s.max_token_len());
+        // Re-serialisation is byte-identical (format is canonical).
+        assert_eq!(s2.to_bytes(), blob);
         // Every lookup agrees.
         let string = g.term_id("STRING").unwrap();
         let ws = g.term_id("WS").unwrap();
@@ -782,22 +1238,159 @@ mod tests {
     }
 
     #[test]
-    fn from_bytes_rejects_garbage() {
-        assert!(MaskStore::from_bytes(b"nope").is_err());
-        assert!(MaskStore::from_bytes(b"SYNCMSK1short").is_err());
+    fn legacy_v1_blob_still_loads() {
+        // Format-stability: a blob in the original SYNCMSK1 layout loads
+        // and answers every lookup identically to the live store.
+        let (g, t, s) = store_for("json", 40);
+        let legacy = s.to_bytes_v1();
+        assert_eq!(&legacy[..8], b"SYNCMSK1");
+        let s1 = MaskStore::from_bytes(&legacy).unwrap();
+        assert!(!s1.stats.zero_copy);
+        assert_eq!(s1.max_token_len(), None, "v1 never recorded the cap");
+        assert_eq!(s1.with_m1(), s.with_m1());
+        assert_lookups_agree(&g, t.vocab_size(), &s, &s1, "v1");
+        // And it upgrades: re-serialising writes the current format.
+        assert_eq!(&s1.to_bytes()[..8], b"SYNCMSK2");
     }
 
     #[test]
-    fn load_or_build_caches() {
+    fn mapped_view_agrees_with_owned_on_every_lookup() {
+        let (g, t, s) = store_for("json", 40);
+        let blob = Arc::new(Blob::from_vec(s.to_bytes()));
+        let view = MaskStore::from_blob(blob).unwrap();
+        if Blob::HOST_VIEWABLE {
+            assert!(view.stats.zero_copy, "aligned SYNCMSK2 blob must load in place");
+            assert!(!view.stats.mapped, "an owned in-memory blob is not a mapping");
+        }
+        assert_lookups_agree(&g, t.vocab_size(), &s, &view, "view");
+        // union_* through the view matches the owned store bit-for-bit.
+        let string = g.term_id("STRING").unwrap();
+        let ws = g.term_id("WS").unwrap();
+        let dfa = &g.terminals[string as usize].dfa;
+        let q = dfa.walk(dfa.start(), b"\"ab");
+        let mut a = BitSet::new(t.vocab_size());
+        let mut b = BitSet::new(t.vocab_size());
+        s.union_m1(string, q, ws, &mut a);
+        view.union_m1(string, q, ws, &mut b);
+        assert_eq!(a, b);
+        // View serialises back to the identical bytes.
+        assert_eq!(view.to_bytes(), s.to_bytes());
+    }
+
+    #[test]
+    fn truncated_and_misaligned_v2_error_not_panic() {
+        let (_, _, s) = store_for("calc", 10);
+        let bytes = s.to_bytes();
+        // Truncations at several depths: header, tables, pool.
+        for cut in [4usize, 9, 79, 81, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                MaskStore::from_bytes(&bytes[..cut.min(bytes.len())]).is_err(),
+                "cut at {cut} must error"
+            );
+            let blob = Arc::new(Blob::from_vec(bytes[..cut.min(bytes.len())].to_vec()));
+            assert!(MaskStore::from_blob(blob).is_err(), "blob cut at {cut} must error");
+        }
+        // Trailing garbage is rejected.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"zz");
+        assert!(MaskStore::from_bytes(&padded).is_err());
+        // A misaligned section offset inside a blob errors cleanly.
+        let mut shifted = vec![0u8; 4];
+        shifted.extend_from_slice(&bytes);
+        let blob = Arc::new(Blob::from_vec(shifted));
+        let r = MaskStore::from_blob_section(blob, 4, bytes.len());
+        if Blob::HOST_VIEWABLE {
+            assert!(r.is_err(), "misaligned SYNCMSK2 section must error");
+        }
+        // Out-of-range section is an error, not a slice panic.
+        let blob = Arc::new(Blob::from_vec(bytes.clone()));
+        assert!(MaskStore::from_blob_section(blob, 8, usize::MAX).is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(MaskStore::from_bytes(b"nope").is_err());
+        assert!(MaskStore::from_bytes(b"SYNCMSK1short").is_err());
+        assert!(MaskStore::from_bytes(b"SYNCMSK2short").is_err());
+    }
+
+    #[test]
+    fn load_or_build_caches_zero_copy() {
         let (g, t, _) = store_for("calc", 10);
-        let dir = std::env::temp_dir().join("syncode_store_test");
-        let _ = std::fs::remove_file(&dir);
-        let s1 = MaskStore::load_or_build(&dir, &g, &t, MaskStoreConfig::default());
-        assert!(dir.exists());
-        let s2 = MaskStore::load_or_build(&dir, &g, &t, MaskStoreConfig::default());
+        let path = std::env::temp_dir().join("syncode_store_test");
+        let _ = std::fs::remove_file(&path);
+        let s1 = MaskStore::load_or_build(&path, &g, &t, MaskStoreConfig::default());
+        assert!(path.exists());
+        let s2 = MaskStore::load_or_build(&path, &g, &t, MaskStoreConfig::default());
         assert_eq!(s1.stats.unique_masks, s2.stats.unique_masks);
         assert_eq!(s2.stats.build_secs, 0.0); // loaded, not rebuilt
-        let _ = std::fs::remove_file(&dir);
+        assert_eq!(s2.stats.build_threads, 0);
+        if Blob::HOST_VIEWABLE && cfg!(unix) {
+            assert!(s2.stats.zero_copy, "warm load must serve the cache in place");
+            assert!(s2.stats.mapped, "unix warm load must come from an mmap");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_or_build_rejects_stale_config_and_eos() {
+        // A cache built with M₁ must not satisfy a with_m1=false request
+        // (and vice versa) — build_threads>0 proves a rebuild happened.
+        let (g, t, _) = store_for("calc", 10);
+        let path = std::env::temp_dir().join("syncode_store_cfgtest");
+        let _ = std::fs::remove_file(&path);
+        let _ = MaskStore::load_or_build(&path, &g, &t, MaskStoreConfig::default());
+        let no_m1 = MaskStoreConfig { with_m1: false, ..MaskStoreConfig::default() };
+        let s = MaskStore::load_or_build(&path, &g, &t, no_m1.clone());
+        assert_eq!(s.stats.build_threads, 1, "with_m1 change must rebuild");
+        assert!(!s.with_m1());
+        // Cache now holds the no-m1 store; same config warm-loads it …
+        let s = MaskStore::load_or_build(&path, &g, &t, no_m1);
+        assert_eq!(s.stats.build_threads, 0);
+        // … a different max_token_len rebuilds …
+        let short =
+            MaskStoreConfig { with_m1: false, max_token_len: 8, ..MaskStoreConfig::default() };
+        let s = MaskStore::load_or_build(&path, &g, &t, short);
+        assert_eq!(s.stats.build_threads, 1, "max_token_len change must rebuild");
+        // … and a tampered eos_id in the header invalidates the cache.
+        let mut bytes = std::fs::read(&path).unwrap();
+        // id 0 is a valid token but never the EOS id (specials are last).
+        bytes[16..24].copy_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let s = MaskStore::load_or_build(
+            &path,
+            &g,
+            &t,
+            MaskStoreConfig { with_m1: false, max_token_len: 8, ..MaskStoreConfig::default() },
+        );
+        assert_eq!(s.stats.build_threads, 1, "eos mismatch must rebuild");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_or_build_rejects_another_grammars_cache() {
+        // Same tokenizer + config, different grammar: the cached store's
+        // terminal/state shape cannot serve the new grammar (indexing
+        // with its terminal ids would panic or return unsound masks), so
+        // the cache must be rejected and rebuilt.
+        let g_calc = Grammar::builtin("calc").unwrap();
+        let g_json = Grammar::builtin("json").unwrap();
+        let t = Tokenizer::ascii_byte_level();
+        let path = std::env::temp_dir().join("syncode_store_xgram_test");
+        let _ = std::fs::remove_file(&path);
+        let _ = MaskStore::load_or_build(&path, &g_calc, &t, MaskStoreConfig::default());
+        let s = MaskStore::load_or_build(&path, &g_json, &t, MaskStoreConfig::default());
+        assert_eq!(s.stats.build_threads, 1, "grammar change must rebuild");
+        assert_eq!(s.num_states(), g_json.total_dfa_states());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn effective_cap_clamps_at_split_mask_width() {
+        let cfg = MaskStoreConfig { max_token_len: 4096, ..MaskStoreConfig::default() };
+        assert_eq!(cfg.effective_max_token_len(), MaskStoreConfig::MAX_SPLIT_LEN);
+        let cfg = MaskStoreConfig::default();
+        assert_eq!(cfg.effective_max_token_len(), 64);
     }
 
     #[test]
@@ -807,6 +1400,7 @@ mod tests {
         assert!(s.stats.num_dfa_states > 10);
         assert!(s.stats.mem_bytes > 0);
         assert_eq!(s.stats.build_threads, 1);
+        assert!(!s.stats.zero_copy);
     }
 
     #[test]

@@ -78,9 +78,30 @@ impl BitSet {
     #[inline]
     pub fn union_with(&mut self, other: &BitSet) {
         debug_assert_eq!(self.len, other.len);
-        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+        self.union_with_words(&other.words);
+    }
+
+    /// Union a raw word slice (little-endian layout, tail bits zero) into
+    /// `self`. This is how pool masks stored in an `mmap`'d blob are
+    /// unioned straight out of the mapping — no `BitSet` materialisation.
+    #[inline]
+    pub fn union_with_words(&mut self, words: &[u64]) {
+        debug_assert_eq!(self.words.len(), words.len());
+        for (a, b) in self.words.iter_mut().zip(words.iter()) {
             *a |= *b;
         }
+    }
+
+    /// Union a borrowed mask view into `self`.
+    #[inline]
+    pub fn union_with_view(&mut self, view: BitView<'_>) {
+        debug_assert_eq!(self.len, view.len);
+        self.union_with_words(view.words);
+    }
+
+    /// Borrowed word-slice view of this set.
+    pub fn as_view(&self) -> BitView<'_> {
+        BitView { words: &self.words, len: self.len }
     }
 
     /// In-place intersection: `self &= other`.
@@ -132,6 +153,60 @@ impl BitSet {
         let mut s = BitSet { words, len };
         s.clear_tail();
         s
+    }
+}
+
+/// A borrowed, read-only mask over `len` elements: the same word layout
+/// as [`BitSet`] but backed by any `&[u64]` — typically a slice of the
+/// interned mask pool inside a memory-mapped `SYNCMSK2` blob, so lookups
+/// and unions never copy the mask.
+#[derive(Clone, Copy)]
+pub struct BitView<'a> {
+    words: &'a [u64],
+    len: usize,
+}
+
+impl<'a> BitView<'a> {
+    /// Wrap raw words. `words.len()` must be exactly `len.div_ceil(64)`.
+    pub fn new(words: &'a [u64], len: usize) -> BitView<'a> {
+        debug_assert_eq!(words.len(), len.div_ceil(64));
+        BitView { words, len }
+    }
+
+    /// Universe size.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty_universe(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when no bit is set.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Raw words.
+    pub fn words(&self) -> &'a [u64] {
+        self.words
+    }
+
+    /// Deep-copy into an owned [`BitSet`].
+    pub fn to_bitset(&self) -> BitSet {
+        BitSet::from_words(self.words.to_vec(), self.len)
     }
 }
 
@@ -217,6 +292,26 @@ mod tests {
         b.set(7);
         assert!(a.is_subset(&b));
         assert!(!b.is_subset(&a));
+    }
+
+    #[test]
+    fn view_agrees_with_owned() {
+        let mut a = BitSet::new(130);
+        a.set(0);
+        a.set(64);
+        a.set(129);
+        let v = a.as_view();
+        for i in 0..130 {
+            assert_eq!(v.get(i), a.get(i), "bit {i}");
+        }
+        assert_eq!(v.count_ones(), 3);
+        assert_eq!(v.to_bitset(), a);
+        // Union through the view equals union through the set.
+        let mut via_view = BitSet::new(130);
+        via_view.union_with_view(v);
+        let mut via_set = BitSet::new(130);
+        via_set.union_with(&a);
+        assert_eq!(via_view, via_set);
     }
 
     #[test]

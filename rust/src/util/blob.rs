@@ -1,5 +1,7 @@
 //! Bounds-checked little-endian blob reading, shared by the binary
-//! deserialisers (`SYNCMSK1` mask stores, `SYNCART1` artifacts).
+//! deserialisers (`SYNCMSK1`/`SYNCMSK2` mask stores, `SYNCART1`
+//! artifacts), plus [`Blob`] — the 8-byte-aligned backing storage the
+//! zero-copy mask-store view reads in place.
 //!
 //! Length fields come from the untrusted blob itself, so the overflow
 //! invariant lives here once: `pos + n` is never computed before checking
@@ -16,6 +18,11 @@ impl<'a> BlobReader<'a> {
         BlobReader { data, pos: 0 }
     }
 
+    /// Current byte offset from the start of the blob.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
     /// Next `n` raw bytes.
     pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         if self.pos > self.data.len() || n > self.data.len() - self.pos {
@@ -24,6 +31,26 @@ impl<'a> BlobReader<'a> {
         let s = &self.data[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+
+    /// Next `n` raw bytes without advancing the cursor (empty slice when
+    /// fewer remain) — used to sniff section magics for back-compat.
+    pub fn peek(&self, n: usize) -> &'a [u8] {
+        if self.pos > self.data.len() || n > self.data.len() - self.pos {
+            return &[];
+        }
+        &self.data[self.pos..self.pos + n]
+    }
+
+    /// Skip the zero-padding up to the next 8-byte boundary (sections of
+    /// the v2 formats are 8-aligned so they can be read in place).
+    pub fn align8(&mut self) -> Result<(), String> {
+        let pad = (8 - self.pos % 8) % 8;
+        let bytes = self.take(pad)?;
+        if bytes.iter().any(|&b| b != 0) {
+            return Err("nonzero alignment padding".into());
+        }
+        Ok(())
     }
 
     pub fn u64(&mut self) -> Result<u64, String> {
@@ -45,9 +72,248 @@ impl<'a> BlobReader<'a> {
             .collect())
     }
 
+    /// `n` little-endian u64s.
+    pub fn u64s(&mut self, n: usize) -> Result<Vec<u64>, String> {
+        let nbytes = n.checked_mul(8).ok_or_else(|| "oversized table".to_string())?;
+        Ok(self
+            .take(nbytes)?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     /// True when the cursor consumed the whole blob.
     pub fn at_end(&self) -> bool {
         self.pos == self.data.len()
+    }
+}
+
+/// Append zero bytes until `out.len()` is a multiple of 8 — the writer
+/// half of [`BlobReader::align8`].
+pub fn pad8(out: &mut Vec<u8>) {
+    while out.len() % 8 != 0 {
+        out.push(0);
+    }
+}
+
+/// Write `bytes` to `path` atomically: a temp file in the same directory,
+/// then a rename over the target.
+///
+/// This is the only safe way to replace a cache file other processes may
+/// have mapped via [`Blob::from_file`]: an in-place `fs::write` truncates
+/// first, and a reader faulting a not-yet-resident page of a truncated
+/// mapping dies with SIGBUS (MAP_PRIVATE does not shield untouched
+/// pages). A rename leaves the old inode intact until its last mapping
+/// goes away, and concurrent cold-starters can never observe a torn,
+/// half-written file.
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    // pid + process-wide counter: concurrent writers (other processes OR
+    // other threads of this one) each get their own temp file, so no one
+    // can publish a peer's half-written bytes.
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let tmp = dir.join(format!(
+        ".{}.tmp.{}.{}",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("blob"),
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blob: 8-aligned backing storage for zero-copy section views.
+// ---------------------------------------------------------------------------
+
+/// An immutable byte blob whose base address is 8-byte-aligned, backed
+/// either by an `mmap`'d file (unix) or by owned `u64` storage (everything
+/// else, and the copy-in constructors). The alignment guarantee is what
+/// lets `SYNCMSK2` index tables and the interned mask pool be reinterpreted
+/// in place as `&[u32]` / `&[u64]` without a deserialisation copy.
+pub struct Blob {
+    data: BlobData,
+    len: usize,
+}
+
+enum BlobData {
+    /// Owned storage; allocated as `u64`s so the base is 8-aligned.
+    Owned(Vec<u64>),
+    /// A read-only private file mapping (page-aligned ⇒ 8-aligned).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, map_len: usize },
+}
+
+// SAFETY: the mapping is read-only (PROT_READ, MAP_PRIVATE) and the owned
+// variant is a plain Vec, so shared-reference access from any thread is
+// sound. Caveat (process-level, not a thread-safety issue): mmap cannot
+// protect against another process *truncating* the backing file — every
+// writer of mappable cache files must replace them via [`write_atomic`]
+// (rename keeps the mapped inode alive), never an in-place `fs::write`.
+unsafe impl Send for Blob {}
+unsafe impl Sync for Blob {}
+
+#[cfg(unix)]
+mod mmap_sys {
+    //! Minimal mmap FFI — the crate is dependency-free, so the two libc
+    //! symbols std already links against are declared directly.
+    use std::ffi::c_void;
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+    pub fn map_failed(p: *mut c_void) -> bool {
+        p as isize == -1
+    }
+}
+
+impl Blob {
+    /// Wrap owned bytes, copying them into 8-aligned storage.
+    pub fn from_vec(bytes: Vec<u8>) -> Blob {
+        let len = bytes.len();
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // Byte-image copy (not a per-word LE decode): the blob must hold
+        // the exact serialised bytes on every endianness.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                words.as_mut_ptr() as *mut u8,
+                len,
+            );
+        }
+        Blob { data: BlobData::Owned(words), len }
+    }
+
+    /// Map `path` read-only (zero-copy); falls back to an aligned
+    /// read-into-memory on platforms without mmap or when mapping fails.
+    pub fn from_file(path: &std::path::Path) -> std::io::Result<Blob> {
+        #[cfg(unix)]
+        {
+            if let Some(b) = Blob::try_mmap(path)? {
+                return Ok(b);
+            }
+        }
+        Ok(Blob::from_vec(std::fs::read(path)?))
+    }
+
+    #[cfg(unix)]
+    fn try_mmap(path: &std::path::Path) -> std::io::Result<Option<Blob>> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = match usize::try_from(len) {
+            Ok(0) | Err(_) => return Ok(None), // empty or absurd: fall back
+            Ok(n) => n,
+        };
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if mmap_sys::map_failed(ptr) {
+            return Ok(None); // e.g. a pipe — fall back to read()
+        }
+        // The fd may be closed once mapped; `file` drops here.
+        Ok(Some(Blob { data: BlobData::Mapped { ptr: ptr as *const u8, map_len: len }, len }))
+    }
+
+    /// True when backed by a file mapping (the zero-copy path).
+    pub fn is_mapped(&self) -> bool {
+        match self.data {
+            BlobData::Owned(_) => false,
+            #[cfg(unix)]
+            BlobData::Mapped { .. } => true,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// In-place view of `n` little-endian u32s at byte offset `off`.
+    /// `None` when out of range or misaligned. Only meaningful on
+    /// little-endian hosts — callers gate on [`Blob::HOST_VIEWABLE`].
+    pub fn u32s(&self, off: usize, n: usize) -> Option<&[u32]> {
+        let nbytes = n.checked_mul(4)?;
+        if off.checked_add(nbytes)? > self.len || off % 4 != 0 {
+            return None;
+        }
+        let ptr = unsafe { self.as_slice().as_ptr().add(off) };
+        debug_assert_eq!(ptr as usize % 4, 0, "blob base must be 8-aligned");
+        Some(unsafe { std::slice::from_raw_parts(ptr as *const u32, n) })
+    }
+
+    /// In-place view of `n` little-endian u64s at byte offset `off`.
+    pub fn u64s(&self, off: usize, n: usize) -> Option<&[u64]> {
+        let nbytes = n.checked_mul(8)?;
+        if off.checked_add(nbytes)? > self.len || off % 8 != 0 {
+            return None;
+        }
+        let ptr = unsafe { self.as_slice().as_ptr().add(off) };
+        debug_assert_eq!(ptr as usize % 8, 0, "blob base must be 8-aligned");
+        Some(unsafe { std::slice::from_raw_parts(ptr as *const u64, n) })
+    }
+
+    /// Whether in-place `u32s`/`u64s` views decode the serialised
+    /// little-endian format correctly on this host. On big-endian targets
+    /// loaders must take the copying path instead.
+    pub const HOST_VIEWABLE: bool = cfg!(target_endian = "little");
+
+    fn as_slice(&self) -> &[u8] {
+        match &self.data {
+            BlobData::Owned(words) => unsafe {
+                std::slice::from_raw_parts(words.as_ptr() as *const u8, self.len)
+            },
+            #[cfg(unix)]
+            BlobData::Mapped { ptr, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, self.len)
+            },
+        }
+    }
+}
+
+impl std::ops::Deref for Blob {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Drop for Blob {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let BlobData::Mapped { ptr, map_len } = &self.data {
+            unsafe {
+                mmap_sys::munmap(*ptr as *mut std::ffi::c_void, *map_len);
+            }
+        }
     }
 }
 
@@ -79,7 +345,110 @@ mod tests {
         assert!(r.take(usize::MAX).is_err());
         let mut r = BlobReader::new(&blob);
         assert!(r.u32s(usize::MAX / 2).is_err());
+        assert!(r.u64s(usize::MAX / 4).is_err());
         // After an error the cursor is still usable for valid reads.
         assert_eq!(r.u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn align8_skips_zero_padding_only() {
+        let mut out = vec![1u8, 2, 3];
+        pad8(&mut out);
+        assert_eq!(out.len(), 8);
+        let mut r = BlobReader::new(&out);
+        assert_eq!(r.take(3).unwrap(), &[1, 2, 3]);
+        r.align8().unwrap();
+        assert!(r.at_end());
+        // Nonzero padding is corruption, not slack.
+        let bad = [1u8, 2, 3, 0, 9, 0, 0, 0];
+        let mut r = BlobReader::new(&bad);
+        r.take(3).unwrap();
+        assert!(r.align8().is_err());
+        // Already aligned: no-op.
+        let mut r = BlobReader::new(&out);
+        r.align8().unwrap();
+        assert_eq!(r.pos(), 0);
+    }
+
+    #[test]
+    fn blob_from_vec_preserves_bytes_and_aligns() {
+        for n in [0usize, 1, 7, 8, 9, 4097] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
+            let b = Blob::from_vec(bytes.clone());
+            assert_eq!(&b[..], &bytes[..]);
+            assert_eq!(b.len(), n);
+            assert_eq!(b.as_slice().as_ptr() as usize % 8, 0);
+            assert!(!b.is_mapped());
+        }
+    }
+
+    #[test]
+    fn blob_views_decode_le() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        bytes.extend_from_slice(&0x0123_4567_89ab_cdefu64.to_le_bytes());
+        let b = Blob::from_vec(bytes);
+        if Blob::HOST_VIEWABLE {
+            assert_eq!(b.u32s(0, 2).unwrap(), &[0xdead_beef, 7]);
+            assert_eq!(b.u64s(8, 1).unwrap(), &[0x0123_4567_89ab_cdef]);
+        }
+        // Out-of-range and misaligned views are None, never UB/panic.
+        assert!(b.u32s(0, 5).is_none());
+        assert!(b.u32s(2, 1).is_none());
+        assert!(b.u64s(4, 1).is_none());
+        assert!(b.u64s(usize::MAX, 1).is_none());
+    }
+
+    #[test]
+    fn blob_from_file_maps_and_reads() {
+        let path = std::env::temp_dir().join("syncode_blob_test.bin");
+        let bytes: Vec<u8> = (0..1000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let b = Blob::from_file(&path).unwrap();
+        assert_eq!(&b[..], &bytes[..]);
+        assert_eq!(b.as_slice().as_ptr() as usize % 8, 0);
+        #[cfg(unix)]
+        assert!(b.is_mapped(), "unix load should take the mmap path");
+        if Blob::HOST_VIEWABLE {
+            let v = b.u32s(0, 1000).unwrap();
+            assert_eq!(v[999], 999);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_atomic_replaces_without_truncation_window() {
+        let dir = std::env::temp_dir().join("syncode_write_atomic_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("cache.bin");
+        write_atomic(&path, b"first version").unwrap();
+        // A reader maps the first version …
+        let mapped = Blob::from_file(&path).unwrap();
+        // … a writer replaces the file …
+        write_atomic(&path, b"second, longer version!").unwrap();
+        // … and the old mapping still reads the old bytes intact (the
+        // rename left the mapped inode alive — no truncation, no SIGBUS).
+        assert_eq!(&mapped[..], b"first version");
+        let fresh = Blob::from_file(&path).unwrap();
+        assert_eq!(&fresh[..], b"second, longer version!");
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files not cleaned up");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn blob_from_empty_file_is_owned_empty() {
+        let path = std::env::temp_dir().join("syncode_blob_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let b = Blob::from_file(&path).unwrap();
+        assert!(b.is_empty());
+        assert!(!b.is_mapped());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -169,6 +169,62 @@ fn artifact_roundtrip_identical_masks_on_random_prefixes() {
 }
 
 #[test]
+fn mmap_loaded_artifact_serves_requests_across_threads() {
+    // The zero-copy warm path end to end: compile → cache file → mapped
+    // load (`from_file`) → registry → batched serving. The view-backed
+    // MaskStore crosses replica/worker threads behind its Arc'd mapping,
+    // and every response is grammatically valid.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let art = CompiledGrammar::compile("json", tok.clone(), &ArtifactConfig::default())
+        .unwrap();
+    let dir = std::env::temp_dir().join("syncode_mmap_serving_test");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("json.syncart");
+    std::fs::write(&path, art.to_bytes()).unwrap();
+    let mapped = CompiledGrammar::from_file(&path).unwrap();
+    assert!(mapped.compile_stats.from_cache);
+    #[cfg(all(unix, target_endian = "little"))]
+    assert!(
+        mapped.store.stats.zero_copy && mapped.store.stats.mapped,
+        "unix warm load must be zero-copy from an mmap"
+    );
+
+    let reg = Arc::new(GrammarRegistry::new());
+    reg.register(mapped.clone()).unwrap();
+    let tok_m = tok.clone();
+    let model: ModelFactory = Box::new(move || {
+        Ok(Box::new(MockModel::from_documents(tok_m, &mixed_docs(), 2, 256, 23)))
+    });
+    let srv = Server::start(model, tok, reg.clone());
+    let reqs: Vec<GenRequest> = (0..4u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: format!("request {i}"),
+            constraint_prefix: String::new(),
+            grammar: Some("json".to_string()),
+            params: GenParams {
+                max_new_tokens: 60,
+                strategy: Strategy::Temperature(0.8),
+                seed: i * 7 + 3,
+                opportunistic: i % 2 == 0,
+            },
+        })
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(
+            mapped.response_valid(&resp),
+            "invalid response from mapped artifact: {:?} {:?}",
+            resp.finish,
+            resp.text
+        );
+    }
+    srv.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn parallel_artifact_equals_serial_artifact() {
     // Artifact-level restatement of the store property: a parallel-built
     // artifact serialises identically to a serially-built one.

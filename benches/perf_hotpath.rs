@@ -1,5 +1,5 @@
-//! §Perf profiling harness (EXPERIMENTS.md §Perf): per-operation timings
-//! for the L3 hot path and the L2 decode variants.
+//! Perf profiling harness (`docs/serving.md` "Decode hot-path"):
+//! per-operation timings for the L3 hot path and the L2 decode variants.
 //!
 //! Measures, at several generation lengths:
 //!   - `compute_mask`   — full grammar-mask assembly (Algorithm 2);

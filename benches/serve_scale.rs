@@ -9,7 +9,9 @@
 //!
 //! Also checks the correctness half of the scaling claim: every
 //! configuration must produce byte-identical outputs per request id
-//! (`identical` column) and zero syntax errors (`errs` column).
+//! (`identical` column) and zero syntax errors (`errs` column). The
+//! `ttft(ms)` column is the mean admission-to-first-token latency — the
+//! number a streaming client experiences as time-to-first-event.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -69,14 +71,15 @@ fn main() {
                     seed: i * 17 + 3,
                     opportunistic: true,
                 },
+                token_sink: None,
             }
         })
         .collect();
 
     let grid = [(1usize, 0usize), (1, mask_threads), (replicas, 0), (replicas, mask_threads)];
     let mut t = Table::new(&[
-        "replicas", "mask-thr", "wall(s)", "tokens", "tok/s", "speedup", "prewarmed",
-        "pool-wait(µs)", "errs", "identical",
+        "replicas", "mask-thr", "wall(s)", "tokens", "tok/s", "ttft(ms)", "speedup",
+        "prewarmed", "pool-wait(µs)", "errs", "identical",
     ]);
     let mut baseline: Option<(f64, HashMap<u64, String>)> = None;
     for (nr, mt) in grid {
@@ -99,9 +102,11 @@ fn main() {
         let mut outputs: HashMap<u64, String> = HashMap::new();
         let mut tokens = 0usize;
         let mut errs = 0usize;
+        let mut ttft_sum = 0.0f64;
         for (req, rx) in reqs.iter().zip(rxs) {
             let resp = rx.recv().expect("response");
             tokens += resp.tokens;
+            ttft_sum += resp.ttft_secs;
             let g = req.grammar.as_deref().unwrap();
             let ok = registry.get(g).map(|art| art.response_valid(&resp)).unwrap_or(false);
             errs += !ok as usize;
@@ -124,6 +129,7 @@ fn main() {
             format!("{wall:.2}"),
             tokens.to_string(),
             format!("{tps:.1}"),
+            format!("{:.1}", ttft_sum / n.max(1) as f64 * 1e3),
             format!("{speedup:.2}x"),
             snap.masks_prewarmed.to_string(),
             format!("{:.1}", snap.mask_wait_mean * 1e6),

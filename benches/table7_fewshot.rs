@@ -38,6 +38,7 @@ fn main() {
                     constraint_prefix: String::new(),
                     grammar: None,
                     params: params.clone(),
+                    token_sink: None,
                 })
                 .expect_served("table7 bench");
                 let ans = r.text.lines().next().unwrap_or("").trim();
@@ -76,6 +77,7 @@ fn main() {
                     constraint_prefix: task.prefix.clone(),
                     grammar: None,
                     params: params.clone(),
+                    token_sink: None,
                 })
                 .expect_served("table7 bench");
                 let full = format!("{}{}", task.prefix, r.text);

@@ -28,6 +28,11 @@ cargo fmt --check
 echo "== cargo clippy (deny warnings) =="
 cargo clippy --all-targets -- -D warnings
 
+# Docs can't rot: broken intra-doc links, bad code fences and malformed
+# rustdoc are build failures, in both tiers (docs are cheap to build).
+echo "== cargo doc --no-deps (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 if [[ "$fast" == "0" ]]; then
   echo "== cargo build --release =="
   cargo build --release

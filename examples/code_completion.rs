@@ -35,6 +35,7 @@ fn main() {
                     constraint_prefix: t.prefix.clone(),
                     grammar: None,
                     params: params.clone(),
+                    token_sink: None,
                 })
                 .expect_served("code_completion example");
                 let full = format!("{}{}", t.prefix, r.text);

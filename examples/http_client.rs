@@ -12,10 +12,12 @@
 //!
 //! Fires `--requests N` concurrent `POST /v1/generate` calls alternating
 //! over the registered grammars, prints each verdict, then dumps
-//! `/healthz` and a few `/metrics` lines. `--shutdown` instead posts
-//! `/admin/shutdown` and exits.
+//! `/healthz` and a few `/metrics` lines. `--stream` instead sends
+//! **one request per grammar over a single keep-alive connection** to
+//! `POST /v1/generate?stream=1` and prints each token the moment its SSE
+//! event arrives. `--shutdown` posts `/admin/shutdown` and exits.
 
-use syncode::net::http::fetch;
+use syncode::net::http::{fetch, HttpClient};
 use syncode::util::cli::Args;
 use syncode::util::json::{parse, Json};
 
@@ -27,6 +29,11 @@ fn main() {
         let (status, body) = fetch(addr.as_str(), "POST", "/admin/shutdown", Some("{}"))
             .expect("server unreachable");
         println!("shutdown -> {status} {body}");
+        return;
+    }
+
+    if args.flag("stream") {
+        stream_demo(&args, &addr);
         return;
     }
 
@@ -96,6 +103,68 @@ fn main() {
     for line in metrics.lines() {
         if interesting.iter().any(|p| line.starts_with(p)) {
             println!("metrics: {line}");
+        }
+    }
+}
+
+/// Streaming consumer: one keep-alive connection, one SSE generation per
+/// registered grammar, tokens printed as their events arrive.
+fn stream_demo(args: &Args, addr: &str) {
+    use std::io::Write as _;
+    let max_tokens = args.get_num("max-tokens", 60usize);
+    let mut client = HttpClient::connect(addr).expect("server unreachable");
+    let (status, body) =
+        client.request("GET", "/v1/grammars", None).expect("grammar listing");
+    assert_eq!(status, 200, "grammar listing failed: {body}");
+    let grammars: Vec<String> = parse(&body)
+        .expect("grammar listing json")
+        .get("grammars")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|g| g.get("name").and_then(Json::as_str))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    assert!(!grammars.is_empty(), "server has no grammars registered");
+
+    for (i, g) in grammars.iter().enumerate() {
+        let body = format!(
+            r#"{{"grammar": "{g}", "prompt": "produce a valid {g} snippet (#{i})",
+                "max_tokens": {max_tokens}, "seed": {i}}}"#
+        );
+        let mut stream = client
+            .request_stream("POST", "/v1/generate?stream=1", Some(&body))
+            .expect("stream request");
+        if stream.status() != 200 {
+            let err = stream.into_body().unwrap_or_default();
+            println!("[{g}] stream refused: {err}");
+            continue;
+        }
+        print!("[{g}] ");
+        let mut tokens = 0usize;
+        while let Some((event, data)) = stream.next_event().expect("sse event") {
+            match event.as_str() {
+                "token" => {
+                    tokens += 1;
+                    let text = parse(&data)
+                        .ok()
+                        .and_then(|v| v.get("text").and_then(Json::as_str).map(str::to_string))
+                        .unwrap_or_default();
+                    print!("{text}");
+                    let _ = std::io::stdout().flush();
+                }
+                "done" => {
+                    let v = parse(&data).expect("done event json");
+                    println!(
+                        "\n[{g}] {} after {tokens} tokens, valid={}",
+                        v.get("finish").and_then(Json::as_str).unwrap_or("?"),
+                        v.get("valid").and_then(Json::as_bool).unwrap_or(false),
+                    );
+                }
+                other => println!("\n[{g}] unexpected event: {other}"),
+            }
         }
     }
 }

@@ -117,6 +117,7 @@ fn main() {
                 constraint_prefix: String::new(),
                 grammar: None,
                 params: params.clone(),
+                token_sink: None,
             })
         })
         .collect();

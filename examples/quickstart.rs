@@ -56,6 +56,7 @@ fn main() {
             seed: 42,
             opportunistic: true,
         },
+        token_sink: None,
     })
     .expect_served("quickstart example");
     println!("\ngenerated ({:?}, {} tokens):\n{}", resp.finish, resp.tokens, resp.text);

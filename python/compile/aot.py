@@ -10,7 +10,7 @@ Run once by `make artifacts`; never on the request path. Produces in
 - `decode.hlo.txt`   — batched incremental decode step;
 - `mask_softmax.hlo.txt` — the L1 fused mask-union+softmax kernel as its
   own executable (loadable by the Rust sampler);
-- `train_log.json`   — loss curve evidence for EXPERIMENTS.md.
+- `train_log.json`   — loss curve record for the training run.
 
 HLO *text* is the interchange format: jax >= 0.5 serialises protos with
 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects; the

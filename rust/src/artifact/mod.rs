@@ -22,7 +22,7 @@
 //!   straight from the mapping (`docs/artifacts.md`).
 //! - [`GrammarRegistry`] maps grammar names to artifacts so one serving
 //!   coordinator admits requests targeting *different* grammars into the
-//!   same batched decode loop (see `coordinator/server.rs`).
+//!   same batched decode loop (see `coordinator/dispatch.rs`).
 //!
 //! The mask-store walk loop itself is sharded across threads
 //! (`MaskStoreConfig::threads`; see `mask/store.rs`) with a merge that is

@@ -28,6 +28,7 @@ struct Inner {
 }
 
 impl GrammarRegistry {
+    /// An empty registry (no grammars, no default).
     pub fn new() -> GrammarRegistry {
         GrammarRegistry {
             inner: RwLock::new(Inner { grammars: HashMap::new(), default_name: None }),
@@ -76,10 +77,12 @@ impl GrammarRegistry {
         v
     }
 
+    /// Number of registered grammars.
     pub fn len(&self) -> usize {
         self.inner.read().unwrap().grammars.len()
     }
 
+    /// True when no grammar has been registered yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -23,7 +23,7 @@
 use super::maskpool::MaskPool;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::replica::{run_replica, ReplicaCtx, ReplicaMetrics};
-use super::types::{EngineProvider, GenRequest, GenResponse};
+use super::types::{EngineProvider, FinishReason, GenRequest, GenResponse, TokenEvent};
 use crate::runtime::ModelFactory;
 use crate::tokenizer::Tokenizer;
 use std::collections::VecDeque;
@@ -171,8 +171,11 @@ impl SharedQueue {
     }
 
     /// Drain-and-reject everything still queued (dead coordinator).
+    /// Streaming requests get their terminal event before the response so
+    /// no SSE consumer is left waiting on a silent channel.
     fn reject_pending(&self, msg: &str) {
         while let Some((req, tx)) = self.try_pop() {
+            req.notify_finished(FinishReason::Rejected, Some(msg));
             let _ = tx.send(GenResponse::rejected(req.id, msg));
         }
     }
@@ -213,6 +216,46 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// The two receiving halves of one streaming generation
+/// ([`ServerHandle::submit_stream`]): per-token events while it runs and
+/// the final response when it finishes. Dropping `events` mid-stream is
+/// the cancellation signal — the replica's next send fails and the lane
+/// is freed (`FinishReason::Cancelled`).
+pub struct StreamHandle {
+    /// Token-by-token events, terminated by one [`TokenEvent::Finished`].
+    pub events: Receiver<TokenEvent>,
+    /// The final [`GenResponse`], sent after the terminal event.
+    pub response: Receiver<GenResponse>,
+}
+
+impl StreamHandle {
+    /// Drain the stream into `on_text` — called with each
+    /// newly-completed piece of generated text (one call per committed
+    /// token, plus a final call with the terminal event's held-back
+    /// UTF-8 tail when non-empty) — and return the final response.
+    /// Concatenating every `on_text` argument reproduces
+    /// `response.text` byte-for-byte. Convenience for in-process
+    /// consumers (the CLI's `generate --stream`); consumers that need
+    /// token ids/indices iterate `events` by hand (the HTTP front
+    /// does).
+    pub fn for_each_text(self, mut on_text: impl FnMut(&str)) -> GenResponse {
+        while let Ok(ev) = self.events.recv() {
+            match ev {
+                TokenEvent::Token(chunk) => on_text(&chunk.text),
+                TokenEvent::Finished { tail, .. } => {
+                    if !tail.is_empty() {
+                        on_text(&tail);
+                    }
+                    break;
+                }
+            }
+        }
+        self.response
+            .recv()
+            .unwrap_or_else(|_| GenResponse::rejected(0, "scheduler exited without responding"))
+    }
+}
+
 /// Handle to a running coordinator (or single-replica server).
 pub struct ServerHandle {
     queue: Arc<SharedQueue>,
@@ -236,9 +279,36 @@ impl ServerHandle {
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
         if let Err((req, tx)) = self.queue.push(req, tx) {
-            let _ = tx.send(GenResponse::rejected(req.id, "coordinator is shut down"));
+            let msg = "coordinator is shut down";
+            req.notify_finished(FinishReason::Rejected, Some(msg));
+            let _ = tx.send(GenResponse::rejected(req.id, msg));
         }
         rx
+    }
+
+    /// Streaming submit: like [`Self::submit`], but every committed token
+    /// is also delivered on the returned [`StreamHandle::events`] channel
+    /// as it leaves the step wave — before the generation finishes. The
+    /// stream always terminates with exactly one
+    /// [`TokenEvent::Finished`]; the final [`GenResponse`] then arrives on
+    /// [`StreamHandle::response`] as in blocking mode. Dropping the
+    /// handle (or just its `events` receiver) mid-stream cancels the
+    /// generation and frees its lane.
+    pub fn submit_stream(&self, mut req: GenRequest) -> StreamHandle {
+        let (etx, erx) = channel();
+        req.token_sink = Some(etx);
+        let response = self.submit(req);
+        StreamHandle { events: erx, response }
+    }
+
+    /// Non-blocking streaming submit: refuses with [`SubmitError`] when
+    /// the queue is full or the coordinator is closed (the HTTP front's
+    /// 429/503), otherwise behaves like [`Self::submit_stream`].
+    pub fn try_submit_stream(&self, mut req: GenRequest) -> Result<StreamHandle, SubmitError> {
+        let (etx, erx) = channel();
+        req.token_sink = Some(etx);
+        let response = self.try_submit(req)?;
+        Ok(StreamHandle { events: erx, response })
     }
 
     /// Non-blocking submit: refuses immediately instead of blocking when
@@ -404,7 +474,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{EngineFactory, FinishReason, GenParams, Strategy};
+    use crate::coordinator::{EngineFactory, FinishReason, GenParams, Strategy, TokenEvent};
     use crate::engine::baselines::StandardEngine;
     use crate::engine::{GrammarContext, SyncodeEngine};
     use crate::mask::{MaskStore, MaskStoreConfig};
@@ -458,6 +528,7 @@ mod tests {
                     seed: i * 31 + 5,
                     opportunistic: true,
                 },
+                token_sink: None,
             });
             assert!(resp.error.is_none(), "{:?}", resp.error);
             if resp.finish == FinishReason::Eos {
@@ -488,6 +559,7 @@ mod tests {
                 seed: 3,
                 opportunistic: true,
             },
+            token_sink: None,
         });
         assert!(resp.error.is_none());
         assert!(resp.tokens <= 20);
@@ -510,6 +582,7 @@ mod tests {
                         seed: i,
                         opportunistic: i % 2 == 0,
                     },
+                    token_sink: None,
                 })
             })
             .collect();
@@ -539,6 +612,7 @@ mod tests {
                 seed: 2,
                 opportunistic: true,
             },
+            token_sink: None,
         });
         let snap = srv.snapshot();
         assert!(snap.opportunistic_hits + snap.full_mask_computations > 0);
@@ -589,6 +663,109 @@ mod tests {
         q.close();
         assert_eq!(push(3).unwrap_err(), SubmitError::Closed);
         q.reject_pending("test over");
+    }
+
+    /// A fully-specified constrained request (both `stream_request`
+    /// call sites must agree byte-for-byte for the identity check).
+    fn stream_request(id: u64, seed: u64) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: "stream a JSON object:".into(),
+            constraint_prefix: String::new(),
+            grammar: None,
+            params: GenParams {
+                max_new_tokens: 48,
+                strategy: Strategy::Temperature(0.8),
+                seed,
+                opportunistic: true,
+            },
+            token_sink: None,
+        }
+    }
+
+    #[test]
+    fn submit_stream_delivers_tokens_then_terminal_then_response() {
+        let (srv, tok) = start_server(true);
+        let stream = srv.submit_stream(stream_request(21, 11));
+        let mut chunks = Vec::new();
+        let mut terminal = None;
+        while let Ok(ev) = stream.events.recv() {
+            match ev {
+                TokenEvent::Token(c) => chunks.push(c),
+                TokenEvent::Finished { finish, error, tail } => {
+                    terminal = Some((finish, error, tail));
+                    break;
+                }
+            }
+        }
+        let (finish, error, tail) = terminal.expect("stream must end with a terminal event");
+        assert!(error.is_none(), "{error:?}");
+        let resp = stream.response.recv().expect("response follows the terminal event");
+        assert_eq!(resp.finish, finish);
+        assert_eq!(chunks.len(), resp.tokens);
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.index, i, "chunk indices must be dense");
+        }
+        // Byte-identity: streamed text chunks (+ terminal tail) and the
+        // chunk ids re-decoded through the tokenizer both reassemble the
+        // blocking response text exactly.
+        let mut streamed: String = chunks.iter().map(|c| c.text.as_str()).collect();
+        streamed.push_str(&tail);
+        assert_eq!(streamed, resp.text);
+        let ids: Vec<u32> = chunks.iter().map(|c| c.id).collect();
+        assert_eq!(tok.decode_str(&ids), resp.text);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streaming_and_blocking_are_byte_identical_per_seed() {
+        let (srv, _) = start_server(true);
+        let blocking = srv.generate(stream_request(33, 17));
+        assert!(blocking.error.is_none(), "{:?}", blocking.error);
+        let mut pieces = String::new();
+        let streamed =
+            srv.submit_stream(stream_request(33, 17)).for_each_text(|t| pieces.push_str(t));
+        assert_eq!(blocking.text, streamed.text);
+        assert_eq!(blocking.finish, streamed.finish);
+        assert_eq!(blocking.tokens, streamed.tokens);
+        // The helper's callback pieces reassemble the text exactly
+        // (including any terminal UTF-8 tail).
+        assert_eq!(pieces, streamed.text);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dropped_stream_receiver_cancels_the_generation() {
+        let (srv, _) = start_server(true);
+        let stream = srv.submit_stream(stream_request(5, 23));
+        // Drop the event receiver before any token can be consumed: the
+        // replica's first send fails and the lane is freed immediately.
+        drop(stream.events);
+        let resp = stream.response.recv().expect("response survives cancellation");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens <= 1, "lane kept generating after cancel: {}", resp.tokens);
+        // The lane is actually free: a follow-up request still serves.
+        let after = srv.generate(stream_request(6, 29));
+        assert!(after.error.is_none(), "{:?}", after.error);
+        let snap = srv.snapshot();
+        assert_eq!(snap.streams_cancelled, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn stream_on_closed_coordinator_gets_rejected_terminal_event() {
+        let (srv, _) = start_server(false);
+        srv.close();
+        let stream = srv
+            .submit_stream(GenRequest { id: 9, prompt: "late".into(), ..Default::default() });
+        match stream.events.recv() {
+            Ok(TokenEvent::Finished { finish, .. }) => {
+                assert_eq!(finish, FinishReason::Rejected)
+            }
+            other => panic!("expected terminal event, got {other:?}"),
+        }
+        assert_eq!(stream.response.recv().unwrap().finish, FinishReason::Rejected);
+        srv.shutdown();
     }
 
     #[test]

@@ -129,6 +129,9 @@ pub struct Metrics {
     pub full_mask_computations: u64,
     pub opportunistic_hits: u64,
     pub engine_errors: u64,
+    /// Streamed requests whose client disconnected mid-generation (the
+    /// lane was freed without finishing; not counted as an engine error).
+    pub streams_cancelled: u64,
     /// Jobs executed by the mask worker pool (steps + prewarms).
     pub mask_pool_jobs: u64,
     /// Prewarm jobs that warmed the next step's analysis/mask while the
@@ -154,6 +157,8 @@ pub struct MetricsSnapshot {
     pub full_mask_computations: u64,
     pub opportunistic_hits: u64,
     pub engine_errors: u64,
+    /// Streams cancelled by client disconnect (lane freed mid-generation).
+    pub streams_cancelled: u64,
     pub mask_pool_jobs: u64,
     pub masks_prewarmed: u64,
     pub mean_latency: f64,
@@ -190,6 +195,7 @@ impl Metrics {
         self.full_mask_computations += other.full_mask_computations;
         self.opportunistic_hits += other.opportunistic_hits;
         self.engine_errors += other.engine_errors;
+        self.streams_cancelled += other.streams_cancelled;
         self.mask_pool_jobs += other.mask_pool_jobs;
         self.masks_prewarmed += other.masks_prewarmed;
         self.latency.merge(&other.latency);
@@ -211,6 +217,7 @@ impl Metrics {
             full_mask_computations: self.full_mask_computations,
             opportunistic_hits: self.opportunistic_hits,
             engine_errors: self.engine_errors,
+            streams_cancelled: self.streams_cancelled,
             mask_pool_jobs: self.mask_pool_jobs,
             masks_prewarmed: self.masks_prewarmed,
             mean_latency: self.latency.mean(),
@@ -261,6 +268,9 @@ impl MetricsSnapshot {
                 " queue(depth mean/max={:.1}/{})",
                 self.queue_depth_mean, self.queue_depth_max
             ));
+        }
+        if self.streams_cancelled > 0 {
+            s.push_str(&format!(" streams-cancelled={}", self.streams_cancelled));
         }
         s
     }

@@ -17,6 +17,14 @@
 //!   prewarm jobs overlap the *next* step's mask work with the model's
 //!   batched decode (the XGrammar-style systems win).
 //!
+//! Generations are streamable end to end: [`ServerHandle::submit_stream`]
+//! delivers every committed token as a [`TokenEvent`] the moment it
+//! leaves the step wave — each token is grammar-validated when it is
+//! decoded, so streaming costs nothing extra — and a dropped consumer
+//! cancels its generation ([`FinishReason::Cancelled`]), freeing the
+//! lane. The HTTP front exposes this as Server-Sent Events
+//! (`POST /v1/generate?stream=1`).
+//!
 //! Python is never involved: each model is an AOT HLO executable (or the
 //! mock).
 
@@ -29,9 +37,12 @@ mod sampler;
 mod types;
 
 pub use beam::{beam_generate, BeamHypothesis};
-pub use dispatch::{Coordinator, CoordinatorConfig, Server, ServerHandle, SubmitError};
+pub use dispatch::{
+    Coordinator, CoordinatorConfig, Server, ServerHandle, StreamHandle, SubmitError,
+};
 pub use metrics::{DepthGauge, Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
 pub use types::{
     EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse,
+    TokenChunk, TokenEvent, TokenSink,
 };

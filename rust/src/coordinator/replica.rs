@@ -22,11 +22,14 @@ use super::maskpool::{
     decide_token, Decision, PoolClient, Prewarmed, StepOutcome, StepRequest, StepResult,
 };
 use super::metrics::Metrics;
-use super::types::{EngineProvider, FinishReason, GenRequest, GenResponse};
+use super::types::{
+    EngineProvider, FinishReason, GenRequest, GenResponse, TokenChunk, TokenEvent,
+};
 use crate::engine::ConstraintEngine;
 use crate::runtime::{LanguageModel, ModelFactory};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
+use crate::util::utf8::Utf8Stream;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -72,6 +75,9 @@ struct Lane {
     t_admit: Instant,
     ttft: Option<f64>,
     prompt_len: usize,
+    /// Incremental UTF-8 state for streamed chunks (only advanced when
+    /// the request carries a token sink).
+    utf8: Utf8Stream,
 }
 
 pub(crate) fn run_replica(ctx: ReplicaCtx) {
@@ -116,6 +122,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                         m.requests_finished += 1;
                         m.engine_errors += 1;
                     });
+                    req.notify_finished(FinishReason::EngineError, Some(&msg));
                     let _ = resp_tx.send(GenResponse::failed(req.id, msg));
                     continue;
                 }
@@ -144,6 +151,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                         rng,
                         t_admit,
                         ttft: None,
+                        utf8: Utf8Stream::default(),
                     });
                 }
                 Err(e) => {
@@ -151,7 +159,9 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                         m.requests_finished += 1;
                         m.engine_errors += 1;
                     });
-                    let _ = resp_tx.send(GenResponse::failed(req.id, format!("prefill: {e}")));
+                    let msg = format!("prefill: {e}");
+                    req.notify_finished(FinishReason::EngineError, Some(&msg));
+                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
                 }
             }
         }
@@ -392,12 +402,38 @@ fn apply_outcome(
     });
     match d.outcome {
         StepOutcome::Token(t) => {
+            let mut cancelled = false;
             if let Some(lane) = slot.as_mut() {
                 if lane.ttft.is_none() {
                     lane.ttft = Some(lane.t_admit.elapsed().as_secs_f64());
                 }
                 lane.generated.push(t);
                 last[lane_idx] = Some(t);
+                // Streaming: the committed token leaves the step wave
+                // immediately, before the next batched decode.
+                if let Some(sink) = &lane.req.token_sink {
+                    let chunk = TokenChunk {
+                        index: lane.generated.len() - 1,
+                        id: t,
+                        text: lane.utf8.push(tok.token_bytes(t)),
+                    };
+                    cancelled = sink.send(TokenEvent::Token(chunk)).is_err();
+                }
+            }
+            // A failed send means the consumer dropped its receiver
+            // (client disconnect) — free the lane now instead of
+            // generating into the void.
+            if cancelled {
+                last[lane_idx] = None;
+                let lane = slot.take().expect("cancelled lane present");
+                finish_lane(
+                    lane,
+                    FinishReason::Cancelled,
+                    Some("client disconnected mid-stream".to_string()),
+                    tok,
+                    metrics,
+                );
+                model.release(lane_idx);
             }
         }
         StepOutcome::Finish(r, err) => {
@@ -410,7 +446,7 @@ fn apply_outcome(
 }
 
 fn finish_lane(
-    lane: Lane,
+    mut lane: Lane,
     finish: FinishReason,
     error: Option<String>,
     tok: &Tokenizer,
@@ -421,15 +457,28 @@ fn finish_lane(
     let tokens = lane.generated.len() as u64;
     let ttft = lane.ttft.unwrap_or(latency);
     let has_error = error.is_some();
+    let cancelled = finish == FinishReason::Cancelled;
     metrics.with(|m| {
         m.requests_finished += 1;
         m.tokens_generated += tokens;
         m.latency.record(latency);
         m.ttft.record(ttft);
-        if has_error {
+        if has_error && !cancelled {
             m.engine_errors += 1;
         }
+        if cancelled {
+            m.streams_cancelled += 1;
+        }
     });
+    // Exactly one terminal event per stream (a send after cancellation
+    // fails silently — the receiver is already gone).
+    if let Some(sink) = &lane.req.token_sink {
+        let _ = sink.send(TokenEvent::Finished {
+            finish: finish.clone(),
+            error: error.clone(),
+            tail: lane.utf8.flush(),
+        });
+    }
     let _ = lane.resp_tx.send(GenResponse {
         id: lane.req.id,
         text,

@@ -60,6 +60,50 @@ impl Default for GenParams {
     }
 }
 
+/// Where streamed [`TokenEvent`]s are delivered: the sending half of a
+/// standard mpsc channel, carried inside the request. A dropped receiver
+/// (client disconnect) makes the next send fail, which the replica
+/// scheduler treats as cancellation — the lane is freed immediately
+/// instead of decoding tokens nobody will read.
+pub type TokenSink = std::sync::mpsc::Sender<TokenEvent>;
+
+/// One committed token leaving the step wave, emitted before the next
+/// batched decode begins — the unit of token-by-token streaming.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenChunk {
+    /// 0-based position within the generation (prompt excluded).
+    pub index: usize,
+    /// Token id in the serving tokenizer's vocabulary.
+    pub id: u32,
+    /// Newly-completed UTF-8 text. May be empty when this token ends
+    /// mid-sequence (byte-level tokenizers split multi-byte characters);
+    /// the held-back bytes surface with the next chunk or in
+    /// [`TokenEvent::Finished`]'s `tail`. Concatenating every chunk's
+    /// `text` plus the final `tail` reproduces the blocking response's
+    /// `text` byte-for-byte.
+    pub text: String,
+}
+
+/// An event on a per-request token stream (see [`GenRequest`]'s
+/// `token_sink`). Every committed token is a `Token`; exactly one
+/// `Finished` terminates the stream (including rejection and
+/// cancellation), after which the [`GenResponse`] arrives on the
+/// response channel as usual.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenEvent {
+    /// A token passed grammar validation and was committed to the lane.
+    Token(TokenChunk),
+    /// The generation stopped; no more tokens will follow.
+    Finished {
+        finish: FinishReason,
+        /// Error detail for `EngineError` / `Rejected` / `Cancelled`.
+        error: Option<String>,
+        /// Lossy decode of a trailing incomplete UTF-8 sequence held back
+        /// by the last chunk (almost always empty).
+        tail: String,
+    },
+}
+
 /// A generation request.
 #[derive(Debug, Clone, Default)]
 pub struct GenRequest {
@@ -73,6 +117,27 @@ pub struct GenRequest {
     /// default (single-factory servers only accept `None`).
     pub grammar: Option<String>,
     pub params: GenParams,
+    /// Optional per-token event stream. `None` (the default) is the
+    /// blocking mode: the only observable output is the final
+    /// [`GenResponse`]. Use [`super::ServerHandle::submit_stream`] rather
+    /// than wiring a channel in by hand.
+    pub token_sink: Option<TokenSink>,
+}
+
+impl GenRequest {
+    /// Terminate this request's token stream (no-op without a sink).
+    /// Every path that fails a request before or instead of the normal
+    /// lane finish calls this, so a streaming consumer always observes
+    /// exactly one [`TokenEvent::Finished`].
+    pub(crate) fn notify_finished(&self, finish: FinishReason, error: Option<&str>) {
+        if let Some(sink) = &self.token_sink {
+            let _ = sink.send(TokenEvent::Finished {
+                finish,
+                error: error.map(str::to_string),
+                tail: String::new(),
+            });
+        }
+    }
 }
 
 /// Why a generation stopped.
@@ -87,6 +152,9 @@ pub enum FinishReason {
     /// The request never reached a scheduler: the coordinator is shut
     /// down, the admission queue was closed, or no replica is alive.
     Rejected,
+    /// The streaming client went away mid-generation (its token sink's
+    /// receiver was dropped); the lane was freed without finishing.
+    Cancelled,
 }
 
 /// A finished generation.

@@ -188,6 +188,7 @@ pub fn run_json(
             constraint_prefix: String::new(),
             grammar: None,
             params: params.clone(),
+            token_sink: None,
         })
         .expect_served("eval harness");
         time += resp.latency_secs;
@@ -253,6 +254,7 @@ pub fn run_sql(env: &EvalEnv, tasks: &[SqlTask], kind: EngineKind, params: &GenP
             constraint_prefix: String::new(),
             grammar: None,
             params: params.clone(),
+            token_sink: None,
         })
         .expect_served("eval harness");
         tokens += resp.tokens;
@@ -323,6 +325,7 @@ pub fn run_gpl(
                 constraint_prefix: t.prefix.clone(),
                 grammar: None,
                 params: p,
+                token_sink: None,
             })
             .expect_served("eval harness");
             time += resp.latency_secs;
@@ -375,6 +378,7 @@ pub fn run_calc_passk(
                 constraint_prefix: String::new(),
                 grammar: None,
                 params: p,
+                token_sink: None,
             })
             .expect_served("eval harness");
             let answer = resp.text.lines().next().unwrap_or("").trim();

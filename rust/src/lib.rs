@@ -7,7 +7,8 @@
 //! - **L3** (this crate): the constrained-decoding engine — incremental
 //!   LR(1)/LALR(1) parsing of the partial output, DFA mask store, grammar
 //!   mask (Algorithm 2) — plus a continuous-batching serving coordinator
-//!   and a dependency-free HTTP front (`net`) over it.
+//!   and a dependency-free HTTP front (`net`) over it, with token-by-token
+//!   streaming (SSE over keep-alive connections) end to end.
 //! - **L2** (`python/compile/model.py`): a small JAX transformer LM, AOT
 //!   lowered to HLO text and executed from Rust over PJRT.
 //! - **L1** (`python/compile/kernels/`): Pallas kernels for the fused

@@ -4,6 +4,7 @@
 //!
 //! - `compile`    compile a grammar artifact offline and write its cache file;
 //! - `generate`   one-shot constrained generation (mock or PJRT model);
+//!   `--stream` prints each token as it is decoded and validated;
 //! - `serve`      run the batch server over a synthetic request stream —
 //!   `--grammars a,b,c` serves several grammars from one registry, with
 //!   each request routed per-name through a batched decode loop;
@@ -11,7 +12,8 @@
 //!   queue and `--mask-threads M` computes grammar masks on a shared
 //!   worker pool, overlapped with the batched decode (`docs/serving.md`);
 //!   `--http ADDR` serves the same coordinator over HTTP instead of the
-//!   synthetic stream (`POST /v1/generate`, `GET /healthz`, `/metrics`);
+//!   synthetic stream (`POST /v1/generate`, with `?stream=1` for
+//!   token-by-token SSE, `GET /healthz`, `/metrics`);
 //! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
 //! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
 //! - `experiment` run a paper experiment (table1|table2|table3|table4);
@@ -48,10 +50,12 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: syncode <compile|generate|serve|grammar|maskstore|experiment|check> [--opts]\n\
-                 common: --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
-                 \x20        --cache-dir <dir> --threads <n> --mock\n\
-                 serve:  --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
-                 \x20        --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream)"
+                 common:   --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
+                 \x20          --cache-dir <dir> --threads <n> --mock\n\
+                 generate: --stream   (print tokens as they decode)\n\
+                 serve:    --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
+                 \x20          --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream;\n\
+                 \x20          POST /v1/generate?stream=1 streams tokens as SSE)"
             );
             std::process::exit(2);
         }
@@ -286,18 +290,34 @@ fn cmd_generate(args: &Args) {
     let art = artifact_for(args, &gname, tok.clone());
     let srv = Server::start(model, tok.clone(), art.engine_factory());
     let prompt = args.get_or("prompt", "Please generate a JSON object.");
-    let resp = srv.generate(GenRequest {
+    let req = GenRequest {
         id: 1,
         prompt,
         constraint_prefix: args.get_or("prefix", ""),
         grammar: None,
         params: params_from(args),
-    });
+        token_sink: None,
+    };
+    let resp = if args.flag("stream") {
+        // Token-by-token: each committed token prints the moment it
+        // leaves the step wave (the same event stream `serve --http`
+        // exposes as SSE).
+        use std::io::Write as _;
+        let resp = srv.submit_stream(req).for_each_text(|text| {
+            print!("{text}");
+            let _ = std::io::stdout().flush();
+        });
+        println!();
+        resp
+    } else {
+        let resp = srv.generate(req);
+        println!("{}", resp.text);
+        resp
+    };
     println!(
-        "--- generation ({:?}, {} tokens, {:.2}s) ---",
-        resp.finish, resp.tokens, resp.latency_secs
+        "--- generation ({:?}, {} tokens, ttft {:.3}s, total {:.2}s) ---",
+        resp.finish, resp.tokens, resp.ttft_secs, resp.latency_secs
     );
-    println!("{}", resp.text);
     if let Some(e) = resp.error {
         eprintln!("error: {e}");
     }
@@ -339,7 +359,7 @@ fn cmd_serve(args: &Args) {
         // ephemeral port, surfaced only here.
         println!("[http] listening on {}", server.local_addr());
         println!(
-            "[http] POST /v1/generate | GET /v1/grammars /healthz /metrics | POST /admin/shutdown"
+            "[http] POST /v1/generate (?stream=1 for SSE) | GET /v1/grammars /healthz /metrics | POST /admin/shutdown"
         );
         let handle = server.wait();
         println!("[http] drained; final metrics:");
@@ -365,6 +385,7 @@ fn cmd_serve(args: &Args) {
                 constraint_prefix: String::new(),
                 grammar: Some(g),
                 params: params.clone(),
+                token_sink: None,
             }
         })
         .collect();

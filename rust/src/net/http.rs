@@ -1,15 +1,27 @@
 //! Hand-rolled HTTP/1.1 wire protocol: request parsing, response
-//! serialisation, and a tiny blocking client for tests/examples.
+//! serialisation (fixed-length and chunked/SSE), and small blocking
+//! clients for tests/examples.
 //!
-//! Deliberately minimal (the crate is dependency-free): one request per
-//! connection (`Connection: close` on every response), bodies delimited
-//! by `Content-Length` only (chunked transfer is refused with 501), and
-//! hard limits on header and body sizes so a malicious peer cannot make
-//! the server buffer unbounded input. Parsing failures map directly onto
-//! the error [`Response`] the server should write back, so the connection
-//! handler never has to translate errors itself.
+//! Deliberately minimal (the crate is dependency-free): request bodies
+//! are delimited by `Content-Length` only (chunked *request* bodies are
+//! refused with 501), and hard limits on header and body sizes ensure a
+//! malicious peer cannot make the server buffer unbounded input. Parsing
+//! failures map directly onto the error [`Response`] the server should
+//! write back, so the connection handler never has to translate errors
+//! itself.
+//!
+//! Connections are persistent: HTTP/1.1 requests default to keep-alive
+//! ([`Request::wants_keep_alive`]), so one connection can carry many
+//! sequential requests (bounded by [`MAX_KEEPALIVE_REQUESTS`]). Streaming
+//! responses use `Transfer-Encoding: chunked` ([`ChunkedWriter`]) with
+//! one flush per Server-Sent Event ([`sse_event`]); the chunked
+//! terminator keeps the connection reusable after a stream ends.
+//!
+//! Clients: [`fetch`] is the one-shot `Connection: close` helper;
+//! [`HttpClient`] holds a keep-alive connection and can consume SSE
+//! streams incrementally ([`HttpClient::request_stream`]).
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
@@ -19,6 +31,10 @@ pub const MAX_LINE: usize = 8 * 1024;
 pub const MAX_HEADERS: usize = 64;
 /// Largest accepted request body, in bytes.
 pub const MAX_BODY: usize = 1024 * 1024;
+/// Most requests served over one keep-alive connection before the server
+/// closes it (a bound on per-connection resource pinning; clients
+/// reconnect transparently).
+pub const MAX_KEEPALIVE_REQUESTS: usize = 256;
 /// Total wall-clock budget for *reading* one request (line + headers +
 /// body). A hard deadline, not a per-read idle timeout: a slow-loris
 /// client trickling one byte per poll still loses its worker after this
@@ -26,14 +42,20 @@ pub const MAX_BODY: usize = 1024 * 1024;
 /// as the coordinator needs.
 pub const READ_DEADLINE: Duration = Duration::from_secs(10);
 
-/// A parsed HTTP request. `path` excludes any query string (the API has
-/// no query parameters; they are split off and ignored for routing).
+/// A parsed HTTP request. `path` excludes the query string, which is
+/// kept separately in `query` (`?stream=1` selects the SSE variant of
+/// `/v1/generate`; everything else ignores it).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// Raw query string without the leading `?` (empty when absent).
+    pub query: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// True for `HTTP/1.1` requests (keep-alive by default); false for
+    /// `HTTP/1.0` (close by default).
+    pub http11: bool,
 }
 
 impl Request {
@@ -43,6 +65,37 @@ impl Request {
             .iter()
             .find(|(k, _)| k.eq_ignore_ascii_case(name))
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Should the connection stay open after this request? HTTP/1.1
+    /// semantics: keep-alive unless `close` appears in the `Connection`
+    /// header; HTTP/1.0 only with an explicit `keep-alive`. The header
+    /// is a comma-separated token list (RFC 7230) — `close, TE` still
+    /// closes — and `close` wins when both tokens appear.
+    pub fn wants_keep_alive(&self) -> bool {
+        let mut verdict = self.http11;
+        if let Some(v) = self.header("Connection") {
+            for token in v.split(',') {
+                let token = token.trim();
+                if token.eq_ignore_ascii_case("close") {
+                    return false;
+                }
+                if token.eq_ignore_ascii_case("keep-alive") {
+                    verdict = true;
+                }
+            }
+        }
+        verdict
+    }
+
+    /// Is boolean query parameter `name` switched on? Accepts `name`,
+    /// `name=1` and `name=true`; `name=0`/`name=false` (or absence) is
+    /// off.
+    pub fn query_flag(&self, name: &str) -> bool {
+        self.query.split('&').any(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            k == name && matches!(v, "" | "1" | "true")
+        })
     }
 }
 
@@ -67,16 +120,18 @@ impl Response {
         }
     }
 
-    /// Serialise onto a stream. Always `Connection: close`: the server
-    /// handles one request per connection.
-    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+    /// Serialise onto a stream. `keep_alive` selects the `Connection:`
+    /// header; the body is always `Content-Length`-delimited, so a
+    /// keep-alive peer knows exactly where the next response starts.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
         )?;
         w.write_all(&self.body)?;
         w.flush()
@@ -113,21 +168,53 @@ pub fn error_response(status: u16, msg: &str) -> Response {
     Response::json(status, body.to_string())
 }
 
-/// A buffered connection reader with a hard wall-clock deadline. The
-/// socket gets a short poll timeout; every poll re-checks the deadline,
-/// so total read time is bounded no matter how slowly the peer trickles
-/// bytes (each worker is a scarce resource — see `net/server.rs`).
-struct DeadlineReader<'a> {
-    r: BufReader<&'a mut TcpStream>,
-    deadline: Instant,
+/// Persistent per-connection request reader. The `BufReader` lives for
+/// the whole connection, not one request: a pipelining client may put
+/// the next request's bytes in the same TCP segment as the current one,
+/// and a per-request reader would silently drop whatever it had
+/// buffered. `net/server.rs` keeps one of these per accepted connection.
+pub struct RequestReader {
+    r: BufReader<TcpStream>,
 }
 
-impl<'a> DeadlineReader<'a> {
-    fn new(stream: &'a mut TcpStream) -> DeadlineReader<'a> {
+impl RequestReader {
+    /// Wrap a connection (typically a `try_clone` of the stream the
+    /// responses are written to). Sets the short poll timeout the
+    /// per-request deadline loop relies on.
+    pub fn new(stream: TcpStream) -> RequestReader {
         let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
-        DeadlineReader { r: BufReader::new(stream), deadline: Instant::now() + READ_DEADLINE }
+        RequestReader { r: BufReader::new(stream) }
     }
 
+    /// Read the next request off the connection; see [`read_request`]
+    /// for the result contract. Each call gets a fresh
+    /// [`READ_DEADLINE`]; buffered bytes beyond the request just parsed
+    /// (a pipelined follow-up) are preserved for the next call.
+    pub fn read_request(&mut self) -> Result<Option<Request>, Response> {
+        let dr = DeadlineReader {
+            r: &mut self.r,
+            deadline: Instant::now() + READ_DEADLINE,
+            seen: false,
+        };
+        read_request_from(dr)
+    }
+}
+
+/// A borrowed view of the connection reader with a hard per-request
+/// wall-clock deadline. The socket has a short poll timeout; every poll
+/// re-checks the deadline, so total read time is bounded no matter how
+/// slowly the peer trickles bytes (each worker is a scarce resource —
+/// see `net/server.rs`).
+struct DeadlineReader<'a> {
+    r: &'a mut BufReader<TcpStream>,
+    deadline: Instant,
+    /// Did any request byte arrive? Distinguishes a slow request (408)
+    /// from an idle keep-alive connection timing out between requests (a
+    /// clean close).
+    seen: bool,
+}
+
+impl DeadlineReader<'_> {
     /// Park until buffered bytes are ready, returning how many (0 = EOF).
     /// Timeout polls loop until the deadline; hard I/O errors and the
     /// deadline both map to the error response to write back. Returns a
@@ -139,7 +226,10 @@ impl<'a> DeadlineReader<'a> {
                 return Err(error_response(408, "request read deadline exceeded"));
             }
             match self.r.fill_buf() {
-                Ok(chunk) => return Ok(chunk.len()), // 0 = EOF
+                Ok(chunk) => {
+                    self.seen |= !chunk.is_empty();
+                    return Ok(chunk.len()); // 0 = EOF
+                }
                 Err(e)
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
@@ -206,18 +296,31 @@ impl<'a> DeadlineReader<'a> {
     }
 }
 
-/// Read one request from a connection.
+/// Read one request from a connection (one-shot convenience over
+/// [`RequestReader`] — a keep-alive server must hold a `RequestReader`
+/// instead, or pipelined bytes buffered past the first request are
+/// lost).
 ///
 /// - `Ok(Some(req))` — a complete request;
-/// - `Ok(None)` — the peer closed the connection before sending anything
-///   (a clean no-op, e.g. a health prober or the shutdown wake-up dial);
+/// - `Ok(None)` — the peer closed the connection (or went idle past the
+///   read deadline) before sending anything: a clean no-op, e.g. a
+///   health prober, the shutdown wake-up dial, or a keep-alive client
+///   that is done with the connection;
 /// - `Err(resp)` — a protocol violation; write `resp` back and close.
 pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>, Response> {
-    let mut r = DeadlineReader::new(stream);
+    let clone = stream
+        .try_clone()
+        .map_err(|_| error_response(500, "connection clone failed"))?;
+    RequestReader::new(clone).read_request()
+}
 
+fn read_request_from(mut r: DeadlineReader<'_>) -> Result<Option<Request>, Response> {
     let line = match r.read_line() {
         Ok(Some(l)) => l,
         Ok(None) => return Ok(None),
+        // Deadline expired with zero request bytes: an idle keep-alive
+        // connection, not a slow-loris request — close without a 408.
+        Err(resp) if resp.status == 408 && !r.seen => return Ok(None),
         Err(resp) => return Err(resp),
     };
     let mut parts = line.split(' ');
@@ -228,7 +331,10 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>, Response>
     if version != "HTTP/1.1" && version != "HTTP/1.0" {
         return Err(error_response(400, "unsupported HTTP version"));
     }
-    let path = target.split('?').next().unwrap_or(target).to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
     if !path.starts_with('/') {
         return Err(error_response(400, "request target must be an absolute path"));
     }
@@ -252,7 +358,14 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>, Response>
         headers.push((k.trim().to_string(), v.trim().to_string()));
     }
 
-    let req = Request { method: method.to_string(), path, headers, body: Vec::new() };
+    let req = Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+        http11: version == "HTTP/1.1",
+    };
     if req.header("Transfer-Encoding").is_some() {
         return Err(error_response(501, "chunked transfer encoding is not supported"));
     }
@@ -298,35 +411,14 @@ pub fn fetch(
     read_response(&mut stream)
 }
 
-/// Parse a response from a stream: status line, headers, then the body
-/// (delimited by Content-Length when present, else read-to-EOF).
+/// Parse a response from a stream: status line, headers (shared parser:
+/// [`read_response_head`]), then the body — delimited by Content-Length
+/// when present, else read-to-EOF (the `Connection: close` fallback).
 pub fn read_response(stream: &mut TcpStream) -> std::io::Result<(u16, String)> {
-    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
     let mut r = BufReader::new(stream);
-    let mut line = String::new();
-    r.read_line(&mut line)?;
-    let status: u16 = line
-        .split(' ')
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| bad(&format!("bad status line: {line:?}")))?;
-    let mut content_length = None;
-    loop {
-        let mut h = String::new();
-        if r.read_line(&mut h)? == 0 {
-            return Err(bad("eof in response headers"));
-        }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse::<usize>().ok();
-            }
-        }
-    }
-    let body = match content_length {
+    let head = read_response_head(&mut r)?;
+    let body = match head.content_length {
         Some(n) => {
             let mut buf = vec![0u8; n];
             r.read_exact(&mut buf)?;
@@ -338,7 +430,331 @@ pub fn read_response(stream: &mut TcpStream) -> std::io::Result<(u16, String)> {
             buf
         }
     };
-    String::from_utf8(body).map(|b| (status, b)).map_err(|_| bad("non-UTF-8 body"))
+    String::from_utf8(body).map(|b| (head.status, b)).map_err(|_| bad("non-UTF-8 body"))
+}
+
+/// Response head as a client parsed it: status plus the body framing.
+struct ResponseHead {
+    status: u16,
+    chunked: bool,
+    content_length: Option<usize>,
+}
+
+/// Parse a response's status line and headers — the single head parser
+/// behind both [`read_response`] (one-shot) and [`HttpClient`]
+/// (keep-alive/streaming), so the two clients cannot drift on the wire
+/// format.
+fn read_response_head(r: &mut impl BufRead) -> io::Result<ResponseHead> {
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(bad("connection closed before response"));
+    }
+    let status: u16 = line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(&format!("bad status line: {line:?}")))?;
+    let mut head = ResponseHead { status, chunked: false, content_length: None };
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(bad("eof in response headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                head.content_length = v.parse::<usize>().ok();
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                head.chunked = v.eq_ignore_ascii_case("chunked");
+            }
+        }
+    }
+    Ok(head)
+}
+
+// ---------------------------------------------------------------------------
+// Chunked transfer-encoding + Server-Sent Events (the streaming response
+// path of `POST /v1/generate?stream=1`).
+
+/// Writes one `Transfer-Encoding: chunked` response body: head on
+/// [`start`], one chunk frame (`<hex len>\r\n<data>\r\n`) per
+/// [`chunk`] — flushed immediately, so an SSE consumer sees each event as
+/// it happens, not when a buffer fills — and the `0\r\n\r\n` terminator
+/// on [`finish`]. Because the terminator delimits the body exactly, a
+/// keep-alive connection stays reusable after a streamed response.
+///
+/// [`start`]: ChunkedWriter::start
+/// [`chunk`]: ChunkedWriter::chunk
+/// [`finish`]: ChunkedWriter::finish
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head (status line + headers, `Transfer-Encoding:
+    /// chunked`, no `Content-Length`) and flush it.
+    pub fn start(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> io::Result<ChunkedWriter<W>> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+            status,
+            status_text(status),
+            content_type,
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Write one chunk frame and flush. Empty data is skipped — an empty
+    /// chunk *is* the terminator on the wire, so emitting one mid-stream
+    /// would truncate the body for the peer.
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Write the terminating zero-length chunk and flush.
+    pub fn finish(mut self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Frame one Server-Sent Event: `event: <name>` then one `data:` line per
+/// line of `data` (the SSE framing for embedded newlines), then the blank
+/// line that terminates the event. Empty data still produces a
+/// well-formed event (`data:` with an empty payload).
+pub fn sse_event(event: &str, data: &str) -> Vec<u8> {
+    let mut out = String::with_capacity(event.len() + data.len() + 16);
+    out.push_str("event: ");
+    out.push_str(event);
+    out.push('\n');
+    for line in data.split('\n') {
+        out.push_str("data: ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push('\n');
+    out.into_bytes()
+}
+
+/// Parse one SSE block (the text between two blank lines) into
+/// `(event name, data)`. Multiple `data:` lines rejoin with `\n`; an
+/// absent `event:` line yields the SSE default name `"message"`.
+pub fn parse_sse_block(block: &str) -> (String, String) {
+    let mut event = String::from("message");
+    let mut data: Vec<&str> = Vec::new();
+    for line in block.lines() {
+        if let Some(v) = line.strip_prefix("event:") {
+            event = v.strip_prefix(' ').unwrap_or(v).to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            data.push(v.strip_prefix(' ').unwrap_or(v));
+        }
+    }
+    (event, data.join("\n"))
+}
+
+/// A keep-alive HTTP client: many sequential requests on one connection,
+/// with incremental consumption of chunked SSE responses
+/// ([`request_stream`](Self::request_stream)). Dropping the client
+/// closes the socket — for an in-flight stream that is the disconnect
+/// signal the server turns into generation cancellation. (Dropping just
+/// the `SseStream` mid-response does *not* resynchronise the connection;
+/// see [`request_stream`](Self::request_stream).)
+pub struct HttpClient {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to `addr` with a 120 s read timeout.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<HttpClient> {
+        let w = TcpStream::connect(addr)?;
+        w.set_read_timeout(Some(Duration::from_secs(120)))?;
+        let r = BufReader::new(w.try_clone()?);
+        Ok(HttpClient { w, r })
+    }
+
+    fn send_request(&mut self, method: &str, path: &str, body: Option<&str>) -> io::Result<()> {
+        let body = body.unwrap_or("");
+        write!(
+            self.w,
+            "{method} {path} HTTP/1.1\r\nHost: syncode\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+        self.w.flush()
+    }
+
+    /// One chunk frame's payload; `None` for the terminating chunk.
+    fn read_chunk(&mut self) -> io::Result<Option<Vec<u8>>> {
+        let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+        let mut line = String::new();
+        if self.r.read_line(&mut line)? == 0 {
+            return Err(bad("eof before chunk size"));
+        }
+        let len = usize::from_str_radix(line.trim(), 16)
+            .map_err(|_| bad(&format!("bad chunk size: {line:?}")))?;
+        if len == 0 {
+            // Consume the trailing CRLF after the zero chunk.
+            let mut end = String::new();
+            let _ = self.r.read_line(&mut end)?;
+            return Ok(None);
+        }
+        let mut data = vec![0u8; len];
+        self.r.read_exact(&mut data)?;
+        let mut crlf = [0u8; 2];
+        self.r.read_exact(&mut crlf)?;
+        if &crlf != b"\r\n" {
+            return Err(bad("chunk not CRLF-terminated"));
+        }
+        Ok(Some(data))
+    }
+
+    /// Read a whole body according to the head's framing.
+    fn read_body(&mut self, head: &ResponseHead) -> io::Result<Vec<u8>> {
+        if head.chunked {
+            let mut body = Vec::new();
+            while let Some(chunk) = self.read_chunk()? {
+                body.extend_from_slice(&chunk);
+            }
+            Ok(body)
+        } else {
+            let mut body = vec![0u8; head.content_length.unwrap_or(0)];
+            self.r.read_exact(&mut body)?;
+            Ok(body)
+        }
+    }
+
+    /// One request/response roundtrip; the connection stays open for the
+    /// next call. Returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<(u16, String)> {
+        self.send_request(method, path, body)?;
+        let head = read_response_head(&mut self.r)?;
+        let body = self.read_body(&head)?;
+        String::from_utf8(body)
+            .map(|b| (head.status, b))
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 body"))
+    }
+
+    /// Send a request and consume the response as a stream. On a 200 the
+    /// server answers with chunked SSE — iterate
+    /// [`SseStream::next_event`]; on an error status call
+    /// [`SseStream::into_body`] for the JSON error.
+    ///
+    /// The stream borrows the client. The connection is reusable only
+    /// after the response was consumed to its end (`next_event` returned
+    /// `None`, or `into_body` drained it); *dropping* an unfinished
+    /// stream leaves its remaining frames on the socket, so the next
+    /// `request` on this client would misparse — abandon the whole
+    /// client instead (dropping it closes the socket, which the server
+    /// treats as the disconnect/cancel signal).
+    pub fn request_stream(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<SseStream<'_>> {
+        self.send_request(method, path, body)?;
+        let head = read_response_head(&mut self.r)?;
+        Ok(SseStream { client: self, head, buf: Vec::new(), done: false })
+    }
+}
+
+/// An in-flight streaming response (see [`HttpClient::request_stream`]).
+pub struct SseStream<'a> {
+    client: &'a mut HttpClient,
+    head: ResponseHead,
+    /// De-chunked bytes not yet consumed as a full SSE event.
+    buf: Vec<u8>,
+    done: bool,
+}
+
+impl SseStream<'_> {
+    /// The response status (200 for a live stream).
+    pub fn status(&self) -> u16 {
+        self.head.status
+    }
+
+    /// Next `(event name, data)` pair; `None` once the stream terminated.
+    /// Events become available as the server flushes them — this blocks
+    /// only on the socket, never on end-of-response. On a non-chunked
+    /// (error) response this yields no events but still consumes the
+    /// fixed-length body, so the keep-alive connection stays usable
+    /// even when a caller only loops `next_event` without checking the
+    /// status first (read the error itself with
+    /// [`into_body`](Self::into_body)).
+    pub fn next_event(&mut self) -> io::Result<Option<(String, String)>> {
+        loop {
+            // A complete event is delimited by a blank line.
+            if let Some(pos) = find_double_newline(&self.buf) {
+                let block: Vec<u8> = self.buf.drain(..pos + 2).collect();
+                let text = String::from_utf8_lossy(&block).into_owned();
+                let (event, data) = parse_sse_block(&text);
+                return Ok(Some((event, data)));
+            }
+            if self.done {
+                return Ok(None);
+            }
+            if !self.head.chunked {
+                // Not a stream (error response): buffer the body for
+                // into_body so the connection is left in sync, but do
+                // not parse it as SSE.
+                let body = self.client.read_body(&self.head)?;
+                self.buf.extend_from_slice(&body);
+                self.done = true;
+                return Ok(None);
+            }
+            match self.client.read_chunk()? {
+                Some(chunk) => self.buf.extend_from_slice(&chunk),
+                None => self.done = true,
+            }
+        }
+    }
+
+    /// Drain the rest of the response as a plain body (the non-streaming
+    /// error case, or abandoning a stream while keeping the connection).
+    pub fn into_body(mut self) -> io::Result<String> {
+        let mut rest = if self.done {
+            Vec::new()
+        } else if self.head.chunked {
+            let mut out = Vec::new();
+            while let Some(chunk) = self.client.read_chunk()? {
+                out.extend_from_slice(&chunk);
+            }
+            out
+        } else {
+            self.client.read_body(&self.head)?
+        };
+        let mut body = std::mem::take(&mut self.buf);
+        body.append(&mut rest);
+        String::from_utf8(body)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 body"))
+    }
+}
+
+fn find_double_newline(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\n\n")
 }
 
 #[cfg(test)]
@@ -427,7 +843,7 @@ mod tests {
             let (mut conn, _) = listener.accept().unwrap();
             let req = read_request(&mut conn).unwrap().unwrap();
             assert_eq!(req.body, b"ping");
-            error_response(429, "slow down").write_to(&mut conn).unwrap();
+            error_response(429, "slow down").write_to(&mut conn, false).unwrap();
         });
         let (status, body) = fetch(addr, "POST", "/v1/generate", Some("ping")).unwrap();
         server.join().unwrap();
@@ -436,5 +852,217 @@ mod tests {
             crate::util::json::parse(&body).unwrap().get("error").unwrap().as_str(),
             Some("slow down")
         );
+    }
+
+    #[test]
+    fn request_parses_query_and_keepalive_semantics() {
+        let req = parse_raw(b"POST /v1/generate?stream=1&x=2 HTTP/1.1\r\nContent-Length: 0\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.query, "stream=1&x=2");
+        assert!(req.query_flag("stream"));
+        assert!(!req.query_flag("x"), "x=2 is not a truthy flag");
+        assert!(!req.query_flag("nope"));
+        // HTTP/1.1 defaults to keep-alive; Connection: close overrides.
+        assert!(req.wants_keep_alive());
+        let req =
+            parse_raw(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!req.wants_keep_alive());
+        // HTTP/1.0 defaults to close; Connection: keep-alive overrides.
+        let req = parse_raw(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.wants_keep_alive());
+        let req = parse_raw(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.wants_keep_alive());
+        // RFC 7230 token lists: close anywhere in the list wins.
+        let req = parse_raw(b"GET / HTTP/1.1\r\nConnection: close, TE\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.wants_keep_alive());
+        let req = parse_raw(b"GET / HTTP/1.0\r\nConnection: keep-alive, TE\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.wants_keep_alive());
+        let req = parse_raw(b"GET / HTTP/1.0\r\nConnection: keep-alive, close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.wants_keep_alive(), "close beats keep-alive");
+        // Bare ?stream (no value) is on.
+        let req = parse_raw(b"GET /x?stream HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(req.query_flag("stream"));
+    }
+
+    #[test]
+    fn sse_framing_roundtrips() {
+        // Single-line data.
+        let bytes = sse_event("token", r#"{"id": 3}"#);
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(text, "event: token\ndata: {\"id\": 3}\n\n");
+        let (ev, data) = parse_sse_block(&text);
+        assert_eq!(ev, "token");
+        assert_eq!(data, r#"{"id": 3}"#);
+        // Embedded newlines become multiple data: lines and rejoin.
+        let (ev, data) =
+            parse_sse_block(std::str::from_utf8(&sse_event("done", "a\nb\nc")).unwrap());
+        assert_eq!(ev, "done");
+        assert_eq!(data, "a\nb\nc");
+        // Empty data is still a well-formed event.
+        let bytes = sse_event("ping", "");
+        assert_eq!(std::str::from_utf8(&bytes).unwrap(), "event: ping\ndata: \n\n");
+        let (ev, data) = parse_sse_block("event: ping\ndata: \n");
+        assert_eq!((ev.as_str(), data.as_str()), ("ping", ""));
+        // Missing event name falls back to the SSE default.
+        let (ev, data) = parse_sse_block("data: hello\n");
+        assert_eq!((ev.as_str(), data.as_str()), ("message", "hello"));
+    }
+
+    /// Serve one canned chunked response over a real socket pair.
+    fn chunked_server(
+        frames: Vec<Vec<u8>>,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let _ = read_request(&mut conn).unwrap();
+            let mut w =
+                ChunkedWriter::start(&mut conn, 200, "text/event-stream", false).unwrap();
+            for f in frames {
+                w.chunk(&f).unwrap();
+            }
+            w.finish().unwrap();
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn chunked_writer_roundtrips_through_client() {
+        // One SSE event split across *two* chunk frames plus one whole
+        // event in a third: frame boundaries must not affect event
+        // reassembly.
+        let ev1 = sse_event("token", "one");
+        let (a, b) = ev1.split_at(7);
+        let frames = vec![a.to_vec(), b.to_vec(), sse_event("done", "final")];
+        let (addr, server) = chunked_server(frames);
+        let mut client = HttpClient::connect(addr).unwrap();
+        let mut stream = client.request_stream("GET", "/stream", None).unwrap();
+        assert_eq!(stream.status(), 200);
+        assert_eq!(
+            stream.next_event().unwrap(),
+            Some(("token".to_string(), "one".to_string()))
+        );
+        assert_eq!(
+            stream.next_event().unwrap(),
+            Some(("done".to_string(), "final".to_string()))
+        );
+        assert_eq!(stream.next_event().unwrap(), None);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_writer_skips_empty_chunks() {
+        // An empty chunk would be the wire terminator; the writer must
+        // swallow it so the real terminator still ends the body.
+        let frames = vec![b"ab".to_vec(), Vec::new(), b"cd".to_vec()];
+        let (addr, server) = chunked_server(frames);
+        let mut client = HttpClient::connect(addr).unwrap();
+        let stream = client.request_stream("GET", "/stream", None).unwrap();
+        assert_eq!(stream.into_body().unwrap(), "abcd");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn chunks_flush_per_event_not_at_finish() {
+        // The consumer must see an event while the producer is still
+        // holding the stream open — the "tokens before completion"
+        // contract at the wire level.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let _ = read_request(&mut conn).unwrap();
+            let mut w =
+                ChunkedWriter::start(&mut conn, 200, "text/event-stream", false).unwrap();
+            w.chunk(&sse_event("token", "early")).unwrap();
+            // Hold the stream open until the client has read the event.
+            release_rx.recv().unwrap();
+            w.chunk(&sse_event("done", "late")).unwrap();
+            w.finish().unwrap();
+        });
+        let mut client = HttpClient::connect(addr).unwrap();
+        let mut stream = client.request_stream("GET", "/stream", None).unwrap();
+        let first = stream.next_event().unwrap().unwrap();
+        assert_eq!(first.0, "token");
+        assert_eq!(first.1, "early");
+        // Event arrived while the response is provably unfinished.
+        release_tx.send(()).unwrap();
+        assert_eq!(
+            stream.next_event().unwrap(),
+            Some(("done".to_string(), "late".to_string()))
+        );
+        assert_eq!(stream.next_event().unwrap(), None);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn keepalive_client_reuses_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // Accept exactly one connection and answer three requests on
+            // it — a second accept would hang, proving reuse. Uses the
+            // persistent RequestReader exactly like the real server.
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut reader = RequestReader::new(conn.try_clone().unwrap());
+            for i in 0..3 {
+                let req = reader.read_request().unwrap().unwrap();
+                assert!(req.wants_keep_alive());
+                Response::text(200, format!("reply {i}")).write_to(&mut conn, true).unwrap();
+            }
+        });
+        let mut client = HttpClient::connect(addr).unwrap();
+        for i in 0..3 {
+            let (status, body) = client.request("GET", "/ping", None).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, format!("reply {i}"));
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_requests_in_one_segment_are_not_lost() {
+        // Two complete requests written in a single TCP segment: the
+        // persistent RequestReader must hand back both — a per-request
+        // BufReader would discard the second one with its buffer.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"GET /first HTTP/1.1\r\n\r\nPOST /second HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi",
+            )
+            .unwrap();
+            // Both responses come back on the same connection.
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            for _ in 0..2 {
+                let head = read_response_head(&mut r).unwrap();
+                assert_eq!(head.status, 200);
+                let mut body = vec![0u8; head.content_length.unwrap()];
+                r.read_exact(&mut body).unwrap();
+            }
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut reader = RequestReader::new(conn.try_clone().unwrap());
+        let first = reader.read_request().unwrap().expect("first request");
+        assert_eq!(first.path, "/first");
+        Response::text(200, "one".into()).write_to(&mut conn, true).unwrap();
+        let second = reader.read_request().unwrap().expect("pipelined request lost");
+        assert_eq!(second.path, "/second");
+        assert_eq!(second.body, b"hi");
+        Response::text(200, "two".into()).write_to(&mut conn, true).unwrap();
+        client.join().unwrap();
     }
 }

@@ -8,7 +8,9 @@
 //! keys are rejected so a typo (`"max_token"`) fails loudly as a 400
 //! instead of silently running with defaults.
 
-use crate::coordinator::{FinishReason, GenParams, GenRequest, GenResponse, Strategy};
+use crate::coordinator::{
+    FinishReason, GenParams, GenRequest, GenResponse, Strategy, TokenChunk,
+};
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
 
@@ -45,6 +47,9 @@ impl GenerateBody {
                 seed: self.seed,
                 opportunistic: self.opportunistic,
             },
+            // The streaming front installs its sink via
+            // `ServerHandle::try_submit_stream`, not the body codec.
+            token_sink: None,
         }
     }
 }
@@ -155,6 +160,7 @@ pub fn finish_str(f: &FinishReason) -> &'static str {
         FinishReason::EngineError => "engine_error",
         FinishReason::SeqOverflow => "seq_overflow",
         FinishReason::Rejected => "rejected",
+        FinishReason::Cancelled => "cancelled",
     }
 }
 
@@ -167,15 +173,27 @@ pub fn finish_from_str(s: &str) -> Option<FinishReason> {
         "engine_error" => FinishReason::EngineError,
         "seq_overflow" => FinishReason::SeqOverflow,
         "rejected" => FinishReason::Rejected,
+        "cancelled" => FinishReason::Cancelled,
         _ => return None,
     })
 }
 
-/// Encode a finished generation as the `/v1/generate` response body.
-/// `grammar` is the grammar that actually constrained the request (the
-/// registry default when the client named none); `valid` is the verdict
-/// of [`crate::artifact::CompiledGrammar::response_valid`].
-pub fn encode_generate_response(resp: &GenResponse, grammar: &str, valid: bool) -> String {
+/// Encode one streamed token as the `token` SSE event's data payload:
+/// `{"index", "id", "text"}`. `text` may be empty when the token ended
+/// mid-UTF-8-sequence (the bytes surface with a later chunk).
+pub fn encode_token_event(chunk: &TokenChunk) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("index".to_string(), Json::Num(chunk.index as f64));
+    m.insert("id".to_string(), Json::Num(chunk.id as f64));
+    m.insert("text".to_string(), Json::Str(chunk.text.clone()));
+    Json::Obj(m).to_string()
+}
+
+fn generate_response_map(
+    resp: &GenResponse,
+    grammar: &str,
+    valid: bool,
+) -> BTreeMap<String, Json> {
     let mut m = BTreeMap::new();
     m.insert("id".to_string(), Json::Num(resp.id as f64));
     m.insert("grammar".to_string(), Json::Str(grammar.to_string()));
@@ -188,6 +206,29 @@ pub fn encode_generate_response(resp: &GenResponse, grammar: &str, valid: bool) 
     if let Some(e) = &resp.error {
         m.insert("error".to_string(), Json::Str(e.clone()));
     }
+    m
+}
+
+/// Encode a finished generation as the `/v1/generate` response body.
+/// `grammar` is the grammar that actually constrained the request (the
+/// registry default when the client named none); `valid` is the verdict
+/// of [`crate::artifact::CompiledGrammar::response_valid`].
+pub fn encode_generate_response(resp: &GenResponse, grammar: &str, valid: bool) -> String {
+    Json::Obj(generate_response_map(resp, grammar, valid)).to_string()
+}
+
+/// Encode the terminal `done` SSE event of a streamed generation: the
+/// full response payload plus `tail` — the lossy decode of a trailing
+/// incomplete UTF-8 sequence the last `token` event held back, so
+/// `concat(token texts) + tail == text` holds byte-for-byte.
+pub fn encode_stream_done(
+    resp: &GenResponse,
+    grammar: &str,
+    valid: bool,
+    tail: &str,
+) -> String {
+    let mut m = generate_response_map(resp, grammar, valid);
+    m.insert("tail".to_string(), Json::Str(tail.to_string()));
     Json::Obj(m).to_string()
 }
 
@@ -310,6 +351,7 @@ mod tests {
             FinishReason::EngineError,
             FinishReason::SeqOverflow,
             FinishReason::Rejected,
+            FinishReason::Cancelled,
         ] {
             assert_eq!(finish_from_str(finish_str(&f)).unwrap(), f);
         }

@@ -90,6 +90,12 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
     );
     counter(
         &mut out,
+        "syncode_streams_cancelled_total",
+        "Streamed generations cancelled by client disconnect (lane freed).",
+        global.streams_cancelled,
+    );
+    counter(
+        &mut out,
         "syncode_mask_pool_jobs_total",
         "Jobs executed by the shared mask worker pool (steps + prewarms).",
         global.mask_pool_jobs,

@@ -5,6 +5,12 @@
 //!
 //! - `POST /v1/generate` — constrained generation; body schema in
 //!   `net/json.rs`, response includes the grammar-validity verdict;
+//! - `POST /v1/generate?stream=1` — the same request streamed as
+//!   Server-Sent Events over chunked transfer-encoding: one `token`
+//!   event per committed token as it leaves the step wave, then one
+//!   terminal `done` event carrying the finish reason and the final
+//!   grammar-validity verdict. A client that disconnects mid-stream
+//!   cancels its generation and frees the lane.
 //! - `GET  /v1/grammars` — registry listing with per-grammar stats;
 //! - `GET  /healthz` — liveness + queue gauge (503 while draining);
 //! - `GET  /metrics` — Prometheus text rendering (`net/prom.rs`);
@@ -13,15 +19,20 @@
 //!   denial of service.
 //!
 //! Backpressure is visible end-to-end: submissions go through the
-//! non-blocking [`ServerHandle::try_submit`], so a full admission queue
+//! non-blocking [`ServerHandle::try_submit`] /
+//! [`ServerHandle::try_submit_stream`], so a full admission queue
 //! answers 429 and a closed coordinator 503 — a load balancer can react
 //! instead of piling blocked connections onto a saturated server.
 //!
 //! Concurrency model: N worker threads all `accept()` on one shared
-//! listener (the kernel load-balances), one request per connection. A
-//! `/v1/generate` handler parks its worker on the response channel while
-//! the coordinator decodes, so `workers` bounds concurrent HTTP requests
-//! — size it ≥ total model lanes to keep every lane feedable.
+//! listener (the kernel load-balances), one **connection** per worker at
+//! a time. Connections are keep-alive (HTTP/1.1 default): one client can
+//! pipeline many sequential requests — including streams, whose chunked
+//! terminator keeps the connection reusable — bounded by
+//! [`http::MAX_KEEPALIVE_REQUESTS`]. A `/v1/generate` handler parks its
+//! worker on the response channel (or feeds the SSE stream) while the
+//! coordinator decodes, so `workers` bounds concurrent HTTP requests —
+//! size it ≥ total model lanes to keep every lane feedable.
 //!
 //! Graceful shutdown ([`HttpServer::shutdown`] or the admin endpoint):
 //! mark draining (healthz flips 503 so load balancers stop routing),
@@ -30,11 +41,15 @@
 //! hand the coordinator handle back to the caller for final metrics and
 //! replica join.
 
-use super::http::{self, error_response, Request, Response};
-use super::json::{decode_generate, encode_generate_response};
+use super::http::{self, error_response, ChunkedWriter, Request, Response};
+use super::json::{
+    decode_generate, encode_generate_response, encode_stream_done, encode_token_event,
+};
 use super::prom::{self, HttpStats};
 use crate::artifact::{CompiledGrammar, GrammarRegistry};
-use crate::coordinator::{FinishReason, ServerHandle, SubmitError};
+use crate::coordinator::{
+    FinishReason, GenResponse, ServerHandle, StreamHandle, SubmitError, TokenEvent,
+};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io;
@@ -46,8 +61,10 @@ use std::sync::{Arc, Mutex};
 /// HTTP front tuning.
 #[derive(Debug, Clone)]
 pub struct HttpConfig {
-    /// Accept-pool size = max concurrent HTTP requests (a generate
-    /// handler occupies its worker until the coordinator responds).
+    /// Accept-pool size = max concurrent connections. A generate handler
+    /// occupies its worker until the coordinator responds (or the stream
+    /// ends); an idle keep-alive connection holds its worker up to the
+    /// 10 s read deadline before it is reclaimed.
     pub workers: usize,
 }
 
@@ -190,30 +207,87 @@ fn worker_loop(listener: &TcpListener, state: &Arc<AppState>, stop: &Arc<AtomicB
         // Serve the accepted connection even when the stop flag is
         // already set: a real client that raced the shutdown gets its
         // 503 (never a silent connection drop), and a wake-up dial
-        // reads as clean EOF below. The loop condition exits afterwards.
+        // reads as clean EOF inside serve_connection. The loop condition
+        // exits afterwards.
         let last = stop.load(Ordering::Acquire);
-        let peer_is_loopback =
-            conn.peer_addr().map(|p| p.ip().is_loopback()).unwrap_or(false);
-        match http::read_request(&mut conn) {
-            Ok(Some(req)) => {
-                let resp = route(state, &req, peer_is_loopback);
-                state.record(resp.status);
-                let _ = resp.write_to(&mut conn);
-            }
-            Ok(None) => {} // peer sent nothing (probe or wake-up dial)
-            Err(resp) => {
-                state.record(resp.status);
-                let _ = resp.write_to(&mut conn);
-            }
-        }
+        serve_connection(&mut conn, state, stop);
         if last {
             return;
         }
     }
 }
 
-fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+/// Serve one connection until it closes: sequential keep-alive requests,
+/// each either a buffered response or an SSE stream written in place.
+/// The [`http::RequestReader`] persists across requests so bytes a
+/// pipelining client sent ahead are never dropped between them.
+fn serve_connection(conn: &mut TcpStream, state: &Arc<AppState>, stop: &Arc<AtomicBool>) {
+    let peer_is_loopback = conn.peer_addr().map(|p| p.ip().is_loopback()).unwrap_or(false);
+    let Ok(read_half) = conn.try_clone() else { return };
+    let mut reader = http::RequestReader::new(read_half);
+    for served in 0..http::MAX_KEEPALIVE_REQUESTS {
+        match reader.read_request() {
+            Ok(Some(req)) => {
+                // Keep the connection only while the client wants it,
+                // the per-connection request cap is not exhausted, and
+                // the server is not draining.
+                let keep = req.wants_keep_alive()
+                    && served + 1 < http::MAX_KEEPALIVE_REQUESTS
+                    && !stop.load(Ordering::Acquire);
+                match route(state, &req, peer_is_loopback) {
+                    Handled::Plain(resp) => {
+                        state.record(resp.status);
+                        if resp.write_to(conn, keep).is_err() {
+                            return;
+                        }
+                    }
+                    Handled::Stream(job) => {
+                        let (status, conn_alive) = serve_stream(conn, *job, keep);
+                        state.record(status);
+                        if !conn_alive {
+                            return;
+                        }
+                    }
+                }
+                if !keep {
+                    return;
+                }
+            }
+            // Peer sent nothing / went idle (probe, wake-up dial, or a
+            // keep-alive client done with the connection).
+            Ok(None) => return,
+            Err(resp) => {
+                state.record(resp.status);
+                let _ = resp.write_to(conn, false);
+                return;
+            }
+        }
+    }
+}
+
+/// How a routed request is delivered to the connection.
+enum Handled {
+    /// A complete buffered response (everything except streaming).
+    Plain(Response),
+    /// A live SSE stream: the worker writes events as the coordinator
+    /// emits them.
+    Stream(Box<StreamJob>),
+}
+
+/// A streaming generation admitted to the coordinator, ready to be
+/// written to the socket.
+struct StreamJob {
+    /// The grammar that constrains the request (for the final validity
+    /// verdict and the response's `grammar` field).
+    art: Arc<CompiledGrammar>,
+    stream: StreamHandle,
+}
+
+fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Handled {
+    let plain = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") if req.query_flag("stream") => {
+            return handle_generate_stream(state, req);
+        }
         ("POST", "/v1/generate") => handle_generate(state, req),
         ("GET", "/v1/grammars") => handle_grammars(state),
         ("GET", "/healthz") => handle_healthz(state),
@@ -232,7 +306,75 @@ fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Respon
             error_response(405, "use GET")
         }
         (_, path) => error_response(404, &format!("no route for {path}")),
+    };
+    Handled::Plain(plain)
+}
+
+/// Admit a streaming generation. Pre-admission failures (bad body,
+/// unknown grammar, backpressure) are plain status-code responses —
+/// exactly the blocking endpoint's semantics; only a successfully
+/// admitted request switches the connection to SSE.
+fn handle_generate_stream(state: &Arc<AppState>, req: &Request) -> Handled {
+    let body = match decode_generate(&req.body) {
+        Ok(b) => b,
+        Err(e) => return Handled::Plain(error_response(400, &e)),
+    };
+    let art = match resolve_grammar(state, body.grammar.as_deref()) {
+        Ok(a) => a,
+        Err(resp) => return Handled::Plain(resp),
+    };
+    let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+    match state.handle.try_submit_stream(body.into_request(id)) {
+        Ok(stream) => Handled::Stream(Box::new(StreamJob { art, stream })),
+        Err(SubmitError::QueueFull) => {
+            Handled::Plain(error_response(429, "admission queue is full, retry later"))
+        }
+        Err(SubmitError::Closed) => {
+            Handled::Plain(error_response(503, "coordinator is shut down"))
+        }
     }
+}
+
+/// Write one admitted stream to the socket: `event: token` per committed
+/// token (flushed immediately — a consumer sees tokens while the model is
+/// still decoding), then `event: done` with the full final response
+/// (finish reason, text, validity verdict), then the chunked terminator.
+/// Returns `(status for metrics, connection still usable)`. A failed
+/// write means the client disconnected: returning drops the
+/// [`StreamHandle`], whose dropped event receiver cancels the generation
+/// and frees the lane.
+fn serve_stream(conn: &mut TcpStream, job: StreamJob, keep_alive: bool) -> (u16, bool) {
+    let StreamJob { art, stream } = job;
+    let Ok(mut w) = ChunkedWriter::start(&mut *conn, 200, "text/event-stream", keep_alive)
+    else {
+        return (200, false);
+    };
+    let mut tail = String::new();
+    loop {
+        match stream.events.recv() {
+            Ok(TokenEvent::Token(chunk)) => {
+                let frame = http::sse_event("token", &encode_token_event(&chunk));
+                if w.chunk(&frame).is_err() {
+                    return (200, false);
+                }
+            }
+            Ok(TokenEvent::Finished { tail: t, .. }) => {
+                tail = t;
+                break;
+            }
+            // Request dropped before any event could be sent (the
+            // response channel settles what happened).
+            Err(_) => break,
+        }
+    }
+    let resp = stream
+        .response
+        .recv()
+        .unwrap_or_else(|_| GenResponse::rejected(0, "scheduler exited without responding"));
+    let valid = art.response_valid(&resp);
+    let done = http::sse_event("done", &encode_stream_done(&resp, &art.name, valid, &tail));
+    let ok = w.chunk(&done).is_ok() && w.finish().is_ok();
+    (200, ok)
 }
 
 /// Resolve which compiled grammar will constrain (and validate) a request.

@@ -13,6 +13,7 @@ pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod utf8;
 
 /// Monotonic wall-clock helper returning seconds elapsed since `start`.
 pub fn secs_since(start: std::time::Instant) -> f64 {

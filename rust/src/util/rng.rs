@@ -1,9 +1,10 @@
 //! Deterministic pseudo-random number generation (splitmix64 / xoshiro256**).
 //!
 //! Every stochastic component in the repo (samplers, synthetic dataset
-//! generators, property tests, the mock LM) threads one of these explicitly
-//! so that experiments are reproducible from a seed recorded in
-//! EXPERIMENTS.md.
+//! generators, property tests, the mock LM) threads one of these
+//! explicitly, so every experiment and serving run is reproducible from
+//! its recorded seed — the determinism contract `docs/serving.md`
+//! describes and the serving tests enforce.
 
 /// xoshiro256** seeded via splitmix64.
 #[derive(Clone, Debug)]

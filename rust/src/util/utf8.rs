@@ -1,0 +1,136 @@
+//! Incremental lossy UTF-8 decoding for token streaming.
+//!
+//! A byte-level tokenizer is free to split a multi-byte UTF-8 sequence
+//! across two tokens, so a per-token `from_utf8_lossy` would litter the
+//! stream with spurious U+FFFD replacement characters. [`Utf8Stream`]
+//! carries the (at most 3-byte) incomplete tail between pushes and emits
+//! exactly the text `String::from_utf8_lossy` would have produced for the
+//! whole byte sequence — so a streamed generation, concatenated, is
+//! byte-identical to the blocking response's `text`.
+
+/// Streaming lossy UTF-8 decoder. Feed byte chunks with [`push`]
+/// (returning the newly-completed text), then [`flush`] once the stream
+/// ends to surface a trailing incomplete sequence (as U+FFFD, matching
+/// what whole-buffer lossy decoding does to a truncated tail).
+///
+/// [`push`]: Utf8Stream::push
+/// [`flush`]: Utf8Stream::flush
+#[derive(Debug, Default, Clone)]
+pub struct Utf8Stream {
+    carry: Vec<u8>,
+}
+
+impl Utf8Stream {
+    /// Append `bytes` and return the longest newly-decodable text.
+    /// Invalid sequences are replaced (one U+FFFD per maximal invalid
+    /// run, like `from_utf8_lossy`); an *incomplete* trailing sequence is
+    /// held back for the next push.
+    pub fn push(&mut self, bytes: &[u8]) -> String {
+        let mut buf = std::mem::take(&mut self.carry);
+        buf.extend_from_slice(bytes);
+        let mut out = String::new();
+        let mut start = 0usize;
+        loop {
+            match std::str::from_utf8(&buf[start..]) {
+                Ok(s) => {
+                    out.push_str(s);
+                    start = buf.len();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    // Safe: from_utf8 just validated this prefix.
+                    out.push_str(std::str::from_utf8(&buf[start..start + valid]).unwrap());
+                    match e.error_len() {
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            start += valid + bad;
+                        }
+                        None => {
+                            // Incomplete tail: might still become valid.
+                            start += valid;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.carry = buf[start..].to_vec();
+        out
+    }
+
+    /// End of stream: lossy-decode whatever incomplete tail is still
+    /// carried (empty string when the stream ended on a boundary).
+    pub fn flush(&mut self) -> String {
+        let tail = std::mem::take(&mut self.carry);
+        if tail.is_empty() {
+            String::new()
+        } else {
+            String::from_utf8_lossy(&tail).into_owned()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Stream `bytes` through in chunks of `n` and compare against the
+    /// whole-buffer lossy decode.
+    fn assert_streamed_matches(bytes: &[u8], n: usize) {
+        let mut s = Utf8Stream::default();
+        let mut got = String::new();
+        for chunk in bytes.chunks(n) {
+            got.push_str(&s.push(chunk));
+        }
+        got.push_str(&s.flush());
+        assert_eq!(
+            got,
+            String::from_utf8_lossy(bytes),
+            "chunk size {n} diverged on {bytes:?}"
+        );
+    }
+
+    #[test]
+    fn ascii_passes_through() {
+        let mut s = Utf8Stream::default();
+        assert_eq!(s.push(b"hello"), "hello");
+        assert_eq!(s.flush(), "");
+    }
+
+    #[test]
+    fn split_multibyte_sequences_reassemble() {
+        // ☃ (3 bytes), 😀 (4 bytes), é (2 bytes) split at every position.
+        let text = "a☃b😀cé";
+        for n in 1..=text.len() {
+            assert_streamed_matches(text.as_bytes(), n);
+        }
+    }
+
+    #[test]
+    fn invalid_bytes_match_whole_buffer_lossy() {
+        let cases: &[&[u8]] = &[
+            b"\xff\xfeok",              // invalid lead bytes
+            b"ab\xe2\x98xy",            // truncated 3-byte sequence mid-stream
+            b"\xe2\x98",                // truncated sequence at end of stream
+            b"\xf0\x9f\x98",            // truncated 4-byte sequence at end
+            b"ok\xc3",                  // truncated 2-byte sequence at end
+            b"\x80\x80\x80",            // bare continuation bytes
+            b"mix\xe2\x98\x83\xffend",  // valid snowman then invalid byte
+        ];
+        for bytes in cases {
+            for n in 1..=bytes.len() {
+                assert_streamed_matches(bytes, n);
+            }
+        }
+    }
+
+    #[test]
+    fn flush_is_idempotent_and_resets() {
+        let mut s = Utf8Stream::default();
+        let _ = s.push(b"\xe2\x98"); // incomplete snowman
+        assert_eq!(s.flush(), "\u{FFFD}");
+        assert_eq!(s.flush(), "");
+        assert_eq!(s.push("☃".as_bytes()), "☃");
+    }
+}

@@ -57,6 +57,7 @@ fn registry_serves_two_grammars_in_one_batch() {
                 seed: i * 13 + 1,
                 opportunistic: i % 3 == 0,
             },
+            token_sink: None,
         })
         .collect();
     let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
@@ -99,6 +100,7 @@ fn unknown_grammar_fails_request_not_server() {
         constraint_prefix: String::new(),
         grammar: Some("fortran".into()),
         params: GenParams::default(),
+        token_sink: None,
     });
     assert_eq!(bad.finish, FinishReason::EngineError);
     assert!(bad.error.unwrap().contains("unknown grammar"));
@@ -109,6 +111,7 @@ fn unknown_grammar_fails_request_not_server() {
         constraint_prefix: String::new(),
         grammar: Some("calc".into()),
         params: GenParams { max_new_tokens: 30, ..GenParams::default() },
+        token_sink: None,
     });
     assert!(ok.error.is_none(), "{:?}", ok.error);
     srv.shutdown();
@@ -129,6 +132,7 @@ fn single_factory_rejects_grammar_routing() {
         constraint_prefix: String::new(),
         grammar: Some("json".into()),
         params: GenParams { max_new_tokens: 10, ..GenParams::default() },
+        token_sink: None,
     });
     assert_eq!(resp.finish, FinishReason::EngineError);
     assert!(resp.error.unwrap().contains("single-grammar"));
@@ -208,6 +212,7 @@ fn mmap_loaded_artifact_serves_requests_across_threads() {
                 seed: i * 7 + 3,
                 opportunistic: i % 2 == 0,
             },
+            token_sink: None,
         })
         .collect();
     let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();

@@ -14,7 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
 use syncode::coordinator::{Coordinator, CoordinatorConfig, GenResponse};
-use syncode::net::http::{fetch, read_response};
+use syncode::net::http::{fetch, read_response, HttpClient};
 use syncode::net::json::finish_from_str;
 use syncode::net::{HttpConfig, HttpServer};
 use syncode::runtime::{replicate_factory, LanguageModel, MockModel, ModelFactory};
@@ -422,6 +422,202 @@ fn dead_coordinator_maps_to_503() {
         fetch(addr.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 1, 8)))
             .unwrap();
     assert_eq!(status, 503, "{body}");
+    server.shutdown().shutdown();
+}
+
+// --------------------------------------------------------------------------
+// Streaming (SSE over chunked transfer-encoding) and keep-alive.
+
+/// Collected result of one SSE generation: the token events in arrival
+/// order and the parsed `done` payload.
+struct StreamedGen {
+    token_texts: Vec<String>,
+    token_count: usize,
+    done: Json,
+}
+
+/// Drive one `?stream=1` request to completion on `client`.
+fn consume_stream(client: &mut HttpClient, body: &str) -> StreamedGen {
+    let mut stream = client
+        .request_stream("POST", "/v1/generate?stream=1", Some(body))
+        .expect("stream request");
+    assert_eq!(stream.status(), 200, "stream refused");
+    let mut token_texts = Vec::new();
+    let mut token_count = 0usize;
+    let mut done = None;
+    while let Some((event, data)) = stream.next_event().expect("sse event") {
+        match event.as_str() {
+            "token" => {
+                let v = parse(&data).expect("token event json");
+                assert_eq!(
+                    v.get("index").and_then(Json::as_usize),
+                    Some(token_count),
+                    "token indices must be dense: {data}"
+                );
+                token_texts
+                    .push(v.get("text").and_then(Json::as_str).unwrap_or("").to_string());
+                token_count += 1;
+            }
+            "done" => {
+                assert!(done.is_none(), "multiple done events");
+                done = Some(parse(&data).expect("done event json"));
+            }
+            other => panic!("unexpected SSE event {other}: {data}"),
+        }
+    }
+    StreamedGen { token_texts, token_count, done: done.expect("stream ended without done") }
+}
+
+#[test]
+fn streaming_tokens_arrive_before_generation_completes() {
+    // Gate-stalled model: the first decode blocks, so the generation
+    // cannot finish (max_tokens 3 needs decoded logits for tokens 2+) —
+    // yet the first token's SSE event, decided from the prefill logits,
+    // must reach the client while the gate is still closed.
+    let (server, addr, gate, entered) = start_stalled_http(4);
+    let mut client = HttpClient::connect(addr.as_str()).expect("connect");
+    let mut stream = client
+        .request_stream(
+            "POST",
+            "/v1/generate?stream=1",
+            Some(&generate_body("json", 5, 3)),
+        )
+        .expect("stream request");
+    assert_eq!(stream.status(), 200);
+    let (event, data) = stream
+        .next_event()
+        .expect("read first event")
+        .expect("stream ended before any token");
+    assert_eq!(event, "token", "first event must be a token: {data}");
+    // The model is provably still inside (or entering) its first decode:
+    // the gate has never been released, so the generation is incomplete.
+    entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+    gate.release();
+    // The rest of the stream completes normally.
+    let mut saw_done = false;
+    while let Some((event, data)) = stream.next_event().expect("sse event") {
+        if event == "done" {
+            let v = parse(&data).expect("done json");
+            assert_eq!(v.get("valid").and_then(Json::as_bool), Some(true), "{data}");
+            saw_done = true;
+        }
+    }
+    assert!(saw_done, "stream must terminate with a done event");
+    // Free the keep-alive connection before the drain (an idle one would
+    // only release its worker at the read deadline).
+    drop(stream);
+    drop(client);
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_frees_the_lane() {
+    // One lane, stalled in decode. Client A starts a long stream, reads
+    // its first token, then drops the connection. Once the gate opens the
+    // replica's next event send fails, the lane is cancelled and freed —
+    // client B's request (queued behind A) must then complete normally.
+    let (server, addr, gate, entered) = start_stalled_http(4);
+    {
+        let mut a = HttpClient::connect(addr.as_str()).expect("connect A");
+        // A 12-deep array prefix: the grammar cannot reach a complete
+        // value (and thus EOS) for at least 12 more tokens, so the
+        // disconnect is detected — one buffered write to the dead socket,
+        // then a failed one, then a failed event send — long before the
+        // generation could finish on its own.
+        let body = r#"{"grammar": "json", "prompt": "deep", "max_tokens": 64, "seed": 7,
+                       "prefix": "[[[[[[[[[[[["}"#;
+        let mut stream = a
+            .request_stream("POST", "/v1/generate?stream=1", Some(body))
+            .expect("stream request");
+        assert_eq!(stream.status(), 200);
+        let (event, _) = stream
+            .next_event()
+            .expect("read first event")
+            .expect("stream ended before any token");
+        assert_eq!(event, "token");
+        entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+        // A disconnects mid-stream (drop closes the socket).
+    }
+    // B queues behind the pinned lane.
+    let addr_b = addr.clone();
+    let b = std::thread::spawn(move || {
+        fetch(addr_b.as_str(), "POST", "/v1/generate", Some(&generate_body("json", 8, 2)))
+            .expect("request B")
+    });
+    poll_until(30, "B queued", || healthz_queue_depth(&addr) >= 1);
+    gate.release();
+    let (status, body) = b.join().expect("client B thread");
+    assert_eq!(status, 200, "lane was not freed for B: {body}");
+    assert_eq!(parse(&body).unwrap().get("valid").unwrap().as_bool(), Some(true));
+    // The cancellation is visible on /metrics.
+    poll_until(30, "cancel metric", || {
+        let (_, text) = fetch(addr.as_str(), "GET", "/metrics", None).unwrap();
+        text.contains("syncode_streams_cancelled_total 1")
+    });
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn keepalive_connection_serves_sequential_requests() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+    let mut client = HttpClient::connect(addr.as_str()).expect("connect");
+    // Mixed sequential traffic — generations, health, a stream, metrics —
+    // all down one connection; any dropped keep-alive would surface as a
+    // read error on the next request.
+    for i in 0..3u64 {
+        let g = if i % 2 == 0 { "json" } else { "calc" };
+        let (status, body) = client
+            .request("POST", "/v1/generate", Some(&generate_body(g, i, 24)))
+            .expect("keep-alive generate");
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(parse(&body).unwrap().get("valid").unwrap().as_bool(), Some(true));
+    }
+    let (status, _) = client.request("GET", "/healthz", None).expect("healthz");
+    assert_eq!(status, 200);
+    // A stream in the middle must leave the connection reusable (the
+    // chunked terminator delimits it exactly).
+    let streamed = consume_stream(&mut client, &generate_body("json", 4, 16));
+    assert!(streamed.token_count > 0);
+    let (status, text) = client.request("GET", "/metrics", None).expect("metrics");
+    assert_eq!(status, 200);
+    assert!(text.contains("syncode_requests_finished_total"));
+    drop(client);
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn stream_and_blocking_outputs_are_byte_identical_per_seed() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+    // Greedy decoding: deterministic for a fixed seed regardless of the
+    // server-assigned request id, so the two modes must match exactly.
+    let body = r#"{"grammar": "json", "prompt": "a record", "max_tokens": 40,
+                   "seed": 9, "strategy": "greedy"}"#;
+    let (status, blocking) =
+        fetch(addr.as_str(), "POST", "/v1/generate", Some(body)).expect("blocking request");
+    assert_eq!(status, 200, "{blocking}");
+    let blocking = parse(&blocking).expect("blocking json");
+    let blocking_text = blocking.get("text").unwrap().as_str().unwrap();
+
+    let mut client = HttpClient::connect(addr.as_str()).expect("connect");
+    let streamed = consume_stream(&mut client, body);
+    let done_text = streamed.done.get("text").unwrap().as_str().unwrap();
+
+    assert_eq!(done_text, blocking_text, "stream vs blocking text diverged");
+    assert_eq!(
+        streamed.done.get("finish").unwrap().as_str(),
+        blocking.get("finish").unwrap().as_str()
+    );
+    assert_eq!(
+        streamed.done.get("tokens").and_then(Json::as_usize),
+        blocking.get("tokens").and_then(Json::as_usize)
+    );
+    assert_eq!(streamed.done.get("valid").unwrap().as_bool(), Some(true));
+    // The incremental chunks (+ the done event's UTF-8 tail, normally
+    // empty) reassemble the final text byte-for-byte.
+    let tail = streamed.done.get("tail").and_then(Json::as_str).unwrap_or("");
+    assert_eq!(streamed.token_texts.concat() + tail, done_text);
+    assert_eq!(Some(streamed.token_count), blocking.get("tokens").and_then(Json::as_usize));
+    drop(client);
     server.shutdown().shutdown();
 }
 

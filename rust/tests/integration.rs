@@ -49,6 +49,7 @@ fn constrained_serving_all_grammars() {
                     seed: i * 7 + 1,
                     opportunistic: i % 2 == 0,
                 },
+                token_sink: None,
             });
             assert!(resp.error.is_none(), "{gname}: {:?}", resp.error);
             if resp.finish == FinishReason::Eos {
@@ -95,6 +96,7 @@ fn gpl_completion_prefix_invariant() {
                     seed: t.id,
                     opportunistic: true,
                 },
+                token_sink: None,
             });
             assert!(resp.error.is_none(), "{gname}: {:?}", resp.error);
             let full = format!("{}{}", t.prefix, resp.text);
@@ -226,6 +228,7 @@ fn pjrt_constrained_e2e_valid_json() {
                 seed: 5,
                 opportunistic: true,
             },
+            token_sink: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         if resp.finish == FinishReason::Eos {

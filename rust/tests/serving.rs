@@ -53,6 +53,7 @@ fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
             seed: id * 13 + 7,
             opportunistic: id % 2 == 0,
         },
+        token_sink: None,
     }
 }
 

@@ -5,9 +5,10 @@ Usage: http_smoke.py ADDR   (e.g. 127.0.0.1:8642, already listening)
 
 Fires concurrent `POST /v1/generate` requests alternating over the json and
 calc grammars, asserts every response is 200 with `valid: true` (zero syntax
-errors), validates that `/metrics` parses as Prometheus text and reflects the
-finished requests, then drains the server via `POST /admin/shutdown`.
-Stdlib only — CI needs nothing beyond python3.
+errors), checks the SSE streaming variant (`?stream=1`) delivers per-token
+events and a valid terminal `done` event, validates that `/metrics` parses as
+Prometheus text and reflects the finished requests, then drains the server
+via `POST /admin/shutdown`. Stdlib only — CI needs nothing beyond python3.
 """
 
 import json
@@ -89,6 +90,32 @@ def main():
             syntax_errors += 1
             print(f"INVALID response {i}: {body}", file=sys.stderr)
     assert syntax_errors == 0, f"syntax errors: {syntax_errors}/{N_REQUESTS}"
+
+    # Streaming: the SSE variant must emit one token event per token and a
+    # terminal done event whose text equals the concatenated chunks and
+    # whose verdict is valid. (urllib de-chunks transparently; the
+    # event-by-event timing is covered by rust/tests/http_serving.rs.)
+    payload = json.dumps(
+        {"grammar": "json", "prompt": "stream one", "max_tokens": 32, "seed": 3}
+    )
+    status, sse = req(addr, "POST", "/v1/generate?stream=1", payload)
+    assert status == 200, f"stream: {status} {sse}"
+    tokens, done = [], None
+    for block in sse.split("\n\n"):
+        lines = dict(
+            l.split(": ", 1) for l in block.splitlines() if ": " in l
+        )
+        if lines.get("event") == "token":
+            tokens.append(json.loads(lines["data"]))
+        elif lines.get("event") == "done":
+            assert done is None, "multiple done events"
+            done = json.loads(lines["data"])
+    assert tokens, f"no token events in stream: {sse!r}"
+    assert done is not None, f"no done event in stream: {sse!r}"
+    assert done["valid"], f"streamed generation invalid: {done}"
+    assert len(tokens) == done["tokens"], f"{len(tokens)} events vs {done['tokens']} tokens"
+    reassembled = "".join(t["text"] for t in tokens) + done.get("tail", "")
+    assert reassembled == done["text"], "chunks + tail != final text"
 
     status, text = req(addr, "GET", "/metrics")
     assert status == 200, f"metrics: {status}"

@@ -1,7 +1,10 @@
 //! Table 5 extension — the compiled-artifact layer's offline costs:
 //!
 //! 1. **serial vs parallel** mask-store build time (the sharded walk loop
-//!    of `mask/store.rs`; results are bit-identical, asserted here);
+//!    of `mask/store.rs`; results are bit-identical, asserted here) —
+//!    plus the trie builder against the retained naive
+//!    `build_reference`, with the executed-step / naive-step ratio the
+//!    prefix-sharing + dead-byte + byte-class filters achieve;
 //! 2. **cold start vs warm start**: full `CompiledGrammar::compile`
 //!    against the *two* warm paths — `from_bytes` on a `fs::read` buffer
 //!    (the pre-mmap copy-deserialisation) and `from_file` (mmap'd
@@ -35,6 +38,12 @@ struct Entry {
     warm_mmap_s: f64,
     blob_mb: f64,
     zero_copy: bool,
+    /// `dfa.step` calls the trie builder actually executed.
+    walk_steps: u64,
+    /// The naive bound it replaced: |items| × Σ participating token bytes.
+    naive_steps: u64,
+    /// naive / executed — the compile-time win of ISSUE 6's filters.
+    step_ratio: f64,
 }
 
 fn main() {
@@ -50,28 +59,38 @@ fn main() {
     println!("# Artifact layer — build parallelism and cold/warm start\n");
     println!("(host has {threads_avail} cores)\n");
 
-    // ---- serial vs parallel mask-store build ---------------------------
+    // ---- trie vs reference, serial vs parallel -------------------------
     let mut t = Table::new(&[
-        "grammar", "|V|", "serial(s)", "parallel(s)", "threads", "speedup", "identical",
+        "grammar", "|V|", "naive(s)", "serial(s)", "parallel(s)", "threads", "speedup",
+        "steps÷naive", "identical",
     ]);
     for gname in ["json", "calc", "sql", "python", "go"] {
         let tok = tok_for(gname, 512);
         let g = syncode::grammar::Grammar::builtin(gname).unwrap();
+        let tr = Instant::now();
+        let reference = MaskStore::build_reference(&g, &tok, MaskStoreConfig::default());
+        let reference_secs = tr.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let serial = MaskStore::build(&g, &tok, MaskStoreConfig::default());
         let serial_secs = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         let par = MaskStore::build(&g, &tok, MaskStoreConfig::parallel());
         let par_secs = t1.elapsed().as_secs_f64();
-        let identical = serial.to_bytes() == par.to_bytes();
-        assert!(identical, "{gname}: parallel build diverged from serial");
+        let identical =
+            serial.to_bytes() == par.to_bytes() && serial.to_bytes() == reference.to_bytes();
+        assert!(identical, "{gname}: trie/parallel build diverged from reference");
         t.row(&[
             gname.to_string(),
             tok.vocab_size().to_string(),
+            format!("{reference_secs:.3}"),
             format!("{serial_secs:.3}"),
             format!("{par_secs:.3}"),
             par.stats.build_threads.to_string(),
             format!("{:.2}x", serial_secs / par_secs.max(1e-9)),
+            format!(
+                "1/{:.1}",
+                serial.stats.naive_steps as f64 / serial.stats.walk_steps.max(1) as f64
+            ),
             identical.to_string(),
         ]);
     }
@@ -83,7 +102,7 @@ fn main() {
     let _ = std::fs::create_dir_all(&dir);
     let mut t = Table::new(&[
         "grammar", "cold(s)", "warm-copy(s)", "warm-mmap(s)", "copy/mmap", "blob MB",
-        "zero-copy",
+        "zero-copy", "steps÷naive",
     ]);
     let mut entries = Vec::new();
     for gname in ["json", "sql", "python"] {
@@ -113,6 +132,9 @@ fn main() {
         assert_eq!(art.store.to_bytes(), warm_copy_art.store.to_bytes());
         assert_eq!(art.store.to_bytes(), warm_mmap_art.store.to_bytes());
 
+        let walk_steps = art.store.stats.walk_steps;
+        let naive_steps = art.store.stats.naive_steps;
+        let step_ratio = naive_steps as f64 / walk_steps.max(1) as f64;
         t.row(&[
             gname.to_string(),
             format!("{cold:.3}"),
@@ -121,6 +143,7 @@ fn main() {
             format!("{:.1}x", warm_copy / warm_mmap.max(1e-9)),
             format!("{:.2}", blob.len() as f64 / 1e6),
             zero_copy.to_string(),
+            format!("1/{step_ratio:.1}"),
         ]);
         entries.push(Entry {
             grammar: gname.to_string(),
@@ -130,6 +153,9 @@ fn main() {
             warm_mmap_s: warm_mmap,
             blob_mb: blob.len() as f64 / 1e6,
             zero_copy,
+            walk_steps,
+            naive_steps,
+            step_ratio,
         });
         let _ = std::fs::remove_file(&path);
     }
@@ -176,6 +202,9 @@ fn append_trajectory(path: &str, entries: &[Entry]) {
         m.insert("warm_mmap_s".to_string(), Json::Num(e.warm_mmap_s));
         m.insert("blob_mb".to_string(), Json::Num(e.blob_mb));
         m.insert("zero_copy".to_string(), Json::Bool(e.zero_copy));
+        m.insert("walk_steps".to_string(), Json::Num(e.walk_steps as f64));
+        m.insert("naive_steps".to_string(), Json::Num(e.naive_steps as f64));
+        m.insert("step_ratio".to_string(), Json::Num(e.step_ratio));
         arr.push(Json::Obj(m));
     }
     obj.insert("bench".to_string(), Json::Str("artifact_coldwarm".to_string()));

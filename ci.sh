@@ -46,6 +46,14 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+# Trie-vs-reference parity is the ISSUE-6 acceptance gate: the token-trie
+# mask-store builder must stay bit-identical to the retained naive
+# builder for every builtin grammar at 1 and 4 threads, and must cut
+# executed dfa.step calls ≥10× on json. Named explicitly (cargo test -q
+# already ran it) so a failure is unmissable in the log, in BOTH tiers.
+echo "== trie-vs-reference parity (cargo test --test trie_parity) =="
+cargo test -q --test trie_parity
+
 if [[ "$fast" == "0" ]]; then
   # Serving stress under a time cap: 2 replicas × 2 mask threads over a
   # mixed multi-grammar batch on the mock model must finish with zero
@@ -90,6 +98,19 @@ if [[ "$fast" == "0" ]]; then
       } END { exit (rows == 2 && !bad) ? 0 : 1 }' <<<"$warm_out"; then
     echo "ERROR: warm pass rebuilt a store (expected cached=warm, store(s)=0.000):" >&2
     echo "$warm_out" >&2
+    exit 1
+  fi
+
+  # Coldwarm bench with the JSON trajectory appender: lands the real
+  # cold-build / step-ratio numbers this container can't produce (no
+  # toolchain — ROADMAP.md) and proves the trie builder's bit-parity +
+  # ≥1 step-reduction entries end-to-end. The workspace copy of
+  # BENCH_coldwarm.json is appended to; CI uploads it as an artifact
+  # rather than committing it.
+  echo "== artifact_coldwarm bench (appends BENCH_coldwarm.json) =="
+  cargo bench --bench artifact_coldwarm -- --json BENCH_coldwarm.json
+  if ! grep -q '"step_ratio"' BENCH_coldwarm.json; then
+    echo "ERROR: bench did not append step_ratio entries to BENCH_coldwarm.json" >&2
     exit 1
   fi
 

@@ -26,7 +26,12 @@
 //!
 //! The mask-store walk loop itself is sharded across threads
 //! (`MaskStoreConfig::threads`; see `mask/store.rs`) with a merge that is
-//! bit-identical to the serial build.
+//! bit-identical to the serial build. Cold builds are trie-driven: the
+//! byte trie over the participating vocabulary is built once per
+//! tokenizer (cached on the [`Tokenizer`], keyed by length cap), so when
+//! several grammars compile against one model vocabulary — the
+//! request-time-grammar path — only the first pays trie construction
+//! (`mask/trie.rs`, "Compile pipeline" in `docs/artifacts.md`).
 
 mod registry;
 

@@ -10,63 +10,141 @@
 //! take a read lock and clone an `Arc`, and the compiled artifacts are
 //! immutable, so N replicas admitting concurrently never contend beyond
 //! that read lock — compile once, serve many grammars × many replicas.
+//!
+//! # Bounded mode
+//!
+//! [`GrammarRegistry::with_capacity`] caps the number of resident
+//! artifacts for request-time grammar serving, where clients upload
+//! grammars faster than memory should grow. At capacity, registering a
+//! *new* name evicts the least-recently-used artifact (recency = last
+//! `get`/registration). The default grammar is pinned and never evicted
+//! — except in the degenerate `capacity == 1` case, where the incoming
+//! artifact replaces it and becomes the new default. Eviction only drops
+//! the registry's `Arc`; requests already generating against the evicted
+//! grammar hold their own and finish unaffected.
 
 use super::{ArtifactError, CompiledGrammar};
 use crate::coordinator::{EngineProvider, GenRequest};
 use crate::engine::ConstraintEngine;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Thread-safe name → [`CompiledGrammar`] map (see module docs).
 pub struct GrammarRegistry {
     inner: RwLock<Inner>,
+    /// Monotonic recency clock. Bumped on every lookup; per-entry stamps
+    /// are atomics so `get` can refresh recency under the *read* lock.
+    clock: AtomicU64,
+}
+
+struct Entry {
+    art: Arc<CompiledGrammar>,
+    last_used: AtomicU64,
 }
 
 struct Inner {
-    grammars: HashMap<String, Arc<CompiledGrammar>>,
+    grammars: HashMap<String, Entry>,
     default_name: Option<String>,
+    /// `None` = unbounded (the AOT/serving default).
+    capacity: Option<usize>,
 }
 
 impl GrammarRegistry {
-    /// An empty registry (no grammars, no default).
+    /// An empty, unbounded registry (no grammars, no default).
     pub fn new() -> GrammarRegistry {
         GrammarRegistry {
-            inner: RwLock::new(Inner { grammars: HashMap::new(), default_name: None }),
+            inner: RwLock::new(Inner {
+                grammars: HashMap::new(),
+                default_name: None,
+                capacity: None,
+            }),
+            clock: AtomicU64::new(0),
         }
     }
 
+    /// An empty registry holding at most `capacity` artifacts (clamped to
+    /// ≥ 1), evicting least-recently-used non-default entries when full.
+    pub fn with_capacity(capacity: usize) -> GrammarRegistry {
+        let reg = GrammarRegistry::new();
+        reg.inner.write().unwrap().capacity = Some(capacity.max(1));
+        reg
+    }
+
+    /// The configured capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.inner.read().unwrap().capacity
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// Register an artifact under its compiled name. The first artifact
-    /// becomes the default; later ones must share its tokenizer.
+    /// becomes the default; later ones must share its tokenizer. In
+    /// bounded mode a new name may evict the LRU non-default entry.
     pub fn register(&self, art: Arc<CompiledGrammar>) -> Result<(), ArtifactError> {
+        let stamp = self.tick();
         let mut inner = self.inner.write().unwrap();
         if let Some(existing) = inner.grammars.values().next() {
             // Same vocabulary is necessary but not sufficient: equal-sized
             // tokenizers with different merges would silently mis-map token
             // ids in the second grammar's mask store. Compare canonical
             // serialisations unless it's literally the same tokenizer.
-            let same = Arc::ptr_eq(&existing.tok, &art.tok)
-                || (existing.tok.vocab_size() == art.tok.vocab_size()
-                    && existing.tok.to_json() == art.tok.to_json());
+            let same = Arc::ptr_eq(&existing.art.tok, &art.tok)
+                || (existing.art.tok.vocab_size() == art.tok.vocab_size()
+                    && existing.art.tok.to_json() == art.tok.to_json());
             if !same {
                 return Err(ArtifactError::Mismatch(format!(
                     "grammar '{}' was compiled against a different tokenizer \
                      than the registry's (vocab {} vs {})",
                     art.name,
                     art.tok.vocab_size(),
-                    existing.tok.vocab_size()
+                    existing.art.tok.vocab_size()
                 )));
+            }
+        }
+        // Re-registering an existing name replaces in place — never evicts.
+        if let (Some(cap), false) =
+            (inner.capacity, inner.grammars.contains_key(&art.name))
+        {
+            while inner.grammars.len() >= cap {
+                let victim = inner
+                    .grammars
+                    .iter()
+                    .filter(|(name, _)| Some(name.as_str()) != inner.default_name.as_deref())
+                    .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                    .map(|(name, _)| name.clone());
+                match victim {
+                    Some(name) => {
+                        inner.grammars.remove(&name);
+                    }
+                    None => {
+                        // capacity == 1 and the sole resident is the
+                        // default: replace it; the incoming artifact
+                        // becomes the new default below.
+                        inner.grammars.clear();
+                        inner.default_name = None;
+                    }
+                }
             }
         }
         if inner.default_name.is_none() {
             inner.default_name = Some(art.name.clone());
         }
-        inner.grammars.insert(art.name.clone(), art);
+        inner
+            .grammars
+            .insert(art.name.clone(), Entry { art, last_used: AtomicU64::new(stamp) });
         Ok(())
     }
 
-    /// Look up an artifact by name.
+    /// Look up an artifact by name (refreshes its LRU recency).
     pub fn get(&self, name: &str) -> Option<Arc<CompiledGrammar>> {
-        self.inner.read().unwrap().grammars.get(name).cloned()
+        let inner = self.inner.read().unwrap();
+        inner.grammars.get(name).map(|e| {
+            e.last_used.store(self.tick(), Ordering::Relaxed);
+            e.art.clone()
+        })
     }
 
     /// Registered grammar names, sorted.
@@ -87,10 +165,14 @@ impl GrammarRegistry {
         self.len() == 0
     }
 
-    /// The default artifact (first registered unless overridden).
+    /// The default artifact (first registered unless overridden). Does
+    /// not refresh recency — the default is pinned against eviction.
     pub fn default_grammar(&self) -> Option<Arc<CompiledGrammar>> {
         let inner = self.inner.read().unwrap();
-        inner.default_name.as_ref().and_then(|n| inner.grammars.get(n).cloned())
+        inner
+            .default_name
+            .as_ref()
+            .and_then(|n| inner.grammars.get(n).map(|e| e.art.clone()))
     }
 
     /// Override the default grammar.
@@ -144,14 +226,15 @@ mod tests {
     use crate::artifact::ArtifactConfig;
     use crate::tokenizer::Tokenizer;
 
+    fn compile(name: &str, tok: &Arc<Tokenizer>) -> Arc<CompiledGrammar> {
+        CompiledGrammar::compile(name, tok.clone(), &ArtifactConfig::default()).unwrap()
+    }
+
     fn registry_with(names: &[&str]) -> Arc<GrammarRegistry> {
         let tok = Arc::new(Tokenizer::ascii_byte_level());
         let reg = Arc::new(GrammarRegistry::new());
         for n in names {
-            let art =
-                CompiledGrammar::compile(n, tok.clone(), &ArtifactConfig::default())
-                    .unwrap();
-            reg.register(art).unwrap();
+            reg.register(compile(n, &tok)).unwrap();
         }
         reg
     }
@@ -210,5 +293,83 @@ mod tests {
             CompiledGrammar::compile("calc", other_tok, &ArtifactConfig::default())
                 .unwrap();
         assert!(reg.register(art).is_err());
+    }
+
+    #[test]
+    fn bounded_registry_evicts_lru_non_default() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(3);
+        for n in ["json", "calc", "sql"] {
+            reg.register(compile(n, &tok)).unwrap();
+        }
+        // Touch calc so sql is the LRU candidate.
+        assert!(reg.get("calc").is_some());
+        reg.register(compile("go", &tok)).unwrap();
+        assert_eq!(reg.len(), 3);
+        assert!(reg.get("sql").is_none(), "sql was least-recently used");
+        assert!(reg.get("calc").is_some());
+        // json (the default) predates everything but is pinned.
+        assert_eq!(reg.default_grammar().unwrap().name, "json");
+        assert!(reg.get("json").is_some());
+    }
+
+    #[test]
+    fn bounded_registry_get_refreshes_recency() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(3);
+        for n in ["json", "calc", "sql"] {
+            reg.register(compile(n, &tok)).unwrap();
+        }
+        assert!(reg.get("sql").is_some()); // calc now LRU
+        reg.register(compile("go", &tok)).unwrap();
+        assert!(reg.get("calc").is_none());
+        assert!(reg.get("sql").is_some());
+    }
+
+    #[test]
+    fn bounded_registry_replace_same_name_never_evicts() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(2);
+        reg.register(compile("json", &tok)).unwrap();
+        reg.register(compile("calc", &tok)).unwrap();
+        reg.register(compile("calc", &tok)).unwrap(); // replace in place
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["calc".to_string(), "json".to_string()]);
+    }
+
+    #[test]
+    fn capacity_one_eviction_promotes_new_default() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(1);
+        reg.register(compile("json", &tok)).unwrap();
+        assert_eq!(reg.default_grammar().unwrap().name, "json");
+        reg.register(compile("calc", &tok)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("json").is_none());
+        assert_eq!(reg.default_grammar().unwrap().name, "calc");
+    }
+
+    #[test]
+    fn in_flight_arc_survives_eviction() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(2);
+        reg.register(compile("json", &tok)).unwrap();
+        reg.register(compile("calc", &tok)).unwrap();
+        let held = reg.get("calc").unwrap();
+        assert!(reg.get("json").is_some()); // calc back to LRU
+        reg.register(compile("sql", &tok)).unwrap();
+        assert!(reg.get("calc").is_none(), "evicted from the registry");
+        // The generation that grabbed the Arc keeps a working artifact.
+        use crate::engine::ConstraintEngine as _;
+        let mut e = held.engine();
+        e.reset("1 + ");
+        assert!(e.compute_mask().unwrap().unwrap().get(b'7' as usize));
+        assert_eq!(held.name, "calc");
+    }
+
+    #[test]
+    fn with_capacity_clamps_to_one() {
+        assert_eq!(GrammarRegistry::with_capacity(0).capacity(), Some(1));
+        assert_eq!(GrammarRegistry::new().capacity(), None);
     }
 }

@@ -231,6 +231,15 @@ fn model_factory(
     model_factories(args, use_mock, &tok, &docs, 1).pop().expect("one factory")
 }
 
+/// Compact count for walk-step columns: `1234` → "1.2k", `0` → "0".
+fn fmt_count(n: u64) -> String {
+    match n {
+        0..=9_999 => n.to_string(),
+        10_000..=9_999_999 => format!("{:.1}k", n as f64 / 1e3),
+        _ => format!("{:.1}M", n as f64 / 1e6),
+    }
+}
+
 fn cmd_compile(args: &Args) {
     // Accepts the same --grammars list as `serve`: the artifact set must
     // target the *serving* tokenizer, and in mock mode that tokenizer is
@@ -241,9 +250,11 @@ fn cmd_compile(args: &Args) {
     let cfg = artifact_cfg(args);
     let cache_dir = args.get_or("cache-dir", "artifacts/grammar-cache");
 
+    // New columns go at the END: ci.sh's full-tier gate awks the "cached"
+    // and "store(s)" columns by position.
     let mut t = Table::new(&[
         "grammar", "|V|", "|Q|", "threads", "cached", "load", "grammar(s)", "tables(s)",
-        "store(s)", "total(s)", "blob",
+        "store(s)", "total(s)", "blob", "steps", "÷naive",
     ]);
     for gname in &gnames {
         let fp = cache_fingerprint(&tok, &cfg);
@@ -272,6 +283,14 @@ fn cmd_compile(args: &Args) {
             format!("{:.3}", cs.store_secs),
             format!("{:.3}", cs.total_secs),
             format!("{:.2}MB", blob_len as f64 / 1e6),
+            // Trie-walk counters exist only for cold builds; a warm load
+            // executed no walks.
+            if ss.walk_steps == 0 { "-".to_string() } else { fmt_count(ss.walk_steps) },
+            if ss.walk_steps == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.1}x", ss.naive_steps as f64 / ss.walk_steps as f64)
+            },
         ]);
         println!("{} {}", if hit { "already cached:" } else { "wrote" }, out.display());
     }
@@ -457,6 +476,7 @@ fn cmd_maskstore(args: &Args) {
     let s = &env.store.stats;
     let mut t = Table::new(&[
         "grammar", "|V|", "|Q|", "|Γ|", "threads", "build(s)", "masks", "mem", "raw",
+        "steps", "naive", "÷", "pruned",
     ]);
     t.row(&[
         gname.clone(),
@@ -468,6 +488,10 @@ fn cmd_maskstore(args: &Args) {
         s.unique_masks.to_string(),
         format!("{:.1}MB", s.mem_bytes as f64 / 1e6),
         format!("{:.1}MB", s.raw_bytes as f64 / 1e6),
+        fmt_count(s.walk_steps),
+        fmt_count(s.naive_steps),
+        format!("{:.1}x", s.naive_steps as f64 / s.walk_steps.max(1) as f64),
+        fmt_count(s.pruned_dead_byte),
     ]);
     t.print();
 }

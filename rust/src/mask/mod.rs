@@ -20,8 +20,10 @@
 //! of the online baselines.
 
 mod store;
+pub mod trie;
 
 pub use store::{MaskStore, MaskStoreConfig, MaskStoreStats};
+pub use trie::{TokenTrie, TrieWalkStats};
 
 use crate::grammar::{Grammar, TermId};
 use crate::parser::AcceptSequences;

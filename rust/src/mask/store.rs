@@ -12,6 +12,16 @@
 //!    conditions 2/3).
 //! 3. M₀ and M₁ bits then assemble from these tables without re-walking.
 //!
+//! Both passes are driven by the tokenizer's [`TokenTrie`]
+//! (see `mask/trie.rs`): tokens sharing a prefix share every `dfa.step`,
+//! dead bytes and non-live transitions prune whole subtrees, and sibling
+//! edges in one byte class share one transition. The walk tables are
+//! indexed by token, so DFS visit order is irrelevant and the output is
+//! **bit-identical** to the naive per-token walk — which is kept as
+//! [`MaskStore::build_reference`] and asserted equal in CI
+//! (`rust/tests/trie_parity.rs`). `MaskStoreStats` reports the executed
+//! step count against the naive `Σ|Q_Ω|·Σ|t|` bound.
+//!
 //! Identical masks are interned into a shared pool; tables store pool
 //! indices. `MaskStoreStats` reports build time and memory for Table 5.
 //!
@@ -31,8 +41,9 @@
 //!   [`MaskStore::from_bytes`] keeps reading it; [`MaskStore::to_bytes_v1`]
 //!   keeps writing it for format-stability tests.
 
+use super::trie::{TokenTrie, TrieScratch, TrieWalkStats};
 use crate::grammar::{Grammar, TermId, TermPattern};
-use crate::regex::DEAD;
+use crate::regex::{Dfa, DEAD};
 use crate::tokenizer::Tokenizer;
 use crate::util::bitset::{BitSet, BitView};
 use crate::util::blob::{pad8, Blob, BlobReader};
@@ -106,6 +117,19 @@ pub struct MaskStoreStats {
     /// path); false for an owned in-memory blob (e.g. the non-unix
     /// read-file fallback), where the file was still read+copied once.
     pub mapped: bool,
+    /// `dfa.step` calls the pass-2 walk loop actually executed (0 after
+    /// deserialisation — a loaded store walked nothing).
+    pub walk_steps: u64,
+    /// The brute-force pass-2 bound the naive builder is charged with:
+    /// |items| · Σ token bytes. `naive_steps / walk_steps` is the
+    /// compile-time win the trie delivers.
+    pub naive_steps: u64,
+    /// Trie nodes entered across all pass-2 walks (0 for the reference
+    /// builder — it has no trie).
+    pub trie_nodes_visited: u64,
+    /// Token walks resolved by static dead-byte analysis, i.e. pruned
+    /// before any step executed.
+    pub pruned_dead_byte: u64,
 }
 
 /// Table storage: either owned vectors (built or copy-deserialised) or a
@@ -256,7 +280,11 @@ impl MaskStore {
         idx != NONE && self.pool_mask(idx).get(token)
     }
 
-    /// Build the store for a grammar × tokenizer pair.
+    /// Build the store for a grammar × tokenizer pair — trie-driven (see
+    /// the module docs and `mask/trie.rs`): prefix-sharing walks over the
+    /// tokenizer's cached [`TokenTrie`] with static dead-byte pruning and
+    /// byte-class projection. Output is bit-identical to
+    /// [`MaskStore::build_reference`].
     ///
     /// The per-(state, token) walk loop — the dominant offline cost of
     /// Table 5 — is sharded across `cfg.threads` workers over contiguous
@@ -265,6 +293,19 @@ impl MaskStore {
     /// pool, so the result (masks, pool order, and serialised bytes) is
     /// bit-identical to the serial build for every thread count.
     pub fn build(g: &Grammar, tok: &Tokenizer, cfg: MaskStoreConfig) -> MaskStore {
+        MaskStore::build_impl(g, tok, cfg, true)
+    }
+
+    /// The naive per-(state, token) builder: every token walked
+    /// byte-by-byte from every live state, no trie, no static filters.
+    /// Kept as the oracle [`MaskStore::build`] is asserted bit-identical
+    /// against (`rust/tests/trie_parity.rs`) — the two share every line of
+    /// mask assembly and differ only in how `walk_info` is produced.
+    pub fn build_reference(g: &Grammar, tok: &Tokenizer, cfg: MaskStoreConfig) -> MaskStore {
+        MaskStore::build_impl(g, tok, cfg, false)
+    }
+
+    fn build_impl(g: &Grammar, tok: &Tokenizer, cfg: MaskStoreConfig, use_trie: bool) -> MaskStore {
         let t0 = std::time::Instant::now();
         let nterms = g.terminals.len();
         let vocab_size = tok.vocab_size();
@@ -278,15 +319,51 @@ impl MaskStore {
             num_states += t.dfa.num_states() as u32;
         }
 
-        // Tokens that participate (non-special, non-empty, not too long).
-        let tokens: Vec<(u32, &[u8])> = (0..vocab_size as u32)
-            .filter(|&id| !tok.is_special(id))
-            .map(|id| (id, tok.token_bytes(id)))
-            .filter(|(_, b)| !b.is_empty() && b.len() <= max_token_len)
-            .collect();
+        // Tokens that participate (non-special, non-empty, not too long),
+        // in token-id order — `walk_info`/`suff` are indexed by position
+        // in this list.
+        let tokens = tok.participating_tokens(max_token_len);
+        let total_token_bytes: u64 = tokens.iter().map(|&(_, b)| b.len() as u64).sum();
+
+        // The trie is cached on the tokenizer: request-time compiles of
+        // other grammars against the same vocabulary reuse it.
+        let trie = use_trie.then(|| tok.token_trie(max_token_len));
+        debug_assert!(trie
+            .as_ref()
+            .map(|t| t.token_ids().iter().copied().eq(tokens.iter().map(|&(id, _)| id)))
+            .unwrap_or(true));
+
+        // Per-terminal static dead-byte tables (trie mode only).
+        let dead: Vec<Vec<bool>> = if trie.is_some() {
+            g.terminals
+                .iter()
+                .map(|t| {
+                    if matches!(t.pattern, TermPattern::Declared) {
+                        Vec::new()
+                    } else {
+                        t.dfa.dead_classes()
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
 
         // ---- pass 1: suffmatch(τ, t, i) -------------------------------
-        let suff = suffix_match_table(g, &tokens);
+        let suff: Vec<Vec<u128>> = match &trie {
+            Some(trie) => g
+                .terminals
+                .iter()
+                .map(|t| {
+                    if matches!(t.pattern, TermPattern::Declared) {
+                        vec![0u128; tokens.len()] // declared terminals never match text
+                    } else {
+                        trie.suffix_match(&t.dfa)
+                    }
+                })
+                .collect(),
+            None => suffix_match_table(g, &tokens),
+        };
 
         // ---- pass 2: per (state, token) walks; assemble M₀ / M₁ --------
         // Work items: every live state of every lexable terminal, in
@@ -317,6 +394,8 @@ impl MaskStore {
             vocab_size,
             nterms,
             with_m1: cfg.with_m1,
+            trie: trie.as_deref(),
+            dead: &dead,
         };
         let outs: Vec<ShardOut> = if threads <= 1 {
             vec![shard.process(&items)]
@@ -346,7 +425,9 @@ impl MaskStore {
         } else {
             Vec::new()
         };
+        let mut walk = TrieWalkStats::default();
         for out in outs {
+            walk.merge(&out.walk);
             // Shard-local pool index → global pool index (first-occurrence
             // order is preserved because shards merge in item order).
             let map: Vec<u32> =
@@ -382,6 +463,10 @@ impl MaskStore {
             raw_bytes,
             zero_copy: false,
             mapped: false,
+            walk_steps: walk.steps,
+            naive_steps: items.len() as u64 * total_token_bytes,
+            trie_nodes_visited: walk.nodes_visited,
+            pruned_dead_byte: walk.pruned_dead_byte,
         };
 
         MaskStore {
@@ -777,6 +862,12 @@ impl V2Header {
                 raw_bytes,
                 zero_copy,
                 mapped,
+                // A loaded store executed no walks — counters are
+                // build-time only and not serialised.
+                walk_steps: 0,
+                naive_steps: 0,
+                trie_nodes_visited: 0,
+                pruned_dead_byte: 0,
             },
         }
     }
@@ -809,9 +900,55 @@ impl Interner {
     }
 }
 
-/// Pass 1: suff[τ][k] = bitmask over suffix starts i (bit i set ⇔
-/// dmatch(t[i..], q0^τ, {})), for token index k — the "jump into the next
-/// terminal" primitive of Definition 10 condition 3.
+/// Bits 0..n (exclusive) — the "strictly before position n" mask.
+/// `n` must be ≤ [`MaskStoreConfig::MAX_SPLIT_LEN`].
+#[inline]
+fn mask_below(n: usize) -> u128 {
+    (1u128 << n) - 1
+}
+
+/// One token walked byte-by-byte from `q` — the single shared walker
+/// behind the reference builder, the naive suffix table and the
+/// brute-force tests, so none of them can drift from each other (or from
+/// the trie DFS they cross-check).
+pub(crate) struct TokenWalk {
+    /// The walk survived every byte *and* landed in a live state
+    /// (Definition 10 condition 1).
+    pub live_all: bool,
+    /// Bit `i` ⇔ the `i`-byte prefix sits in a final state (split points
+    /// of conditions 2/3; positions above
+    /// [`MaskStoreConfig::MAX_SPLIT_LEN`] are dropped).
+    pub fhits: u128,
+    /// `dfa.step` calls executed (walks stop at `DEAD`).
+    pub steps: u64,
+}
+
+pub(crate) fn walk_token(dfa: &Dfa, q: u32, bytes: &[u8]) -> TokenWalk {
+    let mut cur = q;
+    let mut fhits = if dfa.is_accept(cur) { 1u128 } else { 0 };
+    let mut live_all = true;
+    let mut steps = 0u64;
+    for (j, &b) in bytes.iter().enumerate() {
+        steps += 1;
+        cur = dfa.step(cur, b);
+        if cur == DEAD {
+            live_all = false;
+            break;
+        }
+        if dfa.is_accept(cur) && j + 1 <= MaskStoreConfig::MAX_SPLIT_LEN {
+            fhits |= 1 << (j + 1);
+        }
+    }
+    if live_all && !dfa.is_live(cur) {
+        live_all = false;
+    }
+    TokenWalk { live_all, fhits, steps }
+}
+
+/// Pass 1 (naive reference): suff[τ][k] = bitmask over suffix starts i
+/// (bit i set ⇔ dmatch(t[i..], q0^τ, {})), for token index k — the "jump
+/// into the next terminal" primitive of Definition 10 condition 3. The
+/// trie build computes the same table via [`TokenTrie::suffix_match`].
 ///
 /// Split bitmasks are 128-bit: a token of up to
 /// [`MaskStoreConfig::MAX_SPLIT_LEN`] bytes keeps every suffix-start
@@ -829,36 +966,13 @@ fn suffix_match_table(g: &Grammar, tokens: &[(u32, &[u8])]) -> Vec<Vec<u128>> {
         for (k, &(_, bytes)) in tokens.iter().enumerate() {
             let n = bytes.len().min(MaskStoreConfig::MAX_SPLIT_LEN);
             let mut bits = 0u128;
-            // dmatch(t[i..], q0, {}) = live-all-the-way OR some strict
-            // prefix of the suffix lands in F.
             for i in 0..=n {
-                let mut q = dfa.start();
-                let mut ok = false;
-                if dfa.is_accept(q) && i < n {
-                    ok = true; // ε prefix in F with nonempty leftover
-                }
-                if !ok {
-                    let mut live = true;
-                    for (j, &b) in bytes.iter().enumerate().skip(i) {
-                        q = dfa.step(q, b);
-                        if q == DEAD {
-                            live = false;
-                            break;
-                        }
-                        if dfa.is_accept(q) && j + 1 < bytes.len() {
-                            ok = true; // condition 2 split
-                            break;
-                        }
-                    }
-                    if live && q != DEAD && dfa.is_live(q) {
-                        ok = true; // condition 1
-                    }
-                    if i == n && n == bytes.len() {
-                        // empty suffix: dmatch(ε) = start live
-                        ok = dfa.is_live(dfa.start());
-                    }
-                }
-                if ok {
+                // dmatch(t[i..], q0, {}): the whole suffix stays live —
+                // condition 1, and dmatch(ε) = live(q0) for i = len — OR
+                // an F state strictly inside the suffix (condition 2;
+                // strictly, because the leftover must be nonempty).
+                let w = walk_token(dfa, dfa.start(), &bytes[i..]);
+                if w.live_all || w.fhits & mask_below(bytes.len() - i) != 0 {
                     bits |= 1 << i;
                 }
             }
@@ -877,6 +991,11 @@ struct ShardContext<'a> {
     vocab_size: usize,
     nterms: usize,
     with_m1: bool,
+    /// `Some` for the trie build, `None` for the naive reference.
+    trie: Option<&'a TokenTrie>,
+    /// Per-terminal [`Dfa::dead_classes`] tables (empty in reference mode
+    /// and for declared terminals).
+    dead: &'a [Vec<bool>],
 }
 
 /// One shard's output: sparse (index, local-pool-id) entries plus the
@@ -887,49 +1006,56 @@ struct ShardOut {
     m0: Vec<(u32, u32)>,
     /// (flat m1 index = gidx * nterms + next, local pool id)
     m1: Vec<(usize, u32)>,
+    /// Walk-cost counters, merged into `MaskStoreStats`.
+    walk: TrieWalkStats,
 }
 
 impl ShardContext<'_> {
     /// Walk every token from every (terminal, state) item and assemble the
     /// shard's M₀/M₁ entries — the body of the paper's offline loop.
+    ///
+    /// `walk_info` is indexed by token, so the trie DFS and the naive
+    /// per-token loop fill identical tables and everything downstream
+    /// (mask assembly, interning, pool order) is shared verbatim — the
+    /// crux of the bit-identical-output guarantee.
     fn process(&self, items: &[(u16, u32)]) -> ShardOut {
         let mut interner = Interner::default();
-        let mut out = ShardOut { pool: Vec::new(), m0: Vec::new(), m1: Vec::new() };
+        let mut out = ShardOut {
+            pool: Vec::new(),
+            m0: Vec::new(),
+            m1: Vec::new(),
+            walk: TrieWalkStats::default(),
+        };
         // Reusable per-token scratch: (live_all, fhits bitmask incl. bit len).
         let mut walk_info: Vec<(bool, u128)> = vec![(false, 0); self.tokens.len()];
+        let mut scratch = TrieScratch::default();
 
         for &(term_idx, q) in items {
             let dfa = &self.g.terminals[term_idx as usize].dfa;
             // Walk every token from q.
-            for (k, &(_, bytes)) in self.tokens.iter().enumerate() {
-                let mut cur = q;
-                let mut fhits = 0u128;
-                if dfa.is_accept(cur) {
-                    fhits |= 1; // i = 0
-                }
-                let mut live_all = true;
-                for (j, &b) in bytes.iter().enumerate() {
-                    cur = dfa.step(cur, b);
-                    if cur == DEAD {
-                        live_all = false;
-                        break;
+            match self.trie {
+                Some(trie) => trie.walk_masks(
+                    dfa,
+                    q,
+                    &self.dead[term_idx as usize],
+                    &mut walk_info,
+                    &mut scratch,
+                    &mut out.walk,
+                ),
+                None => {
+                    for (k, &(_, bytes)) in self.tokens.iter().enumerate() {
+                        let w = walk_token(dfa, q, bytes);
+                        out.walk.steps += w.steps;
+                        walk_info[k] = (w.live_all, w.fhits);
                     }
-                    if dfa.is_accept(cur) && j + 1 <= MaskStoreConfig::MAX_SPLIT_LEN {
-                        fhits |= 1 << (j + 1);
-                    }
                 }
-                if live_all && !dfa.is_live(cur) {
-                    live_all = false;
-                }
-                walk_info[k] = (live_all, fhits);
             }
 
             // M₀(q): live_all OR a strict-prefix F hit.
             let mut mask = BitSet::new(self.vocab_size);
             for (k, &(id, bytes)) in self.tokens.iter().enumerate() {
                 let (live_all, fhits) = walk_info[k];
-                let strict_bits = bytes.len().min(MaskStoreConfig::MAX_SPLIT_LEN);
-                let strict = fhits & ((1u128 << strict_bits) - 1);
+                let strict = fhits & mask_below(bytes.len().min(MaskStoreConfig::MAX_SPLIT_LEN));
                 if live_all || strict != 0 {
                     mask.set(id as usize);
                 }
@@ -1085,7 +1211,10 @@ mod tests {
     #[test]
     fn m1_brute_force_agreement() {
         // Cross-check the assembled M₁ against a direct recursive dmatch
-        // implementation on a byte-level vocabulary.
+        // implementation on a byte-level vocabulary. Conditions 1–3 read
+        // off one `walk_token` call: `live_all` is condition 1, an `fhits`
+        // bit at i means the prefix t[..i] sits in F (the split point of
+        // conditions 2/3).
         let (g, t, s) = store_for("calc", 0);
         fn dmatch(
             g: &Grammar,
@@ -1095,33 +1224,13 @@ mod tests {
             lam: &[TermId],
         ) -> bool {
             let dfa = &g.terminals[term as usize].dfa;
-            // condition 1
-            let mut cur = q;
-            let mut alive = true;
-            for &b in bytes {
-                cur = dfa.step(cur, b);
-                if cur == DEAD {
-                    alive = false;
-                    break;
-                }
+            let w = walk_token(dfa, q, bytes);
+            if w.live_all {
+                return true; // condition 1
             }
-            if alive && dfa.is_live(cur) {
-                return true;
-            }
-            // splits
             for i in 0..=bytes.len() {
-                let w1 = &bytes[..i];
-                let mut cur = q;
-                let mut dead = false;
-                for &b in w1 {
-                    cur = dfa.step(cur, b);
-                    if cur == DEAD {
-                        dead = true;
-                        break;
-                    }
-                }
-                if dead || !dfa.is_accept(cur) {
-                    continue;
+                if w.fhits & (1u128 << i) == 0 {
+                    continue; // prefix t[..i] not in F (or walk died first)
                 }
                 let w2 = &bytes[i..];
                 match lam.split_first() {
@@ -1432,5 +1541,146 @@ mod tests {
         let serial = MaskStore::build(&g, &t, cfg_s);
         let par = MaskStore::build(&g, &t, cfg_p);
         assert_eq!(serial.to_bytes(), par.to_bytes());
+    }
+
+    #[test]
+    fn trie_build_matches_reference_quick() {
+        // Fast in-crate parity check (the exhaustive five-grammar ×
+        // thread-count matrix lives in rust/tests/trie_parity.rs).
+        for name in ["calc", "json"] {
+            let g = Grammar::builtin(name).unwrap();
+            let corpus = br#"{"k": [1, 2.5], "s": "ab"} (3) + 4.5"#.repeat(30);
+            let t = Tokenizer::train(&corpus, 48);
+            let trie = MaskStore::build(&g, &t, MaskStoreConfig::default());
+            let reference = MaskStore::build_reference(&g, &t, MaskStoreConfig::default());
+            assert_eq!(trie.to_bytes(), reference.to_bytes(), "{name}: SYNCMSK2 differs");
+            assert_eq!(trie.to_bytes_v1(), reference.to_bytes_v1(), "{name}: SYNCMSK1 differs");
+        }
+    }
+
+    #[test]
+    fn trie_suffix_match_equals_naive_table() {
+        // The pass-1 tables are compared directly, not just through the
+        // masks they feed — an `fhits & suff` conjunction could hide a
+        // divergent bit.
+        let g = Grammar::builtin("json").unwrap();
+        let corpus = br#"{"alpha": [1, 2.5, true], "beta": "x y"}"#.repeat(30);
+        let t = Tokenizer::train(&corpus, 64);
+        let tokens = t.participating_tokens(MaskStoreConfig::default().effective_max_token_len());
+        let trie = t.token_trie(MaskStoreConfig::default().effective_max_token_len());
+        let naive = suffix_match_table(&g, &tokens);
+        for (ti, term) in g.terminals.iter().enumerate() {
+            if matches!(term.pattern, TermPattern::Declared) {
+                continue;
+            }
+            assert_eq!(trie.suffix_match(&term.dfa), naive[ti], "terminal {ti}");
+        }
+    }
+
+    #[test]
+    fn dead_byte_analysis_prunes_alphabetic_vocab() {
+        // calc's INT accepts only digits; a vocabulary trained on pure
+        // letters is almost entirely dead bytes for it. The static filter
+        // must prune those walks — and change nothing in the output.
+        let g = Grammar::builtin("calc").unwrap();
+        let corpus = b"the quick brown fox jumps over the lazy dog ".repeat(40);
+        let t = Tokenizer::train(&corpus, 80);
+        let cfg = MaskStoreConfig::default();
+        let trie = MaskStore::build(&g, &t, cfg.clone());
+        let reference = MaskStore::build_reference(&g, &t, cfg);
+        assert_eq!(trie.to_bytes(), reference.to_bytes());
+        assert!(
+            trie.stats.pruned_dead_byte > 0,
+            "letters must be statically dead for the digit/operator terminals"
+        );
+        assert!(
+            trie.stats.walk_steps < trie.stats.naive_steps / 10,
+            "trie+filters must execute far fewer steps than the naive bound \
+             ({} vs {})",
+            trie.stats.walk_steps,
+            trie.stats.naive_steps
+        );
+        assert_eq!(reference.stats.pruned_dead_byte, 0, "reference never prunes");
+        assert_eq!(reference.stats.trie_nodes_visited, 0);
+    }
+
+    #[test]
+    fn multibyte_utf8_tokens_survive_trie_traversal() {
+        // JSON STRING accepts arbitrary non-quote bytes, so multi-byte
+        // UTF-8 sequences (é = C3 A9, ✓ = E2 9C 93) must flow through the
+        // trie exactly as through the naive walk — high bytes are where a
+        // byte/char confusion would bite.
+        let g = Grammar::builtin("json").unwrap();
+        let mut merges: Vec<(u32, u32)> = vec![(0xC3, 0xA9)]; // é
+        merges.push((0xE2, 0x9C));
+        merges.push((256 + 1, 0x93)); // ✓
+        merges.push((b'"' as u32, 256)); // "é
+        let t = Tokenizer::from_merges(&merges);
+        let e_acute = 256u32;
+        let check = 258u32;
+        let quote_e = 259u32;
+        assert_eq!(t.token_bytes(e_acute), "é".as_bytes());
+        assert_eq!(t.token_bytes(check), "✓".as_bytes());
+        let cfg = MaskStoreConfig::default();
+        let trie = MaskStore::build(&g, &t, cfg.clone());
+        let reference = MaskStore::build_reference(&g, &t, cfg);
+        assert_eq!(trie.to_bytes(), reference.to_bytes());
+        let string = g.term_id("STRING").unwrap();
+        let dfa = &g.terminals[string as usize].dfa;
+        let inside = dfa.walk(dfa.start(), b"\"a");
+        assert!(trie.m0_contains(string, inside, e_acute as usize));
+        assert!(trie.m0_contains(string, inside, check as usize));
+        assert!(trie.m0_contains(string, dfa.start(), quote_e as usize));
+    }
+
+    #[test]
+    fn walk_step_counters_populated_and_consistent() {
+        let (_, t, s) = store_for("json", 40);
+        assert!(s.stats.naive_steps > 0);
+        assert!(s.stats.walk_steps > 0);
+        assert!(s.stats.trie_nodes_visited > 0);
+        assert!(
+            s.stats.walk_steps < s.stats.naive_steps,
+            "prefix sharing must beat the brute-force bound"
+        );
+        // The reference build executes real walks too (early-terminating),
+        // but visits no trie nodes.
+        let g = Grammar::builtin("json").unwrap();
+        let r = MaskStore::build_reference(&g, &t, MaskStoreConfig::default());
+        assert!(r.stats.walk_steps > 0);
+        assert_eq!(r.stats.naive_steps, s.stats.naive_steps);
+        assert_eq!(r.stats.trie_nodes_visited, 0);
+        // Counters are build-time only: they do not survive a round-trip.
+        let loaded = MaskStore::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(loaded.stats.walk_steps, 0);
+        assert_eq!(loaded.stats.naive_steps, 0);
+    }
+
+    #[test]
+    fn reference_build_64_byte_token_parity() {
+        // The 64-byte regression token (see suffix_split_survives_64_byte
+        // _token) must survive the *trie* path identically: its only
+        // F-hit is the final split position, deep in a shared-prefix
+        // chain.
+        let g = Grammar::builtin("json").unwrap();
+        let mut merges: Vec<(u32, u32)> = vec![(b'"' as u32, b'a' as u32)];
+        let mut last = 256u32;
+        for _ in 0..60 {
+            merges.push((last, b'a' as u32));
+            last += 1;
+        }
+        merges.push((last, b'"' as u32));
+        last += 1;
+        merges.push((last, b'x' as u32));
+        last += 1;
+        let token = last;
+        let tok = Tokenizer::from_merges(&merges);
+        assert_eq!(tok.token_bytes(token).len(), 64);
+        let trie = MaskStore::build(&g, &tok, MaskStoreConfig::default());
+        let reference = MaskStore::build_reference(&g, &tok, MaskStoreConfig::default());
+        assert_eq!(trie.to_bytes(), reference.to_bytes());
+        let string = g.term_id("STRING").unwrap();
+        let dfa = &g.terminals[string as usize].dfa;
+        assert!(trie.m0_contains(string, dfa.start(), token as usize));
     }
 }

@@ -1,0 +1,460 @@
+//! Byte trie over the participating vocabulary — the shared index behind
+//! the fast mask-store build.
+//!
+//! The naive build walks every token from every (terminal, state) item
+//! independently: `Σ|Q_Ω| · Σ|t|` DFA steps. The trie exploits the fact
+//! that BPE vocabularies are extremely prefix-dense: tokens sharing a
+//! prefix share every step over that prefix, and once a walk leaves
+//! `live(Q)` **every** token below the current trie node is resolved at
+//! once (no suffix of a dead walk can revive it). Two static filters cut
+//! further:
+//!
+//! - **dead-byte pruning** ([`crate::regex::Dfa::dead_classes`]): a byte
+//!   whose class is `DEAD` from every live state disqualifies the whole
+//!   subtree before any step executes;
+//! - **byte-class projection**: sibling edges whose bytes fall in the
+//!   same equivalence class for the current terminal share one
+//!   `step_class` call.
+//!
+//! The trie is a pure function of (vocabulary, token-length cap) — one
+//! per tokenizer, shared across every grammar compiled against it (see
+//! `Tokenizer::token_trie`). Nodes are laid out depth-first with
+//! contiguous children; each node records the contiguous range of
+//! lexicographically-sorted token indices below it, so a pruned subtree
+//! resolves to a slice fill. Results are written into a table indexed by
+//! token, which is what makes DFS visit order irrelevant to the
+//! bit-identical-output guarantee of the sharded build.
+
+use crate::regex::Dfa;
+
+/// Index into the participating-token list (the builder's `tokens`
+/// vector, in token-id order) — *not* a vocabulary id.
+type TokIx = u32;
+
+#[derive(Debug)]
+struct Node {
+    /// Edge byte from the parent (unused sentinel 0 at the root).
+    byte: u8,
+    /// Number of tokens ending exactly at this node (> 1 only when the
+    /// tokenizer maps several ids to the same byte string). They occupy
+    /// the first `n_end` slots of the subtree's token range.
+    n_end: u32,
+    /// Children occupy `nodes[child_lo..child_hi]`, in byte order.
+    child_lo: u32,
+    child_hi: u32,
+    /// Tokens in this subtree occupy `dfs_tokens[tok_lo..tok_hi]`.
+    tok_lo: u32,
+    tok_hi: u32,
+}
+
+/// Prefix trie over the participating tokens of one tokenizer.
+pub struct TokenTrie {
+    nodes: Vec<Node>,
+    /// Token indices sorted lexicographically by byte string (stable by
+    /// index), arranged so every subtree is a contiguous range.
+    dfs_tokens: Vec<TokIx>,
+    /// Vocabulary id per token index, in token-id order — the builder's
+    /// canonical token enumeration.
+    token_ids: Vec<u32>,
+    /// Σ token bytes — the naive per-item walk cost.
+    total_token_bytes: u64,
+    /// Length cap the token set was filtered with.
+    max_token_len: usize,
+}
+
+/// Counters for one build's trie walks (merged across shards into
+/// `MaskStoreStats`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TrieWalkStats {
+    /// `dfa.step`/`step_class` calls actually executed.
+    pub steps: u64,
+    /// Trie nodes entered (pruned subtrees are not entered).
+    pub nodes_visited: u64,
+    /// Token walks resolved by static dead-byte pruning, i.e. without
+    /// reaching the byte at all.
+    pub pruned_dead_byte: u64,
+}
+
+impl TrieWalkStats {
+    pub fn merge(&mut self, o: &TrieWalkStats) {
+        self.steps += o.steps;
+        self.nodes_visited += o.nodes_visited;
+        self.pruned_dead_byte += o.pruned_dead_byte;
+    }
+}
+
+/// Reusable per-worker scratch for [`TokenTrie::walk_masks`] (per-depth
+/// sibling-transition buffers; taking them out of the walker avoids one
+/// allocation per visited node).
+#[derive(Default)]
+pub struct TrieScratch {
+    levels: Vec<Vec<ClassStep>>,
+}
+
+/// One resolved sibling transition: every later sibling edge whose byte
+/// falls in the same class reuses `next` instead of stepping again.
+#[derive(Clone, Copy)]
+struct ClassStep {
+    class: u16,
+    next: u32,
+}
+
+impl TokenTrie {
+    /// Build the trie over `tokens` — `(vocab id, bytes)` pairs in token-id
+    /// order, already filtered to the participating set (non-special,
+    /// non-empty, `len <= max_token_len`). `max_token_len` is recorded so
+    /// cached tries can be validated against a build's config.
+    pub fn build(tokens: &[(u32, &[u8])], max_token_len: usize) -> TokenTrie {
+        debug_assert!(tokens.iter().all(|(_, b)| !b.is_empty() && b.len() <= max_token_len));
+        let token_ids: Vec<u32> = tokens.iter().map(|&(id, _)| id).collect();
+        let total_token_bytes: u64 = tokens.iter().map(|&(_, b)| b.len() as u64).sum();
+
+        let mut dfs_tokens: Vec<TokIx> = (0..tokens.len() as u32).collect();
+        dfs_tokens.sort_by(|&a, &b| {
+            tokens[a as usize].1.cmp(tokens[b as usize].1).then(a.cmp(&b))
+        });
+
+        let mut trie = TokenTrie {
+            nodes: vec![Node {
+                byte: 0,
+                n_end: 0,
+                child_lo: 0,
+                child_hi: 0,
+                tok_lo: 0,
+                tok_hi: tokens.len() as u32,
+            }],
+            dfs_tokens,
+            token_ids,
+            total_token_bytes,
+            max_token_len,
+        };
+        trie.split(0, 0, tokens);
+        trie
+    }
+
+    /// Recursively partition `nodes[node]`'s token range (sorted, all
+    /// sharing the first `depth` bytes) into end-tokens and per-byte
+    /// children. Recursion depth is bounded by `max_token_len` (≤ 127).
+    fn split(&mut self, node: usize, depth: usize, tokens: &[(u32, &[u8])]) {
+        let (lo, hi) = {
+            let n = &self.nodes[node];
+            (n.tok_lo as usize, n.tok_hi as usize)
+        };
+        // Tokens ending here sort first (a prefix orders before its
+        // extensions).
+        let mut i = lo;
+        while i < hi && tokens[self.dfs_tokens[i] as usize].1.len() == depth {
+            i += 1;
+        }
+        self.nodes[node].n_end = (i - lo) as u32;
+        // Group the rest by their byte at `depth`; groups are contiguous
+        // and in byte order because the range is sorted.
+        let child_lo = self.nodes.len();
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        while i < hi {
+            let b = tokens[self.dfs_tokens[i] as usize].1[depth];
+            let start = i;
+            while i < hi && tokens[self.dfs_tokens[i] as usize].1[depth] == b {
+                i += 1;
+            }
+            self.nodes.push(Node {
+                byte: b,
+                n_end: 0,
+                child_lo: 0,
+                child_hi: 0,
+                tok_lo: start as u32,
+                tok_hi: i as u32,
+            });
+            ranges.push((self.nodes.len() - 1, depth + 1));
+        }
+        self.nodes[node].child_lo = child_lo as u32;
+        self.nodes[node].child_hi = self.nodes.len() as u32;
+        for (child, d) in ranges {
+            self.split(child, d, tokens);
+        }
+    }
+
+    /// Vocabulary ids of the participating tokens, in token-id order.
+    pub fn token_ids(&self) -> &[u32] {
+        &self.token_ids
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.token_ids.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Σ token bytes: one item's walk cost in the naive build.
+    pub fn total_token_bytes(&self) -> u64 {
+        self.total_token_bytes
+    }
+
+    /// The token-length cap this trie was filtered with.
+    pub fn max_token_len(&self) -> usize {
+        self.max_token_len
+    }
+
+    /// One (terminal, state) item of the mask-store build: fill
+    /// `walk_info[k] = (live_all, fhits)` for every token index `k`,
+    /// bit-identically to the naive per-token walk. `q` must be live;
+    /// `dead` is the terminal's [`Dfa::dead_classes`] table.
+    ///
+    /// `fhits` bit `i` means the walk's `i`-byte prefix sits in a final
+    /// state; `live_all` means the whole walk stayed alive *and* landed
+    /// live. A subtree is pruned as soon as the walk leaves `live(Q)`:
+    /// accept states are always live, so from a non-live state no further
+    /// F-hits can accrue and every deeper token resolves to
+    /// `(false, fhits-so-far)` — exactly what the naive walk computes.
+    pub fn walk_masks(
+        &self,
+        dfa: &Dfa,
+        q: u32,
+        dead: &[bool],
+        walk_info: &mut [(bool, u128)],
+        scratch: &mut TrieScratch,
+        stats: &mut TrieWalkStats,
+    ) {
+        debug_assert!(dfa.is_live(q));
+        debug_assert_eq!(walk_info.len(), self.num_tokens());
+        debug_assert_eq!(dead.len(), dfa.num_classes());
+        if scratch.levels.len() < self.max_token_len + 1 {
+            scratch.levels.resize_with(self.max_token_len + 1, Vec::new);
+        }
+        let fhits = if dfa.is_accept(q) { 1u128 } else { 0 };
+        let mut w = MaskWalk { trie: self, dfa, dead, walk_info, stats };
+        w.rec(0, q, fhits, 0, &mut scratch.levels);
+    }
+
+    /// Fill every token in `node`'s subtree with `v`.
+    fn fill(&self, node: &Node, v: (bool, u128), walk_info: &mut [(bool, u128)]) {
+        for &k in &self.dfs_tokens[node.tok_lo as usize..node.tok_hi as usize] {
+            walk_info[k as usize] = v;
+        }
+    }
+
+    /// Pass-1 counterpart: `suffmatch(τ, t, i)` for every token in one DFS
+    /// over the trie, semantically identical to the naive per-suffix walk.
+    ///
+    /// The walk threads a set of *active* suffix starts down the trie —
+    /// `(i, state)` pairs for every start whose walk from `q₀` is still in
+    /// a live state with no F-hit yet — plus a `decided` bitmask of starts
+    /// already proven (an F state reached strictly before the current
+    /// depth satisfies condition 2 for every deeper token end). A token
+    /// ending at depth `d` reads `decided | every-active-bit`: an active
+    /// entry *is* condition 1 (its walk covered the whole suffix and sits
+    /// live). A fresh start `(d, q₀)` joins at every depth — that entry
+    /// doubles as the empty-suffix case `dmatch(ε) = live(q₀)`.
+    pub fn suffix_match(&self, dfa: &Dfa) -> Vec<u128> {
+        let mut out = vec![0u128; self.num_tokens()];
+        let start = dfa.start();
+        let start_live = dfa.is_live(start);
+        let mut levels: Vec<Vec<(u8, u32)>> =
+            (0..self.max_token_len + 1).map(|_| Vec::new()).collect();
+        if start_live {
+            levels[0].push((0, start));
+        }
+        let mut w = SuffWalk { trie: self, dfa, start, start_live, out: &mut out };
+        w.rec(0, 0, 0, &mut levels);
+        out
+    }
+}
+
+/// Borrow bundle for one [`TokenTrie::walk_masks`] DFS.
+struct MaskWalk<'a> {
+    trie: &'a TokenTrie,
+    dfa: &'a Dfa,
+    dead: &'a [bool],
+    walk_info: &'a mut [(bool, u128)],
+    stats: &'a mut TrieWalkStats,
+}
+
+impl MaskWalk<'_> {
+    /// Visit `node` with the walk in live `state` at `depth`, `fhits`
+    /// holding the F-hit bits of the path so far (bit `depth` included).
+    fn rec(
+        &mut self,
+        node: u32,
+        state: u32,
+        fhits: u128,
+        depth: usize,
+        levels: &mut [Vec<ClassStep>],
+    ) {
+        self.stats.nodes_visited += 1;
+        let n = &self.trie.nodes[node as usize];
+        // Tokens ending here: the walk covered them fully and sits live.
+        for &k in &self.trie.dfs_tokens
+            [n.tok_lo as usize..n.tok_lo as usize + n.n_end as usize]
+        {
+            self.walk_info[k as usize] = (true, fhits);
+        }
+        if n.child_lo == n.child_hi {
+            return;
+        }
+        let (buf_slot, deeper) = levels.split_first_mut().expect("levels sized to max depth");
+        let mut buf = std::mem::take(buf_slot);
+        buf.clear();
+        for ci in n.child_lo..n.child_hi {
+            let c = &self.trie.nodes[ci as usize];
+            let class = self.dfa.byte_class(c.byte);
+            if self.dead[class as usize] {
+                // Static filter: this byte kills every live state, so the
+                // whole subtree dies here without a step.
+                self.stats.pruned_dead_byte += (c.tok_hi - c.tok_lo) as u64;
+                self.trie.fill(c, (false, fhits), self.walk_info);
+                continue;
+            }
+            // Byte-class projection: reuse an earlier sibling's step.
+            let next = match buf.iter().find(|e| e.class == class) {
+                Some(e) => e.next,
+                None => {
+                    self.stats.steps += 1;
+                    let nx = self.dfa.step_class(state, class);
+                    buf.push(ClassStep { class, next: nx });
+                    nx
+                }
+            };
+            if !self.dfa.is_live(next) {
+                // DEAD or merely non-live: no deeper F-hits are possible
+                // and every deeper walk ends non-live → resolve the
+                // subtree (matches the naive walk bit-for-bit).
+                self.trie.fill(c, (false, fhits), self.walk_info);
+                continue;
+            }
+            let child_fhits = if self.dfa.is_accept(next) {
+                fhits | (1u128 << (depth + 1))
+            } else {
+                fhits
+            };
+            self.rec(ci, next, child_fhits, depth + 1, deeper);
+        }
+        *buf_slot = buf;
+    }
+}
+
+/// Borrow bundle for one [`TokenTrie::suffix_match`] DFS.
+struct SuffWalk<'a> {
+    trie: &'a TokenTrie,
+    dfa: &'a Dfa,
+    start: u32,
+    start_live: bool,
+    out: &'a mut [u128],
+}
+
+impl SuffWalk<'_> {
+    /// Visit `node` at `depth`; `levels[0]` holds the active suffix
+    /// starts for this node, `decided` the starts already proven via a
+    /// strict-prefix F-hit (condition 2).
+    fn rec(
+        &mut self,
+        node: u32,
+        depth: usize,
+        decided: u128,
+        levels: &mut [Vec<(u8, u32)>],
+    ) {
+        let n = &self.trie.nodes[node as usize];
+        if n.n_end > 0 {
+            // Active ⇒ the walk covered the whole suffix and is live:
+            // condition 1. Decided ⇒ condition 2 hit strictly inside.
+            let mut bits = decided;
+            for &(i, _) in levels[0].iter() {
+                bits |= 1u128 << i;
+            }
+            for &k in &self.trie.dfs_tokens
+                [n.tok_lo as usize..n.tok_lo as usize + n.n_end as usize]
+            {
+                self.out[k as usize] = bits;
+            }
+        }
+        if n.child_lo == n.child_hi {
+            return;
+        }
+        let (active_slot, deeper) = levels.split_first_mut().expect("levels sized to max depth");
+        let active = std::mem::take(active_slot);
+        for ci in n.child_lo..n.child_hi {
+            let b = self.trie.nodes[ci as usize].byte;
+            let mut decided_c = decided;
+            let next_buf = &mut deeper[0];
+            next_buf.clear();
+            for &(i, st) in &active {
+                if self.dfa.is_accept(st) {
+                    // F at depth `depth`, strictly before any deeper token
+                    // end — permanently decided for this subtree.
+                    decided_c |= 1u128 << i;
+                    continue;
+                }
+                let nx = self.dfa.step(st, b);
+                if self.dfa.is_live(nx) {
+                    next_buf.push((i, nx));
+                }
+                // Non-live: no future F-hit and no live landing — the
+                // start is resolved false for every deeper token.
+            }
+            if self.start_live {
+                next_buf.push(((depth + 1) as u8, self.start));
+            }
+            self.rec(ci, depth + 1, decided_c, deeper);
+        }
+        *active_slot = active;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trie_of(strs: &[&[u8]]) -> TokenTrie {
+        let tokens: Vec<(u32, &[u8])> =
+            strs.iter().enumerate().map(|(i, &b)| (i as u32 + 7, b)).collect();
+        TokenTrie::build(&tokens, 127)
+    }
+
+    #[test]
+    fn structure_prefix_sharing() {
+        let t = trie_of(&[b"ab", b"ac", b"a", b"b"]);
+        assert_eq!(t.num_tokens(), 4);
+        // root + 'a' + 'b'(top) + 'ab' + 'ac' = 5 nodes
+        assert_eq!(t.num_nodes(), 5);
+        assert_eq!(t.total_token_bytes(), 6);
+        assert_eq!(t.token_ids(), &[7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn duplicate_byte_strings_each_get_a_slot() {
+        let t = trie_of(&[b"xy", b"xy", b"x"]);
+        assert_eq!(t.num_tokens(), 3);
+        // root, 'x', 'xy' — both "xy" tokens end at the same node.
+        assert_eq!(t.num_nodes(), 3);
+        let n = t
+            .nodes
+            .iter()
+            .find(|n| n.byte == b'y')
+            .expect("xy node");
+        assert_eq!(n.n_end, 2);
+    }
+
+    #[test]
+    fn subtree_ranges_are_contiguous_and_complete() {
+        let t = trie_of(&[b"cat", b"car", b"cart", b"dog", b"do"]);
+        let root = &t.nodes[0];
+        assert_eq!((root.tok_lo, root.tok_hi), (0, 5));
+        for n in &t.nodes {
+            assert!(n.tok_lo <= n.tok_hi);
+            assert!(n.tok_lo as usize + n.n_end as usize <= n.tok_hi as usize);
+            // children partition the non-ending remainder
+            let mut covered = n.tok_lo + n.n_end;
+            for ci in n.child_lo..n.child_hi {
+                let c = &t.nodes[ci as usize];
+                assert_eq!(c.tok_lo, covered);
+                covered = c.tok_hi;
+            }
+            assert_eq!(covered, n.tok_hi);
+        }
+        // Every token index appears exactly once.
+        let mut seen = t.dfs_tokens.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..5).collect::<Vec<_>>());
+    }
+}

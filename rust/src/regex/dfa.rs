@@ -247,6 +247,28 @@ impl Dfa {
         self.accept.len()
     }
 
+    /// Equivalence class of a byte (see [`Dfa::num_classes`]).
+    #[inline]
+    pub fn byte_class(&self, byte: u8) -> u16 {
+        self.byte_class[byte as usize]
+    }
+
+    /// Number of byte equivalence classes. Bytes in the same class take
+    /// identical transitions from *every* state, so per-class work (one
+    /// step shared by all sibling bytes of a class, dead-class analysis)
+    /// is sound by construction.
+    #[inline]
+    pub fn num_classes(&self) -> usize {
+        self.num_classes as usize
+    }
+
+    /// One transition by pre-resolved byte class. `state` must not be
+    /// `DEAD` and `class` must be `< num_classes()`.
+    #[inline]
+    pub fn step_class(&self, state: u32, class: u16) -> u32 {
+        self.trans[state as usize * self.num_classes as usize + class as usize]
+    }
+
     /// One transition. `DEAD` in/out represents the dead sink.
     #[inline]
     pub fn step(&self, state: u32, byte: u8) -> u32 {
@@ -335,6 +357,27 @@ impl Dfa {
     pub fn out_bytes(&self, state: u32) -> Vec<u8> {
         (0..=255u8).filter(|&b| self.step(state, b) != DEAD).collect()
     }
+
+    /// Static dead-byte analysis, per class: `true` at class `c` when the
+    /// transition on `c` is `DEAD` from *every live* state. A walk that is
+    /// still in a live state dies on such a byte unconditionally, so a
+    /// mask-store build may prune the token — and every token sharing the
+    /// prefix — without executing the step.
+    pub fn dead_classes(&self) -> Vec<bool> {
+        let nc = self.num_classes as usize;
+        let mut dead = vec![true; nc];
+        for (s, &live) in self.live.iter().enumerate() {
+            if !live {
+                continue;
+            }
+            for (c, d) in dead.iter_mut().enumerate() {
+                if *d && self.trans[s * nc + c] != DEAD {
+                    *d = false;
+                }
+            }
+        }
+        dead
+    }
 }
 
 #[cfg(test)]
@@ -402,5 +445,35 @@ mod tests {
         let d = dfa("[a-z]+");
         // 26 letters behave identically → far fewer classes than 256.
         assert!(d.num_classes as usize <= 4);
+    }
+
+    #[test]
+    fn step_class_agrees_with_step() {
+        let d = dfa("(a|b)*abb");
+        for q in 0..d.num_states() as u32 {
+            for b in 0..=255u8 {
+                assert_eq!(d.step_class(q, d.byte_class(b)), d.step(q, b));
+            }
+        }
+    }
+
+    #[test]
+    fn dead_classes_match_per_state_transitions() {
+        let d = dfa("[0-9]+");
+        let dead = d.dead_classes();
+        assert_eq!(dead.len(), d.num_classes());
+        for b in 0..=255u8 {
+            let dies_everywhere = (0..d.num_states() as u32)
+                .filter(|&q| d.is_live(q))
+                .all(|q| d.step(q, b) == DEAD);
+            assert_eq!(
+                dead[d.byte_class(b) as usize],
+                dies_everywhere,
+                "byte {b:#x}"
+            );
+        }
+        // Digits are never dead; letters are dead from every state.
+        assert!(!dead[d.byte_class(b'5') as usize]);
+        assert!(dead[d.byte_class(b'q') as usize]);
     }
 }

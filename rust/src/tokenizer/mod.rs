@@ -12,8 +12,10 @@
 //! occupy the last ids. A small trainer is included so Rust tests and the
 //! mock-LM path run without Python artifacts.
 
+use crate::mask::trie::TokenTrie;
 use crate::util::json::{parse, Json};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Byte-level BPE tokenizer.
 pub struct Tokenizer {
@@ -24,6 +26,10 @@ pub struct Tokenizer {
     pub eos_id: u32,
     pub bos_id: u32,
     pub pad_id: u32,
+    /// Lazily built [`TokenTrie`]s keyed by effective token-length cap —
+    /// the trie is a pure function of (vocab, cap), so every grammar
+    /// compiled against this tokenizer shares one.
+    tries: Mutex<HashMap<usize, Arc<TokenTrie>>>,
 }
 
 impl Tokenizer {
@@ -96,7 +102,34 @@ impl Tokenizer {
         vocab.push(Vec::new());
         vocab.push(Vec::new());
         vocab.push(Vec::new());
-        Tokenizer { vocab, merge_map, eos_id, bos_id, pad_id }
+        Tokenizer { vocab, merge_map, eos_id, bos_id, pad_id, tries: Mutex::new(HashMap::new()) }
+    }
+
+    /// Tokens that participate in a mask store: non-special, non-empty,
+    /// at most `max_token_len` bytes — `(id, bytes)` in token-id order.
+    /// This is the single definition of the participating set; the trie
+    /// and both mask-store builders enumerate tokens through it.
+    pub fn participating_tokens(&self, max_token_len: usize) -> Vec<(u32, &[u8])> {
+        (0..self.vocab_size() as u32)
+            .filter(|&id| !self.is_special(id))
+            .map(|id| (id, self.token_bytes(id)))
+            .filter(|(_, b)| !b.is_empty() && b.len() <= max_token_len)
+            .collect()
+    }
+
+    /// The byte trie over [`Tokenizer::participating_tokens`], built once
+    /// per length cap and cached — request-time grammar compiles against
+    /// the same tokenizer pay the trie construction only on the first
+    /// build.
+    pub fn token_trie(&self, max_token_len: usize) -> Arc<TokenTrie> {
+        let mut cache = self.tries.lock().expect("token trie cache poisoned");
+        if let Some(t) = cache.get(&max_token_len) {
+            return t.clone();
+        }
+        let trie =
+            Arc::new(TokenTrie::build(&self.participating_tokens(max_token_len), max_token_len));
+        cache.insert(max_token_len, trie.clone());
+        trie
     }
 
     /// The trivial tokenizer: 256 byte tokens + specials. Used by tests
@@ -280,5 +313,28 @@ mod tests {
     fn bad_json_rejected() {
         assert!(Tokenizer::from_json("{}").is_err());
         assert!(Tokenizer::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn participating_tokens_filter() {
+        let t = Tokenizer::train(&b"abcd".repeat(50), 3);
+        let toks = t.participating_tokens(64);
+        // No specials, no empties, ids in order.
+        assert!(toks.iter().all(|&(id, b)| !t.is_special(id) && !b.is_empty()));
+        assert!(toks.windows(2).all(|w| w[0].0 < w[1].0));
+        // A cap of 1 keeps exactly the 256 byte tokens.
+        assert_eq!(t.participating_tokens(1).len(), 256);
+    }
+
+    #[test]
+    fn token_trie_cached_per_cap() {
+        let t = Tokenizer::train(&b"abab".repeat(50), 4);
+        let a = t.token_trie(64);
+        let b = t.token_trie(64);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same cap must share one trie");
+        let c = t.token_trie(1);
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
+        assert_eq!(c.num_tokens(), 256);
+        assert_eq!(a.num_tokens(), t.participating_tokens(64).len());
     }
 }

@@ -1,0 +1,82 @@
+//! Trie-vs-reference mask-store parity (ISSUE 6 acceptance gate).
+//!
+//! The token-trie builder (`MaskStore::build`) must be **bit-identical**
+//! to the retained naive builder (`MaskStore::build_reference`) — same
+//! masks, same pool first-occurrence order, same SYNCMSK2 and SYNCMSK1
+//! bytes — for every builtin grammar and at every thread count. A
+//! faster-but-slightly-different store would silently change serving
+//! behaviour, so equality is asserted on the serialised artifacts, not
+//! on lookups.
+//!
+//! The step-reduction assertion at the bottom is the perf half of the
+//! acceptance criteria: on json × a realistic BPE vocabulary the
+//! prefix-sharing + dead-byte + byte-class filters must cut executed
+//! `dfa.step` calls at least 10× below the naive Σ|items|·Σ|token bytes|
+//! bound.
+
+use syncode::eval::dataset;
+use syncode::grammar::Grammar;
+use syncode::mask::{MaskStore, MaskStoreConfig};
+use syncode::tokenizer::Tokenizer;
+
+const GRAMMARS: [&str; 5] = ["calc", "go", "json", "python", "sql"];
+
+/// A modest shared BPE tokenizer trained on the union corpus of all five
+/// grammars — every grammar sees the same (multi-byte) vocabulary, like
+/// a multi-grammar registry would.
+fn shared_tokenizer(merges: usize) -> Tokenizer {
+    let docs: Vec<Vec<u8>> = GRAMMARS
+        .iter()
+        .flat_map(|g| dataset::corpus(g, 6, 0xC0FFEE))
+        .collect();
+    let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    Tokenizer::train(&flat, merges)
+}
+
+#[test]
+fn trie_matches_reference_all_grammars_threads_1_and_4() {
+    let tok = shared_tokenizer(96);
+    for name in GRAMMARS {
+        let g = Grammar::builtin(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let reference =
+            MaskStore::build_reference(&g, &tok, MaskStoreConfig::default());
+        let ref_v2 = reference.to_bytes();
+        let ref_v1 = reference.to_bytes_v1();
+        for threads in [1usize, 4] {
+            let cfg = MaskStoreConfig { threads, ..MaskStoreConfig::default() };
+            let trie = MaskStore::build(&g, &tok, cfg);
+            assert_eq!(
+                trie.to_bytes(),
+                ref_v2,
+                "{name} threads={threads}: SYNCMSK2 bytes diverge"
+            );
+            assert_eq!(
+                trie.to_bytes_v1(),
+                ref_v1,
+                "{name} threads={threads}: SYNCMSK1 bytes diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn trie_cuts_json_walk_steps_at_least_10x() {
+    // A larger vocabulary than the parity matrix: step reduction grows
+    // with prefix density, and the acceptance bar is a 10× cut on a
+    // realistically-sized mock vocab.
+    let docs = dataset::corpus("json", 40, 7);
+    let flat: Vec<u8> = docs.iter().flat_map(|d| [d.as_slice(), b"\n"].concat()).collect();
+    let tok = Tokenizer::train(&flat, 512);
+    let g = Grammar::builtin("json").unwrap();
+    let s = MaskStore::build(&g, &tok, MaskStoreConfig::default());
+    assert!(s.stats.walk_steps > 0, "trie build must count executed steps");
+    assert!(
+        s.stats.naive_steps >= 10 * s.stats.walk_steps,
+        "expected ≥10× step reduction on json, got {}x ({} naive / {} executed)",
+        s.stats.naive_steps / s.stats.walk_steps.max(1),
+        s.stats.naive_steps,
+        s.stats.walk_steps
+    );
+    assert!(s.stats.pruned_dead_byte > 0, "dead-byte pruning never fired");
+    assert!(s.stats.trie_nodes_visited > 0);
+}

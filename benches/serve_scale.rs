@@ -70,6 +70,7 @@ fn main() {
                     strategy: Strategy::TopP { temp: 0.8, p: 0.95 },
                     seed: i * 17 + 3,
                     opportunistic: true,
+                    spec_k: 0,
                 },
                 token_sink: None,
             }

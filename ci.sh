@@ -114,6 +114,17 @@ if [[ "$fast" == "0" ]]; then
     exit 1
   fi
 
+  # Speculative speedometer (ISSUE-7): the perf_hotpath bench serves the
+  # same mock json batch at spec_k 0 and 4, asserts byte-identical output,
+  # and appends accepted-tokens-per-step entries. The grep proves the
+  # appender ran; the > 1 tokens_per_step bar is asserted inside the bench.
+  echo "== perf_hotpath spec bench (appends BENCH_spec.json) =="
+  cargo bench --bench perf_hotpath -- --json BENCH_spec.json
+  if ! grep -q '"tokens_per_step"' BENCH_spec.json; then
+    echo "ERROR: bench did not append tokens_per_step entries to BENCH_spec.json" >&2
+    exit 1
+  fi
+
   # HTTP smoke: the same coordinator behind real sockets. Concurrent
   # POST /v1/generate for json+calc must return 200s with zero syntax
   # errors, /metrics must parse as Prometheus text, and the server must

@@ -13,7 +13,9 @@
 //! PJRT), `--full-recompute` (the §Perf "before" L2 variant),
 //! `--unconstrained` (Standard engine for comparison), `--replicas N`
 //! (model replicas behind one admission queue), `--mask-threads M`
-//! (shared mask worker pool; 0 = inline mask computation).
+//! (shared mask worker pool; 0 = inline mask computation), `--spec-k N`
+//! (speculative draft length per step; 0 = off; output is byte-identical
+//! at any value).
 
 use std::sync::Arc;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar};
@@ -97,7 +99,10 @@ fn main() {
     println!("setup: {:.2}s", t0.elapsed().as_secs_f64());
 
     // --- serve a batch of requests -------------------------------------------
-    println!("[coordinator: {replicas} replica(s), {mask_threads} mask thread(s)]");
+    let spec_k = args.get_num("spec-k", 0usize);
+    println!(
+        "[coordinator: {replicas} replica(s), {mask_threads} mask thread(s), spec_k={spec_k}]"
+    );
     let cfg = CoordinatorConfig { mask_threads, ..CoordinatorConfig::default() };
     let srv = Coordinator::start(models, tok, factory, cfg);
     let tasks = dataset::json_mode_tasks(n, 3);
@@ -106,6 +111,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 0.8, p: 0.95 },
         seed: 5,
         opportunistic: true,
+        spec_k,
     };
     let t_subm = std::time::Instant::now();
     let rxs: Vec<_> = tasks

@@ -55,6 +55,7 @@ fn main() {
             strategy: Strategy::Temperature(0.8),
             seed: 42,
             opportunistic: true,
+            spec_k: 0,
         },
         token_sink: None,
     })

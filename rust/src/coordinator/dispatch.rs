@@ -208,11 +208,16 @@ pub struct CoordinatorConfig {
     /// Admission queue bound; `submit` blocks (backpressure) at this many
     /// queued requests.
     pub queue_cap: usize,
+    /// Server-side ceiling on per-request `spec_k` (speculative draft
+    /// length). Requests asking for more are silently clamped; the
+    /// output is byte-identical either way, so the clamp only bounds
+    /// per-step work, never changes results.
+    pub spec_k_cap: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { mask_threads: 0, queue_cap: 256 }
+        CoordinatorConfig { mask_threads: 0, queue_cap: 256, spec_k_cap: 8 }
     }
 }
 
@@ -436,6 +441,7 @@ impl Coordinator {
                 queue: queue.clone(),
                 pool: client.clone(),
                 metrics: ReplicaMetrics { local },
+                spec_k_cap: cfg.spec_k_cap,
                 guard: ReplicaGuard { queue: queue.clone(), live: live.clone() },
             };
             let handle = std::thread::Builder::new()
@@ -527,6 +533,7 @@ mod tests {
                     strategy: Strategy::Temperature(0.8),
                     seed: i * 31 + 5,
                     opportunistic: true,
+                    spec_k: 0,
                 },
                 token_sink: None,
             });
@@ -558,6 +565,7 @@ mod tests {
                 strategy: Strategy::Greedy,
                 seed: 3,
                 opportunistic: true,
+                spec_k: 0,
             },
             token_sink: None,
         });
@@ -581,6 +589,7 @@ mod tests {
                         strategy: Strategy::TopP { temp: 0.9, p: 0.95 },
                         seed: i,
                         opportunistic: i % 2 == 0,
+                        spec_k: 0,
                     },
                     token_sink: None,
                 })
@@ -611,6 +620,7 @@ mod tests {
                 strategy: Strategy::Greedy,
                 seed: 2,
                 opportunistic: true,
+                spec_k: 0,
             },
             token_sink: None,
         });
@@ -678,6 +688,7 @@ mod tests {
                 strategy: Strategy::Temperature(0.8),
                 seed,
                 opportunistic: true,
+                spec_k: 0,
             },
             token_sink: None,
         }

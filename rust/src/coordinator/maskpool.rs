@@ -40,6 +40,18 @@ pub(crate) enum StepOutcome {
     Finish(FinishReason, Option<String>),
 }
 
+/// A grammar-pruned speculative draft with its verification logits, ready
+/// for the acceptance loop. Built by the scheduler (drafts are proposed by
+/// the model and pruned by [`prune_draft`] *before* `decode_spec` scores
+/// them) and consumed inside the step.
+pub(crate) struct SpecStep {
+    /// Draft prefix that survived grammar pruning (never empty).
+    pub draft: Vec<u32>,
+    /// `decode_spec` logits: row `i` is conditioned on the committed
+    /// history plus `draft[..=i]`.
+    pub logits: Vec<Vec<f32>>,
+}
+
 /// One lane's step work, moved to a worker.
 pub(crate) struct StepRequest {
     pub lane: usize,
@@ -48,6 +60,9 @@ pub(crate) struct StepRequest {
     pub rng: Rng,
     pub strategy: Strategy,
     pub opportunistic: bool,
+    /// Speculative draft + verification logits; `None` is the plain
+    /// single-token step.
+    pub spec: Option<SpecStep>,
 }
 
 /// The step result, moved back to the scheduler.
@@ -55,7 +70,14 @@ pub(crate) struct StepResult {
     pub lane: usize,
     pub engine: Box<dyn ConstraintEngine>,
     pub rng: Rng,
-    pub decision: Decision,
+    /// Decisions in commit order: one per committed token, plus at most
+    /// one terminal `Finish`. Plain steps produce exactly one entry.
+    pub decisions: Vec<Decision>,
+    /// Draft tokens the acceptance rule matched (`drafts_accepted`).
+    pub accepted: usize,
+    /// Length of the scored draft (what `decode_spec` appended to the
+    /// model lane) — the scheduler rolls back `spec_len - accepted`.
+    pub spec_len: usize,
 }
 
 /// A prewarmed engine on its way back to the scheduler.
@@ -225,15 +247,104 @@ fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>, tok: &Tokenizer, metrics: &Arc<Mu
 }
 
 fn run_step(mut req: StepRequest, tok: &Tokenizer) -> StepResult {
-    let decision = decide_token(
+    let spec_len = req.spec.as_ref().map_or(0, |s| s.draft.len());
+    let (decisions, accepted) = decide_step(
         req.engine.as_mut(),
         &req.logits,
         &mut req.rng,
         req.strategy,
         req.opportunistic,
         tok,
+        req.spec.as_ref(),
     );
-    StepResult { lane: req.lane, engine: req.engine, rng: req.rng, decision }
+    StepResult { lane: req.lane, engine: req.engine, rng: req.rng, decisions, accepted, spec_len }
+}
+
+/// Grammar-prune a proposed draft down to its longest valid prefix
+/// *before* the model scores it, returning how many tokens survive.
+///
+/// Position 0 is checked with the planned [`ConstraintEngine::token_allowed`]
+/// probe — pure mask-store lookups against the step's `LookupPlan`, zero
+/// DFA walks. Deeper positions use the exact, non-committing
+/// `validate_append` on the accumulated draft bytes (a draft position is
+/// only worth scoring if the whole prefix up to it could be committed);
+/// that probe never touches the plan either, so pruning adds **zero** DFA
+/// walks regardless of draft length (`pruning_performs_no_walks` asserts
+/// this). Special tokens never survive pruning — EOS is *decided* by the
+/// acceptance rule, not drafted.
+///
+/// Pruning cannot affect committed output: it only selects which
+/// positions get scored, and every committed token is still decided by
+/// `decide_token` from logits conditioned on exactly the committed
+/// prefix. Any predicate here preserves the byte-identity invariant; this
+/// one just makes the model never pay for a draft the grammar already
+/// rules out.
+pub(crate) fn prune_draft(
+    engine: &mut dyn ConstraintEngine,
+    tok: &Tokenizer,
+    draft: &[u32],
+) -> usize {
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut kept = 0usize;
+    for (i, &t) in draft.iter().enumerate() {
+        if tok.is_special(t) {
+            break;
+        }
+        bytes.extend_from_slice(tok.token_bytes(t));
+        let ok = if i == 0 {
+            engine.token_allowed(t).unwrap_or(false)
+        } else {
+            engine.validate_append(&bytes)
+        };
+        if !ok {
+            break;
+        }
+        kept += 1;
+    }
+    kept
+}
+
+/// Decide one lane's full step: the base token plus, when a speculative
+/// draft and its verification logits are present, up to `draft.len()`
+/// more by the longest-accepted-prefix rule — keep consuming draft
+/// positions while the token `decide_token` commits equals the drafted
+/// one, then decide one final "bonus" token from the last accepted
+/// position's logits. Every position runs the SAME `decide_token` the
+/// non-speculative path runs, fed logits conditioned on exactly the
+/// committed prefix, so the committed tokens and the RNG stream are
+/// byte-identical with speculation on or off.
+///
+/// Returns the decisions in commit order plus the number of draft tokens
+/// that matched.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decide_step(
+    engine: &mut dyn ConstraintEngine,
+    logits: &[f32],
+    rng: &mut Rng,
+    strategy: Strategy,
+    opportunistic: bool,
+    tok: &Tokenizer,
+    spec: Option<&SpecStep>,
+) -> (Vec<Decision>, usize) {
+    let mut decisions = Vec::with_capacity(1 + spec.map_or(0, |s| s.draft.len()));
+    decisions.push(decide_token(engine, logits, rng, strategy, opportunistic, tok));
+    let mut matched = 0usize;
+    if let Some(spec) = spec {
+        debug_assert_eq!(spec.draft.len(), spec.logits.len());
+        while matched < spec.draft.len() {
+            let committed = match &decisions.last().expect("at least one decision").outcome {
+                StepOutcome::Token(t) => *t,
+                StepOutcome::Finish(..) => break,
+            };
+            if committed != spec.draft[matched] {
+                break; // mismatch: the decided token is still committed (the bonus)
+            }
+            let row = &spec.logits[matched];
+            matched += 1;
+            decisions.push(decide_token(engine, row, rng, strategy, opportunistic, tok));
+        }
+    }
+    (decisions, matched)
 }
 
 /// A step decision plus what it cost.
@@ -450,13 +561,16 @@ mod tests {
                     rng: Rng::new(9),
                     strategy: Strategy::Temperature(0.9),
                     opportunistic: true,
+                    spec: None,
                 },
                 &rtx,
             )
             .unwrap();
         drop(rtx);
         let res = rrx.recv().unwrap();
-        match (&d.outcome, &res.decision.outcome) {
+        assert_eq!(res.decisions.len(), 1);
+        assert_eq!((res.accepted, res.spec_len), (0, 0));
+        match (&d.outcome, &res.decisions[0].outcome) {
             (StepOutcome::Token(a), StepOutcome::Token(b)) => assert_eq!(a, b),
             _ => panic!("outcomes differ in kind"),
         }
@@ -465,6 +579,107 @@ mod tests {
         pool.shutdown();
         let jobs: u64 = worker_metrics.iter().map(|m| m.lock().unwrap().mask_pool_jobs).sum();
         assert!(jobs >= 1);
+    }
+
+    #[test]
+    fn pruning_performs_no_walks_beyond_the_plan() {
+        // The speculative counterpart of syncode.rs's
+        // `token_allowed_performs_no_walks_beyond_the_plan`: grammar-pruning
+        // a whole draft — valid positions *and* the invalid one that
+        // truncates it — must add zero DFA walks once the step's plan
+        // exists. The grammar filter for speculation is free.
+        use crate::engine::{GrammarContext, SyncodeEngine};
+        let cx = Arc::new(GrammarContext::builtin("json", LrMode::Lalr).unwrap());
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let store =
+            Arc::new(MaskStore::build(&cx.grammar, &tok, MaskStoreConfig::default()));
+        let mut e = SyncodeEngine::new(cx, store, tok.clone());
+        e.reset("{\"k\": 1");
+        // Build the step's plan once — what prewarm does during decode.
+        let _ = e.compute_mask().unwrap();
+        let walks = e.walks;
+
+        // ", x" dead-ends at 'x' (after a comma only whitespace or a key
+        // may follow): the draft is truncated to its valid prefix.
+        let draft = [b',' as u32, b' ' as u32, b'x' as u32, b'"' as u32];
+        let kept = prune_draft(&mut e, &tok, &draft);
+        assert_eq!(kept, 2, "draft must be cut at the first invalid position");
+        assert_eq!(e.walks, walks, "pruning added DFA walks");
+
+        // A draft that is invalid at position 0 is rejected by the planned
+        // token_allowed probe alone.
+        assert_eq!(prune_draft(&mut e, &tok, &[b':' as u32]), 0);
+        // Special tokens never survive pruning.
+        assert_eq!(prune_draft(&mut e, &tok, &[tok.eos_id]), 0);
+        assert_eq!(e.walks, walks, "rejected drafts added DFA walks");
+    }
+
+    #[test]
+    fn decide_step_is_byte_identical_to_sequential_decides() {
+        // The identity invariant at its core: decide_step over a draft
+        // that matches what the baseline would commit must produce exactly
+        // the baseline's tokens, engine state and RNG consumption.
+        let (mut base, tok) = engine();
+        base.reset("{");
+        let rows: Vec<Vec<f32>> = (0..3u32)
+            .map(|r| {
+                (0..tok.vocab_size())
+                    .map(|i| ((i as u32 * 31 + r * 17) % 97) as f32 / 96.0)
+                    .collect()
+            })
+            .collect();
+        let strat = Strategy::Temperature(0.8);
+        let mut rng = Rng::new(41);
+        let mut toks = Vec::new();
+        for row in &rows {
+            match decide_token(base.as_mut(), row, &mut rng, strat, true, &tok).outcome {
+                StepOutcome::Token(t) => toks.push(t),
+                StepOutcome::Finish(r, e) => panic!("unexpected finish {r:?} {e:?}"),
+            }
+        }
+
+        let (mut spec_e, _) = engine();
+        spec_e.reset("{");
+        let mut spec_rng = Rng::new(41);
+        let spec = SpecStep {
+            draft: vec![toks[0], toks[1]],
+            logits: vec![rows[1].clone(), rows[2].clone()],
+        };
+        let (decisions, matched) = decide_step(
+            spec_e.as_mut(),
+            &rows[0],
+            &mut spec_rng,
+            strat,
+            true,
+            &tok,
+            Some(&spec),
+        );
+        assert_eq!(matched, 2, "both draft tokens must be accepted");
+        let got: Vec<u32> = decisions
+            .iter()
+            .map(|d| match &d.outcome {
+                StepOutcome::Token(t) => *t,
+                StepOutcome::Finish(r, e) => panic!("unexpected finish {r:?} {e:?}"),
+            })
+            .collect();
+        assert_eq!(got, toks, "speculative commits diverged from the baseline");
+        assert_eq!(spec_e.text(), base.text());
+
+        // A mismatching draft commits only the base token (the bonus) and
+        // accepts nothing — speculation never changes what is committed.
+        let (mut mm, _) = engine();
+        mm.reset("{");
+        let mut mm_rng = Rng::new(41);
+        let wrong = if toks[0] == b'"' as u32 { b' ' as u32 } else { b'"' as u32 };
+        let spec = SpecStep { draft: vec![wrong], logits: vec![rows[1].clone()] };
+        let (decisions, matched) =
+            decide_step(mm.as_mut(), &rows[0], &mut mm_rng, strat, true, &tok, Some(&spec));
+        assert_eq!(matched, 0);
+        assert_eq!(decisions.len(), 1);
+        match &decisions[0].outcome {
+            StepOutcome::Token(t) => assert_eq!(*t, toks[0]),
+            StepOutcome::Finish(r, e) => panic!("unexpected finish {r:?} {e:?}"),
+        }
     }
 
     #[test]

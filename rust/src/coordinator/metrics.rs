@@ -137,6 +137,17 @@ pub struct Metrics {
     /// Prewarm jobs that warmed the next step's analysis/mask while the
     /// model was inside its batched decode.
     pub masks_prewarmed: u64,
+    /// Speculative draft tokens proposed by the model's self-draft source.
+    pub drafts_proposed: u64,
+    /// Draft tokens pruned by the grammar *before* the model scored them
+    /// (planned probes — the mask store as a free rejection filter).
+    pub drafts_grammar_rejected: u64,
+    /// Scored draft tokens the acceptance rule matched and committed.
+    pub drafts_accepted: u64,
+    /// Tokens committed per lane-step (1 for plain steps; up to
+    /// `spec_k`+1 when speculation lands). The speedometer of
+    /// speculation: mean > 1 means multi-token steps are happening.
+    pub tokens_per_step: DepthGauge,
     pub latency: Histogram,
     pub ttft: Histogram,
     /// Submit → dequeue wait of mask-pool jobs (the pool's saturation
@@ -161,6 +172,13 @@ pub struct MetricsSnapshot {
     pub streams_cancelled: u64,
     pub mask_pool_jobs: u64,
     pub masks_prewarmed: u64,
+    pub drafts_proposed: u64,
+    pub drafts_grammar_rejected: u64,
+    pub drafts_accepted: u64,
+    /// Mean tokens committed per lane-step (1.0 = no speculation landing).
+    pub tokens_per_step_mean: f64,
+    /// Largest single-step commit observed (base token + accepted drafts).
+    pub tokens_per_step_max: usize,
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -198,6 +216,10 @@ impl Metrics {
         self.streams_cancelled += other.streams_cancelled;
         self.mask_pool_jobs += other.mask_pool_jobs;
         self.masks_prewarmed += other.masks_prewarmed;
+        self.drafts_proposed += other.drafts_proposed;
+        self.drafts_grammar_rejected += other.drafts_grammar_rejected;
+        self.drafts_accepted += other.drafts_accepted;
+        self.tokens_per_step.merge(&other.tokens_per_step);
         self.latency.merge(&other.latency);
         self.ttft.merge(&other.ttft);
         self.mask_pool_wait.merge(&other.mask_pool_wait);
@@ -220,6 +242,11 @@ impl Metrics {
             streams_cancelled: self.streams_cancelled,
             mask_pool_jobs: self.mask_pool_jobs,
             masks_prewarmed: self.masks_prewarmed,
+            drafts_proposed: self.drafts_proposed,
+            drafts_grammar_rejected: self.drafts_grammar_rejected,
+            drafts_accepted: self.drafts_accepted,
+            tokens_per_step_mean: self.tokens_per_step.mean(),
+            tokens_per_step_max: self.tokens_per_step.max(),
             mean_latency: self.latency.mean(),
             p50_latency: self.latency.quantile(0.5),
             p99_latency: self.latency.quantile(0.99),
@@ -261,6 +288,15 @@ impl MetricsSnapshot {
                 self.masks_prewarmed,
                 self.mask_wait_mean * 1e6,
                 self.mask_wait_p99 * 1e6,
+            ));
+        }
+        if self.drafts_proposed > 0 {
+            s.push_str(&format!(
+                " spec(proposed={} rejected={} accepted={} tok/step={:.2})",
+                self.drafts_proposed,
+                self.drafts_grammar_rejected,
+                self.drafts_accepted,
+                self.tokens_per_step_mean,
             ));
         }
         if self.queue_depth_max > 0 || self.queue_depth_mean > 0.0 {
@@ -354,5 +390,28 @@ mod tests {
         assert_eq!(a.engine_errors, 2);
         assert_eq!(a.latency.count(), 1);
         assert_eq!(a.queue_depth.max(), 4);
+    }
+
+    #[test]
+    fn spec_counters_merge_and_report() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.drafts_proposed = 8;
+        a.drafts_grammar_rejected = 3;
+        a.drafts_accepted = 4;
+        a.tokens_per_step.record(3);
+        a.tokens_per_step.record(1);
+        b.drafts_proposed = 2;
+        b.tokens_per_step.record(2);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.drafts_proposed, 10);
+        assert_eq!(s.drafts_grammar_rejected, 3);
+        assert_eq!(s.drafts_accepted, 4);
+        assert!((s.tokens_per_step_mean - 2.0).abs() < 1e-9);
+        assert_eq!(s.tokens_per_step_max, 3);
+        assert!(s.report().contains("spec(proposed=10 rejected=3 accepted=4"));
+        // No speculation → no spec segment in the report.
+        assert!(!Metrics::default().snapshot().report().contains("spec("));
     }
 }

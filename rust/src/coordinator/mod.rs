@@ -15,7 +15,12 @@
 //! - `maskpool` — grammar-mask computation and exact re-validation off
 //!   the scheduler threads: per-lane step decisions run concurrently, and
 //!   prewarm jobs overlap the *next* step's mask work with the model's
-//!   batched decode (the XGrammar-style systems win).
+//!   batched decode (the XGrammar-style systems win). It also hosts the
+//!   speculative-decoding primitives: `prune_draft` filters each lane's
+//!   self-drafted tokens through the mask store *before* the model scores
+//!   them, and `decide_step` extends the single-token decision to a
+//!   multi-token accept — byte-identical per seed at every
+//!   [`GenParams::spec_k`], speculation on or off.
 //!
 //! Generations are streamable end to end: [`ServerHandle::submit_stream`]
 //! delivers every committed token as a [`TokenEvent`] the moment it

@@ -4,22 +4,27 @@
 //! decode loop over the model's lanes.
 //!
 //! Each iteration: (1) admit queued requests into free lanes (prefill),
-//! (2) for every lane holding fresh logits, decide the next token
-//! (Algorithm 3 lines 4–12) — through the mask worker pool when one is
-//! configured (lanes' mask work runs concurrently), inline otherwise,
-//! (3) submit prewarm jobs for the committed tokens and run one batched
-//! decode step for all still-active lanes *while the pool warms the next
-//! step's masks*, (4) collect the prewarmed engines and install the fresh
+//! (2) for lanes with `spec_k > 0`, propose draft tokens, grammar-prune
+//! them with planned probes (zero extra DFA walks) and score the
+//! surviving prefixes in one batched `decode_spec`, (3) for every lane
+//! holding fresh logits, decide the step's tokens (Algorithm 3 lines
+//! 4–12, extended to the longest-accepted-prefix rule when drafts are
+//! present) — through the mask worker pool when one is configured
+//! (lanes' mask work runs concurrently), inline otherwise, (4) submit
+//! prewarm jobs for the committed tokens and run one batched decode step
+//! for all still-active lanes *while the pool warms the next step's
+//! masks*, (5) collect the prewarmed engines and install the fresh
 //! logits.
 //!
-//! The pooled and inline paths share one token-decision implementation
-//! (`maskpool::decide_token`) and per-lane RNG streams travel with the
+//! The pooled and inline paths share one step-decision implementation
+//! (`maskpool::decide_step`) and per-lane RNG streams travel with the
 //! jobs, so both configurations produce byte-identical output for
-//! identical seeds.
+//! identical seeds — at every `spec_k`, speculation on or off.
 
 use super::dispatch::{ReplicaGuard, SharedQueue};
 use super::maskpool::{
-    decide_token, Decision, PoolClient, Prewarmed, StepOutcome, StepRequest, StepResult,
+    decide_step, prune_draft, Decision, PoolClient, Prewarmed, SpecStep, StepOutcome,
+    StepRequest, StepResult,
 };
 use super::metrics::Metrics;
 use super::types::{
@@ -43,7 +48,7 @@ pub(crate) struct ReplicaMetrics {
 }
 
 impl ReplicaMetrics {
-    fn with(&self, f: impl Fn(&mut Metrics)) {
+    fn with(&self, f: impl FnOnce(&mut Metrics)) {
         f(&mut self.local.lock().unwrap());
     }
 }
@@ -57,6 +62,9 @@ pub(crate) struct ReplicaCtx {
     pub queue: Arc<SharedQueue>,
     pub pool: Option<PoolClient>,
     pub metrics: ReplicaMetrics,
+    /// Server-side ceiling on per-request `spec_k`
+    /// (`CoordinatorConfig::spec_k_cap`).
+    pub spec_k_cap: usize,
     /// Liveness guard: when the last replica exits (normally or via
     /// panic/unwind), its drop closes the queue and rejects what's left,
     /// so submitters never hang on a dead coordinator.
@@ -81,7 +89,8 @@ struct Lane {
 }
 
 pub(crate) fn run_replica(ctx: ReplicaCtx) {
-    let ReplicaCtx { id, model_factory, tok, provider, queue, pool, metrics, guard } = ctx;
+    let ReplicaCtx { id, model_factory, tok, provider, queue, pool, metrics, spec_k_cap, guard } =
+        ctx;
     let _guard = guard;
     let mut model: Box<dyn LanguageModel> = match model_factory() {
         Ok(m) => m,
@@ -179,27 +188,124 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
             }
         }
 
+        // ---- speculative drafting (propose → grammar-prune → score) ----
+        // Up to `spec_k` draft tokens per lane come from the model's
+        // self-draft source; every grammar-invalid suffix is pruned by the
+        // planned probes (pure mask-store lookups, zero DFA walks — the
+        // grammar is a free rejection filter), and only the surviving
+        // prefixes are scored, all lanes in one batched `decode_spec`.
+        // The step wave's acceptance loop then commits the longest
+        // accepted prefix; unmatched draft positions are rolled back.
+        let mut spec_steps: Vec<Option<SpecStep>> = (0..nlanes).map(|_| None).collect();
+        {
+            let mut drafts: Vec<Option<Vec<u32>>> = vec![None; nlanes];
+            let mut any = false;
+            for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                let Some(lane) = slot.as_mut() else { continue };
+                let k = lane.req.params.spec_k.min(spec_k_cap);
+                if k == 0 {
+                    continue;
+                }
+                // Never speculate past the budget: this step may commit up
+                // to want+1 tokens, and identity with the baseline includes
+                // stopping at exactly the same MaxTokens/SeqOverflow point.
+                let gen = lane.generated.len();
+                let bound = lane
+                    .req
+                    .params
+                    .max_new_tokens
+                    .saturating_sub(gen)
+                    .min(max_seq.saturating_sub(lane.prompt_len + gen + 2));
+                if bound < 2 {
+                    continue;
+                }
+                let proposed = model.draft(lane_idx, k.min(bound - 1));
+                if proposed.is_empty() {
+                    continue;
+                }
+                let engine = lane.engine.as_mut().expect("engine present at draft");
+                let kept = prune_draft(engine.as_mut(), &tok, &proposed);
+                metrics.with(|m| {
+                    m.drafts_proposed += proposed.len() as u64;
+                    m.drafts_grammar_rejected += (proposed.len() - kept) as u64;
+                });
+                if kept == 0 {
+                    continue;
+                }
+                drafts[lane_idx] = Some(proposed[..kept].to_vec());
+                any = true;
+            }
+            if any {
+                match model.decode_spec(&drafts) {
+                    Ok(rows) => {
+                        for (lane_idx, (d, r)) in drafts.into_iter().zip(rows).enumerate() {
+                            if let (Some(draft), Some(logits)) = (d, r) {
+                                debug_assert_eq!(draft.len(), logits.len());
+                                spec_steps[lane_idx] = Some(SpecStep { draft, logits });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Same contract as a failed decode: the model is in
+                        // an unknown state — fail every active lane.
+                        for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                            if let Some(lane) = slot.take() {
+                                finish_lane(
+                                    lane,
+                                    FinishReason::EngineError,
+                                    Some(format!("decode_spec: {e}")),
+                                    &tok,
+                                    &metrics,
+                                );
+                                model.release(lane_idx);
+                            }
+                        }
+                        continue;
+                    }
+                }
+            }
+        }
+
         // ---- token decision per lane (pooled or inline) ----------------
         let mut last: Vec<Option<u32>> = vec![None; nlanes];
         match &pool {
             Some(client) => {
                 step_wave_pooled(
-                    client, &mut lanes, &mut last, &tok, &metrics, model.as_mut(),
+                    client,
+                    &mut lanes,
+                    &mut spec_steps,
+                    &mut last,
+                    &tok,
+                    &metrics,
+                    model.as_mut(),
                 );
             }
             None => {
                 for (lane_idx, slot) in lanes.iter_mut().enumerate() {
                     let Some(lane) = slot.as_mut() else { continue };
+                    let spec = spec_steps[lane_idx].take();
                     let engine = lane.engine.as_mut().expect("inline engine present");
-                    let d = decide_token(
+                    let (decisions, accepted) = decide_step(
                         engine.as_mut(),
                         &lane.logits,
                         &mut lane.rng,
                         lane.req.params.strategy,
                         lane.req.params.opportunistic,
                         &tok,
+                        spec.as_ref(),
                     );
-                    apply_outcome(slot, lane_idx, d, &mut last, &tok, &metrics, model.as_mut());
+                    let spec_len = spec.map_or(0, |s| s.draft.len());
+                    apply_step(
+                        slot,
+                        lane_idx,
+                        decisions,
+                        accepted,
+                        spec_len,
+                        &mut last,
+                        &tok,
+                        &metrics,
+                        model.as_mut(),
+                    );
                 }
             }
         }
@@ -303,6 +409,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
 fn step_wave_pooled(
     client: &PoolClient,
     lanes: &mut [Option<Lane>],
+    spec_steps: &mut [Option<SpecStep>],
     last: &mut [Option<u32>],
     tok: &Arc<Tokenizer>,
     metrics: &ReplicaMetrics,
@@ -320,25 +427,30 @@ fn step_wave_pooled(
             rng: lane.rng.clone(),
             strategy: lane.req.params.strategy,
             opportunistic: lane.req.params.opportunistic,
+            spec: spec_steps[lane_idx].take(),
         };
         match client.submit_step(req, &rtx) {
             Ok(()) => expected += 1,
             Err(req) => {
                 // Pool unavailable (shutdown race): decide inline so the
                 // lane isn't lost.
-                let StepRequest { engine, logits, .. } = req;
+                let StepRequest { engine, logits, spec, .. } = req;
                 lane.engine = Some(engine);
                 lane.logits = logits;
                 let engine = lane.engine.as_mut().unwrap();
-                let d = decide_token(
+                let (decisions, accepted) = decide_step(
                     engine.as_mut(),
                     &lane.logits,
                     &mut lane.rng,
                     lane.req.params.strategy,
                     lane.req.params.opportunistic,
                     tok,
+                    spec.as_ref(),
                 );
-                apply_outcome(slot, lane_idx, d, last, tok, metrics, model);
+                let spec_len = spec.map_or(0, |s| s.draft.len());
+                apply_step(
+                    slot, lane_idx, decisions, accepted, spec_len, last, tok, metrics, model,
+                );
             }
         }
     }
@@ -350,7 +462,17 @@ fn step_wave_pooled(
         let Some(lane) = slot.as_mut() else { continue };
         lane.engine = Some(res.engine);
         lane.rng = res.rng;
-        apply_outcome(slot, lane_idx, res.decision, last, tok, metrics, model);
+        apply_step(
+            slot,
+            lane_idx,
+            res.decisions,
+            res.accepted,
+            res.spec_len,
+            last,
+            tok,
+            metrics,
+            model,
+        );
     }
     // Lanes whose step result never arrived (worker panic) can't continue.
     for (lane_idx, slot) in lanes.iter_mut().enumerate() {
@@ -380,6 +502,43 @@ fn budget_finish(lane: &Lane, max_seq: usize) -> Option<FinishReason> {
         Some(FinishReason::SeqOverflow)
     } else {
         None
+    }
+}
+
+/// Apply a full step's decisions (one for plain steps, several for
+/// speculative ones) in commit order, then rewind the model past the
+/// unmatched draft positions. `accepted` is how many draft tokens the
+/// acceptance loop matched; `spec_len` is how many `decode_spec` appended
+/// to the lane's model history.
+#[allow(clippy::too_many_arguments)]
+fn apply_step(
+    slot: &mut Option<Lane>,
+    lane_idx: usize,
+    decisions: Vec<Decision>,
+    accepted: usize,
+    spec_len: usize,
+    last: &mut [Option<u32>],
+    tok: &Tokenizer,
+    metrics: &ReplicaMetrics,
+    model: &mut dyn LanguageModel,
+) {
+    let committed =
+        decisions.iter().filter(|d| matches!(d.outcome, StepOutcome::Token(_))).count();
+    metrics.with(|m| {
+        m.drafts_accepted += accepted as u64;
+        m.tokens_per_step.record(committed);
+    });
+    for d in decisions {
+        apply_outcome(slot, lane_idx, d, last, tok, metrics, model);
+    }
+    if spec_len > 0 {
+        // `decode_spec` appended `spec_len` draft tokens to this lane's
+        // model history, of which `accepted` match the committed sequence
+        // (the final committed token is *not* among them — the next batched
+        // decode feeds it back via `last`). Rewind the rest. A lane that
+        // finished or was cancelled above has been released — rolling back
+        // a freed lane is a no-op.
+        model.rollback(lane_idx, spec_len - accepted);
     }
 }
 

@@ -47,6 +47,12 @@ pub struct GenParams {
     /// Opportunistic masking (Beurer-Kellner et al. 2024): sample first,
     /// validate, and only build the full mask on a miss.
     pub opportunistic: bool,
+    /// Speculative decoding: up to `spec_k` draft tokens are proposed per
+    /// decode step, grammar-pruned, scored in one batched call, and
+    /// committed by the longest-accepted-prefix rule. `0` (the default)
+    /// disables speculation. Output is byte-identical per seed at every
+    /// `spec_k` — speculation changes throughput, never the tokens.
+    pub spec_k: usize,
 }
 
 impl Default for GenParams {
@@ -56,6 +62,7 @@ impl Default for GenParams {
             strategy: Strategy::Greedy,
             seed: 0,
             opportunistic: true,
+            spec_k: 0,
         }
     }
 }

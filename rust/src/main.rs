@@ -53,7 +53,9 @@ fn main() {
                  common:   --grammar <json|calc|sql|python|go> --grammars a,b --artifacts <dir>\n\
                  \x20          --cache-dir <dir> --threads <n> --mock\n\
                  generate: --stream   (print tokens as they decode)\n\
+                 \x20          --spec-k <k>  (speculative drafts per step; 0 = off)\n\
                  serve:    --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
+                 \x20          --spec-k <k> --spec-k-cap <k>\n\
                  \x20          --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream;\n\
                  \x20          POST /v1/generate?stream=1 streams tokens as SSE)"
             );
@@ -74,6 +76,7 @@ fn params_from(args: &Args) -> GenParams {
         strategy,
         seed: args.get_num("seed", 7u64),
         opportunistic: !args.flag("no-opportunistic"),
+        spec_k: args.get_num("spec-k", 0usize),
     }
 }
 
@@ -360,10 +363,11 @@ fn cmd_serve(args: &Args) {
     let cfg = CoordinatorConfig {
         mask_threads: args.get_num("mask-threads", 0usize),
         queue_cap: args.get_num("queue-cap", 256usize),
+        spec_k_cap: args.get_num("spec-k-cap", CoordinatorConfig::default().spec_k_cap),
     };
     eprintln!(
-        "[coordinator: {} replica(s), {} mask thread(s), queue cap {}]",
-        replicas, cfg.mask_threads, cfg.queue_cap
+        "[coordinator: {} replica(s), {} mask thread(s), queue cap {}, spec_k cap {}]",
+        replicas, cfg.mask_threads, cfg.queue_cap, cfg.spec_k_cap
     );
     let factories = model_factories(args, use_mock, &tok, &union_docs, replicas);
     let srv = Coordinator::start(factories, tok, registry.clone(), cfg);

@@ -18,6 +18,11 @@ use std::collections::BTreeMap;
 /// arbitrarily long.
 pub const MAX_TOKENS_CAP: usize = 4096;
 
+/// Upper bound on `spec_k`: a sanity cap on per-step speculative work
+/// (the coordinator additionally clamps to its own `spec_k_cap`; output
+/// is byte-identical at any value, so caps never change results).
+pub const SPEC_K_CAP: usize = 64;
+
 /// A decoded `/v1/generate` body, ready to become a [`GenRequest`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenerateBody {
@@ -30,6 +35,9 @@ pub struct GenerateBody {
     pub seed: u64,
     pub strategy: Strategy,
     pub opportunistic: bool,
+    /// Speculative draft length per step; 0 (the default) disables
+    /// speculation.
+    pub spec_k: usize,
 }
 
 impl GenerateBody {
@@ -46,6 +54,7 @@ impl GenerateBody {
                 strategy: self.strategy,
                 seed: self.seed,
                 opportunistic: self.opportunistic,
+                spec_k: self.spec_k,
             },
             // The streaming front installs its sink via
             // `ServerHandle::try_submit_stream`, not the body codec.
@@ -73,6 +82,7 @@ pub fn decode_generate(body: &[u8]) -> Result<GenerateBody, String> {
         "top_p",
         "top_k",
         "opportunistic",
+        "spec_k",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -114,8 +124,21 @@ pub fn decode_generate(body: &[u8]) -> Result<GenerateBody, String> {
         Some(Json::Bool(b)) => *b,
         Some(_) => return Err("opportunistic must be a boolean".to_string()),
     };
+    let spec_k = opt_uint(obj, "spec_k")?.unwrap_or(0) as usize;
+    if spec_k > SPEC_K_CAP {
+        return Err(format!("spec_k must be in 0..={SPEC_K_CAP}"));
+    }
 
-    Ok(GenerateBody { grammar, prompt, prefix, max_tokens, seed, strategy, opportunistic })
+    Ok(GenerateBody {
+        grammar,
+        prompt,
+        prefix,
+        max_tokens,
+        seed,
+        strategy,
+        opportunistic,
+        spec_k,
+    })
 }
 
 fn req_str(obj: &BTreeMap<String, Json>, key: &str) -> Result<String, String> {
@@ -249,6 +272,7 @@ mod tests {
         assert_eq!(b.max_tokens, 120);
         assert_eq!(b.seed, 7);
         assert!(b.opportunistic);
+        assert_eq!(b.spec_k, 0);
         assert!(matches!(b.strategy, Strategy::TopP { .. }));
     }
 
@@ -256,7 +280,8 @@ mod tests {
     fn full_body_roundtrip() {
         let b = decode(
             r#"{"prompt": "p", "grammar": "calc", "prefix": "1 + ", "max_tokens": 32,
-               "seed": 99, "strategy": "temp", "temperature": 0.5, "opportunistic": false}"#,
+               "seed": 99, "strategy": "temp", "temperature": 0.5, "opportunistic": false,
+               "spec_k": 4}"#,
         )
         .unwrap();
         assert_eq!(b.grammar.as_deref(), Some("calc"));
@@ -264,10 +289,12 @@ mod tests {
         assert_eq!(b.max_tokens, 32);
         assert_eq!(b.seed, 99);
         assert!(!b.opportunistic);
+        assert_eq!(b.spec_k, 4);
         assert_eq!(b.strategy, Strategy::Temperature(0.5));
         let req = b.into_request(3);
         assert_eq!(req.id, 3);
         assert_eq!(req.params.max_new_tokens, 32);
+        assert_eq!(req.params.spec_k, 4);
         assert_eq!(req.constraint_prefix, "1 + ");
     }
 
@@ -307,6 +334,10 @@ mod tests {
         assert!(decode(r#"{"prompt": "p", "strategy": "beam"}"#).is_err());
         assert!(decode(r#"{"prompt": "p", "temperature": -1}"#).is_err());
         assert!(decode(r#"{"prompt": "p", "top_p": 1.5}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "spec_k": "two"}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "spec_k": 2.5}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "spec_k": -1}"#).is_err());
+        assert!(decode(r#"{"prompt": "p", "spec_k": 1000}"#).is_err());
         assert!(decode(r#"[1, 2, 3]"#).is_err());
         assert!(decode(r#""just a string""#).is_err());
     }

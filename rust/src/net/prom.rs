@@ -106,6 +106,36 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
         "Next-step masks warmed during the batched decode.",
         global.masks_prewarmed,
     );
+    counter(
+        &mut out,
+        "syncode_spec_drafts_proposed_total",
+        "Speculative draft tokens proposed by the self-draft source.",
+        global.drafts_proposed,
+    );
+    counter(
+        &mut out,
+        "syncode_spec_drafts_grammar_rejected_total",
+        "Draft tokens pruned by the grammar before the model scored them.",
+        global.drafts_grammar_rejected,
+    );
+    counter(
+        &mut out,
+        "syncode_spec_drafts_accepted_total",
+        "Scored draft tokens matched and committed by the acceptance rule.",
+        global.drafts_accepted,
+    );
+    gauge(
+        &mut out,
+        "syncode_spec_tokens_per_step_mean",
+        "Mean tokens committed per lane-step (1.0 = speculation off or never landing).",
+        global.tokens_per_step_mean,
+    );
+    gauge(
+        &mut out,
+        "syncode_spec_tokens_per_step_max",
+        "Largest single-step commit (base token + accepted drafts).",
+        global.tokens_per_step_max as f64,
+    );
     gauge(
         &mut out,
         "syncode_tokens_per_second",
@@ -217,6 +247,10 @@ mod tests {
         m.latency.record(0.125);
         m.latency.record(0.25);
         m.queue_depth.record(3);
+        m.drafts_proposed = 12;
+        m.drafts_grammar_rejected = 5;
+        m.drafts_accepted = 6;
+        m.tokens_per_step.record(3);
         m.snapshot()
     }
 
@@ -264,6 +298,10 @@ mod tests {
         assert!(text.contains("syncode_replica_requests_finished_total{replica=\"1\"} 4"));
         assert!(text.contains("syncode_http_responses_total{code=\"429\"} 2"));
         assert!(text.contains("syncode_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("syncode_spec_drafts_proposed_total 12"));
+        assert!(text.contains("syncode_spec_drafts_grammar_rejected_total 5"));
+        assert!(text.contains("syncode_spec_drafts_accepted_total 6"));
+        assert!(text.contains("syncode_spec_tokens_per_step_mean 3"));
         // Sample count comes from the latency histogram (2 recorded), not
         // from requests_finished (4, which includes admission failures).
         assert!(text.contains("syncode_request_latency_seconds_count 2"));

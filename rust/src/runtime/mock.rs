@@ -124,11 +124,126 @@ impl LanguageModel for MockModel {
         Ok(out)
     }
 
+    fn draft(&mut self, lane: usize, k: usize) -> Vec<u32> {
+        // Prompt-lookup drafting (the n-gram self-draft source): find the
+        // most recent earlier occurrence of the lane's last token and
+        // propose the run that followed it. Deterministic, zero-cost, and
+        // surprisingly accurate on repetitive structured output (JSON
+        // keys, brackets, separators) — exactly the text grammars shape.
+        let Some(hist) = self.lanes.get(lane).and_then(|x| x.as_ref()) else {
+            return Vec::new();
+        };
+        let Some((&anchor, prior)) = hist.split_last() else {
+            return Vec::new();
+        };
+        let Some(p) = prior.iter().rposition(|&t| t == anchor) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for &t in &hist[p + 1..] {
+            if out.len() >= k || self.tok.is_special(t) {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+
+    fn decode_spec(&mut self, drafts: &[Option<Vec<u32>>]) -> Result<Vec<Option<Vec<Vec<f32>>>>> {
+        let mut out = Vec::with_capacity(self.lanes.len());
+        for (lane, d) in drafts.iter().enumerate() {
+            let draft = match d {
+                Some(draft) if !draft.is_empty() => draft,
+                _ => {
+                    out.push(None);
+                    continue;
+                }
+            };
+            let Some(hist) = self.lanes.get_mut(lane).and_then(|x| x.as_mut()) else {
+                bail!("decode_spec on inactive lane {lane}");
+            };
+            if hist.len() + draft.len() >= self.max_seq {
+                bail!("lane {lane} speculative step exceeds max_seq");
+            }
+            hist.extend_from_slice(draft);
+            let hist = hist.clone();
+            let base = hist.len() - draft.len();
+            // Row i is conditioned on history + draft[..=i] — bit-identical
+            // to what `decode` would return committing the drafts one step
+            // at a time (the identity invariant rests on this).
+            let rows: Vec<Vec<f32>> =
+                (0..draft.len()).map(|i| self.logits_for(&hist[..base + i + 1])).collect();
+            out.push(Some(rows));
+        }
+        Ok(out)
+    }
+
+    fn rollback(&mut self, lane: usize, n: usize) {
+        if let Some(hist) = self.lanes.get_mut(lane).and_then(|x| x.as_mut()) {
+            let keep = hist.len().saturating_sub(n);
+            hist.truncate(keep);
+        }
+    }
+
     fn release(&mut self, lane: usize) {
         self.lanes[lane] = None;
     }
 
     fn name(&self) -> &'static str {
         "mock-bigram"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(docs: &[Vec<u8>]) -> MockModel {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        MockModel::from_documents(tok, docs, 1, 64, 7)
+    }
+
+    #[test]
+    fn draft_copies_prior_continuation() {
+        let mut m = model(&[b"abcab".to_vec()]);
+        // History "abcab": the last token 'b' previously occurred at index
+        // 1, so the draft replays the run that followed it: 'c', 'a', …
+        m.prefill(0, &[97, 98, 99, 97, 98]).unwrap();
+        assert_eq!(m.draft(0, 2), vec![99, 97]);
+        assert_eq!(m.draft(0, 8), vec![99, 97, 98]);
+        // No earlier occurrence of the last token → nothing to propose.
+        m.prefill(0, &[100]).unwrap();
+        assert!(m.draft(0, 4).is_empty());
+        // Inactive lane → nothing to propose.
+        m.release(0);
+        assert!(m.draft(0, 4).is_empty());
+    }
+
+    #[test]
+    fn decode_spec_matches_sequential_decode_and_rollback_rewinds() {
+        let docs = vec![b"ababab".to_vec()];
+        let mut spec = model(&docs);
+        let mut seq = model(&docs);
+        spec.prefill(0, &[97]).unwrap();
+        seq.prefill(0, &[97]).unwrap();
+        let rows = spec.decode_spec(&[Some(vec![98, 97])]).unwrap().remove(0).unwrap();
+        let r0 = seq.decode(&[Some(98)]).unwrap().remove(0).unwrap();
+        let r1 = seq.decode(&[Some(97)]).unwrap().remove(0).unwrap();
+        assert_eq!(rows, vec![r0.clone(), r1]);
+        // Rolling back both drafted positions restores the pre-spec state:
+        // a plain decode of the same token reproduces the same logits.
+        spec.rollback(0, 2);
+        let again = spec.decode(&[Some(98)]).unwrap().remove(0).unwrap();
+        assert_eq!(again, r0);
+    }
+
+    #[test]
+    fn decode_spec_skips_inactive_and_empty_lanes() {
+        let mut m = model(&[b"ab".to_vec()]);
+        m.prefill(0, &[97]).unwrap();
+        let out = m.decode_spec(&[None]).unwrap();
+        assert!(out[0].is_none());
+        let out = m.decode_spec(&[Some(Vec::new())]).unwrap();
+        assert!(out[0].is_none());
     }
 }

@@ -61,6 +61,36 @@ pub trait LanguageModel {
     /// active lane.
     fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>>;
 
+    /// Propose up to `k` draft tokens for `lane` from a cheap self-drafting
+    /// source (e.g. an n-gram cache over the lane's generated prefix).
+    /// Drafts are *suggestions only* — the scheduler grammar-prunes them
+    /// and the committed output never depends on what was drafted. The
+    /// default returns no drafts, which degrades speculation to the plain
+    /// single-token step (how the PJRT backends opt out today).
+    fn draft(&mut self, _lane: usize, _k: usize) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Multi-token verification step for speculative decoding.
+    /// `drafts[lane]` is a grammar-valid draft prefix for that lane
+    /// (`None`/empty = lane not speculating). The model appends the draft
+    /// tokens to the lane's sequence and returns one logit row **per draft
+    /// position**: row `i` is conditioned on the history plus
+    /// `drafts[lane][..=i]` — exactly the logits `decode` would have
+    /// produced had the drafts been committed one step at a time. Unmatched
+    /// draft suffixes are rewound with [`rollback`](Self::rollback). The
+    /// default scores nothing (all `None`), which makes the scheduler fall
+    /// back to plain decoding.
+    fn decode_spec(&mut self, drafts: &[Option<Vec<u32>>]) -> Result<Vec<Option<Vec<Vec<f32>>>>> {
+        Ok(vec![None; drafts.len()])
+    }
+
+    /// Rewind `lane` by `n` positions — the speculative counterpart of
+    /// `decode_spec`, removing draft tokens the acceptance rule did not
+    /// commit. The default is a no-op (correct for backends whose
+    /// `decode_spec` never appends anything).
+    fn rollback(&mut self, _lane: usize, _n: usize) {}
+
     /// Free a lane (sequence finished/evicted).
     fn release(&mut self, lane: usize);
 
@@ -114,6 +144,42 @@ mod tests {
         let la = a.prefill(0, &[97, 98]).unwrap();
         let lb = b.prefill(0, &[97, 98]).unwrap();
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn trait_defaults_opt_out_of_speculation() {
+        // A backend implementing only the plain decode contract (the PJRT
+        // models today) degrades speculation gracefully: no drafts, no
+        // scored positions, rollback is a no-op — the scheduler falls back
+        // to single-token steps without special-casing the backend.
+        struct Plain;
+        impl LanguageModel for Plain {
+            fn vocab_size(&self) -> usize {
+                4
+            }
+            fn lanes(&self) -> usize {
+                2
+            }
+            fn max_seq(&self) -> usize {
+                8
+            }
+            fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> Result<Vec<f32>> {
+                Ok(vec![0.0; 4])
+            }
+            fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>> {
+                Ok(last.iter().map(|t| t.map(|_| vec![0.0; 4])).collect())
+            }
+            fn release(&mut self, _lane: usize) {}
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+        }
+        let mut m = Plain;
+        assert!(m.draft(0, 4).is_empty());
+        let rows = m.decode_spec(&[Some(vec![1, 2]), None]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.is_none()));
+        m.rollback(0, 3);
     }
 
     #[test]

@@ -56,6 +56,7 @@ fn registry_serves_two_grammars_in_one_batch() {
                 strategy: Strategy::Temperature(0.8),
                 seed: i * 13 + 1,
                 opportunistic: i % 3 == 0,
+                spec_k: 0,
             },
             token_sink: None,
         })
@@ -211,6 +212,7 @@ fn mmap_loaded_artifact_serves_requests_across_threads() {
                 strategy: Strategy::Temperature(0.8),
                 seed: i * 7 + 3,
                 opportunistic: i % 2 == 0,
+                spec_k: 0,
             },
             token_sink: None,
         })

@@ -41,7 +41,7 @@ fn factories(tok: &Arc<Tokenizer>, replicas: usize, lanes: usize) -> Vec<ModelFa
     })
 }
 
-fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
+fn request_spec(id: u64, grammar: &str, max_new_tokens: usize, spec_k: usize) -> GenRequest {
     GenRequest {
         id,
         prompt: format!("produce {grammar} #{id}"),
@@ -52,9 +52,14 @@ fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
             strategy: Strategy::TopP { temp: 0.85, p: 0.95 },
             seed: id * 13 + 7,
             opportunistic: id % 2 == 0,
+            spec_k,
         },
         token_sink: None,
     }
+}
+
+fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
+    request_spec(id, grammar, max_new_tokens, 0)
 }
 
 /// The shared validity rule (`CompiledGrammar::response_valid`): no
@@ -73,36 +78,45 @@ fn assert_grammatical(reg: &GrammarRegistry, grammar: &str, resp: &GenResponse) 
 
 #[test]
 fn pooled_coordinator_is_byte_identical_to_serial() {
-    // The acceptance contract: the replica/mask-pool pipeline must
-    // produce exactly the outputs of the old serial step path for
-    // identical seeds.
+    // The acceptance contract, squared: the replica/mask-pool pipeline
+    // must produce exactly the outputs of the old serial step path for
+    // identical seeds — and speculative decoding must change nothing,
+    // at every spec_k, pooled or inline. Baseline: serial, spec off.
     let tok = Arc::new(Tokenizer::ascii_byte_level());
     let reg = registry(&tok);
-    let reqs: Vec<GenRequest> =
-        (0..8).map(|i| request(i, if i % 2 == 0 { "json" } else { "calc" }, 48)).collect();
 
-    let mut outputs: Vec<HashMap<u64, (String, usize)>> = Vec::new();
-    for (replicas, mask_threads) in [(1usize, 0usize), (2, 2)] {
-        let srv = Coordinator::start(
-            factories(&tok, replicas, 2),
-            tok.clone(),
-            reg.clone(),
-            CoordinatorConfig { mask_threads, ..Default::default() },
-        );
-        let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
-        let mut out = HashMap::new();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
-            assert!(resp.error.is_none(), "{:?}", resp.error);
-            out.insert(resp.id, (resp.text, resp.tokens));
+    let mut baseline: Option<HashMap<u64, (String, usize)>> = None;
+    for spec_k in [0usize, 2, 4] {
+        for (replicas, mask_threads) in [(1usize, 0usize), (2, 2)] {
+            let reqs: Vec<GenRequest> = (0..8)
+                .map(|i| {
+                    request_spec(i, if i % 2 == 0 { "json" } else { "calc" }, 48, spec_k)
+                })
+                .collect();
+            let srv = Coordinator::start(
+                factories(&tok, replicas, 2),
+                tok.clone(),
+                reg.clone(),
+                CoordinatorConfig { mask_threads, ..Default::default() },
+            );
+            let rxs: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone())).collect();
+            let mut out = HashMap::new();
+            for rx in rxs {
+                let resp = rx.recv().unwrap();
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                out.insert(resp.id, (resp.text, resp.tokens));
+            }
+            srv.shutdown();
+            match &baseline {
+                None => baseline = Some(out),
+                Some(base) => assert_eq!(
+                    base, &out,
+                    "spec_k={spec_k} × ({replicas} replicas, {mask_threads} mask threads) \
+                     diverged from the serial spec-off path"
+                ),
+            }
         }
-        srv.shutdown();
-        outputs.push(out);
     }
-    assert_eq!(
-        outputs[0], outputs[1],
-        "pooled (2 replicas × 2 mask threads) diverged from the serial path"
-    );
 }
 
 #[test]
@@ -217,7 +231,7 @@ fn backpressure_bounded_queue_still_completes_everything() {
         factories(&tok, 2, 2),
         tok.clone(),
         reg.clone(),
-        CoordinatorConfig { mask_threads: 2, queue_cap: 2 },
+        CoordinatorConfig { mask_threads: 2, queue_cap: 2, ..Default::default() },
     );
     let n = 12u64;
     let mut done = 0usize;
@@ -249,4 +263,96 @@ fn backpressure_bounded_queue_still_completes_everything() {
     assert!(snap.queue_depth_max >= 1);
     assert!(snap.queue_depth_max <= 2, "queue exceeded its bound");
     srv.shutdown();
+}
+
+#[test]
+fn grammar_rejected_drafts_never_reach_the_model() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    // Wraps the mock model and counts every draft position `decode_spec`
+    // is asked to score — the model-side witness for the free-filter
+    // contract: positions scored must equal drafts proposed minus drafts
+    // the grammar rejected, i.e. a pruned draft never costs model work.
+    struct SpyModel {
+        inner: MockModel,
+        scored: Arc<AtomicU64>,
+    }
+    impl LanguageModel for SpyModel {
+        fn vocab_size(&self) -> usize {
+            self.inner.vocab_size()
+        }
+        fn lanes(&self) -> usize {
+            self.inner.lanes()
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+        fn prefill(
+            &mut self,
+            lane: usize,
+            tokens: &[u32],
+        ) -> syncode::util::error::Result<Vec<f32>> {
+            self.inner.prefill(lane, tokens)
+        }
+        fn decode(
+            &mut self,
+            last: &[Option<u32>],
+        ) -> syncode::util::error::Result<Vec<Option<Vec<f32>>>> {
+            self.inner.decode(last)
+        }
+        fn draft(&mut self, lane: usize, k: usize) -> Vec<u32> {
+            self.inner.draft(lane, k)
+        }
+        fn decode_spec(
+            &mut self,
+            drafts: &[Option<Vec<u32>>],
+        ) -> syncode::util::error::Result<Vec<Option<Vec<Vec<f32>>>>> {
+            let positions: u64 = drafts.iter().flatten().map(|d| d.len() as u64).sum();
+            self.scored.fetch_add(positions, Ordering::Relaxed);
+            self.inner.decode_spec(drafts)
+        }
+        fn rollback(&mut self, lane: usize, n: usize) {
+            self.inner.rollback(lane, n)
+        }
+        fn release(&mut self, lane: usize) {
+            self.inner.release(lane)
+        }
+        fn name(&self) -> &'static str {
+            "spy-mock"
+        }
+    }
+
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let scored = Arc::new(AtomicU64::new(0));
+    let scored_f = scored.clone();
+    let tok_m = tok.clone();
+    let factory: ModelFactory = Box::new(move || {
+        Ok(Box::new(SpyModel {
+            inner: MockModel::from_documents(tok_m, &docs(), 2, 256, 11),
+            scored: scored_f,
+        }) as Box<dyn LanguageModel>)
+    });
+    let srv =
+        Coordinator::start(vec![factory], tok.clone(), reg.clone(), CoordinatorConfig::default());
+    for i in 0..6 {
+        let grammar = if i % 2 == 0 { "json" } else { "calc" };
+        let resp = srv.generate(request_spec(i, grammar, 48, 4));
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let snap = srv.snapshot();
+    srv.shutdown();
+    assert!(snap.drafts_proposed > 0, "speculation never proposed a draft");
+    // The zero-waste contract, counter-asserted end to end: every position
+    // the model scored survived the grammar filter. (That the filter
+    // actually rejects — and does so with zero extra DFA walks — is
+    // pinned by maskpool's `pruning_performs_no_walks_beyond_the_plan`.)
+    let scored = scored.load(Ordering::Relaxed);
+    assert_eq!(
+        snap.drafts_proposed - snap.drafts_grammar_rejected,
+        scored,
+        "a grammar-rejected draft reached decode_spec (or a surviving one didn't)"
+    );
+    assert!(snap.drafts_accepted <= scored, "accepted more drafts than were scored");
+    assert!(snap.tokens_per_step_mean > 0.0);
 }

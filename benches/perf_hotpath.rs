@@ -165,6 +165,7 @@ fn spec_steps(json_out: Option<String>) {
                         seed: i * 13 + 7,
                         opportunistic: true,
                         spec_k,
+                        ..Default::default()
                     },
                     token_sink: None,
                 })

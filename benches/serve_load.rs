@@ -1,0 +1,316 @@
+//! Open-loop serving load harness (`docs/benchmarks.md`): Poisson
+//! arrivals against the continuous-batching coordinator, mixed SLO-class
+//! / grammar / streaming / spec_k traffic, client-observed latency.
+//!
+//! Open-loop means arrivals do *not* wait for completions: each request
+//! is submitted at its scheduled instant through the non-blocking
+//! `try_submit` path, exactly like an outside client population. A full
+//! queue sheds the request (counted, never retried) instead of slowing
+//! the arrival process down — the closed-loop bug where the harness
+//! self-throttles to whatever the server can do and every latency
+//! percentile looks flat. Latency is measured from the submit instant on
+//! a per-request collector thread, so queueing delay — the thing SLO
+//! classes exist to manage — is inside the number.
+//!
+//! Traffic mix (deterministic in the request index, so runs are
+//! comparable): grammars alternate json/calc, every 4th request is
+//! `batch` class, every 3rd drafts with spec_k=4, every 5th streams over
+//! a token sink and records client-observed TTFT.
+//!
+//! Usage: `cargo bench --bench serve_load -- [--requests N] [--rate HZ]
+//! [--json BENCH_serve.json]`. The final `serve_load:` line is the CI
+//! sanity contract (completed == submitted, zero syntax errors on a
+//! small workload); `--json` appends one per-class entry to the
+//! trajectory file.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, GenParams, GenRequest, SloClass, Strategy, TokenEvent,
+};
+use syncode::eval::dataset;
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel};
+use syncode::util::json::{parse, Json};
+use syncode::util::bench::Table;
+use syncode::util::rng::Rng;
+
+/// What one collector thread observed for its request.
+struct Outcome {
+    class: SloClass,
+    /// Submit-to-response latency (queue wait included).
+    latency_s: f64,
+    /// Client-observed time to first streamed token (streamed requests
+    /// only — a blocking client never observes TTFT).
+    ttft_s: Option<f64>,
+    tokens: usize,
+    valid: bool,
+}
+
+/// Per-class accumulation over the run.
+#[derive(Default)]
+struct ClassTally {
+    submitted: usize,
+    shed: usize,
+    completed: usize,
+    tokens: usize,
+    syntax_errors: usize,
+    latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let n: u64 = get("--requests").and_then(|v| v.parse().ok()).unwrap_or(96);
+    let rate: f64 = get("--rate").and_then(|v| v.parse().ok()).unwrap_or(64.0);
+    let json_out = get("--json");
+
+    println!(
+        "# §Serve — open-loop load: {n} requests, Poisson arrivals at {rate:.0}/s \
+         (json+calc, mock LM)\n"
+    );
+
+    // The mock serving stack: union tokenizer over both grammars' corpora
+    // (the same recipe `syncode serve --mock` uses), one replica with
+    // 4 lanes, 2 mask threads — small enough for CI, batched enough that
+    // continuous admission actually refills mid-decode.
+    let (tok, docs) = dataset::mock_serving_recipe(&["json", "calc"], 120, 7, 160);
+    let tok = Arc::new(tok);
+    let registry = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default())
+            .unwrap_or_else(|e| panic!("compile {g}: {e}"));
+        registry.register(art).unwrap_or_else(|e| panic!("register {g}: {e}"));
+    }
+    let tok_m = tok.clone();
+    let docs_m = docs.clone();
+    let models = replicate_factory(1, move || {
+        Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs_m, 4, 512, 11))
+            as Box<dyn LanguageModel>)
+    });
+    let srv = Coordinator::start(
+        models,
+        tok,
+        registry.clone(),
+        CoordinatorConfig { mask_threads: 2, ..Default::default() },
+    );
+
+    // Open-loop arrival process: exponential interarrivals from a fixed
+    // seed. The schedule is absolute (next_at accumulates), so a slow
+    // submission never shifts later arrivals — the load is what it is.
+    let mut rng = Rng::new(0x5E12_7E10AD);
+    let mut next_at = 0.0f64;
+    let mut handles = Vec::new();
+    let mut tallies: [ClassTally; SloClass::COUNT] = Default::default();
+    let json_tasks = dataset::json_mode_tasks(n as usize, 3);
+    let t0 = Instant::now();
+    for i in 0..n {
+        next_at += -(1.0 - rng.f64()).ln() / rate;
+        let target = Duration::from_secs_f64(next_at);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let class =
+            if i % 4 == 3 { SloClass::Batch } else { SloClass::Interactive };
+        let gname = if i % 2 == 0 { "json" } else { "calc" };
+        let prompt = match gname {
+            "json" => json_tasks[i as usize].prompt.clone(),
+            _ => format!("compute a small arithmetic expression (#{i})"),
+        };
+        let req = GenRequest {
+            id: i,
+            prompt,
+            grammar: Some(gname.to_string()),
+            params: GenParams {
+                max_new_tokens: 48,
+                strategy: Strategy::TopP { temp: 0.85, p: 0.95 },
+                seed: i * 13 + 7,
+                opportunistic: true,
+                spec_k: if i % 3 == 0 { 4 } else { 0 },
+                slo: class,
+            },
+            ..Default::default()
+        };
+        let art = registry.get(gname).expect("registered grammar");
+        let t_submit = Instant::now();
+        let spawned = if i % 5 == 0 {
+            // Streamed request: the collector drains token events and
+            // records the client-observed first-token instant.
+            match srv.try_submit_stream(req) {
+                Ok(stream) => Some(std::thread::spawn(move || {
+                    let mut ttft = None;
+                    loop {
+                        match stream.events.recv() {
+                            Ok(TokenEvent::Token(_)) => {
+                                ttft.get_or_insert_with(|| {
+                                    t_submit.elapsed().as_secs_f64()
+                                });
+                            }
+                            Ok(TokenEvent::Finished { .. }) | Err(_) => break,
+                        }
+                    }
+                    let resp = stream.response.recv().ok()?;
+                    Some(Outcome {
+                        class,
+                        latency_s: t_submit.elapsed().as_secs_f64(),
+                        ttft_s: ttft,
+                        tokens: resp.tokens,
+                        valid: art.response_valid(&resp),
+                    })
+                })),
+                Err(_) => None,
+            }
+        } else {
+            match srv.try_submit(req) {
+                Ok(rx) => Some(std::thread::spawn(move || {
+                    let resp = rx.recv().ok()?;
+                    Some(Outcome {
+                        class,
+                        latency_s: t_submit.elapsed().as_secs_f64(),
+                        ttft_s: None,
+                        tokens: resp.tokens,
+                        valid: art.response_valid(&resp),
+                    })
+                })),
+                Err(_) => None,
+            }
+        };
+        match spawned {
+            Some(h) => {
+                tallies[class.index()].submitted += 1;
+                handles.push(h);
+            }
+            None => tallies[class.index()].shed += 1,
+        }
+    }
+
+    for h in handles {
+        let Ok(Some(o)) = h.join() else { continue };
+        let t = &mut tallies[o.class.index()];
+        t.completed += 1;
+        t.tokens += o.tokens;
+        t.syntax_errors += !o.valid as usize;
+        t.latencies.push(o.latency_s);
+        if let Some(ttft) = o.ttft_s {
+            t.ttfts.push(ttft);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = srv.snapshot();
+    srv.shutdown();
+
+    let mut table = Table::new(&[
+        "class", "submitted", "shed", "completed", "tokens", "p50(s)", "p99(s)", "p999(s)",
+        "ttft(s)",
+    ]);
+    for class in SloClass::ALL {
+        let t = &mut tallies[class.index()];
+        t.latencies.sort_by(|a, b| a.total_cmp(b));
+        let ttft_mean = if t.ttfts.is_empty() {
+            f64::NAN
+        } else {
+            t.ttfts.iter().sum::<f64>() / t.ttfts.len() as f64
+        };
+        table.row(&[
+            class.to_string(),
+            t.submitted.to_string(),
+            t.shed.to_string(),
+            t.completed.to_string(),
+            t.tokens.to_string(),
+            format!("{:.3}", quantile(&t.latencies, 0.50)),
+            format!("{:.3}", quantile(&t.latencies, 0.99)),
+            format!("{:.3}", quantile(&t.latencies, 0.999)),
+            if ttft_mean.is_nan() { "-".to_string() } else { format!("{ttft_mean:.3}") },
+        ]);
+    }
+    table.print();
+
+    let submitted: usize = tallies.iter().map(|t| t.submitted).sum();
+    let shed: usize = tallies.iter().map(|t| t.shed).sum();
+    let completed: usize = tallies.iter().map(|t| t.completed).sum();
+    let tokens: usize = tallies.iter().map(|t| t.tokens).sum();
+    let syntax_errors: usize = tallies.iter().map(|t| t.syntax_errors).sum();
+    println!(
+        "\nthroughput: {:.1} tok/s over {wall:.2}s wall  \
+         (server view: {:.1} tok/s, {} decode steps)",
+        tokens as f64 / wall,
+        snap.tokens_per_sec,
+        snap.decode_steps,
+    );
+    // The CI sanity contract: one greppable line. On the small fixed CI
+    // workload every offered request must be admitted and completed with
+    // zero syntax errors.
+    println!(
+        "serve_load: offered={n} submitted={submitted} completed={completed} \
+         shed={shed} syntax_errors={syntax_errors}"
+    );
+
+    if let Some(path) = json_out {
+        append_serve_trajectory(&path, rate, wall, &tallies);
+        println!("[appended {} entries to {path}]\n", SloClass::COUNT);
+    }
+}
+
+/// Exact quantile from a sorted sample set (no interpolation: the
+/// observation at the ceil(q·n)-th position, the standard conservative
+/// read for tail percentiles on small samples).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Append one entry per SLO class to `BENCH_serve.json`: an object with
+/// an `entries` array (created if missing/invalid) accumulating the
+/// open-loop latency trajectory across PRs.
+fn append_serve_trajectory(path: &str, rate: f64, wall: f64, tallies: &[ClassTally]) {
+    let mut obj = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut arr: Vec<Json> = obj
+        .get("entries")
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    for class in SloClass::ALL {
+        let t = &tallies[class.index()];
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("unix_time".to_string(), Json::Num(now as f64));
+        m.insert("class".to_string(), Json::Str(class.to_string()));
+        m.insert("rate_hz".to_string(), Json::Num(rate));
+        m.insert("submitted".to_string(), Json::Num(t.submitted as f64));
+        m.insert("completed".to_string(), Json::Num(t.completed as f64));
+        m.insert("shed".to_string(), Json::Num(t.shed as f64));
+        m.insert("tokens".to_string(), Json::Num(t.tokens as f64));
+        m.insert(
+            "throughput_tok_s".to_string(),
+            Json::Num(if wall > 0.0 { t.tokens as f64 / wall } else { 0.0 }),
+        );
+        m.insert("p50_s".to_string(), Json::Num(quantile(&t.latencies, 0.50)));
+        m.insert("p99_s".to_string(), Json::Num(quantile(&t.latencies, 0.99)));
+        m.insert("p999_s".to_string(), Json::Num(quantile(&t.latencies, 0.999)));
+        let ttft_mean = if t.ttfts.is_empty() {
+            0.0
+        } else {
+            t.ttfts.iter().sum::<f64>() / t.ttfts.len() as f64
+        };
+        m.insert("ttft_mean_s".to_string(), Json::Num(ttft_mean));
+        m.insert("wall_s".to_string(), Json::Num(wall));
+        arr.push(Json::Obj(m));
+    }
+    obj.insert("bench".to_string(), Json::Str("serve_load".to_string()));
+    obj.insert("entries".to_string(), Json::Arr(arr));
+    let _ = std::fs::write(path, Json::Obj(obj).to_string());
+}

@@ -33,7 +33,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 0.8, p: 0.95 },
         seed: 5,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
     let mut t = Table::new(&[
         "engine",

@@ -23,7 +23,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 0.85, p: 0.95 },
         seed: 9,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
     let mut t = Table::new(&[
         "engine", "easy", "medium", "hard", "extra", "overall", "execute%", "tokens",

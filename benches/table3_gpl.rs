@@ -23,7 +23,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 1.0, p: 0.98 },
         seed: 17,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
     let mut t = Table::new(&["lang", "standard", "syncode", "reduction", "time/gen(s)"]);
     for lang in ["python", "go"] {

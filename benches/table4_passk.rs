@@ -23,7 +23,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 0.9, p: 0.95 },
         seed: 23,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
     let mut t = Table::new(&["engine", "pass@1", "pass@10"]);
     for kind in [EngineKind::Standard, EngineKind::Syncode] {

@@ -16,7 +16,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 1.0, p: 0.97 },
         seed: 29,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
 
     let mut t = Table::new(&["workload", "error type", "standard", "syncode", "reduction"]);

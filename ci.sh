@@ -125,6 +125,25 @@ if [[ "$fast" == "0" ]]; then
     exit 1
   fi
 
+  # Open-loop serving load (ISSUE-8): Poisson arrivals against the
+  # continuous-batching coordinator with mixed class/grammar/stream/spec_k
+  # traffic. On this small fixed workload every offered request must be
+  # admitted and completed with zero syntax errors — the greppable
+  # sanity line is the contract — and the appender must land per-class
+  # latency entries in BENCH_serve.json.
+  echo "== serve_load open-loop harness (appends BENCH_serve.json) =="
+  load_log=$(mktemp)
+  cargo bench --bench serve_load -- \
+    --requests 48 --rate 96 --json BENCH_serve.json | tee "$load_log"
+  if ! grep -q 'serve_load: offered=48 submitted=48 completed=48 shed=0 syntax_errors=0' "$load_log"; then
+    echo "ERROR: serve_load sanity line missing or degraded (want all 48 completed, 0 shed, 0 syntax errors)" >&2
+    exit 1
+  fi
+  if ! grep -q '"p999_s"' BENCH_serve.json; then
+    echo "ERROR: bench did not append per-class latency entries to BENCH_serve.json" >&2
+    exit 1
+  fi
+
   # HTTP smoke: the same coordinator behind real sockets. Concurrent
   # POST /v1/generate for json+calc must return 200s with zero syntax
   # errors, /metrics must parse as Prometheus text, and the server must

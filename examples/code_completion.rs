@@ -23,7 +23,7 @@ fn main() {
             strategy: Strategy::Temperature(0.6),
             seed: 21,
             opportunistic: true,
-            spec_k: 0,
+            ..Default::default()
         };
         for kind in [EngineKind::Standard, EngineKind::Syncode] {
             let srv =

@@ -112,6 +112,7 @@ fn main() {
         seed: 5,
         opportunistic: true,
         spec_k,
+        ..Default::default()
     };
     let t_subm = std::time::Instant::now();
     let rxs: Vec<_> = tasks

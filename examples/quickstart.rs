@@ -55,7 +55,7 @@ fn main() {
             strategy: Strategy::Temperature(0.8),
             seed: 42,
             opportunistic: true,
-            spec_k: 0,
+            ..Default::default()
         },
         token_sink: None,
     })

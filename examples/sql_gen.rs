@@ -19,7 +19,7 @@ fn main() {
         strategy: Strategy::TopP { temp: 0.7, p: 0.95 },
         seed: 9,
         opportunistic: true,
-        spec_k: 0,
+        ..Default::default()
     };
     for kind in [EngineKind::Standard, EngineKind::Syncode] {
         let r = run_sql(&env, &tasks, kind, &params);

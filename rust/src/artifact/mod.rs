@@ -204,7 +204,7 @@ impl CompiledGrammar {
     /// trivially pass the prefix check); complete generations must parse;
     /// truncated ones (MaxTokens / SeqOverflow) must still be a valid
     /// grammar prefix. The single definition of "syntax error" shared by
-    /// `syncode serve`, `benches/serve_scale.rs` and the serving tests.
+    /// `syncode serve`, `benches/serve_load.rs` and the serving tests.
     pub fn response_valid(&self, resp: &crate::coordinator::GenResponse) -> bool {
         resp.error.is_none()
             && if resp.finish == crate::coordinator::FinishReason::Eos {

@@ -10,6 +10,7 @@
 //! `examples/json_server` print both; `docs/serving.md` describes how to
 //! read them.
 
+use super::types::SloClass;
 use std::time::Instant;
 
 /// Log-bucketed latency histogram (1µs … ~17min).
@@ -154,9 +155,61 @@ pub struct Metrics {
     /// signal: rising waits mean masks queue behind each other again).
     pub mask_pool_wait: Histogram,
     /// Admission-queue depth observed at each enqueue (the dispatcher's
-    /// backpressure signal).
+    /// backpressure signal), summed across classes.
     pub queue_depth: DepthGauge,
+    /// Per-SLO-class accounting, indexed by [`SloClass::index`].
+    pub classes: [ClassMetrics; SloClass::COUNT],
     started: Option<Instant>,
+}
+
+/// Per-SLO-class serving metrics (one instance per class inside
+/// [`Metrics`]). Only *served* generations record here — admission
+/// failures that never occupied a lane count toward
+/// `Metrics::requests_finished` but not toward any class.
+#[derive(Debug, Clone, Default)]
+pub struct ClassMetrics {
+    /// Generations of this class that ran on a lane and finished.
+    pub finished: u64,
+    /// Non-blocking admissions refused because this class's queue was at
+    /// its cap (the HTTP front's per-class 429s).
+    pub queue_rejected: u64,
+    /// Batch-only: dequeues where this class jumped ahead of a
+    /// higher-priority class because its oldest entry aged past the
+    /// starvation bound.
+    pub aged_promotions: u64,
+    /// Admission-to-finish latency of this class's served generations.
+    pub latency: Histogram,
+    /// Admission-to-first-token latency of this class's served generations.
+    pub ttft: Histogram,
+}
+
+impl ClassMetrics {
+    fn merge(&mut self, other: &ClassMetrics) {
+        self.finished += other.finished;
+        self.queue_rejected += other.queue_rejected;
+        self.aged_promotions += other.aged_promotions;
+        self.latency.merge(&other.latency);
+        self.ttft.merge(&other.ttft);
+    }
+}
+
+/// Point-in-time per-class summary inside [`MetricsSnapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct ClassSnapshot {
+    /// Served generations of this class.
+    pub finished: u64,
+    /// Per-class queue-full admission refusals.
+    pub queue_rejected: u64,
+    /// Aged dequeues that jumped the priority order (batch only).
+    pub aged_promotions: u64,
+    /// Mean admission-to-finish latency (seconds).
+    pub mean_latency: f64,
+    /// p50 admission-to-finish latency (seconds).
+    pub p50_latency: f64,
+    /// p99 admission-to-finish latency (seconds).
+    pub p99_latency: f64,
+    /// Mean admission-to-first-token latency (seconds).
+    pub mean_ttft: f64,
 }
 
 /// A point-in-time copy for reporting.
@@ -193,6 +246,8 @@ pub struct MetricsSnapshot {
     pub mask_wait_samples: u64,
     pub queue_depth_mean: f64,
     pub queue_depth_max: usize,
+    /// Per-SLO-class summaries, indexed by [`SloClass::index`].
+    pub classes: [ClassSnapshot; SloClass::COUNT],
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
 }
@@ -224,6 +279,9 @@ impl Metrics {
         self.ttft.merge(&other.ttft);
         self.mask_pool_wait.merge(&other.mask_pool_wait);
         self.queue_depth.merge(&other.queue_depth);
+        for (a, b) in self.classes.iter_mut().zip(&other.classes) {
+            a.merge(b);
+        }
         self.started = match (self.started, other.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -257,6 +315,18 @@ impl Metrics {
             mask_wait_samples: self.mask_pool_wait.count(),
             queue_depth_mean: self.queue_depth.mean(),
             queue_depth_max: self.queue_depth.max(),
+            classes: {
+                let snap = |c: &ClassMetrics| ClassSnapshot {
+                    finished: c.finished,
+                    queue_rejected: c.queue_rejected,
+                    aged_promotions: c.aged_promotions,
+                    mean_latency: c.latency.mean(),
+                    p50_latency: c.latency.quantile(0.5),
+                    p99_latency: c.latency.quantile(0.99),
+                    mean_ttft: c.ttft.mean(),
+                };
+                [snap(&self.classes[0]), snap(&self.classes[1])]
+            },
             wall_secs: wall,
             tokens_per_sec: if wall > 0.0 { self.tokens_generated as f64 / wall } else { 0.0 },
         }
@@ -307,6 +377,25 @@ impl MetricsSnapshot {
         }
         if self.streams_cancelled > 0 {
             s.push_str(&format!(" streams-cancelled={}", self.streams_cancelled));
+        }
+        // Per-class split only once both classes matter: batch traffic was
+        // served, a class hit its admission cap, or aging promoted a
+        // batch request past interactive ones.
+        let classes_active = self.classes[SloClass::Batch.index()].finished > 0
+            || self.classes.iter().any(|c| c.queue_rejected > 0 || c.aged_promotions > 0);
+        if classes_active {
+            for (class, c) in SloClass::ALL.iter().zip(&self.classes) {
+                s.push_str(&format!(
+                    " {}(finished={} rejected={} aged={} latency p50/p99={:.3}s/{:.3}s ttft={:.3}s)",
+                    class,
+                    c.finished,
+                    c.queue_rejected,
+                    c.aged_promotions,
+                    c.p50_latency,
+                    c.p99_latency,
+                    c.mean_ttft,
+                ));
+            }
         }
         s
     }
@@ -413,5 +502,34 @@ mod tests {
         assert!(s.report().contains("spec(proposed=10 rejected=3 accepted=4"));
         // No speculation → no spec segment in the report.
         assert!(!Metrics::default().snapshot().report().contains("spec("));
+    }
+
+    #[test]
+    fn class_metrics_merge_and_report() {
+        let i = SloClass::Interactive.index();
+        let b = SloClass::Batch.index();
+        let mut a = Metrics::default();
+        a.classes[i].finished = 3;
+        a.classes[i].latency.record(0.1);
+        a.classes[i].ttft.record(0.02);
+        let mut other = Metrics::default();
+        other.classes[b].finished = 2;
+        other.classes[b].queue_rejected = 1;
+        other.classes[b].aged_promotions = 1;
+        other.classes[b].latency.record(0.8);
+        a.merge(&other);
+        let s = a.snapshot();
+        assert_eq!(s.classes[i].finished, 3);
+        assert_eq!(s.classes[b].finished, 2);
+        assert_eq!(s.classes[b].queue_rejected, 1);
+        assert_eq!(s.classes[b].aged_promotions, 1);
+        assert!(s.classes[b].p99_latency >= s.classes[i].p99_latency);
+        let report = s.report();
+        assert!(report.contains("interactive(finished=3"));
+        assert!(report.contains("batch(finished=2 rejected=1 aged=1"));
+        // Single-class interactive-only traffic keeps the report clean.
+        let mut only = Metrics::default();
+        only.classes[i].finished = 5;
+        assert!(!only.snapshot().report().contains("interactive("));
     }
 }

@@ -6,12 +6,15 @@
 //! The subsystem is layered (see `docs/serving.md`):
 //!
 //! - [`dispatch`](Coordinator) — the bounded shared queue with
-//!   backpressure; replicas pull from it, so load balances without a
-//!   router. [`Server`] is the single-replica compatibility front.
+//!   backpressure and per-[`SloClass`] admission (interactive traffic is
+//!   dequeued ahead of batch, with starvation aging); replicas pull from
+//!   it, so load balances without a router. [`Server`] is the
+//!   single-replica compatibility front.
 //! - `replica` — one scheduler thread per model replica; owns its
 //!   [`crate::runtime::LanguageModel`] (PJRT executables are not `Send`,
 //!   so the factory runs in-thread) and the continuous-batching decode
-//!   loop.
+//!   loop: a lane freed by a step decision is refilled from the queue in
+//!   the same iteration, before the batched decode.
 //! - `maskpool` — grammar-mask computation and exact re-validation off
 //!   the scheduler threads: per-lane step decisions run concurrently, and
 //!   prewarm jobs overlap the *next* step's mask work with the model's
@@ -23,8 +26,8 @@
 //!   [`GenParams::spec_k`], speculation on or off.
 //!
 //! Generations are streamable end to end: [`ServerHandle::submit_stream`]
-//! delivers every committed token as a [`TokenEvent`] the moment it
-//! leaves the step wave — each token is grammar-validated when it is
+//! delivers every committed token as a [`TokenEvent`] the moment its
+//! step decision commits it — each token is grammar-validated when it is
 //! decoded, so streaming costs nothing extra — and a dropped consumer
 //! cancels its generation ([`FinishReason::Cancelled`]), freeing the
 //! lane. The HTTP front exposes this as Server-Sent Events
@@ -45,9 +48,9 @@ pub use beam::{beam_generate, BeamHypothesis};
 pub use dispatch::{
     Coordinator, CoordinatorConfig, Server, ServerHandle, StreamHandle, SubmitError,
 };
-pub use metrics::{DepthGauge, Histogram, Metrics, MetricsSnapshot};
+pub use metrics::{ClassMetrics, ClassSnapshot, DepthGauge, Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
 pub use types::{
-    EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse,
+    EngineFactory, EngineProvider, FinishReason, GenParams, GenRequest, GenResponse, SloClass,
     TokenChunk, TokenEvent, TokenSink,
 };

@@ -3,25 +3,38 @@
 //! from the shared dispatcher queue, and runs the continuous-batching
 //! decode loop over the model's lanes.
 //!
-//! Each iteration: (1) admit queued requests into free lanes (prefill),
-//! (2) for lanes with `spec_k > 0`, propose draft tokens, grammar-prune
-//! them with planned probes (zero extra DFA walks) and score the
-//! surviving prefixes in one batched `decode_spec`, (3) for every lane
-//! holding fresh logits, decide the step's tokens (Algorithm 3 lines
-//! 4–12, extended to the longest-accepted-prefix rule when drafts are
-//! present) — through the mask worker pool when one is configured
-//! (lanes' mask work runs concurrently), inline otherwise, (4) submit
+//! Batching is continuous: lanes retire and are refilled *mid-decode*,
+//! never at a batch boundary. Each iteration: (1) finish lanes that hit
+//! their token/sequence budget, (2) for lanes with `spec_k > 0`, propose
+//! draft tokens, grammar-prune them with planned probes (zero extra DFA
+//! walks) and score the surviving prefixes in one batched `decode_spec`,
+//! (3) for every lane holding fresh logits, decide the step's tokens
+//! (Algorithm 3 lines 4–12, extended to the longest-accepted-prefix rule
+//! when drafts are present) — through the mask worker pool when one is
+//! configured (lanes' mask work runs concurrently), inline otherwise;
+//! lanes whose decision finishes, cancels or errors them release their
+//! model slot right here, (4) refill every free lane from the admission
+//! queue (`admit_free_lanes`): prefill, then decide the new lane's
+//! *first* token immediately so it joins this very iteration's batched
+//! decode — a slot freed in step (3) never idles through a decode, and a
+//! newly admitted request's first token never waits for one, (5) submit
 //! prewarm jobs for the committed tokens and run one batched decode step
 //! for all still-active lanes *while the pool warms the next step's
-//! masks*, (5) collect the prewarmed engines and install the fresh
+//! masks*, (6) collect the prewarmed engines and install the fresh
 //! logits.
 //!
 //! The pooled and inline paths share one step-decision implementation
 //! (`maskpool::decide_step`) and per-lane RNG streams travel with the
 //! jobs, so both configurations produce byte-identical output for
-//! identical seeds — at every `spec_k`, speculation on or off.
+//! identical seeds — at every `spec_k`, speculation on or off. The
+//! continuous refill preserves that invariant for free: a decision
+//! depends only on its own lane's engine state, logits and RNG stream,
+//! never on which other requests share the batch, so admission order
+//! changes queueing delay and nothing else. (One scheduling consequence:
+//! a lane's first step never drafts — speculation starts from its second
+//! step — which is invisible in the output bytes.)
 
-use super::dispatch::{ReplicaGuard, SharedQueue};
+use super::dispatch::{PendingReq, ReplicaGuard, SharedQueue};
 use super::maskpool::{
     decide_step, prune_draft, Decision, PoolClient, Prewarmed, SpecStep, StepOutcome,
     StepRequest, StepResult,
@@ -108,70 +121,14 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
     loop {
         // ---- intake ----------------------------------------------------
         // Idle replica: park on the shared queue until a request arrives
-        // or the queue is closed *and* drained.
-        let mut next = None;
+        // or the queue is closed *and* drained. (A busy replica never
+        // parks — freed lanes are refilled non-blockingly by the
+        // continuous-admission pass below.)
+        let mut next: Option<PendingReq> = None;
         if lanes.iter().all(|l| l.is_none()) {
             match queue.pop_blocking() {
                 Some(p) => next = Some(p),
                 None => break,
-            }
-        }
-
-        // ---- admission (continuous batching) ---------------------------
-        for (lane_idx, slot) in lanes.iter_mut().enumerate() {
-            if slot.is_some() {
-                continue;
-            }
-            let Some((req, resp_tx)) = next.take().or_else(|| queue.try_pop()) else { break };
-            metrics.with(|m| m.mark_started());
-            let mut engine = match provider.engine_for(&req) {
-                Ok(e) => e,
-                Err(msg) => {
-                    metrics.with(|m| {
-                        m.requests_finished += 1;
-                        m.engine_errors += 1;
-                    });
-                    req.notify_finished(FinishReason::EngineError, Some(&msg));
-                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
-                    continue;
-                }
-            };
-            engine.reset(&req.constraint_prefix);
-            let mut ids = vec![tok.bos_id];
-            ids.extend(tok.encode(req.prompt.as_bytes()));
-            // Keep the full prompt where possible (tail-clamp only when it
-            // alone overflows); generation stops at SeqOverflow if the
-            // budget runs out.
-            let cap = model.max_seq().saturating_sub(8).max(1);
-            if ids.len() > cap {
-                ids = ids[ids.len() - cap..].to_vec();
-            }
-            let t_admit = Instant::now();
-            match model.prefill(lane_idx, &ids) {
-                Ok(logits) => {
-                    let rng = Rng::new(req.params.seed ^ req.id);
-                    *slot = Some(Lane {
-                        prompt_len: ids.len(),
-                        req,
-                        resp_tx,
-                        engine: Some(engine),
-                        logits,
-                        generated: Vec::new(),
-                        rng,
-                        t_admit,
-                        ttft: None,
-                        utf8: Utf8Stream::default(),
-                    });
-                }
-                Err(e) => {
-                    metrics.with(|m| {
-                        m.requests_finished += 1;
-                        m.engine_errors += 1;
-                    });
-                    let msg = format!("prefill: {e}");
-                    req.notify_finished(FinishReason::EngineError, Some(&msg));
-                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
-                }
             }
         }
 
@@ -194,7 +151,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
         // planned probes (pure mask-store lookups, zero DFA walks — the
         // grammar is a free rejection filter), and only the surviving
         // prefixes are scored, all lanes in one batched `decode_spec`.
-        // The step wave's acceptance loop then commits the longest
+        // The decision phase's acceptance loop then commits the longest
         // accepted prefix; unmatched draft positions are rolled back.
         let mut spec_steps: Vec<Option<SpecStep>> = (0..nlanes).map(|_| None).collect();
         {
@@ -270,7 +227,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
         let mut last: Vec<Option<u32>> = vec![None; nlanes];
         match &pool {
             Some(client) => {
-                step_wave_pooled(
+                decide_steps_pooled(
                     client,
                     &mut lanes,
                     &mut spec_steps,
@@ -309,6 +266,25 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                 }
             }
         }
+
+        // ---- continuous admission (refill freed lanes mid-decode) ------
+        // Every free slot — freed by this iteration's decisions or idle
+        // from before — is refilled from the queue *now*, before the
+        // batched decode: the new lane is prefilled and its first token
+        // decided immediately, so it rides this iteration's decode and
+        // prewarm like any continuing lane. This is what makes batching
+        // continuous rather than wave-stepped.
+        admit_free_lanes(
+            &mut lanes,
+            &mut next,
+            &queue,
+            provider.as_ref(),
+            &tok,
+            &metrics,
+            model.as_mut(),
+            &mut last,
+            max_seq,
+        );
 
         // ---- prewarm submit (pool only) --------------------------------
         // Engines of continuing lanes go back to the pool so the *next*
@@ -403,10 +379,128 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
     }
 }
 
+/// The continuous-admission pass: refill every free lane from the
+/// admission queue, non-blockingly. Each admitted request is prefilled
+/// and — unless its budget is already exhausted — its *first* token is
+/// decided inline on the spot, entering `last` so the new lane joins the
+/// same iteration's prewarm and batched decode. A request whose budget
+/// check or first decision finishes it immediately frees its slot again,
+/// and the pass keeps pulling from the queue for that slot.
+///
+/// Byte-identity note: the first step always decides inline (never via
+/// the pool) with no speculative drafts. Both are output-neutral —
+/// `decide_step` is the single decision rule shared by every path, and
+/// drafts never change committed bytes — so identity across
+/// inline/pooled/spec_k configurations is preserved.
+#[allow(clippy::too_many_arguments)]
+fn admit_free_lanes(
+    lanes: &mut [Option<Lane>],
+    next: &mut Option<PendingReq>,
+    queue: &SharedQueue,
+    provider: &dyn EngineProvider,
+    tok: &Arc<Tokenizer>,
+    metrics: &ReplicaMetrics,
+    model: &mut dyn LanguageModel,
+    last: &mut [Option<u32>],
+    max_seq: usize,
+) {
+    for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+        if slot.is_some() {
+            continue;
+        }
+        // One slot may consume several queue entries: admission failures
+        // and instantly-finished requests don't occupy it.
+        'fill: loop {
+            let Some((req, resp_tx)) = next.take().or_else(|| queue.try_pop()) else {
+                break 'fill;
+            };
+            metrics.with(|m| m.mark_started());
+            let mut engine = match provider.engine_for(&req) {
+                Ok(e) => e,
+                Err(msg) => {
+                    metrics.with(|m| {
+                        m.requests_finished += 1;
+                        m.engine_errors += 1;
+                    });
+                    req.notify_finished(FinishReason::EngineError, Some(&msg));
+                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
+                    continue 'fill;
+                }
+            };
+            engine.reset(&req.constraint_prefix);
+            let mut ids = vec![tok.bos_id];
+            ids.extend(tok.encode(req.prompt.as_bytes()));
+            // Keep the full prompt where possible (tail-clamp only when it
+            // alone overflows); generation stops at SeqOverflow if the
+            // budget runs out.
+            let cap = max_seq.saturating_sub(8).max(1);
+            if ids.len() > cap {
+                ids = ids[ids.len() - cap..].to_vec();
+            }
+            let t_admit = Instant::now();
+            let logits = match model.prefill(lane_idx, &ids) {
+                Ok(l) => l,
+                Err(e) => {
+                    metrics.with(|m| {
+                        m.requests_finished += 1;
+                        m.engine_errors += 1;
+                    });
+                    let msg = format!("prefill: {e}");
+                    req.notify_finished(FinishReason::EngineError, Some(&msg));
+                    let _ = resp_tx.send(GenResponse::failed(req.id, msg));
+                    continue 'fill;
+                }
+            };
+            let rng = Rng::new(req.params.seed ^ req.id);
+            let lane = Lane {
+                prompt_len: ids.len(),
+                req,
+                resp_tx,
+                engine: Some(engine),
+                logits,
+                generated: Vec::new(),
+                rng,
+                t_admit,
+                ttft: None,
+                utf8: Utf8Stream::default(),
+            };
+            // A zero-budget request (max_new_tokens 0, or a prompt that
+            // already fills the sequence) finishes without a decision —
+            // the same stop rule every later iteration applies.
+            if let Some(r) = budget_finish(&lane, max_seq) {
+                finish_lane(lane, r, None, tok, metrics);
+                model.release(lane_idx);
+                continue 'fill;
+            }
+            *slot = Some(lane);
+            // First-token decision, joining this iteration's batched
+            // decode. No drafts on a first step: speculation needs a
+            // previous committed token and starts next iteration.
+            let lane = slot.as_mut().expect("just admitted");
+            let engine = lane.engine.as_mut().expect("engine present at admission");
+            let (decisions, accepted) = decide_step(
+                engine.as_mut(),
+                &lane.logits,
+                &mut lane.rng,
+                lane.req.params.strategy,
+                lane.req.params.opportunistic,
+                tok,
+                None,
+            );
+            apply_step(slot, lane_idx, decisions, accepted, 0, last, tok, metrics, model);
+            if slot.is_some() {
+                break 'fill;
+            }
+            // The first decision finished the lane (immediate EOS, empty
+            // mask, cancelled stream): the slot is free again.
+        }
+    }
+}
+
 /// Submit one step job per active lane, then collect the decisions.
 /// Lanes' mask work runs concurrently on the pool workers while this
 /// thread matches results back to lanes.
-fn step_wave_pooled(
+fn decide_steps_pooled(
     client: &PoolClient,
     lanes: &mut [Option<Lane>],
     spec_steps: &mut [Option<SpecStep>],
@@ -568,8 +662,9 @@ fn apply_outcome(
                 }
                 lane.generated.push(t);
                 last[lane_idx] = Some(t);
-                // Streaming: the committed token leaves the step wave
-                // immediately, before the next batched decode.
+                // Streaming: the committed token leaves the scheduler the
+                // moment its decision commits, before the next batched
+                // decode.
                 if let Some(sink) = &lane.req.token_sink {
                     let chunk = TokenChunk {
                         index: lane.generated.len() - 1,
@@ -617,11 +712,15 @@ fn finish_lane(
     let ttft = lane.ttft.unwrap_or(latency);
     let has_error = error.is_some();
     let cancelled = finish == FinishReason::Cancelled;
+    let class = lane.req.params.slo.index();
     metrics.with(|m| {
         m.requests_finished += 1;
         m.tokens_generated += tokens;
         m.latency.record(latency);
         m.ttft.record(ttft);
+        m.classes[class].finished += 1;
+        m.classes[class].latency.record(latency);
+        m.classes[class].ttft.record(ttft);
         if has_error && !cancelled {
             m.engine_errors += 1;
         }

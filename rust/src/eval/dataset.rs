@@ -354,7 +354,7 @@ pub fn corpus(gname: &str, n_docs: usize, seed: u64) -> Vec<Vec<u8>> {
 /// grammars' corpora (multi-grammar registries must share one
 /// vocabulary), plus that union corpus for the bigram mock LM. The single
 /// definition behind `syncode compile/generate/serve --mock`,
-/// `examples/json_server.rs`, and `benches/serve_scale.rs` — artifact
+/// `examples/json_server.rs`, and `benches/serve_load.rs` — artifact
 /// caches only warm-load across them because they all use exactly this.
 pub fn mock_serving_recipe(
     gnames: &[&str],

@@ -410,7 +410,7 @@ mod tests {
             strategy: Strategy::Temperature(0.7),
             seed: 5,
             opportunistic: true,
-            spec_k: 0,
+            ..Default::default()
         }
     }
 

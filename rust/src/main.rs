@@ -23,7 +23,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
 use syncode::coordinator::{
-    Coordinator, CoordinatorConfig, GenParams, GenRequest, Server, Strategy,
+    Coordinator, CoordinatorConfig, GenParams, GenRequest, Server, SloClass, Strategy,
 };
 use syncode::engine::GrammarContext;
 use syncode::eval::dataset;
@@ -54,8 +54,10 @@ fn main() {
                  \x20          --cache-dir <dir> --threads <n> --mock\n\
                  generate: --stream   (print tokens as they decode)\n\
                  \x20          --spec-k <k>  (speculative drafts per step; 0 = off)\n\
+                 \x20          --priority <interactive|batch>  (admission SLO class)\n\
                  serve:    --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
                  \x20          --spec-k <k> --spec-k-cap <k>\n\
+                 \x20          --batch-queue-cap <n> --batch-age-ms <ms>  (batch-class admission)\n\
                  \x20          --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream;\n\
                  \x20          POST /v1/generate?stream=1 streams tokens as SSE)"
             );
@@ -71,12 +73,18 @@ fn params_from(args: &Args) -> GenParams {
         "temp" => Strategy::Temperature(temp),
         _ => Strategy::TopP { temp, p: args.get_num("top-p", 0.95f32) },
     };
+    let pr = args.get_or("priority", "interactive");
+    let slo = SloClass::parse(&pr).unwrap_or_else(|| {
+        eprintln!("unknown --priority '{pr}' (interactive|batch)");
+        std::process::exit(2);
+    });
     GenParams {
         max_new_tokens: args.get_num("max-tokens", 120),
         strategy,
         seed: args.get_num("seed", 7u64),
         opportunistic: !args.flag("no-opportunistic"),
         spec_k: args.get_num("spec-k", 0usize),
+        slo,
     }
 }
 
@@ -321,8 +329,8 @@ fn cmd_generate(args: &Args) {
         token_sink: None,
     };
     let resp = if args.flag("stream") {
-        // Token-by-token: each committed token prints the moment it
-        // leaves the step wave (the same event stream `serve --http`
+        // Token-by-token: each committed token prints the moment the
+        // scheduler commits it (the same event stream `serve --http`
         // exposes as SSE).
         use std::io::Write as _;
         let resp = srv.submit_stream(req).for_each_text(|text| {
@@ -360,14 +368,28 @@ fn cmd_serve(args: &Args) {
     eprintln!("[registry: {}]", registry.names().join(", "));
 
     let replicas = args.get_num("replicas", 1usize).max(1);
+    let defaults = CoordinatorConfig::default();
     let cfg = CoordinatorConfig {
         mask_threads: args.get_num("mask-threads", 0usize),
         queue_cap: args.get_num("queue-cap", 256usize),
-        spec_k_cap: args.get_num("spec-k-cap", CoordinatorConfig::default().spec_k_cap),
+        spec_k_cap: args.get_num("spec-k-cap", defaults.spec_k_cap),
+        batch_queue_cap: args.get("batch-queue-cap").map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("--batch-queue-cap must be a number, got '{v}'");
+                std::process::exit(2);
+            })
+        }),
+        batch_age_ms: args.get_num("batch-age-ms", defaults.batch_age_ms),
     };
     eprintln!(
-        "[coordinator: {} replica(s), {} mask thread(s), queue cap {}, spec_k cap {}]",
-        replicas, cfg.mask_threads, cfg.queue_cap, cfg.spec_k_cap
+        "[coordinator: {} replica(s), {} mask thread(s), queue cap {} (batch {}), \
+         spec_k cap {}, batch age {}ms]",
+        replicas,
+        cfg.mask_threads,
+        cfg.queue_cap,
+        cfg.batch_queue_cap.unwrap_or(cfg.queue_cap),
+        cfg.spec_k_cap,
+        cfg.batch_age_ms
     );
     let factories = model_factories(args, use_mock, &tok, &union_docs, replicas);
     let srv = Coordinator::start(factories, tok, registry.clone(), cfg);

@@ -8,7 +8,7 @@
 //! `replica="N"` label so imbalance is visible to a scraper exactly as it
 //! is in `replica_snapshots()`.
 
-use crate::coordinator::MetricsSnapshot;
+use crate::coordinator::{MetricsSnapshot, SloClass};
 use std::fmt::Write as _;
 
 /// HTTP-front observations that live outside the coordinator: response
@@ -17,10 +17,12 @@ use std::fmt::Write as _;
 pub struct HttpStats {
     /// `(status code, responses sent)` pairs, sorted by code.
     pub responses: Vec<(u16, u64)>,
-    /// Live admission-queue depth at scrape time.
+    /// Live admission-queue depth at scrape time (all classes).
     pub queue_depth: usize,
-    /// Admission-queue capacity (`--queue-cap`).
+    /// Admission-queue bound for interactive traffic (`--queue-cap`).
     pub queue_cap: usize,
+    /// Live per-[`SloClass`] queue depths, indexed by `SloClass::index`.
+    pub class_queue_depths: [usize; SloClass::COUNT],
 }
 
 fn header(out: &mut String, name: &str, kind: &str, help: &str) {
@@ -191,6 +193,108 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
         global.queue_depth_max as f64,
     );
 
+    // Per-SLO-class split: admission outcomes and latency, one `class`
+    // label per family. Classes change scheduling only, never the bytes,
+    // so these are the metrics that show what the priority actually
+    // bought (interactive p99 under batch load).
+    header(
+        &mut out,
+        "syncode_class_queue_depth",
+        "gauge",
+        "Admission-queue depth at scrape time, split by SLO class.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_class_queue_depth{{class=\"{c}\"}} {}",
+            http.class_queue_depths[c.index()]
+        );
+    }
+    header(
+        &mut out,
+        "syncode_class_requests_finished_total",
+        "counter",
+        "Generations completed, split by SLO class.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_class_requests_finished_total{{class=\"{c}\"}} {}",
+            global.classes[c.index()].finished
+        );
+    }
+    header(
+        &mut out,
+        "syncode_class_queue_rejected_total",
+        "counter",
+        "Submissions refused because the class's queue was at capacity.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_class_queue_rejected_total{{class=\"{c}\"}} {}",
+            global.classes[c.index()].queue_rejected
+        );
+    }
+    header(
+        &mut out,
+        "syncode_class_aged_promotions_total",
+        "counter",
+        "Dequeues where an aged request jumped waiting higher-priority traffic.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_class_aged_promotions_total{{class=\"{c}\"}} {}",
+            global.classes[c.index()].aged_promotions
+        );
+    }
+    // Per-class latency summary. `_count` is the class's finished count:
+    // class counters are recorded only at lane finish (admission failures
+    // never reach a class), so the two are the same sample set.
+    header(
+        &mut out,
+        "syncode_class_request_latency_seconds",
+        "summary",
+        "Admission-to-finish latency, split by SLO class.",
+    );
+    for c in SloClass::ALL {
+        let s = &global.classes[c.index()];
+        let _ = writeln!(
+            out,
+            "syncode_class_request_latency_seconds{{class=\"{c}\",quantile=\"0.5\"}} {}",
+            s.p50_latency
+        );
+        let _ = writeln!(
+            out,
+            "syncode_class_request_latency_seconds{{class=\"{c}\",quantile=\"0.99\"}} {}",
+            s.p99_latency
+        );
+        let _ = writeln!(
+            out,
+            "syncode_class_request_latency_seconds_sum{{class=\"{c}\"}} {}",
+            s.mean_latency * s.finished as f64
+        );
+        let _ = writeln!(
+            out,
+            "syncode_class_request_latency_seconds_count{{class=\"{c}\"}} {}",
+            s.finished
+        );
+    }
+    header(
+        &mut out,
+        "syncode_class_ttft_seconds_mean",
+        "gauge",
+        "Mean time to first token, split by SLO class.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_class_ttft_seconds_mean{{class=\"{c}\"}} {}",
+            global.classes[c.index()].mean_ttft
+        );
+    }
+
     if !replicas.is_empty() {
         header(
             &mut out,
@@ -251,6 +355,13 @@ mod tests {
         m.drafts_grammar_rejected = 5;
         m.drafts_accepted = 6;
         m.tokens_per_step.record(3);
+        let b = SloClass::Batch.index();
+        m.classes[SloClass::Interactive.index()].finished = 3;
+        m.classes[b].finished = 1;
+        m.classes[b].queue_rejected = 2;
+        m.classes[b].aged_promotions = 1;
+        m.classes[b].latency.record(0.5);
+        m.classes[b].ttft.record(0.0625);
         m.snapshot()
     }
 
@@ -289,11 +400,21 @@ mod tests {
             responses: vec![(200, 10), (429, 2), (503, 1)],
             queue_depth: 5,
             queue_cap: 64,
+            class_queue_depths: [4, 1],
         };
         let text = render(&g, &reps, &http);
         assert_parses(&text);
         assert!(text.contains("syncode_requests_finished_total 4"));
         assert!(text.contains("syncode_queue_depth 5"));
+        assert!(text.contains("syncode_class_queue_depth{class=\"interactive\"} 4"));
+        assert!(text.contains("syncode_class_queue_depth{class=\"batch\"} 1"));
+        assert!(text.contains("syncode_class_requests_finished_total{class=\"interactive\"} 3"));
+        assert!(text.contains("syncode_class_queue_rejected_total{class=\"batch\"} 2"));
+        assert!(text.contains("syncode_class_aged_promotions_total{class=\"batch\"} 1"));
+        assert!(text
+            .contains("syncode_class_request_latency_seconds{class=\"batch\",quantile=\"0.99\"}"));
+        assert!(text.contains("syncode_class_request_latency_seconds_count{class=\"batch\"} 1"));
+        assert!(text.contains("syncode_class_ttft_seconds_mean{class=\"batch\"} 0.0625"));
         assert!(text.contains("syncode_queue_capacity 64"));
         assert!(text.contains("syncode_replica_requests_finished_total{replica=\"1\"} 4"));
         assert!(text.contains("syncode_http_responses_total{code=\"429\"} 2"));

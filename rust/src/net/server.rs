@@ -7,9 +7,9 @@
 //!   `net/json.rs`, response includes the grammar-validity verdict;
 //! - `POST /v1/generate?stream=1` — the same request streamed as
 //!   Server-Sent Events over chunked transfer-encoding: one `token`
-//!   event per committed token as it leaves the step wave, then one
-//!   terminal `done` event carrying the finish reason and the final
-//!   grammar-validity verdict. A client that disconnects mid-stream
+//!   event per committed token the moment its step decision commits it,
+//!   then one terminal `done` event carrying the finish reason and the
+//!   final grammar-validity verdict. A client that disconnects mid-stream
 //!   cancels its generation and frees the lane.
 //! - `GET  /v1/grammars` — registry listing with per-grammar stats;
 //! - `GET  /healthz` — liveness + queue gauge (503 while draining);
@@ -23,6 +23,10 @@
 //! [`ServerHandle::try_submit_stream`], so a full admission queue
 //! answers 429 and a closed coordinator 503 — a load balancer can react
 //! instead of piling blocked connections onto a saturated server.
+//! Admission is per-SLO-class (the body's `priority` field): each class
+//! has its own queue cap, so the 429 a batch flood earns never blocks an
+//! interactive request, and `/healthz` + `/metrics` expose the per-class
+//! depths.
 //!
 //! Concurrency model: N worker threads all `accept()` on one shared
 //! listener (the kernel load-balances), one **connection** per worker at
@@ -48,7 +52,7 @@ use super::json::{
 use super::prom::{self, HttpStats};
 use crate::artifact::{CompiledGrammar, GrammarRegistry};
 use crate::coordinator::{
-    FinishReason, GenResponse, ServerHandle, StreamHandle, SubmitError, TokenEvent,
+    FinishReason, GenResponse, ServerHandle, SloClass, StreamHandle, SubmitError, TokenEvent,
 };
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -324,11 +328,13 @@ fn handle_generate_stream(state: &Arc<AppState>, req: &Request) -> Handled {
         Err(resp) => return Handled::Plain(resp),
     };
     let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+    let class = body.priority;
     match state.handle.try_submit_stream(body.into_request(id)) {
         Ok(stream) => Handled::Stream(Box::new(StreamJob { art, stream })),
-        Err(SubmitError::QueueFull) => {
-            Handled::Plain(error_response(429, "admission queue is full, retry later"))
-        }
+        Err(SubmitError::QueueFull) => Handled::Plain(error_response(
+            429,
+            &format!("{class} admission queue is full, retry later"),
+        )),
         Err(SubmitError::Closed) => {
             Handled::Plain(error_response(503, "coordinator is shut down"))
         }
@@ -409,12 +415,17 @@ fn handle_generate(state: &Arc<AppState>, req: &Request) -> Response {
         Err(resp) => return resp,
     };
     let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+    let class = body.priority;
     // Non-blocking admission: backpressure becomes a status code instead
-    // of a parked connection handler.
+    // of a parked connection handler. The 429 is per-class — only this
+    // request's own queue being full rejects it.
     let rx = match state.handle.try_submit(body.into_request(id)) {
         Ok(rx) => rx,
         Err(SubmitError::QueueFull) => {
-            return error_response(429, "admission queue is full, retry later");
+            return error_response(
+                429,
+                &format!("{class} admission queue is full, retry later"),
+            );
         }
         Err(SubmitError::Closed) => {
             return error_response(503, "coordinator is shut down");
@@ -492,6 +503,12 @@ fn handle_healthz(state: &Arc<AppState>) -> Response {
         "queue_capacity".to_string(),
         Json::Num(state.handle.queue_cap() as f64),
     );
+    let depths = state.handle.queue_class_depths();
+    let mut by_class = BTreeMap::new();
+    for c in SloClass::ALL {
+        by_class.insert(c.as_str().to_string(), Json::Num(depths[c.index()] as f64));
+    }
+    m.insert("queue_class_depths".to_string(), Json::Obj(by_class));
     let code = if status == "ok" { 200 } else { 503 };
     Response::json(code, Json::Obj(m).to_string())
 }
@@ -503,6 +520,7 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         responses,
         queue_depth: state.handle.queue_depth(),
         queue_cap: state.handle.queue_cap(),
+        class_queue_depths: state.handle.queue_class_depths(),
     };
     let text =
         prom::render(&state.handle.snapshot(), &state.handle.replica_snapshots(), &http);

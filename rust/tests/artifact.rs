@@ -56,7 +56,7 @@ fn registry_serves_two_grammars_in_one_batch() {
                 strategy: Strategy::Temperature(0.8),
                 seed: i * 13 + 1,
                 opportunistic: i % 3 == 0,
-                spec_k: 0,
+                ..Default::default()
             },
             token_sink: None,
         })
@@ -212,7 +212,7 @@ fn mmap_loaded_artifact_serves_requests_across_threads() {
                 strategy: Strategy::Temperature(0.8),
                 seed: i * 7 + 3,
                 opportunistic: i % 2 == 0,
-                spec_k: 0,
+                ..Default::default()
             },
             token_sink: None,
         })

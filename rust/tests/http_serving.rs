@@ -58,7 +58,7 @@ fn start_mock_http(
         Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs(), lanes, 256, 11))
             as Box<dyn LanguageModel>)
     });
-    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap };
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap, ..Default::default() };
     let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
     let server =
         HttpServer::bind("127.0.0.1:0", handle, reg.clone(), HttpConfig { workers: 6 })
@@ -348,7 +348,7 @@ fn start_stalled_http(queue_cap: usize) -> (HttpServer, String, Arc<Gate>, Recei
             entered: entered.lock().unwrap().take(),
         }) as Box<dyn LanguageModel>)
     });
-    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap };
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap, ..Default::default() };
     let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
     let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 6 })
         .expect("bind");
@@ -618,6 +618,197 @@ fn stream_and_blocking_outputs_are_byte_identical_per_seed() {
     assert_eq!(streamed.token_texts.concat() + tail, done_text);
     assert_eq!(Some(streamed.token_count), blocking.get("tokens").and_then(Json::as_usize));
     drop(client);
+    server.shutdown().shutdown();
+}
+
+// --------------------------------------------------------------------------
+// SLO classes: strict-priority admission must let an interactive request
+// jump a batch flood the moment a lane frees.
+
+/// A decode-permit gate: every batched decode call consumes one permit,
+/// blocking until one is granted. Unlike [`Gate`] (one-shot open), this
+/// lets a test advance the single replica exactly one decode at a time
+/// and inspect the scheduler's admission decisions in a stable state.
+struct PermitGate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl PermitGate {
+    fn new() -> Arc<PermitGate> {
+        Arc::new(PermitGate { permits: Mutex::new(0), cv: Condvar::new() })
+    }
+
+    fn grant(&self, n: usize) {
+        *self.permits.lock().unwrap() += n;
+        self.cv.notify_all();
+    }
+
+    fn take(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+}
+
+/// Uniform-logits model that announces and then consumes one permit per
+/// batched decode call. Prefill is free, so admission (and the inline
+/// first-token decision) always proceeds; only decode steps are metered.
+struct PermitModel {
+    vocab: usize,
+    gate: Arc<PermitGate>,
+    entered: Sender<()>,
+}
+
+impl LanguageModel for PermitModel {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn max_seq(&self) -> usize {
+        256
+    }
+
+    fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> syncode::util::error::Result<Vec<f32>> {
+        Ok(vec![0.0; self.vocab])
+    }
+
+    fn decode(
+        &mut self,
+        last: &[Option<u32>],
+    ) -> syncode::util::error::Result<Vec<Option<Vec<f32>>>> {
+        let _ = self.entered.send(());
+        self.gate.take();
+        Ok(last.iter().map(|t| t.map(|_| vec![0.0; self.vocab])).collect())
+    }
+
+    fn release(&mut self, _lane: usize) {}
+
+    fn name(&self) -> &'static str {
+        "permit"
+    }
+}
+
+fn healthz_class_depths(addr: &str) -> (usize, usize) {
+    let (_, body) = fetch(addr, "GET", "/healthz", None).expect("healthz");
+    let v = parse(&body).unwrap_or(Json::Null);
+    let d = v.get("queue_class_depths").cloned().unwrap_or(Json::Null);
+    (
+        d.get("interactive").and_then(Json::as_usize).unwrap_or(usize::MAX),
+        d.get("batch").and_then(Json::as_usize).unwrap_or(usize::MAX),
+    )
+}
+
+#[test]
+fn batch_flood_does_not_starve_interactive() {
+    // Deep-bracket prefixes pin every request to exactly 2 tokens and
+    // exactly 1 decode call (the grammar cannot reach EOS inside 4 more
+    // tokens, so the first token comes from prefill logits and the second
+    // from the single metered decode → MaxTokens). That makes the permit
+    // accounting exact and the scheduling assertions deterministic.
+    // Aging is parked out of reach (60s) so only strict priority acts.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let gate = PermitGate::new();
+    let (etx, entered) = channel();
+    let vocab = tok.vocab_size();
+    let gate_m = gate.clone();
+    let factories = replicate_factory(1, move || {
+        Ok(Box::new(PermitModel { vocab, gate: gate_m.clone(), entered: etx.clone() })
+            as Box<dyn LanguageModel>)
+    });
+    let cfg = CoordinatorConfig {
+        mask_threads: 0,
+        queue_cap: 16,
+        batch_age_ms: 60_000,
+        ..Default::default()
+    };
+    let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
+    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 8 })
+        .expect("bind");
+    let addr = server.local_addr().to_string();
+
+    // A (interactive by default) takes the only lane and stalls in its
+    // single decode.
+    let body_a = r#"{"grammar": "json", "prompt": "pin", "max_tokens": 2, "seed": 1,
+                     "prefix": "[[[["}"#;
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        fetch(addr_a.as_str(), "POST", "/v1/generate", Some(body_a)).expect("request A")
+    });
+    entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+
+    // A batch-class flood queues behind it...
+    let flood: Vec<_> = (0..3u64)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"grammar": "calc", "prompt": "bulk #{i}", "max_tokens": 2,
+                        "seed": {i}, "prefix": "((((", "priority": "batch"}}"#
+                );
+                fetch(addr.as_str(), "POST", "/v1/generate", Some(&body)).expect("batch req")
+            })
+        })
+        .collect();
+    poll_until(30, "flood queued", || healthz_class_depths(&addr) == (0, 3));
+
+    // ...then one interactive request arrives BEHIND the whole flood.
+    let body_i = r#"{"grammar": "json", "prompt": "now", "max_tokens": 2, "seed": 9,
+                     "prefix": "[[[["}"#;
+    let addr_i = addr.clone();
+    let interactive = std::thread::spawn(move || {
+        fetch(addr_i.as_str(), "POST", "/v1/generate", Some(body_i)).expect("interactive")
+    });
+    poll_until(30, "interactive queued", || healthz_class_depths(&addr) == (1, 3));
+
+    // One permit: A finishes, freeing the lane; continuous admission must
+    // dequeue the interactive request PAST the three older batch entries.
+    // The admitted request then blocks in its own decode, so the state is
+    // stable: interactive left the queue, the flood did not move.
+    gate.grant(1);
+    entered.recv_timeout(Duration::from_secs(30)).expect("no successor admitted");
+    let (status, body) = a.join().expect("thread A");
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(
+        healthz_class_depths(&addr),
+        (0, 3),
+        "strict priority must admit the interactive request first"
+    );
+    let (_, text) = fetch(addr.as_str(), "GET", "/metrics", None).unwrap();
+    assert!(
+        text.contains("syncode_class_requests_finished_total{class=\"interactive\"} 1"),
+        "only A should have finished: {text}"
+    );
+    assert!(
+        text.contains("syncode_class_requests_finished_total{class=\"batch\"} 0"),
+        "no batch request may have finished: {text}"
+    );
+
+    // Open the tap: the flood drains too (no starvation in either
+    // direction once the interactive traffic is gone).
+    gate.grant(16);
+    let (status, body) = interactive.join().expect("interactive thread");
+    assert_eq!(status, 200, "{body}");
+    for t in flood {
+        let (status, body) = t.join().expect("flood thread");
+        assert_eq!(status, 200, "{body}");
+    }
+    let (_, text) = fetch(addr.as_str(), "GET", "/metrics", None).unwrap();
+    assert!(
+        text.contains("syncode_class_requests_finished_total{class=\"batch\"} 3"),
+        "{text}"
+    );
+    assert!(
+        text.contains("syncode_class_aged_promotions_total{class=\"batch\"} 0"),
+        "aging must not have fired with a 60s bound: {text}"
+    );
     server.shutdown().shutdown();
 }
 

@@ -48,7 +48,7 @@ fn constrained_serving_all_grammars() {
                     strategy: Strategy::Temperature(0.9),
                     seed: i * 7 + 1,
                     opportunistic: i % 2 == 0,
-                    spec_k: 0,
+                    ..Default::default()
                 },
                 token_sink: None,
             });
@@ -96,7 +96,7 @@ fn gpl_completion_prefix_invariant() {
                     strategy: Strategy::TopP { temp: 0.8, p: 0.9 },
                     seed: t.id,
                     opportunistic: true,
-                    spec_k: 0,
+                    ..Default::default()
                 },
                 token_sink: None,
             });
@@ -229,7 +229,7 @@ fn pjrt_constrained_e2e_valid_json() {
                 strategy: Strategy::TopP { temp: 0.7, p: 0.9 },
                 seed: 5,
                 opportunistic: true,
-                spec_k: 0,
+                ..Default::default()
             },
             token_sink: None,
         });

@@ -7,7 +7,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
 use syncode::coordinator::{
-    Coordinator, CoordinatorConfig, FinishReason, GenParams, GenRequest, GenResponse, Strategy,
+    Coordinator, CoordinatorConfig, FinishReason, GenParams, GenRequest, GenResponse, SloClass,
+    Strategy, TokenEvent,
 };
 use syncode::runtime::{replicate_factory, LanguageModel, MockModel, ModelFactory};
 use syncode::tokenizer::Tokenizer;
@@ -53,6 +54,7 @@ fn request_spec(id: u64, grammar: &str, max_new_tokens: usize, spec_k: usize) ->
             seed: id * 13 + 7,
             opportunistic: id % 2 == 0,
             spec_k,
+            ..Default::default()
         },
         token_sink: None,
     }
@@ -80,8 +82,11 @@ fn assert_grammatical(reg: &GrammarRegistry, grammar: &str, resp: &GenResponse) 
 fn pooled_coordinator_is_byte_identical_to_serial() {
     // The acceptance contract, squared: the replica/mask-pool pipeline
     // must produce exactly the outputs of the old serial step path for
-    // identical seeds — and speculative decoding must change nothing,
-    // at every spec_k, pooled or inline. Baseline: serial, spec off.
+    // identical seeds — and neither speculative decoding nor SLO-class
+    // scheduling may change anything, at every spec_k, pooled or inline.
+    // Classes reorder admission only, so mixing them into every config
+    // (ids 0/3/6 ride the batch queue) must leave bytes untouched.
+    // Baseline: serial, spec off.
     let tok = Arc::new(Tokenizer::ascii_byte_level());
     let reg = registry(&tok);
 
@@ -90,7 +95,11 @@ fn pooled_coordinator_is_byte_identical_to_serial() {
         for (replicas, mask_threads) in [(1usize, 0usize), (2, 2)] {
             let reqs: Vec<GenRequest> = (0..8)
                 .map(|i| {
-                    request_spec(i, if i % 2 == 0 { "json" } else { "calc" }, 48, spec_k)
+                    let mut r =
+                        request_spec(i, if i % 2 == 0 { "json" } else { "calc" }, 48, spec_k);
+                    r.params.slo =
+                        if i % 3 == 0 { SloClass::Batch } else { SloClass::Interactive };
+                    r
                 })
                 .collect();
             let srv = Coordinator::start(
@@ -113,6 +122,89 @@ fn pooled_coordinator_is_byte_identical_to_serial() {
                     base, &out,
                     "spec_k={spec_k} × ({replicas} replicas, {mask_threads} mask threads) \
                      diverged from the serial spec-off path"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_freed_mid_decode_admits_queued_request_before_long_lane_finishes() {
+    // The continuous-batching acceptance test. One replica, two lanes:
+    // A is pinned long (an 80-deep bracket prefix makes EOS unreachable,
+    // so it runs to MaxTokens at exactly 64 chunks), B finishes within
+    // 2 tokens, C waits in the queue. The moment B's lane frees, C must
+    // be admitted and commit its (single) token while A is still
+    // mid-generation. A and C share one token sink, and one scheduler
+    // thread feeds it in commit order — so the proof is ordering on a
+    // single channel, no cross-thread timing: the merged stream must
+    // contain two index-0 chunks (A's first, then C's only one) and end
+    // with A's index-63 chunk.
+    //
+    // And scheduling must never touch bytes: all three texts have to be
+    // identical across spec_k {0,4} × {inline, pooled}.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+
+    let mut baseline: Option<Vec<(u64, String)>> = None;
+    for spec_k in [0usize, 4] {
+        for mask_threads in [0usize, 2] {
+            let srv = Coordinator::start(
+                factories(&tok, 1, 2),
+                tok.clone(),
+                reg.clone(),
+                CoordinatorConfig { mask_threads, ..Default::default() },
+            );
+            let (tx, events) = std::sync::mpsc::channel();
+            let mut a = request_spec(1, "json", 64, spec_k);
+            a.constraint_prefix = "[".repeat(80);
+            a.token_sink = Some(tx.clone());
+            let mut b = request_spec(2, "json", 2, spec_k);
+            b.constraint_prefix = "[".repeat(80);
+            let mut c = request_spec(3, "calc", 1, 0);
+            c.token_sink = Some(tx);
+            // Submission order fills both lanes (A, B) and queues C.
+            let rxs = [srv.submit(a), srv.submit(b), srv.submit(c)];
+
+            // Drain the shared stream until both sinks are dropped (their
+            // lanes finished); Token events arrive in commit order.
+            let mut chunks: Vec<usize> = Vec::new();
+            let mut finished = 0usize;
+            while let Ok(ev) = events.recv() {
+                match ev {
+                    TokenEvent::Token(t) => chunks.push(t.index),
+                    TokenEvent::Finished { .. } => finished += 1,
+                }
+            }
+            assert_eq!(finished, 2, "A and C must each terminate their stream");
+            assert_eq!(chunks.len(), 65, "A commits exactly 64 tokens, C exactly 1");
+            let zeros: Vec<usize> =
+                chunks.iter().enumerate().filter(|(_, i)| **i == 0).map(|(p, _)| p).collect();
+            assert_eq!(zeros.len(), 2, "two first-token commits on the shared sink");
+            assert_eq!(
+                *chunks.last().unwrap(),
+                63,
+                "C's token must land BEFORE A's final chunk — the freed lane \
+                 was not refilled mid-decode (spec_k={spec_k}, \
+                 mask_threads={mask_threads})"
+            );
+
+            let mut out: Vec<(u64, String)> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let resp = rx.recv().unwrap();
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    (resp.id, resp.text)
+                })
+                .collect();
+            out.sort();
+            srv.shutdown();
+            match &baseline {
+                None => baseline = Some(out),
+                Some(base) => assert_eq!(
+                    base, &out,
+                    "continuous admission changed bytes at spec_k={spec_k}, \
+                     mask_threads={mask_threads}"
                 ),
             }
         }

@@ -6,9 +6,11 @@ Usage: http_smoke.py ADDR   (e.g. 127.0.0.1:8642, already listening)
 Fires concurrent `POST /v1/generate` requests alternating over the json and
 calc grammars, asserts every response is 200 with `valid: true` (zero syntax
 errors), checks the SSE streaming variant (`?stream=1`) delivers per-token
-events and a valid terminal `done` event, validates that `/metrics` parses as
-Prometheus text and reflects the finished requests, then drains the server
-via `POST /admin/shutdown`. Stdlib only — CI needs nothing beyond python3.
+events and a valid terminal `done` event, exercises the SLO `priority` body
+field (a `batch`-class request succeeds; an unknown class is a 400), validates
+that `/metrics` parses as Prometheus text and reflects the finished requests
+per class, then drains the server via `POST /admin/shutdown`. Stdlib only —
+CI needs nothing beyond python3.
 """
 
 import json
@@ -48,6 +50,13 @@ def check_metrics(text):
             finished = float(value)
     assert finished is not None, "syncode_requests_finished_total missing"
     assert finished >= N_REQUESTS, f"metrics report only {finished} finished requests"
+    for family in (
+        'syncode_class_requests_finished_total{class="interactive"}',
+        'syncode_class_requests_finished_total{class="batch"}',
+    ):
+        assert any(
+            line.startswith(family) for line in text.splitlines()
+        ), f"per-class family missing: {family}"
     server_errors = [
         line
         for line in text.splitlines()
@@ -117,13 +126,34 @@ def main():
     reassembled = "".join(t["text"] for t in tokens) + done.get("tail", "")
     assert reassembled == done["text"], "chunks + tail != final text"
 
+    # SLO classes over the wire: a batch-priority request rides the same
+    # endpoint (scheduling-only — the response shape is identical), and an
+    # unknown priority is a 400 at decode time, before admission.
+    payload = json.dumps(
+        {
+            "grammar": "calc",
+            "prompt": "low priority sum",
+            "max_tokens": 32,
+            "seed": 9,
+            "priority": "batch",
+        }
+    )
+    status, body = req(addr, "POST", "/v1/generate", payload)
+    assert status == 200, f"batch-priority request: {status} {body}"
+    assert json.loads(body).get("valid"), f"batch-priority response invalid: {body}"
+    status, body = req(addr, "POST", "/v1/generate", json.dumps({"priority": "urgent"}))
+    assert status == 400, f"bad priority should be 400: {status} {body}"
+
     status, text = req(addr, "GET", "/metrics")
     assert status == 200, f"metrics: {status}"
     check_metrics(text)
 
     status, body = req(addr, "POST", "/admin/shutdown", "{}")
     assert status == 200, f"shutdown: {status} {body}"
-    print(f"http smoke OK: {N_REQUESTS}/{N_REQUESTS} valid, metrics parsed, graceful shutdown")
+    print(
+        f"http smoke OK: {N_REQUESTS}/{N_REQUESTS} valid, stream + priority classes, "
+        "metrics parsed, graceful shutdown"
+    )
 
 
 if __name__ == "__main__":

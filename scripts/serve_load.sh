@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Open-loop serving load driver — the one-command way to reproduce the
+# BENCH_serve.json trajectory locally (docs/benchmarks.md).
+#
+# Usage:
+#   scripts/serve_load.sh                 # default: 96 requests at 64/s
+#   scripts/serve_load.sh 512 128         # heavier: 512 requests at 128/s
+#   JSON_OUT=/tmp/serve.json scripts/serve_load.sh
+#
+# The harness is open-loop: arrivals follow a fixed-seed Poisson schedule
+# and are submitted through the non-blocking path, so raising the rate
+# past what the coordinator sustains shows up as queueing in the p99/p999
+# columns (and eventually shed requests) instead of silently slowing the
+# generator down. Latency percentiles are client-observed from the submit
+# instant, per SLO class.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REQUESTS="${1:-96}"
+RATE="${2:-64}"
+JSON_OUT="${JSON_OUT:-BENCH_serve.json}"
+
+cargo bench --bench serve_load -- \
+    --requests "$REQUESTS" --rate "$RATE" --json "$JSON_OUT"
+
+echo
+echo "trajectory: $JSON_OUT (latest entries last; one per SLO class)"

@@ -54,6 +54,13 @@ cargo test -q
 echo "== trie-vs-reference parity (cargo test --test trie_parity) =="
 cargo test -q --test trie_parity
 
+# Fault tolerance is the ISSUE-9 acceptance gate: injected prefill/decode
+# panics, clean decode errors, stalls and deadline expiries must leave
+# survivors byte-identical, respawn the replica (bounded) and free every
+# lane. Named explicitly so a regression is unmissable, in BOTH tiers.
+echo "== fault-injection suite (cargo test --test faults) =="
+cargo test -q --test faults
+
 if [[ "$fast" == "0" ]]; then
   # Serving stress under a time cap: 2 replicas × 2 mask threads over a
   # mixed multi-grammar batch on the mock model must finish with zero

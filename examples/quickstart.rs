@@ -39,7 +39,7 @@ fn main() {
     // 3. Serve: model + per-request SynCode engines from the artifact.
     let tok_m = tok.clone();
     let srv = Server::start(
-        Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m, &docs, 2, 384, 11)))),
+        Box::new(move || Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs, 2, 384, 11)))),
         tok.clone(),
         art.engine_factory(),
     );

@@ -1,0 +1,239 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] schedules faults by *call ordinal* — "the 2nd prefill
+//! panics", "the 3rd decode-path step stalls 500 ms" — so a test run is
+//! exactly reproducible: no randomness, no timing races deciding whether
+//! the fault fires. [`FaultyModel`] wraps any [`LanguageModel`] and
+//! executes the plan in front of the inner model, leaving the inner
+//! state untouched when a fault fires (a scheduled panic or error raises
+//! *before* delegating), which is what lets the fault suite assert
+//! byte-identity for surviving lanes against a no-fault run.
+//!
+//! The call counters live behind `Arc`s shared by every clone of the
+//! plan. That is deliberate: a replica's `ModelFactory` clones the plan
+//! into each model incarnation, so when the supervisor respawns a
+//! replica after a scheduled panic, the respawned model *continues* the
+//! count — a one-shot "panic at call N" never refires, and the respawn
+//! path can be tested draining a real queue.
+//!
+//! Fault classes:
+//! - **panic** (on prefill or on a decode-path step) — exercises the
+//!   replica's `catch_unwind` fences and the supervisor respawn path.
+//! - **error** (on a decode-path step) — a clean backend failure: the
+//!   replica fails its active lanes but keeps the thread and the model.
+//! - **stall** (on a decode-path step) — a slow step, for driving
+//!   per-request deadlines past expiry deterministically.
+//! - **sink disconnect** is *harness-driven*, not modelled here: drop a
+//!   [`super::StreamHandle`]'s `events` receiver mid-stream and the
+//!   replica observes the failed send (`FinishReason::Cancelled`). It
+//!   needs no model cooperation, so it has no `FaultPlan` knob.
+
+use crate::bail;
+use crate::runtime::LanguageModel;
+use crate::util::error::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A deterministic schedule of faults, keyed by call ordinal (1-based).
+/// Clones share their call counters — see the module docs for why.
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    panic_on_prefill: Option<u64>,
+    panic_on_step: Option<u64>,
+    error_on_step: Option<u64>,
+    stall_on_step: Option<(u64, u64)>,
+    prefill_calls: Arc<AtomicU64>,
+    step_calls: Arc<AtomicU64>,
+}
+
+impl FaultPlan {
+    /// An empty plan: injects nothing (the wrapped model is transparent).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Panic on the `n`-th `prefill` call (1-based, counted across model
+    /// incarnations).
+    pub fn panic_on_prefill(mut self, n: u64) -> FaultPlan {
+        self.panic_on_prefill = Some(n);
+        self
+    }
+
+    /// Panic on the `n`-th decode-path step (1-based; `decode` and
+    /// `decode_spec` share one ordinal sequence).
+    pub fn panic_on_step(mut self, n: u64) -> FaultPlan {
+        self.panic_on_step = Some(n);
+        self
+    }
+
+    /// Return a clean `Err` from the `n`-th decode-path step.
+    pub fn error_on_step(mut self, n: u64) -> FaultPlan {
+        self.error_on_step = Some(n);
+        self
+    }
+
+    /// Sleep `ms` milliseconds before executing the `n`-th decode-path
+    /// step (then run it normally) — a deterministic slow step.
+    pub fn stall_on_step(mut self, n: u64, ms: u64) -> FaultPlan {
+        self.stall_on_step = Some((n, ms));
+        self
+    }
+
+    /// Decode-path steps observed so far (for test assertions).
+    pub fn steps_seen(&self) -> u64 {
+        self.step_calls.load(Ordering::SeqCst)
+    }
+
+    /// Prefills observed so far (for test assertions).
+    pub fn prefills_seen(&self) -> u64 {
+        self.prefill_calls.load(Ordering::SeqCst)
+    }
+
+    fn on_prefill(&self) -> u64 {
+        self.prefill_calls.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    fn on_step(&self) -> u64 {
+        self.step_calls.fetch_add(1, Ordering::SeqCst) + 1
+    }
+}
+
+/// A [`LanguageModel`] wrapper executing a [`FaultPlan`] in front of an
+/// inner model. Scheduled faults fire *before* delegating, so the inner
+/// model's lane state is never half-mutated by an injected failure.
+pub struct FaultyModel {
+    inner: Box<dyn LanguageModel>,
+    plan: FaultPlan,
+}
+
+impl FaultyModel {
+    pub fn new(inner: Box<dyn LanguageModel>, plan: FaultPlan) -> FaultyModel {
+        FaultyModel { inner, plan }
+    }
+
+    /// Count one decode-path step and fire whatever the plan schedules
+    /// for this ordinal (stall, then panic, then error).
+    fn step_fault(&self, what: &str) -> Result<()> {
+        let n = self.plan.on_step();
+        if let Some((at, ms)) = self.plan.stall_on_step {
+            if n == at {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        if self.plan.panic_on_step == Some(n) {
+            panic!("fault injection: {what} step {n} panics by plan");
+        }
+        if self.plan.error_on_step == Some(n) {
+            bail!("fault injection: {what} step {n} fails by plan");
+        }
+        Ok(())
+    }
+}
+
+impl LanguageModel for FaultyModel {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+
+    fn prefill(&mut self, lane: usize, tokens: &[u32]) -> Result<Vec<f32>> {
+        let n = self.plan.on_prefill();
+        if self.plan.panic_on_prefill == Some(n) {
+            panic!("fault injection: prefill {n} panics by plan");
+        }
+        self.inner.prefill(lane, tokens)
+    }
+
+    fn decode(&mut self, last: &[Option<u32>]) -> Result<Vec<Option<Vec<f32>>>> {
+        self.step_fault("decode")?;
+        self.inner.decode(last)
+    }
+
+    fn draft(&mut self, lane: usize, k: usize) -> Vec<u32> {
+        self.inner.draft(lane, k)
+    }
+
+    fn decode_spec(&mut self, drafts: &[Option<Vec<u32>>]) -> Result<Vec<Option<Vec<Vec<f32>>>>> {
+        self.step_fault("decode_spec")?;
+        self.inner.decode_spec(drafts)
+    }
+
+    fn rollback(&mut self, lane: usize, n: usize) {
+        self.inner.rollback(lane, n)
+    }
+
+    fn release(&mut self, lane: usize) {
+        self.inner.release(lane)
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockModel;
+    use crate::tokenizer::Tokenizer;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn faulty(plan: FaultPlan) -> FaultyModel {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let inner = MockModel::from_documents(tok, &[b"ab ab".to_vec()], 2, 64, 3);
+        FaultyModel::new(Box::new(inner), plan)
+    }
+
+    #[test]
+    fn transparent_without_faults() {
+        let plan = FaultPlan::new();
+        let mut m = faulty(plan.clone());
+        let logits = m.prefill(0, &[b'a' as u32]).unwrap();
+        assert!(!logits.is_empty());
+        assert!(m.decode(&[Some(b'b' as u32), None]).is_ok());
+        assert_eq!(plan.prefills_seen(), 1);
+        assert_eq!(plan.steps_seen(), 1);
+        assert_eq!(m.name(), "faulty");
+    }
+
+    #[test]
+    fn scheduled_faults_fire_at_exact_ordinals_and_never_refire() {
+        let plan = FaultPlan::new().panic_on_prefill(2).error_on_step(2);
+        let mut m = faulty(plan.clone());
+        assert!(m.prefill(0, &[b'a' as u32]).is_ok(), "prefill 1 clean");
+        let p = catch_unwind(AssertUnwindSafe(|| m.prefill(1, &[b'a' as u32])));
+        assert!(p.is_err(), "prefill 2 panics by plan");
+        assert!(m.decode(&[Some(b'b' as u32), None]).is_ok(), "step 1 clean");
+        let err = m.decode(&[Some(b'a' as u32), None]).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+        // A clone — the respawned-model path — shares the counters, so
+        // the one-shot ordinals are already consumed and nothing refires.
+        let mut respawned = faulty(plan.clone());
+        assert!(respawned.prefill(0, &[b'a' as u32]).is_ok());
+        assert!(respawned.decode(&[Some(b'b' as u32), None]).is_ok());
+        assert_eq!(plan.prefills_seen(), 3);
+        assert_eq!(plan.steps_seen(), 3);
+    }
+
+    #[test]
+    fn faults_fire_before_delegation_so_inner_state_is_clean() {
+        // The scheduled panic raises before the inner model sees the
+        // call: the lane it targeted is still inactive afterwards, which
+        // is what keeps faulted runs byte-comparable for survivors.
+        let plan = FaultPlan::new().panic_on_prefill(1);
+        let mut m = faulty(plan);
+        let p = catch_unwind(AssertUnwindSafe(|| m.prefill(0, &[b'a' as u32])));
+        assert!(p.is_err());
+        // An inactive lane makes decode report a clean error, proving
+        // prefill never reached the inner mock.
+        assert!(m.decode(&[Some(b'a' as u32), None]).is_err());
+    }
+}

@@ -133,6 +133,14 @@ pub struct Metrics {
     /// Streamed requests whose client disconnected mid-generation (the
     /// lane was freed without finishing; not counted as an engine error).
     pub streams_cancelled: u64,
+    /// Lanes that finished [`FinishReason::Failed`] because a model/engine
+    /// step panicked and the panic was caught at the replica boundary
+    /// (`super::types::FinishReason::Failed`). Distinct from
+    /// `engine_errors`, which are clean `Err` returns.
+    pub lane_failures: u64,
+    /// Replica threads respawned by the supervisor after dying with the
+    /// admission queue still open (model panic or backend failure).
+    pub replica_restarts: u64,
     /// Jobs executed by the mask worker pool (steps + prewarms).
     pub mask_pool_jobs: u64,
     /// Prewarm jobs that warmed the next step's analysis/mask while the
@@ -177,6 +185,12 @@ pub struct ClassMetrics {
     /// higher-priority class because its oldest entry aged past the
     /// starvation bound.
     pub aged_promotions: u64,
+    /// Requests of this class shed *at dequeue* because their
+    /// `deadline_ms` expired while still queued (never occupied a lane).
+    pub deadline_shed_queued: u64,
+    /// Running lanes of this class finished with
+    /// `FinishReason::DeadlineExceeded` by the per-iteration check.
+    pub deadline_exceeded: u64,
     /// Admission-to-finish latency of this class's served generations.
     pub latency: Histogram,
     /// Admission-to-first-token latency of this class's served generations.
@@ -188,6 +202,8 @@ impl ClassMetrics {
         self.finished += other.finished;
         self.queue_rejected += other.queue_rejected;
         self.aged_promotions += other.aged_promotions;
+        self.deadline_shed_queued += other.deadline_shed_queued;
+        self.deadline_exceeded += other.deadline_exceeded;
         self.latency.merge(&other.latency);
         self.ttft.merge(&other.ttft);
     }
@@ -202,6 +218,10 @@ pub struct ClassSnapshot {
     pub queue_rejected: u64,
     /// Aged dequeues that jumped the priority order (batch only).
     pub aged_promotions: u64,
+    /// Deadline expiries shed at dequeue (never ran).
+    pub deadline_shed_queued: u64,
+    /// Running lanes finished by the per-iteration deadline check.
+    pub deadline_exceeded: u64,
     /// Mean admission-to-finish latency (seconds).
     pub mean_latency: f64,
     /// p50 admission-to-finish latency (seconds).
@@ -223,6 +243,10 @@ pub struct MetricsSnapshot {
     pub engine_errors: u64,
     /// Streams cancelled by client disconnect (lane freed mid-generation).
     pub streams_cancelled: u64,
+    /// Lanes failed by a caught panic (see `Metrics::lane_failures`).
+    pub lane_failures: u64,
+    /// Replica threads respawned by the supervisor.
+    pub replica_restarts: u64,
     pub mask_pool_jobs: u64,
     pub masks_prewarmed: u64,
     pub drafts_proposed: u64,
@@ -269,6 +293,8 @@ impl Metrics {
         self.opportunistic_hits += other.opportunistic_hits;
         self.engine_errors += other.engine_errors;
         self.streams_cancelled += other.streams_cancelled;
+        self.lane_failures += other.lane_failures;
+        self.replica_restarts += other.replica_restarts;
         self.mask_pool_jobs += other.mask_pool_jobs;
         self.masks_prewarmed += other.masks_prewarmed;
         self.drafts_proposed += other.drafts_proposed;
@@ -298,6 +324,8 @@ impl Metrics {
             opportunistic_hits: self.opportunistic_hits,
             engine_errors: self.engine_errors,
             streams_cancelled: self.streams_cancelled,
+            lane_failures: self.lane_failures,
+            replica_restarts: self.replica_restarts,
             mask_pool_jobs: self.mask_pool_jobs,
             masks_prewarmed: self.masks_prewarmed,
             drafts_proposed: self.drafts_proposed,
@@ -320,6 +348,8 @@ impl Metrics {
                     finished: c.finished,
                     queue_rejected: c.queue_rejected,
                     aged_promotions: c.aged_promotions,
+                    deadline_shed_queued: c.deadline_shed_queued,
+                    deadline_exceeded: c.deadline_exceeded,
                     mean_latency: c.latency.mean(),
                     p50_latency: c.latency.quantile(0.5),
                     p99_latency: c.latency.quantile(0.99),
@@ -378,19 +408,33 @@ impl MetricsSnapshot {
         if self.streams_cancelled > 0 {
             s.push_str(&format!(" streams-cancelled={}", self.streams_cancelled));
         }
+        if self.lane_failures > 0 || self.replica_restarts > 0 {
+            s.push_str(&format!(
+                " faults(lane-failures={} replica-restarts={})",
+                self.lane_failures, self.replica_restarts
+            ));
+        }
         // Per-class split only once both classes matter: batch traffic was
-        // served, a class hit its admission cap, or aging promoted a
-        // batch request past interactive ones.
+        // served, a class hit its admission cap, aging promoted a batch
+        // request past interactive ones, or deadlines shed/cut anything.
         let classes_active = self.classes[SloClass::Batch.index()].finished > 0
-            || self.classes.iter().any(|c| c.queue_rejected > 0 || c.aged_promotions > 0);
+            || self.classes.iter().any(|c| {
+                c.queue_rejected > 0
+                    || c.aged_promotions > 0
+                    || c.deadline_shed_queued > 0
+                    || c.deadline_exceeded > 0
+            });
         if classes_active {
             for (class, c) in SloClass::ALL.iter().zip(&self.classes) {
                 s.push_str(&format!(
-                    " {}(finished={} rejected={} aged={} latency p50/p99={:.3}s/{:.3}s ttft={:.3}s)",
+                    " {}(finished={} rejected={} aged={} deadline shed/cut={}/{} \
+                     latency p50/p99={:.3}s/{:.3}s ttft={:.3}s)",
                     class,
                     c.finished,
                     c.queue_rejected,
                     c.aged_promotions,
+                    c.deadline_shed_queued,
+                    c.deadline_exceeded,
                     c.p50_latency,
                     c.p99_latency,
                     c.mean_ttft,
@@ -472,13 +516,21 @@ mod tests {
         a.tokens_generated = 10;
         b.tokens_generated = 5;
         b.engine_errors = 2;
+        b.lane_failures = 1;
+        b.replica_restarts = 3;
         b.latency.record(0.5);
         b.queue_depth.record(4);
         a.merge(&b);
         assert_eq!(a.tokens_generated, 15);
         assert_eq!(a.engine_errors, 2);
+        assert_eq!(a.lane_failures, 1);
+        assert_eq!(a.replica_restarts, 3);
         assert_eq!(a.latency.count(), 1);
         assert_eq!(a.queue_depth.max(), 4);
+        let report = a.snapshot().report();
+        assert!(report.contains("faults(lane-failures=1 replica-restarts=3)"));
+        // Fault-free metrics keep the report clean.
+        assert!(!Metrics::default().snapshot().report().contains("faults("));
     }
 
     #[test]
@@ -531,5 +583,22 @@ mod tests {
         let mut only = Metrics::default();
         only.classes[i].finished = 5;
         assert!(!only.snapshot().report().contains("interactive("));
+    }
+
+    #[test]
+    fn deadline_counters_merge_and_activate_class_report() {
+        let i = SloClass::Interactive.index();
+        let mut a = Metrics::default();
+        a.classes[i].finished = 2;
+        a.classes[i].deadline_shed_queued = 1;
+        let mut b = Metrics::default();
+        b.classes[i].deadline_shed_queued = 2;
+        b.classes[i].deadline_exceeded = 1;
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.classes[i].deadline_shed_queued, 3);
+        assert_eq!(s.classes[i].deadline_exceeded, 1);
+        // Deadline activity alone must surface the per-class split.
+        assert!(s.report().contains("deadline shed/cut=3/1"));
     }
 }

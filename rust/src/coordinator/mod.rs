@@ -38,6 +38,7 @@
 
 pub mod beam;
 mod dispatch;
+pub mod faults;
 mod maskpool;
 mod metrics;
 mod replica;
@@ -48,6 +49,7 @@ pub use beam::{beam_generate, BeamHypothesis};
 pub use dispatch::{
     Coordinator, CoordinatorConfig, Server, ServerHandle, StreamHandle, SubmitError,
 };
+pub use faults::{FaultPlan, FaultyModel};
 pub use metrics::{ClassMetrics, ClassSnapshot, DepthGauge, Histogram, Metrics, MetricsSnapshot};
 pub use sampler::{sample_token, Strategy};
 pub use types::{

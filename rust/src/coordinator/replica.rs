@@ -34,7 +34,7 @@
 //! a lane's first step never drafts — speculation starts from its second
 //! step — which is invisible in the output bytes.)
 
-use super::dispatch::{PendingReq, ReplicaGuard, SharedQueue};
+use super::dispatch::{PendingReq, ReplicaExit, SharedQueue};
 use super::maskpool::{
     decide_step, prune_draft, Decision, PoolClient, Prewarmed, SpecStep, StepOutcome,
     StepRequest, StepResult,
@@ -44,13 +44,14 @@ use super::types::{
     EngineProvider, FinishReason, GenRequest, GenResponse, TokenChunk, TokenEvent,
 };
 use crate::engine::ConstraintEngine;
-use crate::runtime::{LanguageModel, ModelFactory};
+use crate::runtime::LanguageModel;
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
 use crate::util::utf8::Utf8Stream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-replica metrics sink. A replica records only into its own
 /// instance; the coordinator-wide view is merged on demand by
@@ -69,7 +70,6 @@ impl ReplicaMetrics {
 /// Everything a replica thread needs, moved into it at spawn.
 pub(crate) struct ReplicaCtx {
     pub id: usize,
-    pub model_factory: ModelFactory,
     pub tok: Arc<Tokenizer>,
     pub provider: Arc<dyn EngineProvider>,
     pub queue: Arc<SharedQueue>,
@@ -78,10 +78,10 @@ pub(crate) struct ReplicaCtx {
     /// Server-side ceiling on per-request `spec_k`
     /// (`CoordinatorConfig::spec_k_cap`).
     pub spec_k_cap: usize,
-    /// Liveness guard: when the last replica exits (normally or via
-    /// panic/unwind), its drop closes the queue and rejects what's left,
-    /// so submitters never hang on a dead coordinator.
-    pub guard: ReplicaGuard,
+    /// Exit signal + model factory, dropped on every exit path (panic
+    /// unwind included) so the supervisor always learns this thread is
+    /// gone and gets the factory back for a possible respawn.
+    pub exit: ReplicaExit,
 }
 
 /// One lane's in-flight request. The engine is `Option` because it
@@ -96,22 +96,30 @@ struct Lane {
     t_admit: Instant,
     ttft: Option<f64>,
     prompt_len: usize,
+    /// Absolute deadline (enqueue time + the request's `deadline_ms`),
+    /// checked by the per-iteration budget pass. `None` = no deadline.
+    deadline: Option<Instant>,
     /// Incremental UTF-8 state for streamed chunks (only advanced when
     /// the request carries a token sink).
     utf8: Utf8Stream,
 }
 
 pub(crate) fn run_replica(ctx: ReplicaCtx) {
-    let ReplicaCtx { id, model_factory, tok, provider, queue, pool, metrics, spec_k_cap, guard } =
-        ctx;
-    let _guard = guard;
-    let mut model: Box<dyn LanguageModel> = match model_factory() {
-        Ok(m) => m,
-        Err(e) => {
-            // This replica can't serve; exit and let the others pull from
-            // the queue. If it was the last one, the guard rejects
-            // pending requests instead of stranding them.
+    let ReplicaCtx { id, tok, provider, queue, pool, metrics, spec_k_cap, exit } = ctx;
+    // `exit` is dropped on every return below (and on any unwind this
+    // function's fences miss), signalling the supervisor.
+    let built = catch_unwind(AssertUnwindSafe(|| (exit.factory())()));
+    let mut model: Box<dyn LanguageModel> = match built {
+        Ok(Ok(m)) => m,
+        Ok(Err(e)) => {
+            // This replica can't serve; exit and let the supervisor retry
+            // (bounded) or, if every replica is gone for good, close the
+            // queue and reject what's pending instead of stranding it.
             eprintln!("[replica {id}: model construction failed: {e}]");
+            return;
+        }
+        Err(p) => {
+            eprintln!("[replica {id}: {}]", panic_msg(p, "model construction"));
             return;
         }
     };
@@ -124,7 +132,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
         // or the queue is closed *and* drained. (A busy replica never
         // parks — freed lanes are refilled non-blockingly by the
         // continuous-admission pass below.)
-        let mut next: Option<PendingReq> = None;
+        let mut next: Option<(PendingReq, Instant)> = None;
         if lanes.iter().all(|l| l.is_none()) {
             match queue.pop_blocking() {
                 Some(p) => next = Some(p),
@@ -157,6 +165,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
         {
             let mut drafts: Vec<Option<Vec<u32>>> = vec![None; nlanes];
             let mut any = false;
+            let mut poisoned: Option<String> = None;
             for (lane_idx, slot) in lanes.iter_mut().enumerate() {
                 let Some(lane) = slot.as_mut() else { continue };
                 let k = lane.req.params.spec_k.min(spec_k_cap);
@@ -176,7 +185,15 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                 if bound < 2 {
                     continue;
                 }
-                let proposed = model.draft(lane_idx, k.min(bound - 1));
+                let proposed =
+                    match catch_unwind(AssertUnwindSafe(|| model.draft(lane_idx, k.min(bound - 1))))
+                    {
+                        Ok(p) => p,
+                        Err(p) => {
+                            poisoned = Some(panic_msg(p, "draft"));
+                            break;
+                        }
+                    };
                 if proposed.is_empty() {
                     continue;
                 }
@@ -192,9 +209,16 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                 drafts[lane_idx] = Some(proposed[..kept].to_vec());
                 any = true;
             }
+            if let Some(msg) = poisoned {
+                // A panicking draft source leaves the model in an unknown
+                // state: fail every active lane and hand the thread back
+                // to the supervisor for a fresh-model respawn.
+                fail_all_lanes(&mut lanes, model.as_mut(), &tok, &metrics, &msg);
+                return;
+            }
             if any {
-                match model.decode_spec(&drafts) {
-                    Ok(rows) => {
+                match catch_unwind(AssertUnwindSafe(|| model.decode_spec(&drafts))) {
+                    Ok(Ok(rows)) => {
                         for (lane_idx, (d, r)) in drafts.into_iter().zip(rows).enumerate() {
                             if let (Some(draft), Some(logits)) = (d, r) {
                                 debug_assert_eq!(draft.len(), logits.len());
@@ -202,9 +226,11 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                             }
                         }
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         // Same contract as a failed decode: the model is in
-                        // an unknown state — fail every active lane.
+                        // an unknown state — fail every active lane. The
+                        // backend returned cleanly, so the model object is
+                        // still usable for fresh lanes: keep the thread.
                         for (lane_idx, slot) in lanes.iter_mut().enumerate() {
                             if let Some(lane) = slot.take() {
                                 finish_lane(
@@ -218,6 +244,11 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                             }
                         }
                         continue;
+                    }
+                    Err(p) => {
+                        let msg = panic_msg(p, "decode_spec");
+                        fail_all_lanes(&mut lanes, model.as_mut(), &tok, &metrics, &msg);
+                        return;
                     }
                 }
             }
@@ -319,7 +350,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
         let mut decode_result = None;
         if last.iter().any(|t| t.is_some()) {
             metrics.with(|m| m.decode_steps += 1);
-            decode_result = Some(model.decode(&last));
+            decode_result = Some(catch_unwind(AssertUnwindSafe(|| model.decode(&last))));
         }
 
         // ---- collect prewarmed engines ---------------------------------
@@ -350,7 +381,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
 
         // ---- install fresh logits --------------------------------------
         match decode_result {
-            Some(Ok(all)) => {
+            Some(Ok(Ok(all))) => {
                 for (lane_idx, lg) in all.into_iter().enumerate() {
                     if let (Some(lane), Some(lg)) =
                         (lanes.get_mut(lane_idx).and_then(|s| s.as_mut()), lg)
@@ -359,8 +390,10 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                     }
                 }
             }
-            Some(Err(e)) => {
-                // Model failure: fail all active lanes.
+            Some(Ok(Err(e))) => {
+                // Clean model failure: fail all active lanes but keep the
+                // thread — the backend reported the error in an orderly
+                // way, so fresh lanes can still be served.
                 for (lane_idx, slot) in lanes.iter_mut().enumerate() {
                     if let Some(lane) = slot.take() {
                         finish_lane(
@@ -374,7 +407,46 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
                     }
                 }
             }
+            Some(Err(p)) => {
+                // The backend *panicked* mid-step: the model is poisoned.
+                // Every active lane gets one terminal `Failed` outcome,
+                // then the thread returns so the supervisor respawns it
+                // with a fresh model — the panic never unwinds the
+                // scheduler, and sibling replicas never notice.
+                let msg = panic_msg(p, "decode");
+                fail_all_lanes(&mut lanes, model.as_mut(), &tok, &metrics, &msg);
+                return;
+            }
             None => {}
+        }
+    }
+}
+
+/// Turn a caught panic payload into a human-readable error string.
+fn panic_msg(p: Box<dyn std::any::Any + Send>, what: &str) -> String {
+    let detail = p
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    format!("model panicked during {what}: {detail}")
+}
+
+/// Fail every active lane with [`FinishReason::Failed`] (one terminal
+/// event each, lane released, `lane_failures` counted) after a caught
+/// model panic. `release` runs behind its own fence — a poisoned model
+/// may panic again, and the lanes' terminal events must still go out.
+fn fail_all_lanes(
+    lanes: &mut [Option<Lane>],
+    model: &mut dyn LanguageModel,
+    tok: &Arc<Tokenizer>,
+    metrics: &ReplicaMetrics,
+    msg: &str,
+) {
+    for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+        if let Some(lane) = slot.take() {
+            finish_lane(lane, FinishReason::Failed, Some(msg.to_string()), tok, metrics);
+            let _ = catch_unwind(AssertUnwindSafe(|| model.release(lane_idx)));
         }
     }
 }
@@ -395,7 +467,7 @@ pub(crate) fn run_replica(ctx: ReplicaCtx) {
 #[allow(clippy::too_many_arguments)]
 fn admit_free_lanes(
     lanes: &mut [Option<Lane>],
-    next: &mut Option<PendingReq>,
+    next: &mut Option<(PendingReq, Instant)>,
     queue: &SharedQueue,
     provider: &dyn EngineProvider,
     tok: &Arc<Tokenizer>,
@@ -411,7 +483,8 @@ fn admit_free_lanes(
         // One slot may consume several queue entries: admission failures
         // and instantly-finished requests don't occupy it.
         'fill: loop {
-            let Some((req, resp_tx)) = next.take().or_else(|| queue.try_pop()) else {
+            let Some(((req, resp_tx), t_enqueue)) = next.take().or_else(|| queue.try_pop())
+            else {
                 break 'fill;
             };
             metrics.with(|m| m.mark_started());
@@ -438,9 +511,9 @@ fn admit_free_lanes(
                 ids = ids[ids.len() - cap..].to_vec();
             }
             let t_admit = Instant::now();
-            let logits = match model.prefill(lane_idx, &ids) {
-                Ok(l) => l,
-                Err(e) => {
+            let logits = match catch_unwind(AssertUnwindSafe(|| model.prefill(lane_idx, &ids))) {
+                Ok(Ok(l)) => l,
+                Ok(Err(e)) => {
                     metrics.with(|m| {
                         m.requests_finished += 1;
                         m.engine_errors += 1;
@@ -450,8 +523,27 @@ fn admit_free_lanes(
                     let _ = resp_tx.send(GenResponse::failed(req.id, msg));
                     continue 'fill;
                 }
+                Err(p) => {
+                    // A panicking prefill poisons only the lane being
+                    // admitted (it never held committed state): fail this
+                    // one request `Failed`, defensively release the slot,
+                    // and keep the replica serving its other lanes.
+                    let msg = panic_msg(p, "prefill");
+                    metrics.with(|m| {
+                        m.requests_finished += 1;
+                        m.lane_failures += 1;
+                    });
+                    req.notify_finished(FinishReason::Failed, Some(&msg));
+                    let _ = resp_tx.send(GenResponse::lane_failed(req.id, msg));
+                    let _ = catch_unwind(AssertUnwindSafe(|| model.release(lane_idx)));
+                    continue 'fill;
+                }
             };
             let rng = Rng::new(req.params.seed ^ req.id);
+            let deadline = req
+                .params
+                .deadline_ms
+                .and_then(|ms| t_enqueue.checked_add(Duration::from_millis(ms)));
             let lane = Lane {
                 prompt_len: ids.len(),
                 req,
@@ -463,6 +555,7 @@ fn admit_free_lanes(
                 t_admit,
                 ttft: None,
                 utf8: Utf8Stream::default(),
+                deadline,
             };
             // A zero-budget request (max_new_tokens 0, or a prompt that
             // already fills the sequence) finishes without a decision —
@@ -586,14 +679,20 @@ fn decide_steps_pooled(
     }
 }
 
-/// Budget / sequence-length stop conditions — the per-lane checks that
-/// need model state, shared by the per-iteration finish pass and the
-/// prewarm skip so the two can never diverge.
+/// Budget / sequence-length / deadline stop conditions — the per-lane
+/// checks that need model state, shared by the per-iteration finish pass
+/// and the prewarm skip so the two can never diverge. The deadline check
+/// comes last so a lane that also finished naturally reports its natural
+/// reason; it reads the clock but never the RNG or the engine, so
+/// deadlines change *which* lanes finish, never the bytes of lanes that
+/// do.
 fn budget_finish(lane: &Lane, max_seq: usize) -> Option<FinishReason> {
     if lane.generated.len() >= lane.req.params.max_new_tokens {
         Some(FinishReason::MaxTokens)
     } else if lane.prompt_len + lane.generated.len() + 2 >= max_seq {
         Some(FinishReason::SeqOverflow)
+    } else if lane.deadline.is_some_and(|d| Instant::now() >= d) {
+        Some(FinishReason::DeadlineExceeded)
     } else {
         None
     }
@@ -711,7 +810,6 @@ fn finish_lane(
     let tokens = lane.generated.len() as u64;
     let ttft = lane.ttft.unwrap_or(latency);
     let has_error = error.is_some();
-    let cancelled = finish == FinishReason::Cancelled;
     let class = lane.req.params.slo.index();
     metrics.with(|m| {
         m.requests_finished += 1;
@@ -721,11 +819,12 @@ fn finish_lane(
         m.classes[class].finished += 1;
         m.classes[class].latency.record(latency);
         m.classes[class].ttft.record(ttft);
-        if has_error && !cancelled {
-            m.engine_errors += 1;
-        }
-        if cancelled {
-            m.streams_cancelled += 1;
+        match finish {
+            FinishReason::Cancelled => m.streams_cancelled += 1,
+            FinishReason::Failed => m.lane_failures += 1,
+            FinishReason::DeadlineExceeded => m.classes[class].deadline_exceeded += 1,
+            _ if has_error => m.engine_errors += 1,
+            _ => {}
         }
     });
     // Exactly one terminal event per stream (a send after cancellation

@@ -145,7 +145,9 @@ impl EvalEnv {
         let tok = self.tok.clone();
         let docs = self.docs.clone();
         let (lanes, max_seq, seed) = (self.lanes, self.max_seq, self.model_seed);
-        Box::new(move || Ok(Box::new(MockModel::from_documents(tok, &docs, lanes, max_seq, seed))))
+        Box::new(move || {
+            Ok(Box::new(MockModel::from_documents(tok.clone(), &docs, lanes, max_seq, seed)))
+        })
     }
 }
 

@@ -55,11 +55,13 @@ fn main() {
                  generate: --stream   (print tokens as they decode)\n\
                  \x20          --spec-k <k>  (speculative drafts per step; 0 = off)\n\
                  \x20          --priority <interactive|batch>  (admission SLO class)\n\
+                 \x20          --deadline-ms <ms>  (per-request deadline; 0 = none)\n\
                  serve:    --replicas <n> --mask-threads <m> --queue-cap <n> --requests <n>\n\
-                 \x20          --spec-k <k> --spec-k-cap <k>\n\
+                 \x20          --spec-k <k> --spec-k-cap <k> --deadline-ms <ms>\n\
                  \x20          --batch-queue-cap <n> --batch-age-ms <ms>  (batch-class admission)\n\
                  \x20          --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream;\n\
-                 \x20          POST /v1/generate?stream=1 streams tokens as SSE)"
+                 \x20          POST /v1/generate?stream=1 streams tokens as SSE)\n\
+                 \x20          --sse-keepalive-ms <ms>  (idle-stream heartbeat; 0 = off)"
             );
             std::process::exit(2);
         }
@@ -85,6 +87,12 @@ fn params_from(args: &Args) -> GenParams {
         opportunistic: !args.flag("no-opportunistic"),
         spec_k: args.get_num("spec-k", 0usize),
         slo,
+        // 0 (the default) = no deadline; the wire API says the same
+        // thing by omitting the field.
+        deadline_ms: match args.get_num("deadline-ms", 0u64) {
+            0 => None,
+            ms => Some(ms),
+        },
     }
 }
 
@@ -132,8 +140,14 @@ fn artifact_for(args: &Args, gname: &str, tok: Arc<Tokenizer>) -> Arc<CompiledGr
     let cfg = artifact_cfg(args);
     match cache_path(args, gname, &tok, &cfg) {
         Some(path) => {
+            // A corrupt or unreadable cache that survives load_or_compile's
+            // own fall-through (e.g. the recompile also fails) must exit
+            // cleanly — an operator typo in --cache-dir is not a crash.
             let (art, hit) = CompiledGrammar::load_or_compile(&path, gname, tok, &cfg)
-                .unwrap_or_else(|e| panic!("artifact {gname}: {e}"));
+                .unwrap_or_else(|e| {
+                    eprintln!("error: artifact {gname}: {e}");
+                    std::process::exit(1);
+                });
             let ss = &art.store.stats;
             let how = match (hit, ss.zero_copy, ss.mapped) {
                 (true, true, true) => "warm-loaded (zero-copy mmap) from",
@@ -148,8 +162,10 @@ fn artifact_for(args: &Args, gname: &str, tok: Arc<Tokenizer>) -> Arc<CompiledGr
             );
             art
         }
-        None => CompiledGrammar::compile(gname, tok, &cfg)
-            .unwrap_or_else(|e| panic!("artifact {gname}: {e}")),
+        None => CompiledGrammar::compile(gname, tok, &cfg).unwrap_or_else(|e| {
+            eprintln!("error: artifact {gname}: {e}");
+            std::process::exit(1);
+        }),
     }
 }
 
@@ -272,7 +288,10 @@ fn cmd_compile(args: &Args) {
         let out = PathBuf::from(&cache_dir).join(format!("{gname}-{fp}.syncart"));
         let (art, hit) =
             CompiledGrammar::load_or_compile(&out, gname, tok.clone(), &cfg)
-                .unwrap_or_else(|e| panic!("compile {gname}: {e}"));
+                .unwrap_or_else(|e| {
+                    eprintln!("error: compile {gname}: {e}");
+                    std::process::exit(1);
+                });
         let blob_len =
             std::fs::metadata(&out).map(|m| m.len() as usize).unwrap_or(0);
         let cs = &art.compile_stats;
@@ -397,7 +416,12 @@ fn cmd_serve(args: &Args) {
     // Network mode: adapt the coordinator onto HTTP and run until a
     // graceful shutdown (`POST /admin/shutdown`) drains it.
     if let Some(addr) = args.get("http") {
-        let http_cfg = HttpConfig { workers: args.get_num("http-workers", 8usize) };
+        let http_defaults = HttpConfig::default();
+        let http_cfg = HttpConfig {
+            workers: args.get_num("http-workers", 8usize),
+            sse_keepalive_ms: args
+                .get_num("sse-keepalive-ms", http_defaults.sse_keepalive_ms),
+        };
         let server = HttpServer::bind(addr, srv, registry, http_cfg)
             .unwrap_or_else(|e| panic!("http bind {addr}: {e}"));
         // Machine-readable (ci.sh greps it); `--http 127.0.0.1:0` picks an

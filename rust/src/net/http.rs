@@ -710,6 +710,12 @@ impl SseStream<'_> {
             if let Some(pos) = find_double_newline(&self.buf) {
                 let block: Vec<u8> = self.buf.drain(..pos + 2).collect();
                 let text = String::from_utf8_lossy(&block).into_owned();
+                // Comment-only blocks (every non-empty line starts with
+                // ':') are SSE keepalive heartbeats — invisible to the
+                // protocol, never surfaced as events.
+                if is_sse_comment_block(&text) {
+                    continue;
+                }
                 let (event, data) = parse_sse_block(&text);
                 return Ok(Some((event, data)));
             }
@@ -755,6 +761,24 @@ impl SseStream<'_> {
 
 fn find_double_newline(buf: &[u8]) -> Option<usize> {
     buf.windows(2).position(|w| w == b"\n\n")
+}
+
+/// True when an SSE block is pure comment (`: keepalive` heartbeats):
+/// at least one line, and every non-empty line starts with ':'. Field
+/// lines (`event:`, `data:`) never start with ':', so a mixed block is
+/// a real event and must not be skipped.
+fn is_sse_comment_block(block: &str) -> bool {
+    let mut saw_comment = false;
+    for line in block.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if !line.starts_with(':') {
+            return false;
+        }
+        saw_comment = true;
+    }
+    saw_comment
 }
 
 #[cfg(test)]
@@ -949,6 +973,36 @@ mod tests {
         let mut client = HttpClient::connect(addr).unwrap();
         let mut stream = client.request_stream("GET", "/stream", None).unwrap();
         assert_eq!(stream.status(), 200);
+        assert_eq!(
+            stream.next_event().unwrap(),
+            Some(("token".to_string(), "one".to_string()))
+        );
+        assert_eq!(
+            stream.next_event().unwrap(),
+            Some(("done".to_string(), "final".to_string()))
+        );
+        assert_eq!(stream.next_event().unwrap(), None);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn sse_stream_skips_keepalive_comment_frames() {
+        // The server heartbeats an idle stream with `: keepalive` comment
+        // blocks; the client iterator must swallow them — consumers see
+        // only real events, in order, even when a comment frame lands
+        // before the first event, between events, or split mid-frame.
+        let (a, b) = b": keepalive\n\n".split_at(5);
+        let frames = vec![
+            b": keepalive\n\n".to_vec(),
+            sse_event("token", "one"),
+            a.to_vec(),
+            b.to_vec(),
+            b": keepalive\n: still here\n\n".to_vec(),
+            sse_event("done", "final"),
+        ];
+        let (addr, server) = chunked_server(frames);
+        let mut client = HttpClient::connect(addr).unwrap();
+        let mut stream = client.request_stream("GET", "/stream", None).unwrap();
         assert_eq!(
             stream.next_event().unwrap(),
             Some(("token".to_string(), "one".to_string()))

@@ -23,6 +23,10 @@ pub struct HttpStats {
     pub queue_cap: usize,
     /// Live per-[`SloClass`] queue depths, indexed by `SloClass::index`.
     pub class_queue_depths: [usize; SloClass::COUNT],
+    /// Replica threads currently alive (scheduler running).
+    pub replicas_live: usize,
+    /// Replica threads the coordinator was started with.
+    pub replicas_total: usize,
 }
 
 fn header(out: &mut String, name: &str, kind: &str, help: &str) {
@@ -95,6 +99,18 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
         "syncode_streams_cancelled_total",
         "Streamed generations cancelled by client disconnect (lane freed).",
         global.streams_cancelled,
+    );
+    counter(
+        &mut out,
+        "syncode_lane_failures_total",
+        "Lanes finished Failed by a caught model panic (sibling lanes unaffected).",
+        global.lane_failures,
+    );
+    counter(
+        &mut out,
+        "syncode_replica_restarts_total",
+        "Replica threads respawned by the supervisor after a panic exit.",
+        global.replica_restarts,
     );
     counter(
         &mut out,
@@ -192,6 +208,18 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
         "Max queue depth observed at any enqueue.",
         global.queue_depth_max as f64,
     );
+    gauge(
+        &mut out,
+        "syncode_replicas_live",
+        "Replica scheduler threads currently alive (0 = no serving capacity).",
+        http.replicas_live as f64,
+    );
+    gauge(
+        &mut out,
+        "syncode_replicas_total",
+        "Replica scheduler threads the coordinator was started with.",
+        http.replicas_total as f64,
+    );
 
     // Per-SLO-class split: admission outcomes and latency, one `class`
     // label per family. Classes change scheduling only, never the bytes,
@@ -247,6 +275,35 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
             out,
             "syncode_class_aged_promotions_total{{class=\"{c}\"}} {}",
             global.classes[c.index()].aged_promotions
+        );
+    }
+    // Deadline outcomes split the same way requests are admitted: shed
+    // (expired while still queued — never touched a lane) vs exceeded
+    // (expired mid-decode — lane freed, partial text returned).
+    header(
+        &mut out,
+        "syncode_deadline_shed_queued_total",
+        "counter",
+        "Requests shed at dequeue because their deadline expired while queued.",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_deadline_shed_queued_total{{class=\"{c}\"}} {}",
+            global.classes[c.index()].deadline_shed_queued
+        );
+    }
+    header(
+        &mut out,
+        "syncode_deadline_exceeded_total",
+        "counter",
+        "Running generations cut at their deadline (lane freed, partial text kept).",
+    );
+    for c in SloClass::ALL {
+        let _ = writeln!(
+            out,
+            "syncode_deadline_exceeded_total{{class=\"{c}\"}} {}",
+            global.classes[c.index()].deadline_exceeded
         );
     }
     // Per-class latency summary. `_count` is the class's finished count:
@@ -362,6 +419,10 @@ mod tests {
         m.classes[b].aged_promotions = 1;
         m.classes[b].latency.record(0.5);
         m.classes[b].ttft.record(0.0625);
+        m.lane_failures = 2;
+        m.replica_restarts = 1;
+        m.classes[b].deadline_shed_queued = 3;
+        m.classes[SloClass::Interactive.index()].deadline_exceeded = 1;
         m.snapshot()
     }
 
@@ -401,9 +462,17 @@ mod tests {
             queue_depth: 5,
             queue_cap: 64,
             class_queue_depths: [4, 1],
+            replicas_live: 1,
+            replicas_total: 2,
         };
         let text = render(&g, &reps, &http);
         assert_parses(&text);
+        assert!(text.contains("syncode_lane_failures_total 2"));
+        assert!(text.contains("syncode_replica_restarts_total 1"));
+        assert!(text.contains("syncode_replicas_live 1"));
+        assert!(text.contains("syncode_replicas_total 2"));
+        assert!(text.contains("syncode_deadline_shed_queued_total{class=\"batch\"} 3"));
+        assert!(text.contains("syncode_deadline_exceeded_total{class=\"interactive\"} 1"));
         assert!(text.contains("syncode_requests_finished_total 4"));
         assert!(text.contains("syncode_queue_depth 5"));
         assert!(text.contains("syncode_class_queue_depth{class=\"interactive\"} 4"));

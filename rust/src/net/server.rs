@@ -70,11 +70,18 @@ pub struct HttpConfig {
     /// ends); an idle keep-alive connection holds its worker up to the
     /// 10 s read deadline before it is reclaimed.
     pub workers: usize,
+    /// Idle interval (ms) after which an SSE stream emits a `: keepalive`
+    /// comment frame. Keeps proxies and clients from timing out a stream
+    /// whose lane is decoding slowly (or waiting out a stall), and doubles
+    /// as the disconnect probe: the heartbeat write fails fast on a gone
+    /// client, cancelling the generation instead of parking the worker on
+    /// an event that may never come. 0 disables the heartbeat.
+    pub sse_keepalive_ms: u64,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { workers: 8 }
+        HttpConfig { workers: 8, sse_keepalive_ms: 15_000 }
     }
 }
 
@@ -84,6 +91,8 @@ struct AppState {
     registry: Arc<GrammarRegistry>,
     next_id: AtomicU64,
     draining: AtomicBool,
+    /// SSE heartbeat interval (ms); 0 = disabled.
+    sse_keepalive_ms: u64,
     /// Responses sent, by status code (the `/metrics` HTTP section).
     codes: Mutex<BTreeMap<u16, u64>>,
     /// Fires once when `/admin/shutdown` is accepted.
@@ -124,6 +133,7 @@ impl HttpServer {
             registry,
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
+            sse_keepalive_ms: cfg.sse_keepalive_ms,
             codes: Mutex::new(BTreeMap::new()),
             shutdown_tx: Mutex::new(Some(tx)),
         });
@@ -246,7 +256,8 @@ fn serve_connection(conn: &mut TcpStream, state: &Arc<AppState>, stop: &Arc<Atom
                         }
                     }
                     Handled::Stream(job) => {
-                        let (status, conn_alive) = serve_stream(conn, *job, keep);
+                        let (status, conn_alive) =
+                            serve_stream(conn, *job, keep, state.sse_keepalive_ms);
                         state.record(status);
                         if !conn_alive {
                             return;
@@ -345,19 +356,31 @@ fn handle_generate_stream(state: &Arc<AppState>, req: &Request) -> Handled {
 /// token (flushed immediately — a consumer sees tokens while the model is
 /// still decoding), then `event: done` with the full final response
 /// (finish reason, text, validity verdict), then the chunked terminator.
-/// Returns `(status for metrics, connection still usable)`. A failed
-/// write means the client disconnected: returning drops the
-/// [`StreamHandle`], whose dropped event receiver cancels the generation
-/// and frees the lane.
-fn serve_stream(conn: &mut TcpStream, job: StreamJob, keep_alive: bool) -> (u16, bool) {
+/// While the coordinator is idle past `keepalive_ms`, a `: keepalive`
+/// comment frame is written instead (SSE comments are invisible to
+/// spec-conforming clients) so proxies never time the stream out and a
+/// vanished client is detected promptly. Returns `(status for metrics,
+/// connection still usable)`. A failed write means the client
+/// disconnected: returning drops the [`StreamHandle`], whose dropped
+/// event receiver cancels the generation and frees the lane.
+fn serve_stream(
+    conn: &mut TcpStream,
+    job: StreamJob,
+    keep_alive: bool,
+    keepalive_ms: u64,
+) -> (u16, bool) {
     let StreamJob { art, stream } = job;
     let Ok(mut w) = ChunkedWriter::start(&mut *conn, 200, "text/event-stream", keep_alive)
     else {
         return (200, false);
     };
+    let heartbeat = match keepalive_ms {
+        0 => std::time::Duration::from_secs(24 * 60 * 60), // effectively off
+        ms => std::time::Duration::from_millis(ms),
+    };
     let mut tail = String::new();
     loop {
-        match stream.events.recv() {
+        match stream.events.recv_timeout(heartbeat) {
             Ok(TokenEvent::Token(chunk)) => {
                 let frame = http::sse_event("token", &encode_token_event(&chunk));
                 if w.chunk(&frame).is_err() {
@@ -368,9 +391,17 @@ fn serve_stream(conn: &mut TcpStream, job: StreamJob, keep_alive: bool) -> (u16,
                 tail = t;
                 break;
             }
+            // Idle past the heartbeat interval: emit a comment frame. A
+            // failed write is the client gone — bail so the dropped
+            // receiver cancels the generation.
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if w.chunk(b": keepalive\n\n").is_err() {
+                    return (200, false);
+                }
+            }
             // Request dropped before any event could be sent (the
             // response channel settles what happened).
-            Err(_) => break,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
     let resp = stream
@@ -439,13 +470,16 @@ fn handle_generate(state: &Arc<AppState>, req: &Request) -> Response {
         let msg = resp.error.as_deref().unwrap_or("request rejected");
         return error_response(503, msg);
     }
-    if resp.finish == FinishReason::EngineError {
+    if resp.finish == FinishReason::EngineError || resp.finish == FinishReason::Failed {
         // A server-side failure (model decode error, mask dead end, lost
-        // pool worker) must not read as success to status-code-driven
-        // clients and monitors.
+        // pool worker, or a lane lost to a model panic) must not read as
+        // success to status-code-driven clients and monitors.
         let msg = resp.error.as_deref().unwrap_or("engine error");
         return error_response(500, msg);
     }
+    // DeadlineExceeded is deliberately NOT an error status: the request
+    // was well-formed and partially served; the finish reason in the JSON
+    // body tells the client its deadline cut the generation short.
     let valid = art.response_valid(&resp);
     Response::json(200, encode_generate_response(&resp, &art.name, valid))
 }
@@ -485,16 +519,27 @@ fn handle_grammars(state: &Arc<AppState>) -> Response {
 fn handle_healthz(state: &Arc<AppState>) -> Response {
     let draining = state.draining.load(Ordering::Acquire);
     let closed = state.handle.is_closed();
+    let live = state.handle.replicas_live();
     let status = if draining {
         "draining"
     } else if closed {
         "closed" // every replica died without an explicit shutdown
+    } else if live == 0 {
+        // Replicas all down but the queue is still open: the supervisor
+        // is mid-respawn. Flip unhealthy so load balancers stop routing
+        // until at least one replica is back.
+        "no-live-replicas"
     } else {
         "ok"
     };
     let mut m = BTreeMap::new();
     m.insert("status".to_string(), Json::Str(status.to_string()));
     m.insert("grammars".to_string(), Json::Num(state.registry.len() as f64));
+    m.insert("replicas_live".to_string(), Json::Num(live as f64));
+    m.insert(
+        "replicas_total".to_string(),
+        Json::Num(state.handle.replicas_total() as f64),
+    );
     m.insert(
         "queue_depth".to_string(),
         Json::Num(state.handle.queue_depth() as f64),
@@ -521,6 +566,8 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         queue_depth: state.handle.queue_depth(),
         queue_cap: state.handle.queue_cap(),
         class_queue_depths: state.handle.queue_class_depths(),
+        replicas_live: state.handle.replicas_live(),
+        replicas_total: state.handle.replicas_total(),
     };
     let text =
         prom::render(&state.handle.snapshot(), &state.handle.replica_snapshots(), &http);

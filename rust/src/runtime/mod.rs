@@ -23,8 +23,11 @@ pub use pjrt::{PjrtModel, PjrtVariant};
 use crate::util::error::Result;
 
 /// Constructs the model inside the scheduler thread (see
-/// [`LanguageModel`]'s `Send` note).
-pub type ModelFactory = Box<dyn FnOnce() -> Result<Box<dyn LanguageModel>> + Send>;
+/// [`LanguageModel`]'s `Send` note). `Fn` rather than `FnOnce`: the
+/// coordinator's supervisor re-invokes a replica's factory to respawn it
+/// with a fresh model after the previous incarnation died (panic or
+/// backend failure), so a factory must be callable any number of times.
+pub type ModelFactory = Box<dyn Fn() -> Result<Box<dyn LanguageModel>> + Send>;
 
 /// Build N per-replica [`ModelFactory`]s from one cloneable recipe — the
 /// multi-replica coordinator takes one factory per replica. Each factory

@@ -1,0 +1,373 @@
+//! Fault-tolerance acceptance suite, driven by the deterministic
+//! injection harness (`coordinator::faults`): a panicking lane never
+//! corrupts sibling lanes' bytes, a killed replica is respawned and the
+//! queue keeps draining, per-request deadlines shed queued work and cut
+//! running work while freeing capacity, and a vanished stream consumer
+//! cancels its generation.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, FaultPlan, FaultyModel, FinishReason, GenParams,
+    GenRequest, SloClass, Strategy, TokenEvent,
+};
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel, ModelFactory};
+use syncode::tokenizer::Tokenizer;
+
+fn docs() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"name": "alice", "age": 30}"#.to_vec(),
+        br#"{"items": [1, 2, 3], "ok": true}"#.to_vec(),
+        br#"{"nested": {"a": null}}"#.to_vec(),
+        b"1 + 2 * 3".to_vec(),
+        b"math_sqrt(4) - 1".to_vec(),
+        b"(7 - 2) / 5".to_vec(),
+    ]
+}
+
+fn registry(tok: &Arc<Tokenizer>) -> Arc<GrammarRegistry> {
+    let reg = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default()).unwrap();
+        reg.register(art).unwrap();
+    }
+    reg
+}
+
+/// A single-replica factory wrapping the mock in a [`FaultyModel`]. The
+/// plan's shared counters mean a supervisor respawn *continues* the
+/// ordinal count — one-shot faults never refire in the new incarnation.
+fn faulty_factory(tok: &Arc<Tokenizer>, lanes: usize, plan: FaultPlan) -> Vec<ModelFactory> {
+    let tok = tok.clone();
+    replicate_factory(1, move || {
+        let inner = MockModel::from_documents(tok.clone(), &docs(), lanes, 256, 11);
+        Ok(Box::new(FaultyModel::new(Box::new(inner), plan.clone()))
+            as Box<dyn LanguageModel>)
+    })
+}
+
+fn plain_factory(tok: &Arc<Tokenizer>, lanes: usize) -> Vec<ModelFactory> {
+    faulty_factory(tok, lanes, FaultPlan::new())
+}
+
+fn request_spec(id: u64, grammar: &str, max_new_tokens: usize, spec_k: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: format!("produce {grammar} #{id}"),
+        constraint_prefix: String::new(),
+        grammar: Some(grammar.to_string()),
+        params: GenParams {
+            max_new_tokens,
+            strategy: Strategy::TopP { temp: 0.85, p: 0.95 },
+            seed: id * 13 + 7,
+            opportunistic: id % 2 == 0,
+            spec_k,
+            ..Default::default()
+        },
+        token_sink: None,
+    }
+}
+
+fn request(id: u64, grammar: &str, max_new_tokens: usize) -> GenRequest {
+    request_spec(id, grammar, max_new_tokens, 0)
+}
+
+fn grammar_for(id: u64) -> &'static str {
+    if id % 2 == 0 {
+        "json"
+    } else {
+        "calc"
+    }
+}
+
+#[test]
+fn prefill_panic_fails_one_request_and_never_corrupts_siblings() {
+    // One replica, two lanes, six requests; the 2nd prefill (request id
+    // 1, admission is FIFO within a class) panics by plan. The poisoned
+    // admission must finish `Failed` with exactly one terminal event,
+    // and every *survivor* must be byte-identical to a no-fault run —
+    // swept inline/pooled × spec_k {0, 4}, the panic fence must never
+    // perturb sibling lanes' decisions.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+
+    // The no-fault reference: (text, tokens) per id. The serving suite
+    // separately pins that these bytes are invariant across the same
+    // config sweep, so one baseline serves all four faulted configs.
+    let mut baseline: HashMap<u64, (String, usize)> = HashMap::new();
+    {
+        let srv = Coordinator::start(
+            plain_factory(&tok, 2),
+            tok.clone(),
+            reg.clone(),
+            CoordinatorConfig::default(),
+        );
+        let rxs: Vec<_> =
+            (0..6u64).map(|i| srv.submit(request(i, grammar_for(i), 32))).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            baseline.insert(resp.id, (resp.text, resp.tokens));
+        }
+        srv.shutdown();
+    }
+
+    for spec_k in [0usize, 4] {
+        for mask_threads in [0usize, 2] {
+            // Fresh plan per run: its ordinal counters are shared across
+            // clones, so a consumed one-shot would not refire.
+            let plan = FaultPlan::new().panic_on_prefill(2);
+            let srv = Coordinator::start(
+                faulty_factory(&tok, 2, plan),
+                tok.clone(),
+                reg.clone(),
+                CoordinatorConfig { mask_threads, ..Default::default() },
+            );
+            // Per-request sinks prove exactly one terminal event each.
+            let mut sinks = Vec::new();
+            let rxs: Vec<_> = (0..6u64)
+                .map(|i| {
+                    let mut r = request_spec(i, grammar_for(i), 32, spec_k);
+                    let (tx, rx_ev) = std::sync::mpsc::channel();
+                    r.token_sink = Some(tx);
+                    sinks.push((i, rx_ev));
+                    srv.submit(r)
+                })
+                .collect();
+            let mut failed = 0usize;
+            for rx in rxs {
+                let resp = rx.recv().unwrap();
+                if resp.finish == FinishReason::Failed {
+                    failed += 1;
+                    assert_eq!(resp.id, 1, "the 2nd prefill is request 1");
+                    assert!(
+                        resp.error.as_deref().unwrap_or("").contains("panicked"),
+                        "{:?}",
+                        resp.error
+                    );
+                } else {
+                    assert!(resp.error.is_none(), "req {}: {:?}", resp.id, resp.error);
+                    assert_eq!(
+                        baseline.get(&resp.id),
+                        Some(&(resp.text.clone(), resp.tokens)),
+                        "survivor {} diverged from the no-fault run \
+                         (spec_k={spec_k}, mask_threads={mask_threads})",
+                        resp.id
+                    );
+                }
+            }
+            assert_eq!(failed, 1, "exactly one admission fails");
+            let snap = srv.snapshot();
+            srv.shutdown();
+            for (id, rx_ev) in sinks {
+                let finished =
+                    rx_ev.try_iter().filter(|e| matches!(e, TokenEvent::Finished { .. })).count();
+                assert_eq!(finished, 1, "request {id}: exactly one terminal event");
+            }
+            assert_eq!(snap.lane_failures, 1);
+            assert_eq!(snap.requests_finished, 6);
+            assert_eq!(snap.replica_restarts, 0, "a prefill panic keeps the thread");
+        }
+    }
+}
+
+#[test]
+fn decode_panic_respawns_replica_and_queue_keeps_draining() {
+    // The 3rd decode-path step panics: the replica fails its active
+    // lanes and exits; the supervisor must respawn it from the factory
+    // (the shared-ordinal plan never refires) and the respawned replica
+    // drains the rest of the queue.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let plan = FaultPlan::new().panic_on_step(3);
+    let srv = Coordinator::start(
+        faulty_factory(&tok, 2, plan),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig::default(),
+    );
+    let rxs: Vec<_> = (0..8u64).map(|i| srv.submit(request(i, grammar_for(i), 24))).collect();
+    let mut failed = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("every request gets a response across the respawn");
+        match resp.finish {
+            FinishReason::Failed => {
+                failed += 1;
+                assert!(
+                    resp.error.as_deref().unwrap_or("").contains("panicked"),
+                    "{:?}",
+                    resp.error
+                );
+            }
+            _ => {
+                assert!(resp.error.is_none(), "req {}: {:?}", resp.id, resp.error);
+                let art = reg.get(grammar_for(resp.id)).unwrap();
+                assert!(art.response_valid(&resp), "invalid survivor: {:?}", resp.text);
+            }
+        }
+    }
+    assert!(failed >= 1, "the panicking step had at least one active lane");
+    assert_eq!(srv.replicas_live(), 1, "respawned replica is live");
+    assert_eq!(srv.replicas_total(), 1);
+    let snap = srv.snapshot();
+    srv.shutdown();
+    assert_eq!(snap.replica_restarts, 1, "exactly one supervisor respawn");
+    assert_eq!(snap.lane_failures as usize, failed);
+    assert_eq!(snap.requests_finished, 8, "no request was dropped");
+}
+
+#[test]
+fn decode_error_fails_lanes_cleanly_without_restart() {
+    // A clean `Err` from a decode step is an orderly backend failure:
+    // active lanes finish EngineError, but the thread and the model are
+    // kept — no supervisor respawn, and the queue keeps draining.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let plan = FaultPlan::new().error_on_step(2);
+    let srv = Coordinator::start(
+        faulty_factory(&tok, 2, plan),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig::default(),
+    );
+    let rxs: Vec<_> = (0..6u64).map(|i| srv.submit(request(i, grammar_for(i), 24))).collect();
+    let mut errored = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        if resp.finish == FinishReason::EngineError {
+            errored += 1;
+            assert!(
+                resp.error.as_deref().unwrap_or("").contains("fault injection"),
+                "{:?}",
+                resp.error
+            );
+        } else {
+            assert!(resp.error.is_none(), "req {}: {:?}", resp.id, resp.error);
+        }
+    }
+    assert!(errored >= 1, "the failing step had at least one active lane");
+    assert_eq!(srv.replicas_live(), 1);
+    let snap = srv.snapshot();
+    srv.shutdown();
+    assert_eq!(snap.replica_restarts, 0, "a clean error must not trigger a respawn");
+    assert_eq!(snap.lane_failures, 0);
+    assert_eq!(snap.engine_errors as usize, errored);
+    assert_eq!(snap.requests_finished, 6);
+}
+
+#[test]
+fn deadline_cut_frees_the_lane_for_queued_interactive_work() {
+    // One lane. A would run 64 tokens (a deep bracket prefix makes EOS
+    // unreachable) but carries a 100 ms deadline; a 400 ms stall on its
+    // 2nd step drives the clock past it deterministically. A must finish
+    // DeadlineExceeded with partial output, and queued B must then get
+    // the freed lane and complete.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let plan = FaultPlan::new().stall_on_step(2, 400);
+    let srv = Coordinator::start(
+        faulty_factory(&tok, 1, plan),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig::default(),
+    );
+    let mut a = request(1, "json", 64);
+    a.constraint_prefix = "[".repeat(80);
+    a.params.deadline_ms = Some(100);
+    let b = request(2, "calc", 2);
+    let rx_a = srv.submit(a);
+    let rx_b = srv.submit(b);
+
+    let resp_a = rx_a.recv().unwrap();
+    assert_eq!(resp_a.finish, FinishReason::DeadlineExceeded);
+    assert!(resp_a.tokens >= 1, "the cut keeps the partial output");
+    assert!(resp_a.tokens < 64, "the deadline cut before the token budget");
+
+    let resp_b = rx_b.recv().unwrap();
+    assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
+    assert_ne!(resp_b.finish, FinishReason::Rejected, "B must get the freed lane");
+
+    let snap = srv.snapshot();
+    srv.shutdown();
+    let i = SloClass::Interactive.index();
+    assert_eq!(snap.classes[i].deadline_exceeded, 1);
+    assert_eq!(snap.classes[i].deadline_shed_queued, 0);
+}
+
+#[test]
+fn expired_queued_request_is_shed_and_capacity_goes_to_live_work() {
+    // One lane. A stalls 400 ms on its first step while B (40 ms
+    // deadline) and C wait in the queue: B's deadline expires *queued*,
+    // so it must be shed at dequeue — zero tokens, no lane time — and C
+    // still completes normally.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let plan = FaultPlan::new().stall_on_step(1, 400);
+    let srv = Coordinator::start(
+        faulty_factory(&tok, 1, plan),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig::default(),
+    );
+    let a = request(1, "json", 4);
+    let mut b = request(2, "calc", 4);
+    b.params.deadline_ms = Some(40);
+    let c = request(3, "json", 4);
+    let rx_a = srv.submit(a);
+    let rx_b = srv.submit(b);
+    let rx_c = srv.submit(c);
+
+    let resp_a = rx_a.recv().unwrap();
+    assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
+    let resp_b = rx_b.recv().unwrap();
+    assert_eq!(resp_b.finish, FinishReason::DeadlineExceeded);
+    assert_eq!(resp_b.tokens, 0, "a queued shed never touched a lane");
+    let resp_c = rx_c.recv().unwrap();
+    assert!(resp_c.error.is_none(), "{:?}", resp_c.error);
+
+    let snap = srv.snapshot();
+    srv.shutdown();
+    let i = SloClass::Interactive.index();
+    assert_eq!(snap.classes[i].deadline_shed_queued, 1);
+    assert_eq!(snap.classes[i].deadline_exceeded, 0);
+    // Sheds are accounted in their own family, not as lane finishes:
+    // only A and C ever reached a lane.
+    assert_eq!(snap.requests_finished, 2);
+}
+
+#[test]
+fn dropped_stream_consumer_cancels_and_frees_the_lane() {
+    // The harness-driven sink-disconnect fault: drop the stream's event
+    // receiver after the first token. The replica observes the failed
+    // send, finishes the lane Cancelled, and the lane is free for the
+    // next request.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let srv = Coordinator::start(
+        plain_factory(&tok, 1),
+        tok.clone(),
+        reg.clone(),
+        CoordinatorConfig::default(),
+    );
+    let mut a = request(1, "json", 64);
+    a.constraint_prefix = "[".repeat(80);
+    let stream = srv.submit_stream(a);
+    // Wait for one committed token, then vanish mid-stream.
+    match stream.events.recv().expect("first token") {
+        TokenEvent::Token(_) => {}
+        other => panic!("expected a token first, got {other:?}"),
+    }
+    let response = stream.response;
+    drop(stream.events);
+    let resp = response.recv().unwrap();
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+
+    // The freed lane serves the next request.
+    let follow = srv.generate(request(2, "calc", 2));
+    assert!(follow.error.is_none(), "{:?}", follow.error);
+    let snap = srv.snapshot();
+    srv.shutdown();
+    assert_eq!(snap.streams_cancelled, 1);
+    assert_eq!(snap.requests_finished, 2);
+}

@@ -60,9 +60,13 @@ fn start_mock_http(
     });
     let cfg = CoordinatorConfig { mask_threads: 0, queue_cap, ..Default::default() };
     let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
-    let server =
-        HttpServer::bind("127.0.0.1:0", handle, reg.clone(), HttpConfig { workers: 6 })
-            .expect("bind ephemeral port");
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg.clone(),
+        HttpConfig { workers: 6, ..Default::default() },
+    )
+    .expect("bind ephemeral port");
     let addr = server.local_addr().to_string();
     (server, reg, addr)
 }
@@ -171,7 +175,11 @@ fn registry_health_and_metrics_endpoints() {
 
     let (status, body) = fetch(addr.as_str(), "GET", "/healthz", None).unwrap();
     assert_eq!(status, 200);
-    assert_eq!(parse(&body).unwrap().get("status").unwrap().as_str(), Some("ok"));
+    let health = parse(&body).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    // Supervision state is part of the health report.
+    assert_eq!(health.get("replicas_live").and_then(Json::as_usize), Some(1), "{body}");
+    assert_eq!(health.get("replicas_total").and_then(Json::as_usize), Some(1), "{body}");
 
     // Default grammar (no "grammar" field) routes to the registry default.
     let (status, body) = fetch(
@@ -202,6 +210,53 @@ fn registry_health_and_metrics_endpoints() {
     assert!(finished.unwrap_or(0.0) >= 1.0, "no finished requests in metrics");
     assert!(text.contains("syncode_http_responses_total{code=\"200\"}"));
     assert!(text.contains("syncode_queue_capacity 64"));
+    // Fault-tolerance families are exported even when everything is healthy.
+    assert!(text.contains("syncode_replicas_live 1"), "{text}");
+    assert!(text.contains("syncode_replicas_total 1"), "{text}");
+    assert!(text.contains("syncode_replica_restarts_total 0"), "{text}");
+    assert!(text.contains("syncode_lane_failures_total 0"), "{text}");
+    assert!(
+        text.contains("syncode_deadline_shed_queued_total{class=\"interactive\"} 0"),
+        "{text}"
+    );
+    assert!(
+        text.contains("syncode_deadline_exceeded_total{class=\"interactive\"} 0"),
+        "{text}"
+    );
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn deadline_field_roundtrips_and_is_strictly_validated() {
+    let (server, _reg, addr) = start_mock_http(1, 2, 64);
+    let a = addr.as_str();
+
+    // A generous deadline never fires: the request completes normally and
+    // the response surfaces a natural finish reason.
+    let body = r#"{"grammar": "calc", "prompt": "sum", "max_tokens": 16, "seed": 2,
+                   "deadline_ms": 60000}"#;
+    let (status, resp) = fetch(a, "POST", "/v1/generate", Some(body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp).unwrap();
+    let finish = v.get("finish").unwrap().as_str().unwrap();
+    assert!(finish_from_str(finish).is_some(), "unknown finish: {finish}");
+    assert_ne!(finish, "deadline_exceeded", "{resp}");
+    assert_eq!(v.get("valid").unwrap().as_bool(), Some(true), "{resp}");
+
+    // Strict wire validation: zero and non-integer deadlines are 400s,
+    // not silent coercions.
+    let post = |body: &str| fetch(a, "POST", "/v1/generate", Some(body)).unwrap();
+    let (status, resp) = post(r#"{"grammar": "calc", "prompt": "p", "deadline_ms": 0}"#);
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("deadline_ms"), "{resp}");
+    let (status, resp) = post(r#"{"grammar": "calc", "prompt": "p", "deadline_ms": "5s"}"#);
+    assert_eq!(status, 400, "{resp}");
+    let (status, resp) = post(r#"{"grammar": "calc", "prompt": "p", "deadline_ms": -5}"#);
+    assert_eq!(status, 400, "{resp}");
+
+    // The server survives the abuse.
+    let (status, resp) = post(&generate_body("calc", 3, 8));
+    assert_eq!(status, 200, "{resp}");
     server.shutdown().shutdown();
 }
 
@@ -350,8 +405,13 @@ fn start_stalled_http(queue_cap: usize) -> (HttpServer, String, Arc<Gate>, Recei
     });
     let cfg = CoordinatorConfig { mask_threads: 0, queue_cap, ..Default::default() };
     let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
-    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 6 })
-        .expect("bind");
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg,
+        HttpConfig { workers: 6, ..Default::default() },
+    )
+    .expect("bind");
     let addr = server.local_addr().to_string();
     (server, addr, gate, erx)
 }
@@ -411,8 +471,13 @@ fn dead_coordinator_maps_to_503() {
         vec![Box::new(|| Err(syncode::util::error::Error::msg("no accelerator")))];
     let handle =
         Coordinator::start(factories, tok, reg.clone(), CoordinatorConfig::default());
-    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 2 })
-        .expect("bind");
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg,
+        HttpConfig { workers: 2, ..Default::default() },
+    )
+    .expect("bind");
     let addr = server.local_addr().to_string();
 
     poll_until(30, "coordinator closed", || {
@@ -730,8 +795,13 @@ fn batch_flood_does_not_starve_interactive() {
         ..Default::default()
     };
     let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
-    let server = HttpServer::bind("127.0.0.1:0", handle, reg, HttpConfig { workers: 8 })
-        .expect("bind");
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg,
+        HttpConfig { workers: 8, ..Default::default() },
+    )
+    .expect("bind");
     let addr = server.local_addr().to_string();
 
     // A (interactive by default) takes the only lane and stalls in its

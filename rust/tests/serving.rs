@@ -421,8 +421,8 @@ fn grammar_rejected_drafts_never_reach_the_model() {
     let tok_m = tok.clone();
     let factory: ModelFactory = Box::new(move || {
         Ok(Box::new(SpyModel {
-            inner: MockModel::from_documents(tok_m, &docs(), 2, 256, 11),
-            scored: scored_f,
+            inner: MockModel::from_documents(tok_m.clone(), &docs(), 2, 256, 11),
+            scored: scored_f.clone(),
         }) as Box<dyn LanguageModel>)
     });
     let srv =

@@ -7,10 +7,12 @@ Fires concurrent `POST /v1/generate` requests alternating over the json and
 calc grammars, asserts every response is 200 with `valid: true` (zero syntax
 errors), checks the SSE streaming variant (`?stream=1`) delivers per-token
 events and a valid terminal `done` event, exercises the SLO `priority` body
-field (a `batch`-class request succeeds; an unknown class is a 400), validates
-that `/metrics` parses as Prometheus text and reflects the finished requests
-per class, then drains the server via `POST /admin/shutdown`. Stdlib only —
-CI needs nothing beyond python3.
+field (a `batch`-class request succeeds; an unknown class is a 400) and the
+`deadline_ms` field (a generous deadline completes normally; zero/ill-typed
+deadlines are 400s), validates that `/metrics` parses as Prometheus text,
+reflects the finished requests per class and reports zero replica restarts,
+then drains the server via `POST /admin/shutdown`. Stdlib only — CI needs
+nothing beyond python3.
 """
 
 import json
@@ -53,10 +55,17 @@ def check_metrics(text):
     for family in (
         'syncode_class_requests_finished_total{class="interactive"}',
         'syncode_class_requests_finished_total{class="batch"}',
+        "syncode_replica_restarts_total",
+        "syncode_replicas_live",
+        'syncode_deadline_shed_queued_total{class="interactive"}',
     ):
         assert any(
             line.startswith(family) for line in text.splitlines()
-        ), f"per-class family missing: {family}"
+        ), f"metrics family missing: {family}"
+    # A clean smoke run must not have restarted any replica.
+    for line in text.splitlines():
+        if line.startswith("syncode_replica_restarts_total "):
+            assert float(line.split()[-1]) == 0, f"unexpected restarts: {line}"
     server_errors = [
         line
         for line in text.splitlines()
@@ -143,6 +152,28 @@ def main():
     assert json.loads(body).get("valid"), f"batch-priority response invalid: {body}"
     status, body = req(addr, "POST", "/v1/generate", json.dumps({"priority": "urgent"}))
     assert status == 400, f"bad priority should be 400: {status} {body}"
+
+    # Deadlines over the wire: a generous deadline never fires (the request
+    # completes with its natural finish reason), while a zero or ill-typed
+    # deadline_ms is rejected at decode time with a 400.
+    payload = json.dumps(
+        {
+            "grammar": "calc",
+            "prompt": "quick sum",
+            "max_tokens": 24,
+            "seed": 11,
+            "deadline_ms": 60000,
+        }
+    )
+    status, body = req(addr, "POST", "/v1/generate", payload)
+    assert status == 200, f"deadline request: {status} {body}"
+    resp = json.loads(body)
+    assert resp.get("valid"), f"deadline response invalid: {body}"
+    assert resp.get("finish") != "deadline_exceeded", f"60s deadline fired: {body}"
+    for bad in (0, "5s"):
+        payload = json.dumps({"grammar": "calc", "prompt": "p", "deadline_ms": bad})
+        status, body = req(addr, "POST", "/v1/generate", payload)
+        assert status == 400, f"deadline_ms={bad!r} should be 400: {status} {body}"
 
     status, text = req(addr, "GET", "/metrics")
     assert status == 200, f"metrics: {status}"

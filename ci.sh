@@ -61,7 +61,24 @@ cargo test -q --test trie_parity
 echo "== fault-injection suite (cargo test --test faults) =="
 cargo test -q --test faults
 
+# Request-time grammars are the ISSUE-10 acceptance gate: register over
+# POST /v1/grammars then generate against it, replace-in-place with an
+# in-flight generation pinned byte-identical, the hardened 400/413/422
+# error matrix, DELETE semantics and hot-reload determinism. Named
+# explicitly so a regression is unmissable, in BOTH tiers.
+echo "== user-supplied grammar surface (cargo test --test grammars_http --test watch_reload) =="
+cargo test -q --test grammars_http
+cargo test -q --test watch_reload
+
 if [[ "$fast" == "0" ]]; then
+  # Untrusted-grammar fuzzing at full depth: the seeded structure-aware
+  # mutator over grammars/*.lark + rust/tests/corpus/ebnf/ must stay
+  # error-or-success (no panic, no hang) for every input. The fixed seed
+  # makes the run reproducible; the env var only raises the iteration
+  # count over the 300 that `cargo test -q` already ran.
+  echo "== ebnf fuzz, full tier (SYNCODE_FUZZ_ITERS=2000) =="
+  SYNCODE_FUZZ_ITERS=2000 cargo test -q --release --test ebnf_fuzz
+
   # Serving stress under a time cap: 2 replicas × 2 mask threads over a
   # mixed multi-grammar batch on the mock model must finish with zero
   # syntax errors (the ISSUE-2 acceptance path).

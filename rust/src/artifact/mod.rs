@@ -34,11 +34,13 @@
 //! (`mask/trie.rs`, "Compile pipeline" in `docs/artifacts.md`).
 
 mod registry;
+mod watch;
 
-pub use registry::GrammarRegistry;
+pub use registry::{GrammarRegistry, RegistryStats};
+pub use watch::{GrammarWatcher, ScanReport};
 
 use crate::engine::{GrammarContext, SyncodeEngine};
-use crate::grammar::{Grammar, GrammarError};
+use crate::grammar::{CompileLimits, Grammar, GrammarError};
 use crate::lexer::postlex_for;
 use crate::mask::{MaskStore, MaskStoreConfig};
 use crate::parser::{LrMode, LrTable};
@@ -147,20 +149,53 @@ impl CompiledGrammar {
 
     /// Compile from EBNF source (user-supplied grammar, §4.7). The post-lex
     /// pass is chosen by `name` (`python`/`go` get their trackers, anything
-    /// else the identity pass).
+    /// else the identity pass). Uncapped — trusted sources only; untrusted
+    /// ones go through [`CompiledGrammar::compile_ebnf_limited`].
     pub fn compile_ebnf(
         name: &str,
         source: &str,
         tok: Arc<Tokenizer>,
         cfg: &ArtifactConfig,
     ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        CompiledGrammar::compile_ebnf_limited(name, source, tok, cfg, &CompileLimits::unlimited())
+    }
+
+    /// [`CompiledGrammar::compile_ebnf`] under [`CompileLimits`], for
+    /// untrusted source. The grammar front end enforces its caps internally
+    /// (source size, rules/terminals, regex and DFA sizes); the wall-clock
+    /// budget is additionally re-checked between the compile phases so a
+    /// pathological LR construction or mask-store build cannot silently
+    /// run long past it. Mask-store cost is bounded structurally: it is
+    /// proportional to total DFA states × vocab, and total DFA states is
+    /// capped by the limits.
+    pub fn compile_ebnf_limited(
+        name: &str,
+        source: &str,
+        tok: Arc<Tokenizer>,
+        cfg: &ArtifactConfig,
+        limits: &CompileLimits,
+    ) -> Result<Arc<CompiledGrammar>, ArtifactError> {
+        let deadline = limits.deadline();
+        let check_deadline = |phase: &str| -> Result<(), ArtifactError> {
+            match deadline {
+                Some(d) if Instant::now() > d => {
+                    Err(ArtifactError::Grammar(GrammarError::limit(format!(
+                        "grammar compile exceeded its {} ms budget ({phase})",
+                        limits.budget_ms
+                    ))))
+                }
+                _ => Ok(()),
+            }
+        };
         let t0 = Instant::now();
-        let grammar = Arc::new(crate::grammar::parse_ebnf(source)?);
+        let grammar = Arc::new(crate::grammar::parse_ebnf_limited(source, limits)?);
         let grammar_secs = t0.elapsed().as_secs_f64();
+        check_deadline("after grammar construction")?;
 
         let t1 = Instant::now();
         let table = Arc::new(LrTable::build(&grammar, cfg.lr_mode));
         let table_secs = t1.elapsed().as_secs_f64();
+        check_deadline("after LR table construction")?;
 
         let postlex = postlex_for(name, &grammar);
         let cx = Arc::new(GrammarContext {
@@ -454,27 +489,128 @@ impl CompiledGrammar {
         cfg: &ArtifactConfig,
     ) -> Result<(Arc<CompiledGrammar>, bool), ArtifactError> {
         let source = Grammar::builtin_source(name)?;
-        if let Ok(blob) = Blob::from_file(path) {
-            if CompiledGrammar::header_matches(&blob, name, source, cfg, &tok.to_json()) {
-                // Header proved the embedded tokenizer equals `tok`, so the
-                // caller's Arc is shared instead of deserialising a copy.
-                if let Ok(art) =
-                    CompiledGrammar::from_blob_inner(Arc::new(blob), Some(tok.clone()))
-                {
-                    return Ok((art, true));
+        CompiledGrammar::load_or_compile_source(
+            Some(path),
+            name,
+            source,
+            tok,
+            cfg,
+            &CompileLimits::unlimited(),
+        )
+    }
+
+    /// [`CompiledGrammar::load_or_compile`] generalised to arbitrary EBNF
+    /// source under [`CompileLimits`] — the request-time-grammar path
+    /// (`POST /v1/grammars`, `serve --watch`). `path: None` skips the
+    /// cache entirely (compile-only); otherwise a matching cache file is
+    /// warm-loaded zero-copy and a miss compiles + best-effort rewrites it.
+    /// The header check includes the source text, so an edited grammar
+    /// under the same name never serves a stale artifact.
+    pub fn load_or_compile_source(
+        path: Option<&std::path::Path>,
+        name: &str,
+        source: &str,
+        tok: Arc<Tokenizer>,
+        cfg: &ArtifactConfig,
+        limits: &CompileLimits,
+    ) -> Result<(Arc<CompiledGrammar>, bool), ArtifactError> {
+        if let Some(path) = path {
+            if let Ok(blob) = Blob::from_file(path) {
+                if CompiledGrammar::header_matches(&blob, name, source, cfg, &tok.to_json()) {
+                    // Header proved the embedded tokenizer equals `tok`, so
+                    // the caller's Arc is shared instead of deserialising a
+                    // copy.
+                    if let Ok(art) =
+                        CompiledGrammar::from_blob_inner(Arc::new(blob), Some(tok.clone()))
+                    {
+                        return Ok((art, true));
+                    }
                 }
             }
         }
-        let art = CompiledGrammar::compile_ebnf(name, source, tok, cfg)?;
-        if let Some(dir) = path.parent() {
-            let _ = std::fs::create_dir_all(dir);
+        let art = CompiledGrammar::compile_ebnf_limited(name, source, tok, cfg, limits)?;
+        if let Some(path) = path {
+            if let Some(dir) = path.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            // Best-effort cache write: an unwritable cache must not discard
+            // a perfectly usable compile. Atomic (temp file + rename)
+            // because other processes may be serving from a mapping of the
+            // stale file — an in-place write would truncate under their
+            // page faults.
+            let _ = crate::util::blob::write_atomic(path, &art.to_bytes());
         }
-        // Best-effort cache write: an unwritable cache must not discard a
-        // perfectly usable compile. Atomic (temp file + rename) because
-        // other processes may be serving from a mapping of the stale file
-        // — an in-place write would truncate under their page faults.
-        let _ = crate::util::blob::write_atomic(path, &art.to_bytes());
         Ok((art, false))
+    }
+}
+
+/// Grammar names that may cross the trust boundary (HTTP registration,
+/// watch-dir file stems). The charset keeps names shell-, URL- and
+/// filesystem-safe — in particular no `/`, `.` or whitespace, so a name
+/// can never escape the cache directory when used as a file-name stem.
+pub fn valid_grammar_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// Cache file name for a (grammar, tokenizer, config) triple:
+/// `<name>-<fp:016x>.syncart`, where the fingerprint hashes the tokenizer's
+/// canonical JSON and the artifact-identity config fields (LR mode, M1
+/// flag, token-length cap — the same set `header_matches` compares, and
+/// deliberately not `threads`). The name itself stays readable in the
+/// prefix; the source text is *not* hashed — same-name recompiles reuse
+/// one file and the header check decides staleness.
+pub fn cache_file_name(name: &str, tok: &Tokenizer, cfg: &ArtifactConfig) -> String {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    tok.to_json().hash(&mut h);
+    matches!(cfg.lr_mode, LrMode::Canonical).hash(&mut h);
+    cfg.mask.with_m1.hash(&mut h);
+    cfg.mask.max_token_len.hash(&mut h);
+    format!("{name}-{:016x}.syncart", h.finish())
+}
+
+/// Compile `source` (under `limits`, warm-loading from / writing to
+/// `cache_dir` when given) against `registry`'s shared tokenizer and
+/// register the result under `name` — the one code path behind
+/// `POST /v1/grammars` and the `--watch` reloader. Registration is
+/// replace-in-place for existing names (in-flight `Arc`s keep serving) and
+/// the registry's compile/error tallies are updated either way. Returns
+/// the artifact and whether it came from cache.
+pub fn compile_and_register(
+    registry: &GrammarRegistry,
+    name: &str,
+    source: &str,
+    cfg: &ArtifactConfig,
+    limits: &CompileLimits,
+    cache_dir: Option<&std::path::Path>,
+) -> Result<(Arc<CompiledGrammar>, bool), ArtifactError> {
+    if !valid_grammar_name(name) {
+        registry.note_compile_error();
+        return Err(ArtifactError::Grammar(GrammarError::new(format!(
+            "invalid grammar name {name:?} (want 1-64 chars of [a-zA-Z0-9_-])"
+        ))));
+    }
+    let Some(tok) = registry.tokenizer() else {
+        return Err(ArtifactError::Mismatch(
+            "registry has no tokenizer yet (no grammar registered)".to_string(),
+        ));
+    };
+    let path = cache_dir.map(|d| d.join(cache_file_name(name, &tok, cfg)));
+    let t0 = Instant::now();
+    let compiled =
+        CompiledGrammar::load_or_compile_source(path.as_deref(), name, source, tok, cfg, limits);
+    match compiled {
+        Ok((art, from_cache)) => {
+            registry.register(art.clone())?;
+            registry.note_compile(t0.elapsed().as_secs_f64(), from_cache);
+            Ok((art, from_cache))
+        }
+        Err(e) => {
+            registry.note_compile_error();
+            Err(e)
+        }
     }
 }
 
@@ -680,5 +816,126 @@ mod tests {
             .unwrap();
         assert!(hit, "thread count must not invalidate the cache");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn grammar_name_validation() {
+        for ok in ["json", "my-dsl_2", "A", &"x".repeat(64)] {
+            assert!(valid_grammar_name(ok), "{ok:?}");
+        }
+        for bad in ["", "../etc", "a/b", "a.lark", "a b", "café", &"x".repeat(65)] {
+            assert!(!valid_grammar_name(bad), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn cache_file_name_tracks_identity() {
+        let cfg = ArtifactConfig::default();
+        let tok = byte_tok();
+        let a = cache_file_name("calc", &tok, &cfg);
+        assert!(a.starts_with("calc-") && a.ends_with(".syncart"), "{a}");
+        assert_eq!(a, cache_file_name("calc", &tok, &cfg), "deterministic");
+        let no_m1 = ArtifactConfig {
+            mask: MaskStoreConfig { with_m1: false, ..MaskStoreConfig::default() },
+            ..ArtifactConfig::default()
+        };
+        assert_ne!(a, cache_file_name("calc", &tok, &no_m1), "config in fingerprint");
+        let threads = ArtifactConfig {
+            mask: MaskStoreConfig { threads: 1, ..MaskStoreConfig::default() },
+            ..ArtifactConfig::default()
+        };
+        assert_eq!(a, cache_file_name("calc", &tok, &threads), "threads excluded");
+        let other = Arc::new(Tokenizer::train(b"1 + 2 + 3 + 4", 4));
+        assert_ne!(a, cache_file_name("calc", &other, &cfg), "tokenizer in fingerprint");
+    }
+
+    #[test]
+    fn load_or_compile_source_cache_and_source_invalidation() {
+        let dir = std::env::temp_dir().join("syncode_artifact_src_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("user.syncart");
+        let cfg = ArtifactConfig::default();
+        let limits = CompileLimits::default();
+        let src_a = "start: A+\nA: /[ab]/\n";
+        let (a1, hit1) = CompiledGrammar::load_or_compile_source(
+            Some(&path),
+            "user",
+            src_a,
+            byte_tok(),
+            &cfg,
+            &limits,
+        )
+        .unwrap();
+        assert!(!hit1 && path.exists());
+        let (a2, hit2) = CompiledGrammar::load_or_compile_source(
+            Some(&path),
+            "user",
+            src_a,
+            byte_tok(),
+            &cfg,
+            &limits,
+        )
+        .unwrap();
+        assert!(hit2, "same source must warm-load");
+        assert_eq!(a1.store.to_bytes(), a2.store.to_bytes());
+        // Edited source under the same name must recompile, not serve stale.
+        let src_b = "start: A+\nA: /[abc]/\n";
+        let (_, hit3) = CompiledGrammar::load_or_compile_source(
+            Some(&path),
+            "user",
+            src_b,
+            byte_tok(),
+            &cfg,
+            &limits,
+        )
+        .unwrap();
+        assert!(!hit3, "source change must recompile");
+        // path=None compiles without touching the filesystem.
+        let (_, hit4) = CompiledGrammar::load_or_compile_source(
+            None, "user", src_a, byte_tok(), &cfg, &limits,
+        )
+        .unwrap();
+        assert!(!hit4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compile_and_register_happy_replace_and_error_paths() {
+        let cfg = ArtifactConfig::default();
+        let reg = GrammarRegistry::new();
+        // Empty registry has no tokenizer to compile against.
+        let err = compile_and_register(&reg, "user", "start: A\nA: \"a\"\n", &cfg,
+            &CompileLimits::default(), None)
+            .err()
+            .expect("empty registry must fail");
+        assert!(matches!(err, ArtifactError::Mismatch(_)), "{err}");
+        let calc = CompiledGrammar::compile("calc", byte_tok(), &cfg).unwrap();
+        reg.register(calc).unwrap();
+
+        let (a1, _) = compile_and_register(&reg, "user", "start: A+\nA: /[ab]/\n", &cfg,
+            &CompileLimits::default(), None)
+            .unwrap();
+        assert!(reg.get("user").is_some());
+        // Replace-in-place: the old Arc keeps serving.
+        let (a2, _) = compile_and_register(&reg, "user", "start: A+\nA: /[abc]/\n", &cfg,
+            &CompileLimits::default(), None)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a1, &a2));
+        assert!(Arc::ptr_eq(&reg.get("user").unwrap(), &a2));
+        assert!(a1.cx.prefix_valid(b"ab"), "displaced artifact still works");
+
+        // Bad name and bad source both tally as compile errors, and a
+        // failed compile never leaves a partial registry entry.
+        let before = reg.stats();
+        assert!(compile_and_register(&reg, "../evil", "start: A\nA: \"a\"\n", &cfg,
+            &CompileLimits::default(), None)
+            .is_err());
+        assert!(compile_and_register(&reg, "broken", "start: %%%", &cfg,
+            &CompileLimits::default(), None)
+            .is_err());
+        let after = reg.stats();
+        assert_eq!(after.compile_errors, before.compile_errors + 2);
+        assert_eq!(after.registered, before.registered, "no partial entry");
+        assert!(reg.get("broken").is_none());
     }
 }

@@ -26,9 +26,28 @@
 use super::{ArtifactError, CompiledGrammar};
 use crate::coordinator::{EngineProvider, GenRequest};
 use crate::engine::ConstraintEngine;
+use crate::tokenizer::Tokenizer;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Counter snapshot for the user-supplied-grammar surface (`/metrics`
+/// `syncode_grammar_*` families and the CLI shutdown report).
+#[derive(Debug, Clone, Default)]
+pub struct RegistryStats {
+    /// Successful compile-and-register operations (cache hits included).
+    pub compiles: u64,
+    /// Rejected registrations (parse errors, limit violations, …).
+    pub compile_errors: u64,
+    /// How many of `compiles` warm-loaded from the artifact cache.
+    pub cache_hits: u64,
+    /// Artifacts dropped by LRU eviction (never by replace-in-place).
+    pub evictions: u64,
+    /// Currently resident grammars.
+    pub registered: usize,
+    /// Recent compile wall-times in seconds (bounded window, oldest first).
+    pub compile_secs: Vec<f64>,
+}
 
 /// Thread-safe name → [`CompiledGrammar`] map (see module docs).
 pub struct GrammarRegistry {
@@ -36,7 +55,17 @@ pub struct GrammarRegistry {
     /// Monotonic recency clock. Bumped on every lookup; per-entry stamps
     /// are atomics so `get` can refresh recency under the *read* lock.
     clock: AtomicU64,
+    compiles: AtomicU64,
+    compile_errors: AtomicU64,
+    cache_hits: AtomicU64,
+    evictions: AtomicU64,
+    /// Compile latency samples; bounded so a hostile client cannot grow
+    /// server memory by uploading grammars forever.
+    compile_secs: Mutex<Vec<f64>>,
 }
+
+/// Cap on retained compile-latency samples.
+const MAX_COMPILE_SAMPLES: usize = 1024;
 
 struct Entry {
     art: Arc<CompiledGrammar>,
@@ -60,6 +89,11 @@ impl GrammarRegistry {
                 capacity: None,
             }),
             clock: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+            compile_errors: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            compile_secs: Mutex::new(Vec::new()),
         }
     }
 
@@ -118,11 +152,14 @@ impl GrammarRegistry {
                 match victim {
                     Some(name) => {
                         inner.grammars.remove(&name);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
                     }
                     None => {
                         // capacity == 1 and the sole resident is the
                         // default: replace it; the incoming artifact
                         // becomes the new default below.
+                        self.evictions
+                            .fetch_add(inner.grammars.len() as u64, Ordering::Relaxed);
                         inner.grammars.clear();
                         inner.default_name = None;
                     }
@@ -136,6 +173,60 @@ impl GrammarRegistry {
             .grammars
             .insert(art.name.clone(), Entry { art, last_used: AtomicU64::new(stamp) });
         Ok(())
+    }
+
+    /// Remove a grammar by name; returns whether it was registered.
+    /// Requests already generating against it hold their own `Arc` and
+    /// finish unaffected (same guarantee as LRU eviction). Removing the
+    /// default promotes the alphabetically-first remaining grammar.
+    pub fn unregister(&self, name: &str) -> bool {
+        let mut inner = self.inner.write().unwrap();
+        if inner.grammars.remove(name).is_none() {
+            return false;
+        }
+        if inner.default_name.as_deref() == Some(name) {
+            let mut names: Vec<String> = inner.grammars.keys().cloned().collect();
+            names.sort();
+            inner.default_name = names.into_iter().next();
+        }
+        true
+    }
+
+    /// The tokenizer shared by every registered artifact, if any grammar
+    /// is resident. Request-time compiles reuse this `Arc` so the token
+    /// trie cache and the registry's `Arc::ptr_eq` fast path stay hot.
+    pub fn tokenizer(&self) -> Option<Arc<Tokenizer>> {
+        let inner = self.inner.read().unwrap();
+        inner.grammars.values().next().map(|e| e.art.tok.clone())
+    }
+
+    /// Record one successful compile-and-register (for `/metrics`).
+    pub fn note_compile(&self, secs: f64, cache_hit: bool) {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        if cache_hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut samples = self.compile_secs.lock().unwrap();
+        if samples.len() < MAX_COMPILE_SAMPLES {
+            samples.push(secs);
+        }
+    }
+
+    /// Record one rejected registration (for `/metrics`).
+    pub fn note_compile_error(&self) {
+        self.compile_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (see [`RegistryStats`]).
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_errors: self.compile_errors.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            registered: self.len(),
+            compile_secs: self.compile_secs.lock().unwrap().clone(),
+        }
     }
 
     /// Look up an artifact by name (refreshes its LRU recency).
@@ -371,5 +462,62 @@ mod tests {
     fn with_capacity_clamps_to_one() {
         assert_eq!(GrammarRegistry::with_capacity(0).capacity(), Some(1));
         assert_eq!(GrammarRegistry::new().capacity(), None);
+    }
+
+    #[test]
+    fn unregister_removes_and_survivors_keep_working() {
+        use crate::engine::ConstraintEngine as _;
+        let reg = registry_with(&["json", "calc"]);
+        let held = reg.get("calc").unwrap();
+        assert!(reg.unregister("calc"));
+        assert!(!reg.unregister("calc"), "second delete is a no-op");
+        assert!(reg.get("calc").is_none());
+        assert_eq!(reg.names(), vec!["json".to_string()]);
+        // The in-flight Arc still drives a working engine.
+        let mut e = held.engine();
+        e.reset("1 + ");
+        assert!(e.compute_mask().unwrap().unwrap().get(b'7' as usize));
+    }
+
+    #[test]
+    fn unregister_default_promotes_first_remaining() {
+        let reg = registry_with(&["json", "calc", "sql"]);
+        assert_eq!(reg.default_grammar().unwrap().name, "json");
+        assert!(reg.unregister("json"));
+        assert_eq!(reg.default_grammar().unwrap().name, "calc");
+        assert!(reg.unregister("calc"));
+        assert!(reg.unregister("sql"));
+        assert!(reg.default_grammar().is_none());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn stats_count_compiles_errors_and_evictions() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::with_capacity(2);
+        reg.register(compile("json", &tok)).unwrap();
+        reg.note_compile(0.5, false);
+        reg.register(compile("calc", &tok)).unwrap();
+        reg.note_compile(0.1, true);
+        reg.note_compile_error();
+        // A third name at capacity 2 evicts the LRU non-default (calc).
+        reg.register(compile("sql", &tok)).unwrap();
+        reg.note_compile(0.2, false);
+        let s = reg.stats();
+        assert_eq!(s.compiles, 3);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.compile_errors, 1);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.registered, 2);
+        assert_eq!(s.compile_secs, vec![0.5, 0.1, 0.2]);
+    }
+
+    #[test]
+    fn tokenizer_is_shared_and_empty_registry_has_none() {
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        let reg = GrammarRegistry::new();
+        assert!(reg.tokenizer().is_none());
+        reg.register(compile("json", &tok)).unwrap();
+        assert!(Arc::ptr_eq(&reg.tokenizer().unwrap(), &tok));
     }
 }

@@ -1,0 +1,236 @@
+//! Hot-reload of a grammar directory (`syncode serve --watch`).
+//!
+//! Dependency-free change detection: each poll stats every `*.lark` file
+//! in the watched directory and recompiles the ones whose `(mtime, len)`
+//! pair moved — the pair, not mtime alone, so editors on coarse-mtime
+//! filesystems that rewrite within one tick are still caught when the
+//! length changes. The grammar name is the file stem, validated by the
+//! same rule as the HTTP surface ([`super::valid_grammar_name`]).
+//!
+//! Reload is **replace-in-place** through the one shared
+//! [`compile_and_register`](super::compile_and_register) path: the new
+//! artifact swaps into the registry atomically, in-flight generations
+//! keep their `Arc` of the old one and finish byte-identically, and
+//! nothing is ever evicted by a reload. A *broken* edit is logged,
+//! counted in `syncode_grammar_compile_errors_total`, and the old
+//! grammar keeps serving — a typo in a watched file must never take a
+//! grammar off the air. Deleting a file does not unregister its grammar
+//! (that is an explicit `DELETE /v1/grammars/{name}`); the next serve
+//! restart simply won't re-load it.
+//!
+//! [`GrammarWatcher::scan_once`] is synchronous and deterministic — the
+//! unit the reload tests drive directly; [`GrammarWatcher::spawn`] wraps
+//! it in a polling thread for the server.
+
+use super::{compile_and_register, ArtifactConfig, GrammarRegistry};
+use crate::grammar::CompileLimits;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::SystemTime;
+
+/// What one poll of the watched directory did.
+#[derive(Debug, Clone, Default)]
+pub struct ScanReport {
+    /// Grammars (re)compiled and registered this scan.
+    pub reloaded: Vec<String>,
+    /// Files whose compile failed: `(name, error)`. The previously
+    /// registered grammar (if any) keeps serving.
+    pub errors: Vec<(String, String)>,
+}
+
+/// Polls a directory of `.lark` files into a [`GrammarRegistry`].
+pub struct GrammarWatcher {
+    dir: PathBuf,
+    registry: Arc<GrammarRegistry>,
+    cfg: ArtifactConfig,
+    limits: CompileLimits,
+    cache_dir: Option<PathBuf>,
+    /// Per-file `(mtime, len)` at the last attempt (success *or*
+    /// failure — a broken file is not retried until it changes again).
+    seen: HashMap<PathBuf, (SystemTime, u64)>,
+}
+
+impl GrammarWatcher {
+    pub fn new(
+        dir: PathBuf,
+        registry: Arc<GrammarRegistry>,
+        cfg: ArtifactConfig,
+        limits: CompileLimits,
+        cache_dir: Option<PathBuf>,
+    ) -> GrammarWatcher {
+        GrammarWatcher { dir, registry, cfg, limits, cache_dir, seen: HashMap::new() }
+    }
+
+    /// One synchronous poll: compile and register every `*.lark` file
+    /// whose `(mtime, len)` changed since the last scan (on the first
+    /// scan, every file). Files are processed in sorted path order so
+    /// registration order — and thus default-grammar promotion — is
+    /// deterministic.
+    pub fn scan_once(&mut self) -> ScanReport {
+        let mut report = ScanReport::default();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return report; // vanished dir: nothing to do, keep serving
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("lark"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let Ok(meta) = std::fs::metadata(&path) else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let stamp = (meta.modified().unwrap_or(SystemTime::UNIX_EPOCH), meta.len());
+            if self.seen.get(&path) == Some(&stamp) {
+                continue;
+            }
+            self.seen.insert(path.clone(), stamp);
+            let name = match path.file_stem().and_then(|s| s.to_str()) {
+                Some(s) => s.to_string(),
+                None => continue,
+            };
+            let source = match std::fs::read_to_string(&path) {
+                Ok(s) => s,
+                Err(e) => {
+                    report.errors.push((name, format!("read failed: {e}")));
+                    continue;
+                }
+            };
+            match compile_and_register(
+                &self.registry,
+                &name,
+                &source,
+                &self.cfg,
+                &self.limits,
+                self.cache_dir.as_deref(),
+            ) {
+                Ok(_) => report.reloaded.push(name),
+                Err(e) => report.errors.push((name, e.to_string())),
+            }
+        }
+        report
+    }
+
+    /// Background polling loop: scan every `interval_ms` until `stop`
+    /// flips, logging each reload and each kept-old-grammar failure.
+    pub fn spawn(
+        mut self,
+        interval_ms: u64,
+        stop: Arc<AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .name("syncode-grammar-watch".to_string())
+            .spawn(move || {
+                let interval = std::time::Duration::from_millis(interval_ms.max(50));
+                while !stop.load(Ordering::Acquire) {
+                    let report = self.scan_once();
+                    for name in &report.reloaded {
+                        eprintln!("[watch] reloaded grammar '{name}'");
+                    }
+                    for (name, err) in &report.errors {
+                        eprintln!(
+                            "[watch] grammar '{name}' failed to compile \
+                             (previous version keeps serving): {err}"
+                        );
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn grammar watcher")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::CompiledGrammar;
+    use super::*;
+    use crate::tokenizer::Tokenizer;
+
+    fn setup(dir: &std::path::Path) -> (Arc<GrammarRegistry>, GrammarWatcher) {
+        let _ = std::fs::remove_dir_all(dir);
+        std::fs::create_dir_all(dir).unwrap();
+        let reg = Arc::new(GrammarRegistry::new());
+        let cfg = ArtifactConfig::default();
+        let tok = Arc::new(Tokenizer::ascii_byte_level());
+        reg.register(CompiledGrammar::compile("calc", tok, &cfg).unwrap()).unwrap();
+        let w = GrammarWatcher::new(
+            dir.to_path_buf(),
+            reg.clone(),
+            cfg,
+            CompileLimits::default(),
+            None,
+        );
+        (reg, w)
+    }
+
+    #[test]
+    fn scan_registers_changes_and_keeps_old_on_breakage() {
+        let dir = std::env::temp_dir().join("syncode_watch_unit_test");
+        let (reg, mut w) = setup(&dir);
+        let file = dir.join("userdsl.lark");
+
+        // Empty dir: no-op.
+        let r = w.scan_once();
+        assert!(r.reloaded.is_empty() && r.errors.is_empty());
+
+        // New file is picked up.
+        std::fs::write(&file, "start: A+\nA: /[ab]/\n").unwrap();
+        let r = w.scan_once();
+        assert_eq!(r.reloaded, vec!["userdsl".to_string()]);
+        let v1 = reg.get("userdsl").expect("registered");
+        assert!(v1.cx.prefix_valid(b"ab"));
+
+        // Unchanged file: second scan is a no-op.
+        let r = w.scan_once();
+        assert!(r.reloaded.is_empty() && r.errors.is_empty());
+
+        // Changed content (different length, so coarse mtime cannot
+        // hide it) re-registers in place.
+        std::fs::write(&file, "start: A+\nA: /[abc]/\n").unwrap();
+        let r = w.scan_once();
+        assert_eq!(r.reloaded, vec!["userdsl".to_string()]);
+        let v2 = reg.get("userdsl").unwrap();
+        assert!(!Arc::ptr_eq(&v1, &v2), "replaced in place");
+        assert!(v2.cx.prefix_valid(b"abc"));
+        assert!(v1.cx.prefix_valid(b"ab"), "old Arc still serves");
+
+        // Broken edit: error reported, old artifact keeps serving,
+        // compile_errors tallied.
+        let errors_before = reg.stats().compile_errors;
+        std::fs::write(&file, "start: %%% broken").unwrap();
+        let r = w.scan_once();
+        assert!(r.reloaded.is_empty());
+        assert_eq!(r.errors.len(), 1);
+        assert_eq!(r.errors[0].0, "userdsl");
+        assert!(Arc::ptr_eq(&reg.get("userdsl").unwrap(), &v2), "old version kept");
+        assert_eq!(reg.stats().compile_errors, errors_before + 1);
+
+        // The broken file is not retried while unchanged.
+        let r = w.scan_once();
+        assert!(r.errors.is_empty());
+
+        // Non-.lark files are ignored.
+        std::fs::write(dir.join("notes.txt"), "not a grammar").unwrap();
+        let r = w.scan_once();
+        assert!(r.reloaded.is_empty() && r.errors.is_empty());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_file_stem_is_an_error_not_a_panic() {
+        let dir = std::env::temp_dir().join("syncode_watch_stem_test");
+        let (reg, mut w) = setup(&dir);
+        // A stem with characters outside [a-zA-Z0-9_-] is rejected by the
+        // shared name rule.
+        std::fs::write(dir.join("bad name.lark"), "start: A\nA: \"a\"\n").unwrap();
+        let r = w.scan_once();
+        assert_eq!(r.errors.len(), 1);
+        assert!(reg.get("bad name").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -2,7 +2,7 @@
 //! and the builder used by the EBNF reader to desugar `* + ? [] ()` into
 //! fresh nonterminals.
 
-use crate::regex::{compile, compile_literal, Dfa};
+use crate::regex::{compile_literal, parse_regex, Dfa, Nfa, RegexAst};
 use std::collections::HashMap;
 
 /// Terminal id (index into [`Grammar::terminals`]).
@@ -59,15 +59,40 @@ pub struct Rule {
     pub rhs: Vec<Symbol>,
 }
 
+/// Coarse classification of a [`GrammarError`], used by the HTTP front to
+/// pick a status code for user-supplied grammars: `TooLarge` → 413,
+/// `Parse`/`Limit` → 422.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrammarErrorKind {
+    /// The source does not describe a valid grammar (syntax, semantics).
+    Parse,
+    /// A [`CompileLimits`](crate::grammar::CompileLimits) resource cap was
+    /// exceeded (rules, terminals, DFA states, compile budget).
+    Limit,
+    /// The raw source exceeds the byte-size cap.
+    TooLarge,
+}
+
 /// Error raised by grammar construction.
 #[derive(Debug, Clone)]
 pub struct GrammarError {
     pub msg: String,
+    pub kind: GrammarErrorKind,
 }
 
 impl GrammarError {
     pub fn new(msg: impl Into<String>) -> Self {
-        GrammarError { msg: msg.into() }
+        GrammarError { msg: msg.into(), kind: GrammarErrorKind::Parse }
+    }
+
+    /// A resource-cap violation (422 on the wire).
+    pub fn limit(msg: impl Into<String>) -> Self {
+        GrammarError { msg: msg.into(), kind: GrammarErrorKind::Limit }
+    }
+
+    /// An oversize-source rejection (413 on the wire).
+    pub fn too_large(msg: impl Into<String>) -> Self {
+        GrammarError { msg: msg.into(), kind: GrammarErrorKind::TooLarge }
     }
 }
 
@@ -78,6 +103,74 @@ impl std::fmt::Display for GrammarError {
 }
 
 impl std::error::Error for GrammarError {}
+
+/// Resource caps for compiling *untrusted* grammar source (request-time
+/// grammars arriving over `POST /v1/grammars`, files picked up by
+/// `serve --watch`). Every cap turns a hostile input into a clean
+/// [`GrammarError`] instead of an OOM, a panic, or a compile-bomb: source
+/// size is checked before tokenising, regex bodies before parsing, NFA
+/// expansion before allocation, DFA subset construction inside its
+/// worklist loop, and rule/terminal counts plus a wall-clock budget as the
+/// reader emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompileLimits {
+    /// Maximum grammar source size in bytes (exceeding → 413 on the wire).
+    pub max_source_bytes: usize,
+    /// Maximum number of BNF rules after EBNF desugaring.
+    pub max_rules: usize,
+    /// Maximum number of terminals (named + anonymous).
+    pub max_terminals: usize,
+    /// Maximum byte length of one `/regex/` body.
+    pub max_regex_bytes: usize,
+    /// Maximum Thompson-NFA size for one terminal (estimated pre-build).
+    pub max_nfa_states: usize,
+    /// Maximum *total* DFA states across all terminal automata — the
+    /// mask-store build cost is proportional to this × vocab.
+    pub max_dfa_states: usize,
+    /// Wall-clock compile budget in milliseconds; `0` = unlimited.
+    pub budget_ms: u64,
+}
+
+impl Default for CompileLimits {
+    /// Generous for real grammars (the five `grammars/*.lark` compile well
+    /// inside these), tight enough that a hostile grammar cannot monopolise
+    /// the server.
+    fn default() -> Self {
+        CompileLimits {
+            max_source_bytes: 256 * 1024,
+            max_rules: 4096,
+            max_terminals: 1024,
+            max_regex_bytes: 4096,
+            max_nfa_states: 65_536,
+            max_dfa_states: 50_000,
+            budget_ms: 10_000,
+        }
+    }
+}
+
+impl CompileLimits {
+    /// No caps — the trusted offline path (builtin grammars, CLI compile).
+    pub fn unlimited() -> Self {
+        CompileLimits {
+            max_source_bytes: usize::MAX,
+            max_rules: usize::MAX,
+            max_terminals: usize::MAX,
+            max_regex_bytes: usize::MAX,
+            max_nfa_states: usize::MAX,
+            max_dfa_states: usize::MAX,
+            budget_ms: 0,
+        }
+    }
+
+    /// Wall-clock deadline for this compile, if budgeted.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        if self.budget_ms == 0 {
+            None
+        } else {
+            Some(std::time::Instant::now() + std::time::Duration::from_millis(self.budget_ms))
+        }
+    }
+}
 
 /// A fully-built grammar: Γ (terminals), nonterminals, BNF rules.
 #[derive(Debug)]
@@ -138,10 +231,17 @@ pub struct GrammarBuilder {
     /// Anonymous terminal dedup: literal text → id.
     anon_by_literal: HashMap<Vec<u8>, TermId>,
     gensym: usize,
+    /// Resource caps applied to terminal DFA construction.
+    limits: CompileLimits,
 }
 
 impl GrammarBuilder {
     pub fn new() -> Self {
+        Self::with_limits(CompileLimits::unlimited())
+    }
+
+    /// A builder whose terminal compiles are capped by `limits`.
+    pub fn with_limits(limits: CompileLimits) -> Self {
         GrammarBuilder {
             terminals: Vec::new(),
             nonterminals: Vec::new(),
@@ -150,7 +250,42 @@ impl GrammarBuilder {
             nt_by_name: HashMap::new(),
             anon_by_literal: HashMap::new(),
             gensym: 0,
+            limits,
         }
+    }
+
+    /// DFA states already committed across all terminals.
+    fn used_dfa_states(&self) -> usize {
+        self.terminals.iter().map(|t| t.dfa.num_states()).sum()
+    }
+
+    /// Compile one terminal's regex AST to a minimised DFA under the
+    /// builder's limits: NFA expansion is estimated before allocation and
+    /// subset construction is capped at the *remaining* total-DFA-state
+    /// budget, so no single terminal can blow past `max_dfa_states`.
+    pub(crate) fn compile_terminal_dfa(
+        &self,
+        name: &str,
+        ast: &RegexAst,
+    ) -> Result<Dfa, GrammarError> {
+        let est = ast.nfa_size_estimate();
+        if est > self.limits.max_nfa_states {
+            return Err(GrammarError::limit(format!(
+                "terminal {name}: regex expands to ~{est} NFA states (limit {})",
+                self.limits.max_nfa_states
+            )));
+        }
+        let remaining = self.limits.max_dfa_states.saturating_sub(self.used_dfa_states());
+        if remaining == 0 {
+            return Err(GrammarError::limit(format!(
+                "terminal {name}: total DFA state budget ({}) exhausted",
+                self.limits.max_dfa_states
+            )));
+        }
+        let nfa = Nfa::from_ast(ast);
+        let dfa = Dfa::from_nfa_bounded(&nfa, remaining)
+            .map_err(|msg| GrammarError::limit(format!("terminal {name}: {msg}")))?;
+        Ok(dfa.minimise())
     }
 
     pub fn term_id(&self, name: &str) -> Option<TermId> {
@@ -186,8 +321,17 @@ impl GrammarBuilder {
         if self.term_by_name.contains_key(name) {
             return Err(GrammarError::new(format!("duplicate terminal {name}")));
         }
-        let dfa = compile(pattern, ignore_case)
+        if pattern.len() > self.limits.max_regex_bytes {
+            return Err(GrammarError::limit(format!(
+                "terminal {name}: regex body is {} bytes (limit {})",
+                pattern.len(),
+                self.limits.max_regex_bytes
+            )));
+        }
+        let ast = parse_regex(pattern)
             .map_err(|e| GrammarError::new(format!("terminal {name}: {e}")))?;
+        let ast = if ignore_case { ast.case_insensitive() } else { ast };
+        let dfa = self.compile_terminal_dfa(name, &ast)?;
         if !dfa.language_nonempty() {
             return Err(GrammarError::new(format!("terminal {name} matches nothing")));
         }

@@ -16,16 +16,37 @@
 //! Terminal definitions compose other terminals (e.g. `INT: DIGIT+`); these
 //! references are inlined recursively (cycles are an error).
 
-use super::cfg::{GrammarBuilder, GrammarError, NtId, Symbol};
+use super::cfg::{CompileLimits, GrammarBuilder, GrammarError, NtId, Symbol};
 use crate::grammar::Grammar;
 use crate::regex::{parse_regex, RegexAst};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// Parse Lark-EBNF source into a [`Grammar`]. The start symbol is `start`.
+/// Uncapped — the trusted offline path (builtin grammars, CLI compile).
 pub fn parse_ebnf(src: &str) -> Result<Grammar, GrammarError> {
-    let toks = tokenize(src)?;
+    parse_ebnf_limited(src, &CompileLimits::unlimited())
+}
+
+/// [`parse_ebnf`] under resource caps, for *untrusted* source (request-time
+/// grammars, watched files). Every violation is a clean [`GrammarError`]
+/// whose [`kind`](GrammarError::kind) distinguishes oversize source
+/// (`TooLarge`) from cap overflows (`Limit`) and plain syntax/semantic
+/// errors (`Parse`).
+pub fn parse_ebnf_limited(
+    src: &str,
+    limits: &CompileLimits,
+) -> Result<Grammar, GrammarError> {
+    if src.len() > limits.max_source_bytes {
+        return Err(GrammarError::too_large(format!(
+            "grammar source is {} bytes (limit {})",
+            src.len(),
+            limits.max_source_bytes
+        )));
+    }
+    let toks = tokenize(src, limits)?;
     let defs = split_definitions(&toks)?;
-    Reader::new().read(defs)
+    Reader::with_limits(*limits).read(defs)
 }
 
 // ---------------------------------------------------------------- tokens --
@@ -52,7 +73,7 @@ enum Tok {
     Newline,
 }
 
-fn tokenize(src: &str) -> Result<Vec<Tok>, GrammarError> {
+fn tokenize(src: &str, limits: &CompileLimits) -> Result<Vec<Tok>, GrammarError> {
     let b = src.as_bytes();
     let mut i = 0;
     let mut out = Vec::new();
@@ -89,6 +110,13 @@ fn tokenize(src: &str) -> Result<Vec<Tok>, GrammarError> {
                 }
                 if j >= b.len() {
                     return Err(err(i, "unterminated regex"));
+                }
+                if j - start > limits.max_regex_bytes {
+                    return Err(GrammarError::limit(format!(
+                        "ebnf byte {i}: regex body is {} bytes (limit {})",
+                        j - start,
+                        limits.max_regex_bytes
+                    )));
                 }
                 let body = std::str::from_utf8(&b[start..j])
                     .map_err(|_| err(start, "non-utf8 regex"))?
@@ -404,15 +432,46 @@ struct Reader {
     /// Terminal name → its body expression (for inlining references).
     term_bodies: HashMap<String, Expr>,
     term_prios: HashMap<String, i32>,
+    limits: CompileLimits,
+    deadline: Option<Instant>,
 }
 
 impl Reader {
-    fn new() -> Self {
+    fn with_limits(limits: CompileLimits) -> Self {
         Reader {
-            builder: GrammarBuilder::new(),
+            builder: GrammarBuilder::with_limits(limits),
             term_bodies: HashMap::new(),
             term_prios: HashMap::new(),
+            deadline: limits.deadline(),
+            limits,
         }
+    }
+
+    /// Enforce the reader-level caps: wall clock, rule count, terminal
+    /// count. Called as definitions/rules/symbols are emitted, so overshoot
+    /// past a cap is at most one construct before the error.
+    fn check_budget(&self) -> Result<(), GrammarError> {
+        if let Some(d) = self.deadline {
+            if Instant::now() > d {
+                return Err(GrammarError::limit(format!(
+                    "grammar compile exceeded its {} ms budget",
+                    self.limits.budget_ms
+                )));
+            }
+        }
+        if self.builder.rules.len() > self.limits.max_rules {
+            return Err(GrammarError::limit(format!(
+                "grammar has more than {} rules after desugaring",
+                self.limits.max_rules
+            )));
+        }
+        if self.builder.terminals.len() > self.limits.max_terminals {
+            return Err(GrammarError::limit(format!(
+                "grammar has more than {} terminals",
+                self.limits.max_terminals
+            )));
+        }
+        Ok(())
     }
 
     fn read(mut self, defs: Vec<Def<'_>>) -> Result<Grammar, GrammarError> {
@@ -420,6 +479,7 @@ impl Reader {
         let mut rule_defs: Vec<(String, Expr)> = Vec::new();
         let mut ignores: Vec<Expr> = Vec::new();
         for def in &defs {
+            self.check_budget()?;
             match def {
                 Def::Import(path) => {
                     let name = path.rsplit('.').next().unwrap().to_string();
@@ -491,6 +551,7 @@ impl Reader {
         name: &str,
         stack: &mut Vec<String>,
     ) -> Result<(), GrammarError> {
+        self.check_budget()?;
         if self.builder.term_id(name).is_some() {
             return Ok(());
         }
@@ -580,6 +641,7 @@ impl Reader {
 
     /// Emit BNF rules for `lhs → expr`, desugaring EBNF constructs.
     fn emit_rule(&mut self, lhs: NtId, expr: &Expr) -> Result<(), GrammarError> {
+        self.check_budget()?;
         match expr {
             Expr::Alt(branches) => {
                 for b in branches {
@@ -616,6 +678,7 @@ impl Reader {
     /// One expression → one symbol (creating helper NTs as needed).
     /// Returns None for ε-only constructs.
     fn expr_to_symbol(&mut self, e: &Expr) -> Result<Option<Symbol>, GrammarError> {
+        self.check_budget()?;
         Ok(Some(match e {
             Expr::RuleRef(n) => Symbol::N(self.builder.nt(n)),
             Expr::TermRef(n) => {
@@ -691,7 +754,7 @@ impl Reader {
 fn parse_expr(toks: &[Tok]) -> Result<Expr, GrammarError> {
     // Filter newlines (continuations keep their leading Pipe).
     let toks: Vec<&Tok> = toks.iter().filter(|t| **t != Tok::Newline).collect();
-    let mut p = EParser { toks: &toks, pos: 0 };
+    let mut p = EParser { toks: &toks, pos: 0, depth: 0 };
     let e = p.alts()?;
     if p.pos != p.toks.len() {
         return Err(GrammarError::new(format!(
@@ -705,7 +768,13 @@ fn parse_expr(toks: &[Tok]) -> Result<Expr, GrammarError> {
 struct EParser<'a> {
     toks: &'a [&'a Tok],
     pos: usize,
+    /// Group-nesting depth, capped so `((((…` is an error, not a recursion
+    /// stack overflow (untrusted sources reach this parser).
+    depth: usize,
 }
+
+/// Maximum `( )` / `[ ]` nesting depth in a definition body.
+const MAX_EBNF_DEPTH: usize = 512;
 
 impl<'a> EParser<'a> {
     fn peek(&self) -> Option<&'a Tok> {
@@ -775,19 +844,29 @@ impl<'a> EParser<'a> {
             Tok::Str(s, ci) => Expr::Str(s.clone(), *ci),
             Tok::Regex(body, iflag, _sflag) => Expr::Regex(body.clone(), *iflag),
             Tok::LPar => {
+                self.depth += 1;
+                if self.depth > MAX_EBNF_DEPTH {
+                    return Err(GrammarError::new("group nesting too deep"));
+                }
                 let inner = self.alts()?;
                 if self.peek() != Some(&Tok::RPar) {
                     return Err(GrammarError::new("expected ')'"));
                 }
                 self.pos += 1;
+                self.depth -= 1;
                 inner
             }
             Tok::LSqb => {
+                self.depth += 1;
+                if self.depth > MAX_EBNF_DEPTH {
+                    return Err(GrammarError::new("group nesting too deep"));
+                }
                 let inner = self.alts()?;
                 if self.peek() != Some(&Tok::RSqb) {
                     return Err(GrammarError::new("expected ']'"));
                 }
                 self.pos += 1;
+                self.depth -= 1;
                 Expr::Opt(Box::new(inner))
             }
             other => return Err(GrammarError::new(format!("unexpected token {other:?}"))),
@@ -840,11 +919,10 @@ impl GrammarBuilder {
         priority: i32,
     ) -> Result<super::cfg::TermId, GrammarError> {
         use super::cfg::TermPattern;
-        use crate::regex::{Dfa, Nfa};
         if self.term_id(name).is_some() {
             return Err(GrammarError::new(format!("duplicate terminal {name}")));
         }
-        let dfa = Dfa::from_nfa(&Nfa::from_ast(&ast)).minimise();
+        let dfa = self.compile_terminal_dfa(name, &ast)?;
         if !dfa.language_nonempty() {
             return Err(GrammarError::new(format!("terminal {name} matches nothing")));
         }
@@ -978,5 +1056,96 @@ start: "a" ("b" | "c")* "d"?
     fn cycle_detected() {
         let src = "start: A\nA: B\nB: A\n";
         assert!(parse_ebnf(src).is_err());
+    }
+
+    mod limits {
+        use super::*;
+        use crate::grammar::cfg::GrammarErrorKind;
+
+        #[test]
+        fn builtins_compile_under_default_limits() {
+            for name in crate::grammar::Grammar::builtin_names() {
+                let src = crate::grammar::Grammar::builtin_source(name).unwrap();
+                parse_ebnf_limited(src, &CompileLimits::default())
+                    .unwrap_or_else(|e| panic!("builtin {name} hit limits: {e}"));
+            }
+        }
+
+        #[test]
+        fn oversize_source_is_too_large() {
+            let limits = CompileLimits { max_source_bytes: 64, ..Default::default() };
+            let src = format!("start: \"a\" // {}\n", "x".repeat(200));
+            let err = parse_ebnf_limited(&src, &limits).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::TooLarge);
+        }
+
+        #[test]
+        fn oversize_regex_body_is_limit() {
+            let limits = CompileLimits { max_regex_bytes: 16, ..Default::default() };
+            let src = format!("start: /{}/\n", "a".repeat(64));
+            let err = parse_ebnf_limited(&src, &limits).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Limit);
+        }
+
+        #[test]
+        fn rule_count_capped() {
+            let limits = CompileLimits { max_rules: 8, ..Default::default() };
+            let mut src = String::from("start: r0\n");
+            for i in 0..32 {
+                src.push_str(&format!("r{i}: \"x\" | \"y{i}\"\n"));
+            }
+            let err = parse_ebnf_limited(&src, &limits).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Limit);
+        }
+
+        #[test]
+        fn terminal_count_capped() {
+            let limits = CompileLimits { max_terminals: 4, ..Default::default() };
+            let body: Vec<String> = (0..32).map(|i| format!("\"t{i}\"")).collect();
+            let src = format!("start: {}\n", body.join(" "));
+            let err = parse_ebnf_limited(&src, &limits).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Limit);
+        }
+
+        #[test]
+        fn nfa_bomb_is_limit_not_oom() {
+            // Nested counted repeats multiply the Thompson expansion.
+            let src = "start: X\nX: /((((a{64}){64}){64}){64})/\n";
+            let err = parse_ebnf_limited(src, &CompileLimits::default()).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Limit);
+        }
+
+        #[test]
+        fn dfa_bomb_is_limit_not_hang() {
+            // Subset-construction blowup: (a|b)*a(a|b){24} needs ≥ 2^24 DFA
+            // states — must fail inside the worklist loop, quickly.
+            let src = "start: X\nX: /(a|b)*a(a|b){24}/\n";
+            let err = parse_ebnf_limited(src, &CompileLimits::default()).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Limit);
+        }
+
+        #[test]
+        fn deep_nesting_is_error_not_stack_overflow() {
+            let deep = format!("start: {}\"a\"{}\n", "(".repeat(5000), ")".repeat(5000));
+            assert!(parse_ebnf(&deep).is_err());
+            let deep_re = format!("start: /{}a{}/\n", "(".repeat(5000), ")".repeat(5000));
+            assert!(parse_ebnf(&deep_re).is_err());
+        }
+
+        #[test]
+        fn plain_syntax_error_stays_parse_kind() {
+            let err =
+                parse_ebnf_limited("start \"a\"\n", &CompileLimits::default()).unwrap_err();
+            assert_eq!(err.kind, GrammarErrorKind::Parse);
+        }
+
+        #[test]
+        fn limited_equals_unlimited_on_sane_grammar() {
+            let a = parse_ebnf(CALC).unwrap();
+            let b = parse_ebnf_limited(CALC, &CompileLimits::default()).unwrap();
+            assert_eq!(a.rules.len(), b.rules.len());
+            assert_eq!(a.terminals.len(), b.terminals.len());
+            assert_eq!(a.total_dfa_states(), b.total_dfa_states());
+        }
     }
 }

@@ -10,8 +10,11 @@
 mod cfg;
 mod ebnf;
 
-pub use cfg::{Grammar, GrammarBuilder, GrammarError, NtId, Rule, Symbol, TermId, TermPattern, Terminal};
-pub use ebnf::parse_ebnf;
+pub use cfg::{
+    CompileLimits, Grammar, GrammarBuilder, GrammarError, GrammarErrorKind, NtId, Rule, Symbol,
+    TermId, TermPattern, Terminal,
+};
+pub use ebnf::{parse_ebnf, parse_ebnf_limited};
 
 /// Embedded built-in grammars (name → source).
 pub const BUILTIN_GRAMMARS: &[(&str, &str)] = &[

@@ -13,7 +13,9 @@
 //!   worker pool, overlapped with the batched decode (`docs/serving.md`);
 //!   `--http ADDR` serves the same coordinator over HTTP instead of the
 //!   synthetic stream (`POST /v1/generate`, with `?stream=1` for
-//!   token-by-token SSE, `GET /healthz`, `/metrics`);
+//!   token-by-token SSE, `POST`/`DELETE /v1/grammars` for request-time
+//!   user-supplied grammars, `GET /healthz`, `/metrics`); `--watch DIR`
+//!   hot-reloads `*.lark` files from a directory into the registry;
 //! - `grammar`    inspect a built-in grammar (terminals, LR tables, conflicts);
 //! - `maskstore`  build a DFA mask store and print its statistics (Table 5);
 //! - `experiment` run a paper experiment (table1|table2|table3|table4);
@@ -21,14 +23,15 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::artifact::{self, ArtifactConfig, CompiledGrammar, GrammarRegistry, GrammarWatcher};
 use syncode::coordinator::{
     Coordinator, CoordinatorConfig, GenParams, GenRequest, Server, SloClass, Strategy,
 };
 use syncode::engine::GrammarContext;
 use syncode::eval::dataset;
 use syncode::eval::harness::{self, EngineKind, EvalEnv};
-use syncode::net::{HttpConfig, HttpServer};
+use syncode::grammar::CompileLimits;
+use syncode::net::{GrammarApiConfig, HttpConfig, HttpServer};
 use syncode::parser::{LrMode, LrTable};
 use syncode::runtime::{
     replicate_factory, LanguageModel, MockModel, ModelFactory, PjrtModel, PjrtVariant,
@@ -60,8 +63,13 @@ fn main() {
                  \x20          --spec-k <k> --spec-k-cap <k> --deadline-ms <ms>\n\
                  \x20          --batch-queue-cap <n> --batch-age-ms <ms>  (batch-class admission)\n\
                  \x20          --http <addr:port> --http-workers <n>   (HTTP front instead of the batch stream;\n\
-                 \x20          POST /v1/generate?stream=1 streams tokens as SSE)\n\
-                 \x20          --sse-keepalive-ms <ms>  (idle-stream heartbeat; 0 = off)"
+                 \x20          POST /v1/generate?stream=1 streams tokens as SSE;\n\
+                 \x20          POST/DELETE /v1/grammars registers user-supplied grammars)\n\
+                 \x20          --sse-keepalive-ms <ms>  (idle-stream heartbeat; 0 = off)\n\
+                 \x20          --watch <dir> --watch-ms <ms>  (hot-reload *.lark files into the registry)\n\
+                 \x20          --max-grammar-bytes <n> --max-grammar-rules <n> --max-grammar-terminals <n>\n\
+                 \x20          --max-regex-bytes <n> --max-dfa-states <n> --compile-budget-ms <ms>\n\
+                 \x20          (untrusted-grammar compile caps for /v1/grammars and --watch)"
             );
             std::process::exit(2);
         }
@@ -109,30 +117,37 @@ fn artifact_cfg(args: &Args) -> ArtifactConfig {
     cfg
 }
 
-/// Short stable fingerprint of (tokenizer, compile options) for cache file
-/// names: different grammar sets train different union tokenizers, and a
-/// name-only key would make alternating subcommands overwrite each other's
-/// caches on every run (permanent thrash, never warm).
-fn cache_fingerprint(tok: &Tokenizer, cfg: &ArtifactConfig) -> String {
-    use std::hash::{Hash, Hasher};
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    tok.to_json().hash(&mut h);
-    matches!(cfg.lr_mode, LrMode::Canonical).hash(&mut h);
-    cfg.mask.with_m1.hash(&mut h);
-    cfg.mask.max_token_len.hash(&mut h);
-    format!("{:016x}", h.finish())
-}
-
 /// `<cache-dir>/<grammar>-<fingerprint>.syncart`; None when no
-/// `--cache-dir` was given.
+/// `--cache-dir` was given. The fingerprint (tokenizer + compile options,
+/// `artifact::cache_file_name`) keeps different grammar sets — which
+/// train different union tokenizers — from overwriting each other's
+/// caches on every run (permanent thrash, never warm). The HTTP
+/// registration path uses the same helper, so a grammar uploaded over
+/// `POST /v1/grammars` warm-loads after a restart.
 fn cache_path(
     args: &Args,
     gname: &str,
     tok: &Tokenizer,
     cfg: &ArtifactConfig,
 ) -> Option<PathBuf> {
-    let fp = cache_fingerprint(tok, cfg);
-    args.get("cache-dir").map(|d| PathBuf::from(d).join(format!("{gname}-{fp}.syncart")))
+    args.get("cache-dir")
+        .map(|d| PathBuf::from(d).join(artifact::cache_file_name(gname, tok, cfg)))
+}
+
+/// Untrusted-grammar compile caps from the command line; applied to
+/// `POST /v1/grammars` and `--watch` compiles (never to the trusted
+/// built-in grammars compiled at startup).
+fn compile_limits_from(args: &Args) -> CompileLimits {
+    let d = CompileLimits::default();
+    CompileLimits {
+        max_source_bytes: args.get_num("max-grammar-bytes", d.max_source_bytes),
+        max_rules: args.get_num("max-grammar-rules", d.max_rules),
+        max_terminals: args.get_num("max-grammar-terminals", d.max_terminals),
+        max_regex_bytes: args.get_num("max-regex-bytes", d.max_regex_bytes),
+        max_nfa_states: d.max_nfa_states,
+        max_dfa_states: args.get_num("max-dfa-states", d.max_dfa_states),
+        budget_ms: args.get_num("compile-budget-ms", d.budget_ms),
+    }
 }
 
 /// Compile or warm-load one grammar artifact, reporting which happened.
@@ -284,8 +299,8 @@ fn cmd_compile(args: &Args) {
         "store(s)", "total(s)", "blob", "steps", "÷naive",
     ]);
     for gname in &gnames {
-        let fp = cache_fingerprint(&tok, &cfg);
-        let out = PathBuf::from(&cache_dir).join(format!("{gname}-{fp}.syncart"));
+        let out =
+            PathBuf::from(&cache_dir).join(artifact::cache_file_name(gname, &tok, &cfg));
         let (art, hit) =
             CompiledGrammar::load_or_compile(&out, gname, tok.clone(), &cfg)
                 .unwrap_or_else(|e| {
@@ -399,6 +414,7 @@ fn cmd_serve(args: &Args) {
             })
         }),
         batch_age_ms: args.get_num("batch-age-ms", defaults.batch_age_ms),
+        compile_limits: compile_limits_from(args),
     };
     eprintln!(
         "[coordinator: {} replica(s), {} mask thread(s), queue cap {} (batch {}), \
@@ -410,8 +426,32 @@ fn cmd_serve(args: &Args) {
         cfg.spec_k_cap,
         cfg.batch_age_ms
     );
+    let limits = cfg.compile_limits;
     let factories = model_factories(args, use_mock, &tok, &union_docs, replicas);
     let srv = Coordinator::start(factories, tok, registry.clone(), cfg);
+
+    // Hot-reload: poll a directory of *.lark files into the registry.
+    // Broken edits keep the previous version serving; see
+    // `artifact/watch.rs`.
+    let watch_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let watch_thread = args.get("watch").map(|dir| {
+        let watch_ms = args.get_num("watch-ms", 500u64);
+        eprintln!("[watch: polling {dir} every {watch_ms}ms]");
+        GrammarWatcher::new(
+            PathBuf::from(&dir),
+            registry.clone(),
+            artifact_cfg(args),
+            limits,
+            args.get("cache-dir").map(PathBuf::from),
+        )
+        .spawn(watch_ms, watch_stop.clone())
+    });
+    let stop_watch = |t: Option<std::thread::JoinHandle<()>>| {
+        watch_stop.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(t) = t {
+            let _ = t.join();
+        }
+    };
 
     // Network mode: adapt the coordinator onto HTTP and run until a
     // graceful shutdown (`POST /admin/shutdown`) drains it.
@@ -421,18 +461,29 @@ fn cmd_serve(args: &Args) {
             workers: args.get_num("http-workers", 8usize),
             sse_keepalive_ms: args
                 .get_num("sse-keepalive-ms", http_defaults.sse_keepalive_ms),
+            grammar_api: GrammarApiConfig {
+                limits,
+                artifact: artifact_cfg(args),
+                cache_dir: args.get("cache-dir").map(PathBuf::from),
+            },
         };
-        let server = HttpServer::bind(addr, srv, registry, http_cfg)
+        let server = HttpServer::bind(addr, srv, registry.clone(), http_cfg)
             .unwrap_or_else(|e| panic!("http bind {addr}: {e}"));
         // Machine-readable (ci.sh greps it); `--http 127.0.0.1:0` picks an
         // ephemeral port, surfaced only here.
         println!("[http] listening on {}", server.local_addr());
         println!(
-            "[http] POST /v1/generate (?stream=1 for SSE) | GET /v1/grammars /healthz /metrics | POST /admin/shutdown"
+            "[http] POST /v1/generate (?stream=1 for SSE) | POST/DELETE /v1/grammars | GET /v1/grammars /healthz /metrics | POST /admin/shutdown"
         );
         let handle = server.wait();
+        stop_watch(watch_thread);
         println!("[http] drained; final metrics:");
         println!("global: {}", handle.snapshot().report());
+        let rs = registry.stats();
+        println!(
+            "grammars: {} registered, {} compiles ({} cache hits), {} errors, {} evictions",
+            rs.registered, rs.compiles, rs.cache_hits, rs.compile_errors, rs.evictions
+        );
         handle.shutdown();
         return;
     }
@@ -485,6 +536,7 @@ fn cmd_serve(args: &Args) {
         }
     }
     println!("global: {}", srv.snapshot().report());
+    stop_watch(watch_thread);
     srv.shutdown();
 }
 

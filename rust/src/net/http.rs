@@ -149,6 +149,7 @@ pub fn status_text(code: u16) -> &'static str {
         408 => "Request Timeout",
         411 => "Length Required",
         413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",

@@ -21,4 +21,4 @@ pub mod json;
 pub mod prom;
 pub mod server;
 
-pub use server::{HttpConfig, HttpServer};
+pub use server::{GrammarApiConfig, HttpConfig, HttpServer};

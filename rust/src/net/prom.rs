@@ -8,6 +8,7 @@
 //! `replica="N"` label so imbalance is visible to a scraper exactly as it
 //! is in `replica_snapshots()`.
 
+use crate::artifact::RegistryStats;
 use crate::coordinator::{MetricsSnapshot, SloClass};
 use std::fmt::Write as _;
 
@@ -27,6 +28,8 @@ pub struct HttpStats {
     pub replicas_live: usize,
     /// Replica threads the coordinator was started with.
     pub replicas_total: usize,
+    /// Grammar-registry counters (the `syncode_grammar_*` families).
+    pub grammar: RegistryStats,
 }
 
 fn header(out: &mut String, name: &str, kind: &str, help: &str) {
@@ -381,6 +384,64 @@ pub fn render(global: &MetricsSnapshot, replicas: &[MetricsSnapshot], http: &Htt
         }
     }
 
+    // The user-supplied-grammar surface (`POST /v1/grammars`, `--watch`).
+    counter(
+        &mut out,
+        "syncode_grammar_compiles_total",
+        "Grammar compile-and-register operations that succeeded (cache hits included).",
+        http.grammar.compiles,
+    );
+    counter(
+        &mut out,
+        "syncode_grammar_compile_errors_total",
+        "Grammar registrations rejected (parse errors, limit violations).",
+        http.grammar.compile_errors,
+    );
+    counter(
+        &mut out,
+        "syncode_grammar_cache_hits_total",
+        "Grammar compiles served by warm-loading a cached artifact.",
+        http.grammar.cache_hits,
+    );
+    counter(
+        &mut out,
+        "syncode_grammar_evictions_total",
+        "Grammars dropped by LRU eviction (replace-in-place never counts).",
+        http.grammar.evictions,
+    );
+    gauge(
+        &mut out,
+        "syncode_grammar_registered",
+        "Grammars currently resident in the registry.",
+        http.grammar.registered as f64,
+    );
+    {
+        // Quantiles over the registry's bounded sample window.
+        let mut secs = http.grammar.compile_secs.clone();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let q = |p: f64| -> f64 {
+            if secs.is_empty() {
+                0.0
+            } else {
+                secs[((secs.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        let mean = if secs.is_empty() {
+            0.0
+        } else {
+            secs.iter().sum::<f64>() / secs.len() as f64
+        };
+        summary(
+            &mut out,
+            "syncode_grammar_compile_seconds",
+            "Wall-clock time of grammar compile-and-register operations.",
+            q(0.5),
+            q(0.99),
+            mean,
+            secs.len() as u64,
+        );
+    }
+
     header(
         &mut out,
         "syncode_http_responses_total",
@@ -464,9 +525,24 @@ mod tests {
             class_queue_depths: [4, 1],
             replicas_live: 1,
             replicas_total: 2,
+            grammar: RegistryStats {
+                compiles: 7,
+                compile_errors: 2,
+                cache_hits: 3,
+                evictions: 1,
+                registered: 4,
+                compile_secs: vec![0.25, 0.5],
+            },
         };
         let text = render(&g, &reps, &http);
         assert_parses(&text);
+        assert!(text.contains("syncode_grammar_compiles_total 7"));
+        assert!(text.contains("syncode_grammar_compile_errors_total 2"));
+        assert!(text.contains("syncode_grammar_cache_hits_total 3"));
+        assert!(text.contains("syncode_grammar_evictions_total 1"));
+        assert!(text.contains("syncode_grammar_registered 4"));
+        assert!(text.contains("syncode_grammar_compile_seconds_count 2"));
+        assert!(text.contains("syncode_grammar_compile_seconds_sum 0.75"));
         assert!(text.contains("syncode_lane_failures_total 2"));
         assert!(text.contains("syncode_replica_restarts_total 1"));
         assert!(text.contains("syncode_replicas_live 1"));

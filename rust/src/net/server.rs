@@ -12,6 +12,13 @@
 //!   final grammar-validity verdict. A client that disconnects mid-stream
 //!   cancels its generation and frees the lane.
 //! - `GET  /v1/grammars` — registry listing with per-grammar stats;
+//! - `POST /v1/grammars` — register a user-supplied grammar
+//!   (`{"name", "lark_src"}`): compiled under [`CompileLimits`] so a
+//!   hostile grammar is a clean 4xx (400 wire error / 413 oversize source
+//!   / 422 unparseable-or-limit), never an OOM or a compile bomb; the
+//!   artifact persists to the cache dir so restarts warm-load it;
+//! - `DELETE /v1/grammars/{name}` — unregister (in-flight generations
+//!   holding the artifact's `Arc` finish unaffected; unknown name → 404);
 //! - `GET  /healthz` — liveness + queue gauge (503 while draining);
 //! - `GET  /metrics` — Prometheus text rendering (`net/prom.rs`);
 //! - `POST /admin/shutdown` — graceful drain (see below); loopback peers
@@ -47,17 +54,20 @@
 
 use super::http::{self, error_response, ChunkedWriter, Request, Response};
 use super::json::{
-    decode_generate, encode_generate_response, encode_stream_done, encode_token_event,
+    decode_generate, decode_register_grammar, encode_generate_response, encode_register_response,
+    encode_stream_done, encode_token_event,
 };
 use super::prom::{self, HttpStats};
-use crate::artifact::{CompiledGrammar, GrammarRegistry};
+use crate::artifact::{self, ArtifactConfig, ArtifactError, CompiledGrammar, GrammarRegistry};
 use crate::coordinator::{
     FinishReason, GenResponse, ServerHandle, SloClass, StreamHandle, SubmitError, TokenEvent,
 };
+use crate::grammar::{CompileLimits, GrammarErrorKind};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -77,12 +87,33 @@ pub struct HttpConfig {
     /// client, cancelling the generation instead of parking the worker on
     /// an event that may never come. 0 disables the heartbeat.
     pub sse_keepalive_ms: u64,
+    /// The `POST /v1/grammars` surface (limits, compile options, cache).
+    pub grammar_api: GrammarApiConfig,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { workers: 8, sse_keepalive_ms: 15_000 }
+        HttpConfig {
+            workers: 8,
+            sse_keepalive_ms: 15_000,
+            grammar_api: GrammarApiConfig::default(),
+        }
     }
+}
+
+/// Configuration of the request-time grammar surface.
+#[derive(Debug, Clone, Default)]
+pub struct GrammarApiConfig {
+    /// Hard caps applied to every untrusted compile (source size, rule
+    /// and terminal counts, regex/DFA sizes, wall-clock budget).
+    pub limits: CompileLimits,
+    /// Compile options for registered grammars. Must match what the
+    /// server's startup grammars used, or cache identity and mask
+    /// semantics drift between builtin and user-supplied grammars.
+    pub artifact: ArtifactConfig,
+    /// Artifact cache directory (`--cache-dir`); `None` disables
+    /// persistence — registered grammars then die with the process.
+    pub cache_dir: Option<PathBuf>,
 }
 
 /// Shared application state behind all connection workers.
@@ -93,6 +124,8 @@ struct AppState {
     draining: AtomicBool,
     /// SSE heartbeat interval (ms); 0 = disabled.
     sse_keepalive_ms: u64,
+    /// The `POST /v1/grammars` surface configuration.
+    grammar_api: GrammarApiConfig,
     /// Responses sent, by status code (the `/metrics` HTTP section).
     codes: Mutex<BTreeMap<u16, u64>>,
     /// Fires once when `/admin/shutdown` is accepted.
@@ -134,6 +167,7 @@ impl HttpServer {
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
             sse_keepalive_ms: cfg.sse_keepalive_ms,
+            grammar_api: cfg.grammar_api,
             codes: Mutex::new(BTreeMap::new()),
             shutdown_tx: Mutex::new(Some(tx)),
         });
@@ -305,6 +339,13 @@ fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Handle
         }
         ("POST", "/v1/generate") => handle_generate(state, req),
         ("GET", "/v1/grammars") => handle_grammars(state),
+        ("POST", "/v1/grammars") => handle_register_grammar(state, req),
+        ("DELETE", path) if path.starts_with("/v1/grammars/") => {
+            handle_delete_grammar(state, &path["/v1/grammars/".len()..])
+        }
+        (_, path) if path.starts_with("/v1/grammars/") => {
+            error_response(405, "use DELETE")
+        }
         ("GET", "/healthz") => handle_healthz(state),
         ("GET", "/metrics") => handle_metrics(state),
         // Only loopback peers may stop the service: on a non-loopback
@@ -317,9 +358,8 @@ fn route(state: &Arc<AppState>, req: &Request, peer_is_loopback: bool) -> Handle
         (_, "/v1/generate") | (_, "/admin/shutdown") => {
             error_response(405, "use POST")
         }
-        (_, "/v1/grammars") | (_, "/healthz") | (_, "/metrics") => {
-            error_response(405, "use GET")
-        }
+        (_, "/v1/grammars") => error_response(405, "use GET or POST"),
+        (_, "/healthz") | (_, "/metrics") => error_response(405, "use GET"),
         (_, path) => error_response(404, &format!("no route for {path}")),
     };
     Handled::Plain(plain)
@@ -484,6 +524,70 @@ fn handle_generate(state: &Arc<AppState>, req: &Request) -> Response {
     Response::json(200, encode_generate_response(&resp, &art.name, valid))
 }
 
+/// Register (or replace) a user-supplied grammar. Wire errors are 400;
+/// an oversize source is 413; a grammar the compiler rejects — parse
+/// error or a [`CompileLimits`] violation — is 422. A successful compile
+/// replaces an existing entry in place: requests already generating
+/// against the displaced artifact hold their own `Arc` and finish
+/// byte-identically.
+fn handle_register_grammar(state: &Arc<AppState>, req: &Request) -> Response {
+    let body = match decode_register_grammar(&req.body) {
+        Ok(b) => b,
+        Err(e) => return error_response(400, &e),
+    };
+    let api = &state.grammar_api;
+    let replaced = state.registry.get(&body.name).is_some();
+    match artifact::compile_and_register(
+        &state.registry,
+        &body.name,
+        &body.lark_src,
+        &api.artifact,
+        &api.limits,
+        api.cache_dir.as_deref(),
+    ) {
+        Ok((art, from_cache)) => Response::json(
+            200,
+            encode_register_response(&body.name, replaced, from_cache, &art.compile_stats),
+        ),
+        Err(e) => grammar_error_response(&e),
+    }
+}
+
+/// Map a failed grammar registration onto its status code: 413 for an
+/// oversize source, 422 for anything the compiler rejected (parse error
+/// or limit violation), 503 when the registry has no tokenizer yet, 500
+/// for internal faults (cache I/O).
+fn grammar_error_response(e: &ArtifactError) -> Response {
+    let status = match e {
+        ArtifactError::Grammar(g) => match g.kind {
+            GrammarErrorKind::TooLarge => 413,
+            GrammarErrorKind::Parse | GrammarErrorKind::Limit => 422,
+        },
+        ArtifactError::Mismatch(_) => 503,
+        _ => 500,
+    };
+    error_response(status, &e.to_string())
+}
+
+/// Unregister a grammar by name. In-flight generations keep their `Arc`
+/// and finish unaffected; subsequent requests naming it get the generate
+/// endpoint's unknown-grammar error.
+fn handle_delete_grammar(state: &Arc<AppState>, name: &str) -> Response {
+    if state.registry.unregister(name) {
+        let mut m = BTreeMap::new();
+        m.insert("deleted".to_string(), Json::Str(name.to_string()));
+        Response::json(200, Json::Obj(m).to_string())
+    } else {
+        error_response(
+            404,
+            &format!(
+                "unknown grammar '{name}' (registered: {})",
+                state.registry.names().join(", ")
+            ),
+        )
+    }
+}
+
 fn handle_grammars(state: &Arc<AppState>) -> Response {
     let default = state.registry.default_grammar().map(|a| a.name.clone());
     let grammars: Vec<Json> = state
@@ -504,15 +608,37 @@ fn handle_grammars(state: &Arc<AppState>) -> Response {
             m.insert("terminals".to_string(), Json::Num(s.num_terminals as f64));
             m.insert("unique_masks".to_string(), Json::Num(s.unique_masks as f64));
             m.insert("mask_store_bytes".to_string(), Json::Num(s.mem_bytes as f64));
+            m.insert(
+                "source_bytes".to_string(),
+                Json::Num(art.source.len() as f64),
+            );
+            m.insert(
+                "from_cache".to_string(),
+                Json::Bool(art.compile_stats.from_cache),
+            );
+            m.insert(
+                "compile_secs".to_string(),
+                Json::Num(art.compile_stats.total_secs),
+            );
             Json::Obj(m)
         })
         .collect();
+    let rs = state.registry.stats();
+    let mut stats = BTreeMap::new();
+    stats.insert("compiles".to_string(), Json::Num(rs.compiles as f64));
+    stats.insert(
+        "compile_errors".to_string(),
+        Json::Num(rs.compile_errors as f64),
+    );
+    stats.insert("cache_hits".to_string(), Json::Num(rs.cache_hits as f64));
+    stats.insert("evictions".to_string(), Json::Num(rs.evictions as f64));
     let mut top = BTreeMap::new();
     top.insert(
         "default".to_string(),
         default.map(Json::Str).unwrap_or(Json::Null),
     );
     top.insert("grammars".to_string(), Json::Arr(grammars));
+    top.insert("stats".to_string(), Json::Obj(stats));
     Response::json(200, Json::Obj(top).to_string())
 }
 
@@ -568,6 +694,7 @@ fn handle_metrics(state: &Arc<AppState>) -> Response {
         class_queue_depths: state.handle.queue_class_depths(),
         replicas_live: state.handle.replicas_live(),
         replicas_total: state.handle.replicas_total(),
+        grammar: state.registry.stats(),
     };
     let text =
         prom::render(&state.handle.snapshot(), &state.handle.replica_snapshots(), &http);

@@ -87,6 +87,40 @@ pub enum RegexAst {
 }
 
 impl RegexAst {
+    /// Saturating estimate of the Thompson NFA size this AST expands to.
+    ///
+    /// Mirrors the construction in `nfa.rs` (including its repetition
+    /// expansion cap of 64), so callers can reject a pathological pattern
+    /// — e.g. nested counted repeats like `(a{64}){64}{64}` whose state
+    /// count multiplies per nesting level — *before* allocating the NFA.
+    pub fn nfa_size_estimate(&self) -> usize {
+        const REPEAT_CAP: usize = 64; // keep in sync with nfa.rs
+        match self {
+            RegexAst::Empty => 2,
+            RegexAst::Class(_) => 2,
+            RegexAst::Literal(bytes) => bytes.len().saturating_add(1),
+            RegexAst::Concat(parts) | RegexAst::Alt(parts) => parts
+                .iter()
+                .fold(2usize, |acc, p| acc.saturating_add(p.nfa_size_estimate())),
+            RegexAst::Star(inner) | RegexAst::Opt(inner) => {
+                inner.nfa_size_estimate().saturating_add(2)
+            }
+            RegexAst::Plus(inner) => inner.nfa_size_estimate().saturating_add(1),
+            RegexAst::Repeat(inner, lo, hi) => {
+                let (lo, hi) = (*lo, *hi);
+                let copies = lo.min(REPEAT_CAP)
+                    + if hi == usize::MAX {
+                        1
+                    } else {
+                        hi.min(REPEAT_CAP).saturating_sub(lo)
+                    };
+                copies
+                    .saturating_mul(inner.nfa_size_estimate().saturating_add(2))
+                    .saturating_add(2)
+            }
+        }
+    }
+
     /// Fold ASCII case: every letter class/literal accepts both cases.
     pub fn case_insensitive(self) -> RegexAst {
         match self {
@@ -149,7 +183,7 @@ impl std::error::Error for RegexError {}
 
 /// Parse a regex pattern into an AST.
 pub fn parse_regex(pattern: &str) -> Result<RegexAst, RegexError> {
-    let mut p = P { b: pattern.as_bytes(), pos: 0 };
+    let mut p = P { b: pattern.as_bytes(), pos: 0, depth: 0 };
     let ast = p.alt()?;
     if p.pos != p.b.len() {
         return Err(p.err("unexpected trailing content"));
@@ -160,7 +194,13 @@ pub fn parse_regex(pattern: &str) -> Result<RegexAst, RegexError> {
 struct P<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Current group-nesting depth. Capped so a pathological `((((…`
+    /// pattern is a parse error, not a recursion stack overflow.
+    depth: usize,
 }
+
+/// Maximum group-nesting depth for untrusted patterns (recursive descent).
+const MAX_REGEX_DEPTH: usize = 512;
 
 impl<'a> P<'a> {
     fn err(&self, msg: &str) -> RegexError {
@@ -271,6 +311,10 @@ impl<'a> P<'a> {
         match self.peek() {
             Some(b'(') => {
                 self.pos += 1;
+                self.depth += 1;
+                if self.depth > MAX_REGEX_DEPTH {
+                    return Err(self.err("group nesting too deep"));
+                }
                 // (?: ...) non-capturing and (?s:...)/(?i...) inline flags:
                 // strip the prefix; `s` only affects '.', handled globally.
                 if self.peek() == Some(b'?') {
@@ -283,6 +327,7 @@ impl<'a> P<'a> {
                     }
                 }
                 let inner = self.alt()?;
+                self.depth -= 1;
                 if self.bump() != Some(b')') {
                     return Err(self.err("unclosed group"));
                 }

@@ -29,6 +29,16 @@ pub struct Dfa {
 impl Dfa {
     /// Subset construction from an ε-NFA.
     pub fn from_nfa(nfa: &Nfa) -> Dfa {
+        Dfa::from_nfa_bounded(nfa, usize::MAX)
+            .expect("unbounded subset construction cannot hit the cap")
+    }
+
+    /// Subset construction with a hard cap on determinised states.
+    ///
+    /// Subset construction is worst-case exponential in NFA size, so for
+    /// untrusted patterns the cap is checked *inside* the worklist loop —
+    /// a hostile regex fails fast instead of growing `sets` without bound.
+    pub fn from_nfa_bounded(nfa: &Nfa, max_states: usize) -> Result<Dfa, String> {
         // --- byte equivalence classes ------------------------------------
         // Two bytes are equivalent if every NFA transition set treats them
         // identically. Build a signature per byte from the set memberships.
@@ -86,6 +96,11 @@ impl Dfa {
                 let nid = match state_ids.get(&nxt) {
                     Some(&id) => id,
                     None => {
+                        if sets.len() >= max_states {
+                            return Err(format!(
+                                "regex DFA exceeds {max_states} states during subset construction"
+                            ));
+                        }
                         let id = sets.len() as u32;
                         state_ids.insert(nxt.clone(), id);
                         sets.push(nxt.clone());
@@ -109,7 +124,7 @@ impl Dfa {
             start: 0,
         };
         dfa.compute_live();
-        dfa
+        Ok(dfa)
     }
 
     /// Live states (Definition 9): states from which some accept state is

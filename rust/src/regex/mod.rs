@@ -24,10 +24,33 @@ pub use nfa::Nfa;
 /// Compile a regex (Lark `/.../` body, flags already stripped) to a
 /// minimised DFA with live-state analysis.
 pub fn compile(pattern: &str, ignore_case: bool) -> Result<Dfa, RegexError> {
+    compile_bounded(pattern, ignore_case, usize::MAX, usize::MAX)
+}
+
+/// [`compile`] with hard resource caps, for untrusted patterns.
+///
+/// `max_nfa_states` bounds the Thompson expansion (estimated from the AST
+/// *before* the NFA is allocated, so counted-repeat bombs never reach the
+/// allocator); `max_dfa_states` bounds subset construction, which is
+/// worst-case exponential in NFA size. Either overflow is a clean error.
+pub fn compile_bounded(
+    pattern: &str,
+    ignore_case: bool,
+    max_nfa_states: usize,
+    max_dfa_states: usize,
+) -> Result<Dfa, RegexError> {
     let ast = parse_regex(pattern)?;
     let ast = if ignore_case { ast.case_insensitive() } else { ast };
+    let est = ast.nfa_size_estimate();
+    if est > max_nfa_states {
+        return Err(RegexError {
+            pos: 0,
+            msg: format!("regex expands to ~{est} NFA states (limit {max_nfa_states})"),
+        });
+    }
     let nfa = Nfa::from_ast(&ast);
-    let dfa = Dfa::from_nfa(&nfa);
+    let dfa = Dfa::from_nfa_bounded(&nfa, max_dfa_states)
+        .map_err(|msg| RegexError { pos: 0, msg })?;
     Ok(dfa.minimise())
 }
 
@@ -191,5 +214,42 @@ mod tests {
     #[test]
     fn anchors_rejected() {
         assert!(parse_regex("^abc$").is_err());
+    }
+
+    #[test]
+    fn bounded_compile_matches_unbounded_on_sane_patterns() {
+        for pat in ["[0-9]+", r#""[^"]*""#, "(a|b)*abb", "a{2,5}"] {
+            let loose = compile(pat, false).unwrap();
+            let tight = compile_bounded(pat, false, 10_000, 10_000).unwrap();
+            assert_eq!(loose.num_states(), tight.num_states(), "{pat}");
+        }
+    }
+
+    #[test]
+    fn nfa_bomb_rejected_before_allocation() {
+        // Nested counted repeats multiply the Thompson expansion per level;
+        // the AST estimate must reject this without building the NFA.
+        let pat = "((((a{64}){64}){64}){64})";
+        let err = compile_bounded(pat, false, 100_000, 100_000).unwrap_err();
+        assert!(err.msg.contains("NFA states"), "{err}");
+    }
+
+    #[test]
+    fn dfa_blowup_rejected_inside_subset_construction() {
+        // (a|b)*a(a|b){N} determinises to ≥ 2^N states — the classic
+        // subset-construction bomb. Small NFA, huge DFA: only the in-loop
+        // cap catches it.
+        let pat = "(a|b)*a(a|b){20}";
+        let err = compile_bounded(pat, false, 100_000, 4_096).unwrap_err();
+        assert!(err.msg.contains("subset construction"), "{err}");
+        // The same pattern with a generous cap still compiles.
+        assert!(compile_bounded("(a|b)*a(a|b){8}", false, 100_000, 4_096).is_ok());
+    }
+
+    #[test]
+    fn size_estimate_is_saturating() {
+        let ast = parse_regex("((((((a{64}){64}){64}){64}){64}){64})").unwrap();
+        // Must not overflow; must be astronomically large.
+        assert!(ast.nfa_size_estimate() > 1 << 40);
     }
 }

@@ -1,0 +1,177 @@
+//! Dependency-free structure-aware fuzzing of the untrusted-grammar
+//! input surface (`parse_ebnf_limited` under the default
+//! [`CompileLimits`]).
+//!
+//! A seeded mutator (the crate's own xorshift [`Rng`] — fixed seed, so
+//! every CI run explores the same inputs) splices, truncates,
+//! byte-flips and chunk-duplicates a corpus built from the five shipped
+//! `grammars/*.lark` files plus hand-written adversarial seeds in
+//! `rust/tests/corpus/ebnf/` (deep nesting, huge repetitions,
+//! alternation blow-ups, unterminated literals, multibyte soup).
+//!
+//! The only property asserted is the hardening contract: every input —
+//! however mangled — must come back as `Ok(grammar)` or a clean
+//! `GrammarError` within its time budget. No panic, no hang, no
+//! unbounded allocation. `SYNCODE_FUZZ_ITERS` overrides the iteration
+//! count (ci.sh's full tier raises it).
+
+use std::time::{Duration, Instant};
+use syncode::grammar::{parse_ebnf_limited, CompileLimits};
+use syncode::util::rng::Rng;
+
+/// One parse attempt must resolve well inside the compile budget
+/// (default `budget_ms` is 10s; the slack covers debug-build CI).
+const PER_CALL_BUDGET: Duration = Duration::from_secs(30);
+
+fn corpus() -> Vec<(String, String)> {
+    let mut seeds = Vec::new();
+    for name in ["json", "calc", "sql", "python", "go"] {
+        let path = format!("grammars/{name}.lark");
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e}"));
+        seeds.push((path, src));
+    }
+    let dir = "rust/tests/corpus/ebnf";
+    let mut extra: Vec<_> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {dir}: {e}"))
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("lark"))
+        .collect();
+    extra.sort();
+    for path in extra {
+        let src = std::fs::read_to_string(&path).expect("read corpus seed");
+        seeds.push((path.display().to_string(), src));
+    }
+    assert!(seeds.len() >= 10, "corpus went missing: {} seeds", seeds.len());
+    seeds
+}
+
+fn iterations() -> usize {
+    match std::env::var("SYNCODE_FUZZ_ITERS") {
+        Ok(v) => v.parse().unwrap_or_else(|_| panic!("bad SYNCODE_FUZZ_ITERS: {v}")),
+        Err(_) => 300,
+    }
+}
+
+/// One structure-aware mutation over the byte form of two seeds.
+/// Mutants may be invalid UTF-8 at the byte level; they are lossily
+/// re-coded because the parser's input type is `&str` (the HTTP surface
+/// performs the same UTF-8 gate before the parser ever sees bytes).
+fn mutate(rng: &mut Rng, a: &[u8], b: &[u8]) -> String {
+    let mut bytes: Vec<u8> = match rng.below(4) {
+        // Splice: prefix of one seed + suffix of another.
+        0 => {
+            let cut_a = rng.below(a.len() + 1);
+            let cut_b = rng.below(b.len() + 1);
+            let mut v = a[..cut_a].to_vec();
+            v.extend_from_slice(&b[cut_b..]);
+            v
+        }
+        // Truncate: random prefix (tests mid-token EOF everywhere).
+        1 => a[..rng.below(a.len() + 1)].to_vec(),
+        // Byte flips: scatter corruption without changing structure.
+        2 => {
+            let mut v = a.to_vec();
+            if !v.is_empty() {
+                for _ in 0..rng.range(1, 9) {
+                    let i = rng.below(v.len());
+                    v[i] ^= 1 << rng.below(8);
+                }
+            }
+            v
+        }
+        // Chunk duplication: repeat a random slice (repetition bombs).
+        _ => {
+            let mut v = a.to_vec();
+            if !v.is_empty() {
+                let lo = rng.below(v.len());
+                let hi = rng.range(lo, v.len());
+                let chunk = v[lo..hi].to_vec();
+                for _ in 0..rng.range(1, 5) {
+                    v.extend_from_slice(&chunk);
+                }
+            }
+            v
+        }
+    };
+    // Keep mutants under the source cap most of the time so the deeper
+    // parser stages actually run (oversize is covered by its own seed).
+    bytes.truncate(128 * 1024);
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// The contract under test: error-or-success, in budget. Returns
+/// whether the input was accepted.
+fn parse_one(label: &str, src: &str, limits: &CompileLimits) -> bool {
+    let t0 = Instant::now();
+    let ok = parse_ebnf_limited(src, limits).is_ok();
+    let dt = t0.elapsed();
+    assert!(
+        dt < PER_CALL_BUDGET,
+        "{label}: parse took {dt:?} (> {PER_CALL_BUDGET:?}) on {} bytes",
+        src.len()
+    );
+    ok
+}
+
+#[test]
+fn raw_seeds_never_panic_and_shipped_grammars_parse() {
+    let limits = CompileLimits::default();
+    for (label, src) in corpus() {
+        let ok = parse_one(&label, &src, &limits);
+        // The five shipped grammars must parse under the default
+        // hardening limits — otherwise real users hit the caps.
+        if label.starts_with("grammars/") {
+            assert!(ok, "shipped grammar rejected under default limits: {label}");
+        }
+    }
+}
+
+#[test]
+fn mutated_corpus_is_error_or_success_never_panic() {
+    let limits = CompileLimits::default();
+    let seeds = corpus();
+    let mut rng = Rng::new(0xEB2F_5EED);
+    let iters = iterations();
+    let (mut accepted, mut rejected) = (0usize, 0usize);
+    for i in 0..iters {
+        let a = &seeds[rng.below(seeds.len())];
+        let b = &seeds[rng.below(seeds.len())];
+        let src = mutate(&mut rng, a.1.as_bytes(), b.1.as_bytes());
+        let label = format!("iter {i} ({} x {})", a.0, b.0);
+        if parse_one(&label, &src, &limits) {
+            accepted += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    // Sanity on the mutator itself: it must produce both outcomes, or
+    // it is not exploring the boundary where parser bugs live.
+    assert!(rejected > 0, "mutator produced no invalid inputs in {iters} iters");
+    assert!(
+        accepted + rejected == iters,
+        "accounting bug: {accepted}+{rejected} != {iters}"
+    );
+    eprintln!("[ebnf_fuzz] {iters} iterations: {accepted} accepted, {rejected} rejected");
+}
+
+#[test]
+fn tight_limits_reject_instead_of_ooming() {
+    // Under deliberately tiny caps, the shipped grammars themselves
+    // become "hostile" inputs: every rejection must be a clean error.
+    let tiny = CompileLimits {
+        max_source_bytes: 512,
+        max_rules: 4,
+        max_terminals: 2,
+        max_regex_bytes: 16,
+        max_nfa_states: 32,
+        max_dfa_states: 16,
+        budget_ms: 1000,
+    };
+    let mut saw_rejection = false;
+    for (label, src) in corpus() {
+        saw_rejection |= !parse_one(&label, &src, &tiny);
+    }
+    assert!(saw_rejection, "tiny limits rejected nothing");
+}

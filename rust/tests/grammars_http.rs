@@ -1,0 +1,456 @@
+//! End-to-end tests for the request-time grammar surface: registering a
+//! user-supplied grammar over `POST /v1/grammars` and generating against
+//! it, duplicate-name replace-in-place while a generation is in flight
+//! (old `Arc` survives, output byte-identical to a run without the
+//! replacement), the hardened error matrix (400/413/422 as clean JSON,
+//! never a panic or hang), DELETE semantics, and the
+//! `syncode_grammar_*` metric families.
+//!
+//! Everything runs over real TCP sockets on ephemeral loopback ports,
+//! the same path an external curl would take.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
+use syncode::coordinator::{Coordinator, CoordinatorConfig, GenResponse};
+use syncode::net::http::fetch;
+use syncode::net::json::finish_from_str;
+use syncode::net::{HttpConfig, HttpServer};
+use syncode::runtime::{replicate_factory, LanguageModel, MockModel};
+use syncode::tokenizer::Tokenizer;
+use syncode::util::json::{parse, Json};
+
+fn docs() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"name": "alice", "age": 30}"#.to_vec(),
+        b"1 + 2 * 3".to_vec(),
+        b"abba baab abab".to_vec(),
+    ]
+}
+
+fn registry(tok: &Arc<Tokenizer>) -> Arc<GrammarRegistry> {
+    let reg = Arc::new(GrammarRegistry::new());
+    for g in ["json", "calc"] {
+        let art = CompiledGrammar::compile(g, tok.clone(), &ArtifactConfig::default()).unwrap();
+        reg.register(art).unwrap();
+    }
+    reg
+}
+
+/// Coordinator + HTTP front over the mock model, default grammar-API
+/// config (real `CompileLimits`, no cache dir).
+fn start_mock_http() -> (HttpServer, Arc<GrammarRegistry>, String) {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let tok_m = tok.clone();
+    let factories = replicate_factory(1, move || {
+        Ok(Box::new(MockModel::from_documents(tok_m.clone(), &docs(), 2, 256, 11))
+            as Box<dyn LanguageModel>)
+    });
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap: 64, ..Default::default() };
+    let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg.clone(),
+        HttpConfig { workers: 6, ..Default::default() },
+    )
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (server, reg, addr)
+}
+
+/// Encode a `POST /v1/grammars` body through the crate's own JSON
+/// printer so newlines and quotes in the source are escaped correctly.
+fn register_body(name: &str, lark_src: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("lark_src".to_string(), Json::Str(lark_src.to_string()));
+    Json::Obj(m).to_string()
+}
+
+fn generate_body(grammar: &str, seed: u64, max_tokens: usize) -> String {
+    format!(
+        r#"{{"grammar": "{grammar}", "prompt": "produce {grammar} #{seed}",
+           "max_tokens": {max_tokens}, "seed": {seed}, "strategy": "greedy"}}"#
+    )
+}
+
+/// Rebuild a wire response into a `GenResponse` for the client-side
+/// validity oracle.
+fn wire_response(v: &Json) -> GenResponse {
+    GenResponse {
+        id: v.get("id").unwrap().as_usize().unwrap() as u64,
+        text: v.get("text").unwrap().as_str().unwrap().to_string(),
+        finish: finish_from_str(v.get("finish").unwrap().as_str().unwrap()).unwrap(),
+        tokens: v.get("tokens").unwrap().as_usize().unwrap(),
+        ttft_secs: 0.0,
+        latency_secs: 0.0,
+        error: None,
+    }
+}
+
+const USER_SRC_AB: &str = "start: A+\nA: /[ab]/\n";
+const USER_SRC_CD: &str = "start: B+\nB: /[cd]/\n";
+
+#[test]
+fn register_over_http_then_generate_against_it() {
+    let (server, reg, addr) = start_mock_http();
+    let a = addr.as_str();
+
+    // Register a brand-new grammar over the wire.
+    let (status, body) =
+        fetch(a, "POST", "/v1/grammars", Some(&register_body("userdsl", USER_SRC_AB))).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).expect("register response json");
+    assert_eq!(v.get("name").unwrap().as_str(), Some("userdsl"));
+    assert_eq!(v.get("replaced").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("from_cache").unwrap().as_bool(), Some(false));
+    assert!(v.get("total_secs").unwrap().as_f64().unwrap() >= 0.0, "{body}");
+
+    // It shows up in the registry detail listing with its source size.
+    let (status, body) = fetch(a, "GET", "/v1/grammars", None).unwrap();
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    let user = v
+        .get("grammars")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|g| g.get("name").unwrap().as_str() == Some("userdsl"))
+        .expect("registered grammar listed");
+    assert_eq!(
+        user.get("source_bytes").and_then(Json::as_usize),
+        Some(USER_SRC_AB.len()),
+        "{body}"
+    );
+    assert_eq!(user.get("from_cache").unwrap().as_bool(), Some(false));
+    assert!(user.get("dfa_states").unwrap().as_usize().unwrap() > 0);
+
+    // Generate against it: the output must be shaped by the new grammar
+    // — and we don't take the server's word for it.
+    let (status, body) = fetch(a, "POST", "/v1/generate", Some(&generate_body("userdsl", 7, 12)))
+        .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("grammar").unwrap().as_str(), Some("userdsl"));
+    assert_eq!(v.get("valid").unwrap().as_bool(), Some(true), "{body}");
+    let resp = wire_response(&v);
+    assert!(!resp.text.is_empty(), "{body}");
+    assert!(resp.text.bytes().all(|b| b == b'a' || b == b'b'), "{body}");
+    assert!(reg.get("userdsl").unwrap().response_valid(&resp), "{body}");
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn error_matrix_is_clean_4xx_json_and_server_survives() {
+    let (server, reg, addr) = start_mock_http();
+    let a = addr.as_str();
+    let registered_before = reg.len();
+    let post = |body: &str| fetch(a, "POST", "/v1/grammars", Some(body)).unwrap();
+
+    // Every rejection must be the exact status class, carry a JSON
+    // "error" body, and leave no partial registry entry behind.
+    let expect = |status: u16, body: &str, label: &str| {
+        let v = parse(body).unwrap_or_else(|e| panic!("{label}: not JSON ({e:?}): {body}"));
+        assert!(v.get("error").is_some(), "{label}: no error field: {body}");
+        status
+    };
+
+    // Wire/schema failures → 400.
+    let (s, b) = post("not json");
+    assert_eq!(expect(s, &b, "garbage"), 400);
+    let (s, b) = post(r#"{"name": "g"}"#);
+    assert_eq!(expect(s, &b, "missing lark_src"), 400);
+    let (s, b) = post(r#"{"lark_src": "start: A\n"}"#);
+    assert_eq!(expect(s, &b, "missing name"), 400);
+    let (s, b) = post(r#"{"name": "g", "lark_src": "start: A\nA: \"a\"\n", "grammer": true}"#);
+    assert_eq!(expect(s, &b, "unknown field"), 400);
+    let (s, b) = post(r#"{"name": "../evil", "lark_src": "start: A\nA: \"a\"\n"}"#);
+    assert_eq!(expect(s, &b, "path-traversal name"), 400);
+    let (s, b) = post(r#"{"name": "g", "lark_src": 7}"#);
+    assert_eq!(expect(s, &b, "non-string source"), 400);
+    let (s, b) = post(r#"{"name": "g", "lark_src": ""}"#);
+    assert_eq!(expect(s, &b, "empty source"), 400);
+
+    // Oversize source → 413 (within the wire body cap, over the compile
+    // limit, so this exercises `CompileLimits`, not the HTTP parser).
+    let oversize = "a".repeat(300 * 1024);
+    let (s, b) = post(&register_body("big", &oversize));
+    assert_eq!(expect(s, &b, "oversize source"), 413, "{b}");
+
+    // Unparseable lark → 422.
+    let (s, b) = post(&register_body("broken", "start: %%% nope"));
+    assert_eq!(expect(s, &b, "unparseable"), 422, "{b}");
+
+    // Limit-exceeded (oversize regex body, within source cap) → 422.
+    let big_regex = format!("start: A\nA: /{}/\n", "a".repeat(5000));
+    let (s, b) = post(&register_body("bomb", &big_regex));
+    assert_eq!(expect(s, &b, "regex over limit"), 422, "{b}");
+
+    // No partial entries: nothing above may have registered.
+    assert_eq!(reg.len(), registered_before, "partial registry entry leaked");
+    for name in ["g", "big", "broken", "bomb"] {
+        assert!(reg.get(name).is_none(), "{name} leaked into the registry");
+    }
+
+    // After all that abuse the server still serves — both endpoints.
+    let (status, body) =
+        fetch(a, "POST", "/v1/grammars", Some(&register_body("ok", USER_SRC_AB))).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let (status, body) =
+        fetch(a, "POST", "/v1/generate", Some(&generate_body("calc", 5, 12))).unwrap();
+    assert_eq!(status, 200, "{body}");
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn delete_unregisters_cleanly_and_generate_gets_clean_error() {
+    let (server, reg, addr) = start_mock_http();
+    let a = addr.as_str();
+
+    let (status, _) =
+        fetch(a, "POST", "/v1/grammars", Some(&register_body("tmpg", USER_SRC_AB))).unwrap();
+    assert_eq!(status, 200);
+    let (status, body) =
+        fetch(a, "POST", "/v1/generate", Some(&generate_body("tmpg", 3, 8))).unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // DELETE removes it...
+    let (status, body) = fetch(a, "DELETE", "/v1/grammars/tmpg", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(parse(&body).unwrap().get("deleted").unwrap().as_str(), Some("tmpg"));
+    assert!(reg.get("tmpg").is_none());
+
+    // ...generating against it is now the generate endpoint's clean
+    // unknown-grammar error (400, listing what is registered), not a
+    // panic or a 500.
+    let (status, body) =
+        fetch(a, "POST", "/v1/generate", Some(&generate_body("tmpg", 4, 8))).unwrap();
+    assert_eq!(status, 400, "{body}");
+    let v = parse(&body).unwrap();
+    let err = v.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("calc"), "error should list registered grammars: {body}");
+
+    // Double-delete and deleting the never-registered → 404, JSON body.
+    let (status, body) = fetch(a, "DELETE", "/v1/grammars/tmpg", None).unwrap();
+    assert_eq!(status, 404, "{body}");
+    assert!(parse(&body).unwrap().get("error").is_some());
+    let (status, _) = fetch(a, "DELETE", "/v1/grammars/neverwas", None).unwrap();
+    assert_eq!(status, 404);
+
+    // Wrong methods on the grammar routes are 405s, not 404s.
+    assert_eq!(fetch(a, "GET", "/v1/grammars/tmpg", None).unwrap().0, 405);
+    assert_eq!(fetch(a, "PUT", "/v1/grammars", Some("{}")).unwrap().0, 405);
+
+    // The listing no longer mentions it; the server still serves.
+    let (_, body) = fetch(a, "GET", "/v1/grammars", None).unwrap();
+    assert!(!body.contains("tmpg"), "{body}");
+    let (status, _) = fetch(a, "POST", "/v1/generate", Some(&generate_body("json", 9, 8))).unwrap();
+    assert_eq!(status, 200);
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn grammar_metric_families_track_registrations() {
+    let (server, _reg, addr) = start_mock_http();
+    let a = addr.as_str();
+
+    // One success, one failure.
+    let (status, _) =
+        fetch(a, "POST", "/v1/grammars", Some(&register_body("mdsl", USER_SRC_AB))).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) =
+        fetch(a, "POST", "/v1/grammars", Some(&register_body("mbad", "start: %%%"))).unwrap();
+    assert_eq!(status, 422);
+
+    // The registry stats are on the listing...
+    let (_, body) = fetch(a, "GET", "/v1/grammars", None).unwrap();
+    let v = parse(&body).unwrap();
+    let stats = v.get("stats").expect("stats object");
+    assert!(stats.get("compiles").unwrap().as_usize().unwrap() >= 1, "{body}");
+    assert!(stats.get("compile_errors").unwrap().as_usize().unwrap() >= 1, "{body}");
+
+    // ...and on /metrics, as parseable Prometheus families.
+    let (status, text) = fetch(a, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let mut families: BTreeMap<&str, f64> = BTreeMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        assert!(v.is_finite(), "{line}");
+        families.insert(name, v);
+    }
+    assert!(families["syncode_grammar_compiles_total"] >= 1.0, "{text}");
+    assert!(families["syncode_grammar_compile_errors_total"] >= 1.0, "{text}");
+    assert_eq!(families["syncode_grammar_evictions_total"], 0.0, "{text}");
+    assert!(families.contains_key("syncode_grammar_cache_hits_total"), "{text}");
+    // json + calc + mdsl; the broken one must not be counted.
+    assert_eq!(families["syncode_grammar_registered"], 3.0, "{text}");
+    assert!(families["syncode_grammar_compile_seconds_count"] >= 1.0, "{text}");
+    server.shutdown().shutdown();
+}
+
+// --------------------------------------------------------------------------
+// Replace-in-place while a generation is in flight needs a model whose
+// decode can be held open deterministically.
+
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Uniform-logits model whose first decode signals `entered` and then
+/// blocks until the gate opens; the grammar mask does all the shaping,
+/// so output is deterministic per (grammar, seed).
+struct StallModel {
+    vocab: usize,
+    gate: Arc<Gate>,
+    entered: Option<Sender<()>>,
+}
+
+impl LanguageModel for StallModel {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn max_seq(&self) -> usize {
+        256
+    }
+
+    fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> syncode::util::error::Result<Vec<f32>> {
+        Ok(vec![0.0; self.vocab])
+    }
+
+    fn decode(
+        &mut self,
+        last: &[Option<u32>],
+    ) -> syncode::util::error::Result<Vec<Option<Vec<f32>>>> {
+        if let Some(tx) = self.entered.take() {
+            let _ = tx.send(());
+        }
+        self.gate.wait();
+        Ok(last.iter().map(|t| t.map(|_| vec![0.0; self.vocab])).collect())
+    }
+
+    fn release(&mut self, _lane: usize) {}
+
+    fn name(&self) -> &'static str {
+        "stall"
+    }
+}
+
+fn start_stalled_http() -> (HttpServer, Arc<GrammarRegistry>, String, Arc<Gate>, Receiver<()>) {
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = registry(&tok);
+    let gate = Gate::new();
+    let (etx, erx) = channel();
+    let vocab = tok.vocab_size();
+    let gate_m = gate.clone();
+    let entered = Arc::new(Mutex::new(Some(etx)));
+    let factories = replicate_factory(1, move || {
+        Ok(Box::new(StallModel {
+            vocab,
+            gate: gate_m.clone(),
+            entered: entered.lock().unwrap().take(),
+        }) as Box<dyn LanguageModel>)
+    });
+    let cfg = CoordinatorConfig { mask_threads: 0, queue_cap: 16, ..Default::default() };
+    let handle = Coordinator::start(factories, tok, reg.clone(), cfg);
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        handle,
+        reg.clone(),
+        HttpConfig { workers: 6, ..Default::default() },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    (server, reg, addr, gate, erx)
+}
+
+/// Run one stalled-server lifecycle: register `userdsl`, start a
+/// generation, wait until it is pinned inside decode, optionally
+/// replace the grammar mid-flight, then release and collect the text.
+fn stalled_generation(replace_mid_flight: bool) -> String {
+    let (server, reg, addr, gate, entered) = start_stalled_http();
+    let a = addr.to_string();
+    let (status, body) =
+        fetch(&a, "POST", "/v1/grammars", Some(&register_body("userdsl", USER_SRC_AB))).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let art_old = reg.get("userdsl").unwrap();
+
+    // A generation pinned in flight inside the model's first decode.
+    let addr_t = a.clone();
+    let t = std::thread::spawn(move || {
+        fetch(&addr_t, "POST", "/v1/generate", Some(&generate_body("userdsl", 21, 4)))
+            .expect("in-flight request")
+    });
+    entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+
+    if replace_mid_flight {
+        // Replace with a grammar under which the in-flight output would
+        // be INVALID — proving the generation is pinned to the old Arc.
+        let (status, body) =
+            fetch(&a, "POST", "/v1/grammars", Some(&register_body("userdsl", USER_SRC_CD)))
+                .unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert_eq!(parse(&body).unwrap().get("replaced").unwrap().as_bool(), Some(true));
+        let art_new = reg.get("userdsl").unwrap();
+        assert!(!Arc::ptr_eq(&art_old, &art_new), "must be replaced in place");
+        // Replace-in-place never evicts, and the old Arc still answers.
+        assert_eq!(reg.stats().evictions, 0);
+        assert!(art_old.cx.prefix_valid(b"ab"));
+    }
+
+    gate.release();
+    let (status, body) = t.join().expect("client thread");
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("valid").unwrap().as_bool(), Some(true), "{body}");
+    let resp = wire_response(&v);
+    // The in-flight generation finished under the OLD grammar: all
+    // a/b bytes (the replacement grammar only accepts c/d).
+    assert!(!resp.text.is_empty(), "{body}");
+    assert!(resp.text.bytes().all(|b| b == b'a' || b == b'b'), "{body}");
+    assert!(art_old.response_valid(&resp), "{body}");
+    server.shutdown().shutdown();
+    resp.text
+}
+
+#[test]
+fn replace_in_place_leaves_inflight_generation_byte_identical() {
+    let baseline = stalled_generation(false);
+    let replaced = stalled_generation(true);
+    assert_eq!(
+        baseline, replaced,
+        "a mid-flight re-register must not perturb the pinned generation"
+    );
+}

@@ -6,10 +6,12 @@
 //! - lexer/mask invariants under random fuzzing.
 
 use std::sync::Arc;
+use syncode::artifact::{ArtifactConfig, CompiledGrammar, GrammarRegistry};
 use syncode::engine::GrammarContext;
-use syncode::grammar::{parse_ebnf, Grammar, Symbol, TermId};
+use syncode::grammar::{parse_ebnf, CompileLimits, Grammar, Symbol, TermId};
 use syncode::lexer::Lexer;
 use syncode::parser::{LrMode, LrTable, ParserState};
+use syncode::tokenizer::Tokenizer;
 use syncode::util::rng::Rng;
 
 // ------------------------------------------------------ earley recogniser --
@@ -92,12 +94,12 @@ fn lr_accepts(table: &Arc<LrTable>, input: &[TermId]) -> bool {
     p.accepts_eof()
 }
 
-/// Random small grammars (unambiguous-by-construction shapes).
-fn random_grammar(rng: &mut Rng) -> Grammar {
+/// Random small grammar sources (unambiguous-by-construction shapes).
+fn random_grammar_src(rng: &mut Rng) -> String {
     // Pick one of several templates with randomised terminals.
     let a = ["x", "y", "z", "w"][rng.below(4)];
     let b = ["p", "q", "r"][rng.below(3)];
-    let src = match rng.below(4) {
+    match rng.below(4) {
         0 => format!("start: list\nlist: \"{a}\" | list \",\" \"{a}\"\n"),
         1 => format!(
             "start: e\ne: t | e \"+\" t\nt: \"{a}\" | \"(\" e \")\"\n"
@@ -108,8 +110,11 @@ fn random_grammar(rng: &mut Rng) -> Grammar {
         _ => format!(
             "start: r\nr: \"{a}\" opt\nopt: | \"{b}\" r\n" // (a b)* a-ish chain
         ),
-    };
-    parse_ebnf(&src).unwrap()
+    }
+}
+
+fn random_grammar(rng: &mut Rng) -> Grammar {
+    parse_ebnf(&random_grammar_src(rng)).unwrap()
 }
 
 #[test]
@@ -193,6 +198,94 @@ fn lexer_never_loses_bytes() {
             None => assert_eq!(r.remainder_start, pos, "remainder gap in {input:?}"),
         }
     }
+}
+
+#[test]
+fn accepted_grammars_roundtrip_through_artifact_bytes() {
+    // Every grammar the untrusted-input surface ACCEPTS must survive the
+    // full persistence cycle — compile → SYNCART1 serialise → load —
+    // with a byte-identical artifact (and therefore byte-identical mask
+    // store): what a warm restart serves is exactly what was compiled.
+    let mut rng = Rng::new(41);
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let cfg = ArtifactConfig::default();
+    let limits = CompileLimits::default();
+    for case in 0..12 {
+        let src = random_grammar_src(&mut rng);
+        let art =
+            CompiledGrammar::compile_ebnf_limited("rt", &src, tok.clone(), &cfg, &limits)
+                .unwrap_or_else(|e| panic!("case {case}: accepted template failed: {e}"));
+        let blob = art.to_bytes();
+        let back = CompiledGrammar::from_bytes(&blob)
+            .unwrap_or_else(|e| panic!("case {case}: roundtrip load failed: {e}"));
+        assert_eq!(blob, back.to_bytes(), "case {case}: reserialisation diverged ({src:?})");
+        assert_eq!(art.source, back.source);
+        assert_eq!(art.store.stats.unique_masks, back.store.stats.unique_masks);
+        assert_eq!(art.store.stats.mem_bytes, back.store.stats.mem_bytes);
+        assert!(back.compile_stats.from_cache);
+        // The loaded artifact answers exactly like the compiled one.
+        for _ in 0..20 {
+            let len = rng.below(6);
+            let probe: Vec<u8> =
+                (0..len).map(|_| *rng.choose(b"xyzwpqr,+()m ")).collect();
+            assert_eq!(
+                art.cx.prefix_valid(&probe),
+                back.cx.prefix_valid(&probe),
+                "case {case}: oracle diverged on {probe:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rejected_grammars_leave_no_partial_registry_entry() {
+    // The registration path is atomic: an input rejected at ANY stage
+    // (wire name rule, parse, limits) yields a clean error and the
+    // registry is exactly as it was — no half-registered grammar, no
+    // changed default, nothing evicted.
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let cfg = ArtifactConfig::default();
+    let reg = Arc::new(GrammarRegistry::new());
+    reg.register(CompiledGrammar::compile("calc", tok, &cfg).unwrap()).unwrap();
+    let limits = CompileLimits::default();
+    let names_before = reg.names();
+    let default_before = reg.default_grammar().unwrap().name.clone();
+    let errors_before = reg.stats().compile_errors;
+
+    let big_regex = format!("start: A\nA: /{}/\n", "a".repeat(5000)); // regex byte cap
+    let deep = format!("start: {}a{}\na: \"x\"\n", "(".repeat(600), ")".repeat(600)); // depth cap
+    let oversize = format!("start: A\nA: \"a\"\n{}", "// pad\n".repeat(50_000)); // source cap
+    let hostile: Vec<(&str, &str)> = vec![
+        ("bad name", "start: A\nA: /a/\n"),            // rejected by the name rule
+        ("broken", "start: %%% nope"),                  // parse error
+        ("truncated", "start: item\nitem: \"unclosed"), // lexer error
+        ("bigregex", &big_regex),
+        ("deep", &deep),
+        ("oversize", &oversize),
+    ];
+    for &(name, src) in &hostile {
+        let err = match syncode::artifact::compile_and_register(
+            &reg,
+            name,
+            src,
+            &cfg,
+            &limits,
+            None,
+        ) {
+            Ok(_) => panic!("hostile grammar '{name}' was accepted"),
+            Err(e) => e,
+        };
+        assert!(!err.to_string().is_empty());
+        assert!(reg.get(name).is_none(), "partial entry for '{name}'");
+    }
+    assert_eq!(reg.names(), names_before, "registry contents changed");
+    assert_eq!(reg.default_grammar().unwrap().name, default_before);
+    assert_eq!(reg.stats().evictions, 0);
+    assert_eq!(
+        reg.stats().compile_errors,
+        errors_before + hostile.len() as u64,
+        "every rejection must be tallied exactly once"
+    );
 }
 
 #[test]

@@ -1,0 +1,265 @@
+//! Determinism tests for `serve --watch` hot-reload: an in-flight
+//! generation pinned across a reload finishes byte-identical to a
+//! no-watch baseline, new submissions pick up the reloaded grammar, and
+//! a broken edit keeps the old grammar serving while tallying
+//! `compile_errors`.
+//!
+//! The tests drive [`GrammarWatcher::scan_once`] synchronously — the
+//! same unit the polling thread loops over — so every interleaving
+//! (reload strictly between "request admitted" and "request finished")
+//! is exact, not timing-dependent. The model is a gate-stalled
+//! uniform-logits stub: decoding blocks inside the model until the test
+//! releases it, and with greedy sampling the output is a pure function
+//! of the grammar the request holds.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+use syncode::artifact::{
+    ArtifactConfig, CompiledGrammar, GrammarRegistry, GrammarWatcher,
+};
+use syncode::coordinator::{
+    Coordinator, CoordinatorConfig, GenParams, GenRequest, GenResponse, ServerHandle, Strategy,
+};
+use syncode::grammar::CompileLimits;
+use syncode::runtime::{replicate_factory, LanguageModel};
+use syncode::tokenizer::Tokenizer;
+
+const SRC_AB: &str = "start: A+\nA: /[ab]/\n";
+// Different length than SRC_AB on purpose: the watcher stamps
+// `(mtime, len)`, and a same-second rewrite on a coarse-mtime
+// filesystem is only caught when the length moves.
+const SRC_CD: &str = "// v2\nstart: B+\nB: /[cd]/\n";
+const SRC_BROKEN: &str = "start: %%% broken beyond repair\n";
+
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Uniform-logits model: first decode signals `entered`, then blocks on
+/// the gate. The grammar mask does all the shaping.
+struct StallModel {
+    vocab: usize,
+    gate: Arc<Gate>,
+    entered: Option<Sender<()>>,
+}
+
+impl LanguageModel for StallModel {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn lanes(&self) -> usize {
+        2
+    }
+
+    fn max_seq(&self) -> usize {
+        256
+    }
+
+    fn prefill(&mut self, _lane: usize, _tokens: &[u32]) -> syncode::util::error::Result<Vec<f32>> {
+        Ok(vec![0.0; self.vocab])
+    }
+
+    fn decode(
+        &mut self,
+        last: &[Option<u32>],
+    ) -> syncode::util::error::Result<Vec<Option<Vec<f32>>>> {
+        if let Some(tx) = self.entered.take() {
+            let _ = tx.send(());
+        }
+        self.gate.wait();
+        Ok(last.iter().map(|t| t.map(|_| vec![0.0; self.vocab])).collect())
+    }
+
+    fn release(&mut self, _lane: usize) {}
+
+    fn name(&self) -> &'static str {
+        "stall"
+    }
+}
+
+struct Harness {
+    dir: std::path::PathBuf,
+    file: std::path::PathBuf,
+    reg: Arc<GrammarRegistry>,
+    watcher: GrammarWatcher,
+    srv: ServerHandle,
+    gate: Arc<Gate>,
+    entered: Receiver<()>,
+}
+
+fn harness(tag: &str) -> Harness {
+    let dir = std::env::temp_dir().join(format!("syncode_watch_reload_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("wdsl.lark");
+    std::fs::write(&file, SRC_AB).unwrap();
+
+    let tok = Arc::new(Tokenizer::ascii_byte_level());
+    let reg = Arc::new(GrammarRegistry::new());
+    let cfg = ArtifactConfig::default();
+    reg.register(CompiledGrammar::compile("calc", tok.clone(), &cfg).unwrap()).unwrap();
+
+    let mut watcher =
+        GrammarWatcher::new(dir.clone(), reg.clone(), cfg, CompileLimits::default(), None);
+    let first = watcher.scan_once();
+    assert_eq!(first.reloaded, vec!["wdsl".to_string()], "{first:?}");
+    assert!(first.errors.is_empty(), "{first:?}");
+
+    let gate = Gate::new();
+    let (etx, entered) = channel();
+    let vocab = tok.vocab_size();
+    let gate_m = gate.clone();
+    let etx = Arc::new(Mutex::new(Some(etx)));
+    let factories = replicate_factory(1, move || {
+        Ok(Box::new(StallModel {
+            vocab,
+            gate: gate_m.clone(),
+            entered: etx.lock().unwrap().take(),
+        }) as Box<dyn LanguageModel>)
+    });
+    let srv = Coordinator::start(
+        factories,
+        tok,
+        reg.clone(),
+        CoordinatorConfig { mask_threads: 0, queue_cap: 16, ..Default::default() },
+    );
+    Harness { dir, file, reg, watcher, srv, gate, entered }
+}
+
+fn request(id: u64, max_new_tokens: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: format!("produce wdsl #{id}"),
+        constraint_prefix: String::new(),
+        grammar: Some("wdsl".to_string()),
+        params: GenParams {
+            max_new_tokens,
+            strategy: Strategy::Greedy,
+            seed: 17,
+            ..Default::default()
+        },
+        token_sink: None,
+    }
+}
+
+fn recv(rx: std::sync::mpsc::Receiver<GenResponse>) -> GenResponse {
+    let resp = rx.recv_timeout(Duration::from_secs(60)).expect("generation finished");
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    resp
+}
+
+/// Pin one generation inside the model, optionally reload mid-flight,
+/// release, and return the finished text.
+fn pinned_generation(tag: &str, reload_mid_flight: bool) -> String {
+    let mut h = harness(tag);
+    let art_old = h.reg.get("wdsl").unwrap();
+
+    let rx = h.srv.submit(request(1, 4));
+    h.entered.recv_timeout(Duration::from_secs(30)).expect("model never entered decode");
+
+    if reload_mid_flight {
+        // Replace the watched file with a grammar that would reject the
+        // in-flight output; the reload must not touch the pinned Arc.
+        std::fs::write(&h.file, SRC_CD).unwrap();
+        let r = h.watcher.scan_once();
+        assert_eq!(r.reloaded, vec!["wdsl".to_string()], "{r:?}");
+        let art_new = h.reg.get("wdsl").unwrap();
+        assert!(!Arc::ptr_eq(&art_old, &art_new), "reload must swap the registry entry");
+        assert_eq!(h.reg.stats().evictions, 0, "replace-in-place never evicts");
+    }
+
+    h.gate.release();
+    let resp = recv(rx);
+    assert!(!resp.text.is_empty());
+    assert!(
+        resp.text.bytes().all(|b| b == b'a' || b == b'b'),
+        "in-flight output leaked the reloaded grammar: {:?}",
+        resp.text
+    );
+    assert!(art_old.response_valid(&resp), "{:?}", resp.text);
+
+    if reload_mid_flight {
+        // A submission made AFTER the reload generates under the new
+        // grammar: c/d bytes only.
+        let resp2 = recv(h.srv.submit(request(2, 4)));
+        assert!(!resp2.text.is_empty());
+        assert!(
+            resp2.text.bytes().all(|b| b == b'c' || b == b'd'),
+            "new submission did not pick up the reload: {:?}",
+            resp2.text
+        );
+        assert!(h.reg.get("wdsl").unwrap().response_valid(&resp2));
+    }
+
+    h.srv.shutdown();
+    let _ = std::fs::remove_dir_all(&h.dir);
+    resp.text
+}
+
+#[test]
+fn inflight_generation_is_byte_identical_across_a_reload() {
+    let baseline = pinned_generation("baseline", false);
+    let reloaded = pinned_generation("reload", true);
+    assert_eq!(
+        baseline, reloaded,
+        "a mid-flight hot-reload must not perturb pinned generations"
+    );
+}
+
+#[test]
+fn broken_edit_keeps_old_grammar_serving_and_counts_the_error() {
+    let mut h = harness("broken");
+    h.gate.release(); // free-flowing model for this test
+    let art_v1 = h.reg.get("wdsl").unwrap();
+    let errors_before = h.reg.stats().compile_errors;
+
+    // A broken edit: reported, tallied, old grammar untouched.
+    std::fs::write(&h.file, SRC_BROKEN).unwrap();
+    let r = h.watcher.scan_once();
+    assert!(r.reloaded.is_empty(), "{r:?}");
+    assert_eq!(r.errors.len(), 1, "{r:?}");
+    assert_eq!(r.errors[0].0, "wdsl");
+    assert_eq!(h.reg.stats().compile_errors, errors_before + 1);
+    assert!(Arc::ptr_eq(&h.reg.get("wdsl").unwrap(), &art_v1), "old grammar evicted");
+
+    // The grammar still serves generations.
+    let resp = recv(h.srv.submit(request(3, 4)));
+    assert!(resp.text.bytes().all(|b| b == b'a' || b == b'b'), "{:?}", resp.text);
+    assert!(art_v1.response_valid(&resp));
+
+    // The broken file is not re-attempted while unchanged...
+    let r = h.watcher.scan_once();
+    assert!(r.errors.is_empty() && r.reloaded.is_empty(), "{r:?}");
+    assert_eq!(h.reg.stats().compile_errors, errors_before + 1);
+
+    // ...and a fixing edit recovers without a restart.
+    std::fs::write(&h.file, SRC_CD).unwrap();
+    let r = h.watcher.scan_once();
+    assert_eq!(r.reloaded, vec!["wdsl".to_string()], "{r:?}");
+    let resp = recv(h.srv.submit(request(4, 4)));
+    assert!(resp.text.bytes().all(|b| b == b'c' || b == b'd'), "{:?}", resp.text);
+
+    h.srv.shutdown();
+    let _ = std::fs::remove_dir_all(&h.dir);
+}

@@ -9,7 +9,9 @@ errors), checks the SSE streaming variant (`?stream=1`) delivers per-token
 events and a valid terminal `done` event, exercises the SLO `priority` body
 field (a `batch`-class request succeeds; an unknown class is a 400) and the
 `deadline_ms` field (a generous deadline completes normally; zero/ill-typed
-deadlines are 400s), validates that `/metrics` parses as Prometheus text,
+deadlines are 400s), drives the user-supplied-grammar surface (register over
+`POST /v1/grammars`, generate against it, delete it, and probe one malformed
+grammar for a clean 422), validates that `/metrics` parses as Prometheus text,
 reflects the finished requests per class and reports zero replica restarts,
 then drains the server via `POST /admin/shutdown`. Stdlib only — CI needs
 nothing beyond python3.
@@ -58,6 +60,12 @@ def check_metrics(text):
         "syncode_replica_restarts_total",
         "syncode_replicas_live",
         'syncode_deadline_shed_queued_total{class="interactive"}',
+        "syncode_grammar_compiles_total",
+        "syncode_grammar_compile_errors_total",
+        "syncode_grammar_cache_hits_total",
+        "syncode_grammar_evictions_total",
+        "syncode_grammar_registered",
+        "syncode_grammar_compile_seconds_count",
     ):
         assert any(
             line.startswith(family) for line in text.splitlines()
@@ -175,6 +183,36 @@ def main():
         status, body = req(addr, "POST", "/v1/generate", payload)
         assert status == 400, f"deadline_ms={bad!r} should be 400: {status} {body}"
 
+    # User-supplied grammars over the wire: register → generate against it
+    # → delete, plus one hostile probe that must be a clean 422 (the
+    # hardened compile path, not a 500 or a hung server).
+    payload = json.dumps({"name": "smoke_dsl", "lark_src": "start: A+\nA: /[ab]/\n"})
+    status, body = req(addr, "POST", "/v1/grammars", payload)
+    assert status == 200, f"register: {status} {body}"
+    reg = json.loads(body)
+    assert reg["name"] == "smoke_dsl" and not reg["replaced"], f"register: {body}"
+    payload = json.dumps(
+        {"grammar": "smoke_dsl", "prompt": "user dsl", "max_tokens": 16, "seed": 5}
+    )
+    status, body = req(addr, "POST", "/v1/generate", payload)
+    assert status == 200, f"generate vs user grammar: {status} {body}"
+    resp = json.loads(body)
+    assert resp.get("valid"), f"user-grammar generation invalid: {body}"
+    assert resp["text"] and set(resp["text"]) <= {"a", "b"}, f"unshaped output: {body}"
+
+    status, body = req(addr, "POST", "/v1/grammars",
+                       json.dumps({"name": "smoke_bad", "lark_src": "start: %%%"}))
+    assert status == 422, f"malformed grammar should be 422: {status} {body}"
+    assert "error" in json.loads(body), f"422 without JSON error body: {body}"
+
+    status, body = req(addr, "DELETE", "/v1/grammars/smoke_dsl")
+    assert status == 200, f"delete: {status} {body}"
+    assert json.loads(body)["deleted"] == "smoke_dsl", f"delete: {body}"
+    status, body = req(addr, "DELETE", "/v1/grammars/smoke_dsl")
+    assert status == 404, f"double delete should be 404: {status} {body}"
+    status, body = req(addr, "GET", "/v1/grammars")
+    assert "smoke_dsl" not in body, f"deleted grammar still listed: {body}"
+
     status, text = req(addr, "GET", "/metrics")
     assert status == 200, f"metrics: {status}"
     check_metrics(text)
@@ -183,7 +221,7 @@ def main():
     assert status == 200, f"shutdown: {status} {body}"
     print(
         f"http smoke OK: {N_REQUESTS}/{N_REQUESTS} valid, stream + priority classes, "
-        "metrics parsed, graceful shutdown"
+        "grammar register/delete + 422 probe, metrics parsed, graceful shutdown"
     )
 
 

@@ -1149,3 +1149,15 @@ start: "a" ("b" | "c")* "d"?
         }
     }
 }
+
+#[cfg(test)]
+mod review_probe {
+    use super::*;
+
+    #[test]
+    fn postfix_chain_probe() {
+        let src = format!("start: \"a\"{}\n", "?".repeat(200_000));
+        let r = parse_ebnf_limited(&src, &CompileLimits::default());
+        eprintln!("probe result: {:?}", r.map(|g| g.rules.len()).map_err(|e| e.msg));
+    }
+}
